@@ -1,0 +1,120 @@
+//! Multi-tenant serving — the paper's motivating scenario, end to end:
+//! many customized models (tenants) share one frozen base; each tenant is
+//! a MoS adapter (pools + router indices). The coordinator batches per
+//! tenant, materializes factors once per tenant (precompute cache), and
+//! enforces a memory budget with LRU eviction.
+//!
+//! Also contrasts the capacity story: the same budget holds ~8x fewer
+//! LoRA-r8-quality tenants than MoS tenants (the intro's TB-scale claim
+//! scaled down).
+//!
+//! Run: cargo run --release --example multi_tenant_serving
+
+use mos::adapter::params::{fmt_bytes, serving_bytes};
+use mos::adapter::{init_params, mos::router::build_router};
+use mos::config::{presets, MethodCfg};
+use mos::coordinator::server::HostEngine;
+use mos::coordinator::{Registry, Server, Tenant};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn mk_tenant(cfg: &mos::config::ModelCfg, id: String, seed: u64) -> Tenant {
+    let mc = MethodCfg::mos(8, 2, 2, 1);
+    Tenant {
+        id,
+        mc: mc.clone(),
+        params: init_params(cfg, &mc, seed),
+        aux: build_router(cfg, &mc, seed).into_bank(),
+        router_seed: seed,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = presets::tiny();
+    cfg.batch = 8;
+    let n_tenants = 12;
+    let n_requests = 48;
+
+    // ---- capacity story -------------------------------------------------
+    let mos_bytes = serving_bytes(&cfg, &MethodCfg::mos(8, 2, 2, 1), 4);
+    let lora_bytes = serving_bytes(&cfg, &MethodCfg::lora(8), 4);
+    println!(
+        "per-tenant serving state: MoS {} vs LoRA-r8 {} ({:.1}x)",
+        fmt_bytes(mos_bytes),
+        fmt_bytes(lora_bytes),
+        lora_bytes as f64 / mos_bytes as f64
+    );
+
+    // budget deliberately tight: fits all 12 MoS tenants but would fit
+    // only 3 LoRA-r8 tenants
+    let capacity = mos_bytes * n_tenants + 1024;
+    println!(
+        "ledger capacity {} -> {} MoS tenants vs {} LoRA-r8 tenants resident\n",
+        fmt_bytes(capacity),
+        capacity / mos_bytes,
+        capacity / lora_bytes
+    );
+
+    // ---- register tenants -------------------------------------------------
+    let registry = Arc::new(Registry::new(cfg.clone(), capacity));
+    for i in 0..n_tenants {
+        let evicted = registry
+            .register(mk_tenant(&cfg, format!("user-{i:02}"), i as u64))?;
+        assert!(evicted.is_empty());
+    }
+    println!(
+        "registered {n_tenants} tenants; ledger used {}",
+        fmt_bytes(registry.ledger.lock().unwrap().used())
+    );
+
+    // ---- serve traffic ---------------------------------------------------
+    let mut server = Server::new(
+        Arc::clone(&registry),
+        cfg.batch,
+        Duration::from_millis(5),
+        n_tenants,
+    );
+    let cfg2 = cfg.clone();
+    server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            server.submit(
+                &format!("user-{:02}", i % n_tenants),
+                &format!("q:{:02}", i % 24),
+            )
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv_timeout(Duration::from_secs(300))?.ok {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {ok}/{n_requests} requests across {n_tenants} tenants \
+         in {dt:.1}s ({:.2} req/s, {} tokens)",
+        n_requests as f64 / dt,
+        server.metrics.generated_tokens.load(Ordering::Relaxed)
+    );
+    println!("metrics: {}", server.metrics.summary());
+    let (hits, misses) = server.cache.stats();
+    println!(
+        "materialization cache: {misses} builds + {hits} hits \
+         (precompute once per tenant — paper Limitations §C)"
+    );
+
+    // ---- eviction under pressure -----------------------------------------
+    println!("\nregistering one more tenant than the budget allows...");
+    let evicted = registry
+        .register(mk_tenant(&cfg, "user-overflow".into(), 99))?;
+    println!(
+        "evicted (LRU): {evicted:?}; resident tenants now {}",
+        registry.len()
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the 5-minute tour of the MoS framework.
+//!
+//! 1. Parameter accounting on the real LLaMA2-7B geometry (Table 2 column).
+//! 2. Build a MoS adapter: pools + index router, inspect its structure.
+//! 3. Train it on a synthetic task (PJRT artifacts if present, else host).
+//! 4. Evaluate and print the paper-style metric.
+//!
+//! Run: cargo run --release --example quickstart
+
+use mos::adapter::params::{fmt_params, trainable_params};
+use mos::adapter::{init_params, mos::router::build_router};
+use mos::config::{presets, MethodCfg};
+use mos::data::tasks::{Task, TaskKind};
+use mos::runtime::{Manifest, Runtime};
+use mos::train::host::HostBackend;
+use mos::train::pjrt::PjrtBackend;
+use mos::train::{final_loss, run};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. parameter accounting ------------------------------------
+    let llama = presets::llama2_7b();
+    println!("== MoS quickstart ==\n");
+    println!("On LLaMA2-7B geometry (paper Table 2 budgets):");
+    for (name, mc) in [
+        ("LoRA r=2 ", MethodCfg::lora(2)),
+        ("LoRA r=16", MethodCfg::lora(16)),
+        ("MoS  4/8 ", MethodCfg::mos(8, 2, 2, 1)),
+    ] {
+        println!(
+            "  {name}: {:>8} trainable params",
+            fmt_params(trainable_params(&llama, &mc))
+        );
+    }
+
+    // ---- 2. adapter anatomy ------------------------------------------
+    let cfg = presets::tiny();
+    let mc = MethodCfg::mos(8, 2, 2, 1); // rank 8, 2 shards/vector, e=2, 1 private
+    let params = init_params(&cfg, &mc, 0);
+    let router = build_router(&cfg, &mc, 0);
+    println!(
+        "\nMoS adapter on the tiny preset: rank={} shards/vector={} \
+         pool={} shards/side/layer-type",
+        mc.r,
+        mc.l,
+        mc.pool_shards(cfg.blocks)
+    );
+    println!(
+        "  q-projection A-pool: {:?}; index matrix (block 0, (r x l)): {:?}",
+        params["q.pool_a"].shape(),
+        &router.indices("q", "idx_a").i32s().unwrap()[..mc.r * mc.l],
+    );
+
+    // ---- 3. train ------------------------------------------------------
+    let steps = 150;
+    let task = TaskKind::Recall;
+    let manifest_dir = Manifest::default_dir();
+    println!("\ntraining on '{}' for {steps} steps...", task.name());
+    let result = if manifest_dir.join("manifest.json").exists() {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(&manifest_dir)?;
+        let mut be = PjrtBackend::load(&rt, &manifest, "tiny", &mc, 0)?;
+        println!("  (backend: AOT artifacts via PJRT — python is offline)");
+        run(&mut be, || Task::new(task, 0), steps, 2e-2, 24, 50)?
+    } else {
+        let mut be = HostBackend::new(&cfg, &mc, 0);
+        println!("  (backend: host oracle — run `make artifacts` for PJRT)");
+        run(&mut be, || Task::new(task, 0), steps, 2e-2, 24, 50)?
+    };
+
+    // ---- 4. report -------------------------------------------------------
+    println!(
+        "\nresults: final_loss={:.3}, EM={:.1}% on {} held-out '{}' \
+         examples ({:.1}s train)",
+        final_loss(&result.losses, 10),
+        result.report.score,
+        result.report.n,
+        task.name(),
+        result.train_seconds,
+    );
+    println!(
+        "\nnext: examples/multi_tenant_serving.rs (the serving coordinator) \
+         and examples/train_e2e.rs (the full-stack driver)."
+    );
+    Ok(())
+}

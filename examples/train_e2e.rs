@@ -1,0 +1,128 @@
+//! End-to-end driver — proves the full three-layer stack composes:
+//!
+//!   L1 pallas kernels (verified vs ref.py at build time)
+//!     -> L2 jax model, AOT-lowered to HLO text by `make artifacts`
+//!       -> L3 rust: this driver loads the train-step artifact via PJRT,
+//!          streams synthetic-task batches through it, logs the loss
+//!          curve, evaluates by batched greedy decoding through the fwd
+//!          artifact, and saves a servable checkpoint.
+//!
+//! Presets: `small` (default, ~5.7M-param base, minutes on 1 CPU core) or
+//! `base` (~100M-param base — the paper-scale driver; see EXPERIMENTS.md
+//! §E2E for a recorded run):
+//!
+//!   cargo run --release --example train_e2e -- [--preset base]
+//!       [--steps 300] [--task arith] [--method lora|mos] [--lr 2e-2]
+//!
+//! The loss curve is written to `e2e_loss_<preset>.csv`.
+
+use mos::config::MethodCfg;
+use mos::data::tasks::{Task, TaskKind};
+use mos::runtime::{Manifest, Runtime};
+use mos::train::checkpoint::Checkpoint;
+use mos::train::pjrt::PjrtBackend;
+use mos::train::{final_loss, run, Backend};
+use mos::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let preset = args.str("preset", "small");
+    let steps = args.usize("steps", 300)?;
+    let lr = args.f64("lr", 2e-2)?;
+    let kind = TaskKind::parse(&args.str("task", "recall"))
+        .ok_or_else(|| anyhow::anyhow!("unknown task"))?;
+    let seed = args.u64("seed", 0)?;
+    let method = args.str("method", "mos");
+
+    let manifest = Manifest::load(&Manifest::default_dir()).map_err(|e| {
+        anyhow::anyhow!("{e} — run `make artifacts` (and `make artifacts-base` for --preset base)")
+    })?;
+    anyhow::ensure!(
+        manifest.presets.contains_key(&preset),
+        "preset '{preset}' has no artifacts; run `make artifacts{}`",
+        if preset == "base" { "-base" } else { "" }
+    );
+    let cfg = manifest.presets[&preset].clone();
+    let mc = match (method.as_str(), preset.as_str()) {
+        ("mos", "base") => MethodCfg::mos(8, 4, 2, 1),
+        ("mos", _) => MethodCfg::mos(8, 2, 2, 1),
+        ("lora", "small") => MethodCfg::lora(4),
+        ("lora", _) => MethodCfg::lora(2),
+        (m, _) => anyhow::bail!("method '{m}' not lowered for this preset"),
+    };
+
+    println!(
+        "== end-to-end driver ==\npreset={preset}: {} base params, L={} h={} seq={} batch={}",
+        mos::adapter::params::fmt_params(cfg.base_param_count()),
+        cfg.blocks,
+        cfg.hidden,
+        cfg.seq,
+        cfg.batch
+    );
+    println!(
+        "method={} ({} trainable params), task={}, steps={steps}",
+        mc.tag(),
+        mos::adapter::params::fmt_params(
+            mos::adapter::params::trainable_params(&cfg, &mc)
+        ),
+        kind.name()
+    );
+
+    let t0 = std::time::Instant::now();
+    let rt = Runtime::cpu()?;
+    println!("loading + compiling artifacts (one-time)...");
+    let mut be = PjrtBackend::load(&rt, &manifest, &preset, &mc, seed)?;
+    println!("  compiled in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let result = run(
+        &mut be,
+        || Task::new(kind, seed),
+        steps,
+        lr,
+        32,
+        (steps / 12).max(1),
+    )?;
+
+    // loss curve to CSV for plotting
+    let csv_path = format!("e2e_loss_{preset}.csv");
+    let mut csv = String::from("step,loss\n");
+    for (i, l) in result.losses.iter().enumerate() {
+        csv.push_str(&format!("{},{}\n", i + 1, l));
+    }
+    std::fs::write(&csv_path, csv)?;
+
+    println!(
+        "\n== results ==\nloss: {:.4} (first 10) -> {:.4} (last 10); curve in {csv_path}",
+        final_loss(&result.losses[..10.min(result.losses.len())], 10),
+        final_loss(&result.losses, 10),
+    );
+    println!(
+        "eval: {}={:.2} on {} held-out '{}' examples",
+        match result.report.metric {
+            mos::data::tasks::Metric::F1 => "F1",
+            mos::data::tasks::Metric::PassAt1 => "pass@1",
+            _ => "EM",
+        },
+        result.report.score,
+        result.report.n,
+        kind.name()
+    );
+    println!(
+        "train time: {:.1}s ({:.2} s/step, {:.0} tok/s)",
+        result.train_seconds,
+        result.train_seconds / steps as f64,
+        (steps * cfg.batch * cfg.seq) as f64 / result.train_seconds
+    );
+
+    let ckpt_dir = format!("ckpt_e2e_{preset}");
+    Checkpoint {
+        preset: preset.clone(),
+        mc: mc.clone(),
+        router_seed: seed,
+        params: be.params().clone(),
+        aux: be.aux.clone(),
+    }
+    .save(std::path::Path::new(&ckpt_dir))?;
+    println!("servable checkpoint saved to {ckpt_dir}/");
+    Ok(())
+}

@@ -1,0 +1,367 @@
+"""AOT lowering: JAX model -> HLO text artifacts + manifest + weight banks.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  manifest.json                      presets, artifact index, io specs
+  bank_<preset>.bin                  frozen base weights + frozen aux tensors
+  init_<preset>_<tag>.bin            adapter parameter initialization
+  train_<tag>_<preset>.hlo.txt       (base,params,m,v,step,lr,data,aux)->(p,m,v,loss)
+  fwd_<tag>_<preset>.hlo.txt         (base,params,aux,tokens)->(logits,)
+  fwd_<tag>_<preset>_pallas.hlo.txt  forward with the L1 pallas gather inlined
+  materialize_<preset>.hlo.txt       pallas shard-gather showcase kernel
+
+Run: cd python && python -m compile.aot --out-dir ../artifacts [--presets tiny,small]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import pretrain
+from compile.kernels import mos_kernels
+
+jax.config.update("jax_platform_name", "cpu")
+
+DT_F32, DT_I32 = 0, 1
+
+
+# ---------------------------------------------------------------------------
+# Weight-bank container (shared binary format with rust/src/util/bank.rs)
+# ---------------------------------------------------------------------------
+
+
+def write_bank(path: str, tensors: dict) -> None:
+    """MOSBANK1: [magic][u32 n] then per tensor:
+    [u16 name_len][name][u8 dtype][u8 ndim][u32 dims...][raw LE data]."""
+    with open(path, "wb") as f:
+        f.write(b"MOSBANK1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.dtype == np.float32:
+                dt = DT_F32
+            elif arr.dtype == np.int32:
+                dt = DT_I32
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype).tobytes(order="C"))
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.float32 if dtype == "f32" else jnp.int32
+    )
+
+
+def io_entry(name, shape, dtype, role):
+    return {"name": name, "shape": list(shape), "dtype": dtype, "role": role}
+
+
+def flat_train_io(cfg, mc):
+    """Ordered input spec for the train_step artifact."""
+    ins = []
+    for name, shape in M.base_param_specs(cfg):
+        ins.append(io_entry(name, shape, "f32", "base"))
+    pspecs = M.adapter_param_specs(cfg, mc)
+    for name, shape in pspecs:
+        ins.append(io_entry(name, shape, "f32", "param"))
+    for name, shape in pspecs:
+        ins.append(io_entry(f"m.{name}", shape, "f32", "opt_m"))
+    for name, shape in pspecs:
+        ins.append(io_entry(f"v.{name}", shape, "f32", "opt_v"))
+    ins.append(io_entry("step", (1,), "f32", "scalar"))
+    ins.append(io_entry("lr", (1,), "f32", "scalar"))
+    B, T = cfg.batch, cfg.seq
+    ins.append(io_entry("tokens", (B, T), "i32", "data"))
+    ins.append(io_entry("targets", (B, T), "i32", "data"))
+    ins.append(io_entry("weight", (B, T), "f32", "data"))
+    for name, shape, dt in M.aux_input_specs(cfg, mc):
+        ins.append(io_entry(name, shape, dt, "aux"))
+    outs = [io_entry(n, s, "f32", "param") for n, s in pspecs]
+    outs += [io_entry(f"m.{n}", s, "f32", "opt_m") for n, s in pspecs]
+    outs += [io_entry(f"v.{n}", s, "f32", "opt_v") for n, s in pspecs]
+    outs.append(io_entry("loss", (1,), "f32", "loss"))
+    return ins, outs
+
+
+def flat_fwd_io(cfg, mc):
+    ins = []
+    for name, shape in M.base_param_specs(cfg):
+        ins.append(io_entry(name, shape, "f32", "base"))
+    for name, shape in M.adapter_param_specs(cfg, mc):
+        ins.append(io_entry(name, shape, "f32", "param"))
+    for name, shape, dt in M.aux_input_specs(cfg, mc):
+        ins.append(io_entry(name, shape, dt, "aux"))
+    B, T = cfg.batch, cfg.seq
+    ins.append(io_entry("tokens", (B, T), "i32", "data"))
+    outs = [io_entry("logits", (B, T, cfg.vocab), "f32", "logits")]
+    return ins, outs
+
+
+def build_train_fn(cfg, mc):
+    pnames = [n for n, _ in M.adapter_param_specs(cfg, mc)]
+    anames = [n for n, _, _ in M.aux_input_specs(cfg, mc)]
+    bnames = [n for n, _ in M.base_param_specs(cfg)]
+
+    def fn(*flat):
+        it = iter(flat)
+        base = {n: next(it) for n in bnames}
+        params = {n: next(it) for n in pnames}
+        m = {n: next(it) for n in pnames}
+        v = {n: next(it) for n in pnames}
+        step, lr = next(it), next(it)
+        tokens, targets, weight = next(it), next(it), next(it)
+        aux = {n: next(it) for n in anames}
+        p2, m2, v2, loss = M.train_step(
+            cfg, mc, base, params, m, v, step, lr, tokens, targets, weight, aux
+        )
+        out = [p2[n] for n in pnames] + [m2[n] for n in pnames]
+        out += [v2[n] for n in pnames] + [loss]
+        return tuple(out)
+
+    return fn
+
+
+def build_fwd_fn(cfg, mc, use_pallas=False):
+    pnames = [n for n, _ in M.adapter_param_specs(cfg, mc)]
+    anames = [n for n, _, _ in M.aux_input_specs(cfg, mc)]
+    bnames = [n for n, _ in M.base_param_specs(cfg)]
+
+    def fn(*flat):
+        it = iter(flat)
+        base = {n: next(it) for n in bnames}
+        params = {n: next(it) for n in pnames}
+        aux = {n: next(it) for n in anames}
+        tokens = next(it)
+        if use_pallas:
+            # Route materialization through the L1 pallas shard-gather so the
+            # kernel lowers into this HLO (correctness showcase; the fast
+            # serving artifact uses the fused jnp.take path instead).
+            orig = M._mos_materialize_stack
+
+            def pallas_stack(pool, idx):
+                L, r, l = idx.shape
+                outs = [
+                    mos_kernels.shard_gather(pool, idx[k]) for k in range(L)
+                ]
+                return jnp.stack(outs, axis=0)
+
+            M._mos_materialize_stack = pallas_stack
+            try:
+                logits = M.forward(cfg, mc, base, params, aux, tokens)
+            finally:
+                M._mos_materialize_stack = orig
+        else:
+            logits = M.forward(cfg, mc, base, params, aux, tokens)
+        return (logits,)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Artifact set
+# ---------------------------------------------------------------------------
+
+
+def method_cfgs(preset: str):
+    """Adapter geometries lowered per preset (see DESIGN.md §3)."""
+    mk = M.MethodCfg
+    if preset == "tiny":
+        return [
+            mk("lora", r=2), mk("lora", r=8), mk("lora", r=16),
+            # e=2 budget family: main MoS (r raised to 2e/4e, l=2), the
+            # l-grid for Table 6, l=1 rows for pure-sharing/-vs, and the
+            # subset-selection row (r4 of pool 8).
+            mk("mos", r=4, l=2, e=2), mk("mos", r=8, l=2, e=2),
+            mk("mos", r=8, l=1, e=2), mk("mos", r=4, l=1, e=2),
+            mk("mos", r=8, l=4, e=2), mk("mos", r=8, l=8, e=2),
+            mk("mos", r=8, l=16, e=2),
+            # 4x budget family (paper's 16/32 rows)
+            mk("mos", r=16, l=2, e=8),
+            mk("vera", r=16), mk("tied", r=8),
+            mk("prolora", r=8, m=4),
+        ]
+    if preset == "small":
+        return [mk("lora", r=4), mk("mos", r=8, l=2, e=2)]
+    if preset == "base":
+        return [mk("mos", r=8, l=4, e=2)]
+    raise ValueError(preset)
+
+
+def gen_frozen_aux(cfg, mc, key):
+    """Frozen aux tensors that live in the weight bank (vera matrices).
+
+    MoS aux (indices, scales) is *runtime* state owned by the Rust router.
+    """
+    out = {}
+    if mc.method == "vera":
+        for t in M.LAYER_TYPES:
+            o, i = cfg.dims(t)
+            key, k1, k2 = jax.random.split(key, 3)
+            out[f"{t}.frozen_a"] = jax.random.normal(k1, (mc.r, i)) * (
+                i ** -0.5
+            )
+            out[f"{t}.frozen_b"] = jax.random.normal(k2, (o, mc.r)) * (
+                mc.r ** -0.5
+            )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--pretrain-steps", type=int, default=1200,
+        help="full-param char-LM pretraining of the frozen base "
+             "(0 disables; see compile/pretrain.py)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"presets": {}, "artifacts": []}
+    for pname in args.presets.split(","):
+        cfg = M.PRESETS[pname]
+        manifest["presets"][pname] = {
+            "vocab": cfg.vocab, "hidden": cfg.hidden, "blocks": cfg.blocks,
+            "heads": cfg.heads, "ff": cfg.ff, "seq": cfg.seq,
+            "batch": cfg.batch, "base_params": cfg.base_param_count(),
+        }
+        key = jax.random.PRNGKey(args.seed)
+        key, bkey = jax.random.split(key)
+        base = M.init_base(cfg, bkey)
+        # scale the pretraining budget down for bigger presets (full-param
+        # steps get expensive on CPU; the bank is built once)
+        pt_scale = {"tiny": 1.0, "small": 0.33, "base": 0.08}.get(pname, 1.0)
+        base = pretrain.pretrain_base(
+            cfg, base, int(args.pretrain_steps * pt_scale), args.seed
+        )
+        bank = dict(base)
+
+        for mc in method_cfgs(pname):
+            tag = mc.tag()
+            t0 = time.time()
+            key, ikey, fkey = jax.random.split(key, 3)
+            params = M.init_adapter(cfg, mc, ikey)
+            write_bank(
+                os.path.join(args.out_dir, f"init_{pname}_{tag}.bin"),
+                {k: np.asarray(v) for k, v in params.items()},
+            )
+            bank.update(
+                {k: np.asarray(v) for k, v in gen_frozen_aux(cfg, mc, fkey).items()}
+            )
+
+            # ---- train artifact
+            ins, outs = flat_train_io(cfg, mc)
+            in_specs = [spec(tuple(e["shape"]), e["dtype"]) for e in ins]
+            lowered = jax.jit(build_train_fn(cfg, mc)).lower(*in_specs)
+            fname = f"train_{tag}_{pname}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            manifest["artifacts"].append({
+                "name": f"train_{tag}_{pname}", "file": fname,
+                "kind": "train", "preset": pname, "method": mc.method,
+                "r": mc.r, "l": mc.l, "e": mc.e, "m": mc.m,
+                "alpha": mc.alpha, "inputs": ins, "outputs": outs,
+            })
+
+            # ---- forward artifact
+            ins, outs = flat_fwd_io(cfg, mc)
+            in_specs = [spec(tuple(e["shape"]), e["dtype"]) for e in ins]
+            lowered = jax.jit(build_fwd_fn(cfg, mc)).lower(*in_specs)
+            fname = f"fwd_{tag}_{pname}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            manifest["artifacts"].append({
+                "name": f"fwd_{tag}_{pname}", "file": fname,
+                "kind": "fwd", "preset": pname, "method": mc.method,
+                "r": mc.r, "l": mc.l, "e": mc.e, "m": mc.m,
+                "alpha": mc.alpha, "inputs": ins, "outputs": outs,
+            })
+            print(f"[aot] {pname}/{tag}: lowered train+fwd "
+                  f"in {time.time()-t0:.1f}s", flush=True)
+
+        # ---- pallas showcase artifacts (tiny only: interpret-mode pallas
+        # is the correctness path; perf analysis is analytic, DESIGN.md §5)
+        if pname == "tiny":
+            mc = M.MethodCfg("mos", r=8, l=2, e=2)
+            ins, outs = flat_fwd_io(cfg, mc)
+            in_specs = [spec(tuple(e["shape"]), e["dtype"]) for e in ins]
+            lowered = jax.jit(build_fwd_fn(cfg, mc, use_pallas=True)).lower(
+                *in_specs
+            )
+            fname = f"fwd_{mc.tag()}_{pname}_pallas.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            manifest["artifacts"].append({
+                "name": f"fwd_{mc.tag()}_{pname}_pallas", "file": fname,
+                "kind": "fwd", "preset": pname, "method": mc.method,
+                "r": mc.r, "l": mc.l, "e": mc.e, "m": mc.m,
+                "alpha": mc.alpha, "inputs": ins, "outputs": outs,
+            })
+
+            n = mc.pool_shards(cfg)
+            s = cfg.hidden // mc.l
+            pool_s = spec((n, s))
+            idx_s = spec((mc.r, mc.l), "i32")
+            lowered = jax.jit(
+                lambda p, i: (mos_kernels.shard_gather(p, i),)
+            ).lower(pool_s, idx_s)
+            fname = f"materialize_{pname}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            manifest["artifacts"].append({
+                "name": f"materialize_{pname}", "file": fname,
+                "kind": "materialize", "preset": pname, "method": "mos",
+                "r": mc.r, "l": mc.l, "e": mc.e, "m": 1, "alpha": mc.alpha,
+                "inputs": [io_entry("pool", (n, s), "f32", "param"),
+                           io_entry("idx", (mc.r, mc.l), "i32", "aux")],
+                "outputs": [io_entry("dense", (mc.r, cfg.hidden), "f32",
+                                     "out")],
+            })
+
+        write_bank(os.path.join(args.out_dir, f"bank_{pname}.bin"), bank)
+        print(f"[aot] {pname}: bank written ({len(bank)} tensors)", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""L1 Pallas kernels for Mixture of Shards (MoS).
+
+Two kernels implement the paper's hot spot — index-routed shard gather/concat
+and the fused routed low-rank product:
+
+  * ``shard_gather``        pool (n, s) + idx (r, l)  ->  dense (r, l*s)
+  * ``mos_apply_fused``     x (m, h), pools, indices  ->  y (m, o) = (x A^T) B^T
+                            without ever materializing A or B in HBM.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and the TPU
+mapping is documented/estimated in DESIGN.md §Perf.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  - grid = (r, l): each cell copies / contracts one shard. The pool stays in
+    HBM ("ANY"); BlockSpec streams one (1, s) shard tile into VMEM per cell.
+  - shard width ``s`` should be a multiple of the 128-lane VPU width; the
+    fused kernel's per-cell contraction (m, s) @ (s, 1) is MXU-friendly when
+    m is padded to 8/128 sublane/lane tiles.
+  - accumulation happens in a f32 VMEM scratch of shape (m, r) — double
+    buffering of pool tiles comes free from the pallas pipeline since the
+    index map only depends on the grid coordinates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# shard_gather: materialize a dense low-rank matrix from pool + index matrix.
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(idx_ref, pool_ref, out_ref):
+    """Grid cell (i, j): copy pool[idx[i, j]] into out[i, j*s:(j+1)*s]."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    shard = idx_ref[i, j]
+    out_ref[0, :] = pool_ref[shard, :]
+
+
+def shard_gather(pool: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Dense (r, l*s) matrix from pool (n, s) and idx (r, l); pallas kernel.
+
+    Matches ``ref.materialize_a(pool, idx)``.
+    """
+    n, s = pool.shape
+    r, l = idx.shape
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(r, l),
+        in_specs=[
+            # Index matrix: small, fully resident.
+            pl.BlockSpec(idx.shape, lambda i, j: (0, 0)),
+            # Pool stays whole; the kernel picks the row dynamically.
+            pl.BlockSpec(pool.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, l * s), pool.dtype),
+        interpret=True,
+    )(idx, pool)
+
+
+# ---------------------------------------------------------------------------
+# mos_apply_fused: y = (x @ A^T) @ B^T with A/B routed from pools on the fly.
+# ---------------------------------------------------------------------------
+
+
+def _apply_a_kernel(idx_ref, x_ref, pool_ref, t_ref):
+    """Grid cell (i, j): t[:, i] += x[:, j*s:(j+1)*s] @ pool[idx[i, j]].
+
+    Accumulates the routed contraction t = x @ A^T one shard at a time.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    shard = pool_ref[idx_ref[i, j], :]  # (s,)
+    partial = x_ref[...] @ shard  # (m,)
+
+    @pl.when(j == 0)
+    def _init():
+        t_ref[:, 0] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        t_ref[:, 0] += partial
+
+
+def _apply_b_kernel(idx_ref, t_ref, pool_ref, y_ref):
+    """Grid cell (i, j): y[:, j*s:(j+1)*s] += t[:, i] * pool[idx[i, j]].
+
+    Outer-product accumulation y = t @ B^T where column i of B is the concat
+    of shards idx[i, :] (so B^T rows are shard-segmented).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    shard = pool_ref[idx_ref[i, j], :]  # (s_b,)
+    outer = t_ref[:, 0:1] * shard[None, :]  # (m, s_b)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = outer
+
+    @pl.when(i != 0)
+    def _acc():
+        y_ref[...] += outer
+
+
+def mos_apply_fused(
+    x: jnp.ndarray,
+    pool_a: jnp.ndarray,
+    idx_a: jnp.ndarray,
+    pool_b: jnp.ndarray,
+    idx_b: jnp.ndarray,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """Fused routed low-rank product; matches ``ref.mos_apply``.
+
+    x: (m, h); pool_a: (n_a, h//l); idx_a/idx_b: (r, l); pool_b: (n_b, o//l).
+    Returns (m, o). Neither A nor B is materialized in HBM.
+    """
+    m, h = x.shape
+    n_a, s_a = pool_a.shape
+    n_b, s_b = pool_b.shape
+    r, l = idx_a.shape
+    assert idx_b.shape == (r, l), (idx_b.shape, (r, l))
+    assert l * s_a == h, (l, s_a, h)
+    o = l * s_b
+
+    # Stage 1: t = x @ A^T, grid over (rank, shard); x is streamed one
+    # h-shard column block per cell, t accumulated per rank column.
+    t = pl.pallas_call(
+        _apply_a_kernel,
+        grid=(r, l),
+        in_specs=[
+            pl.BlockSpec(idx_a.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((m, s_a), lambda i, j: (0, j)),
+            pl.BlockSpec(pool_a.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, 1), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, r), jnp.float32),
+        interpret=True,
+    )(idx_a, x.astype(jnp.float32), pool_a.astype(jnp.float32))
+
+    # Stage 2: y = t @ B^T, grid over (rank, shard); y accumulated per
+    # o-shard column block across ranks.
+    y = pl.pallas_call(
+        _apply_b_kernel,
+        grid=(r, l),
+        in_specs=[
+            pl.BlockSpec(idx_b.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((m, 1), lambda i, j: (0, i)),
+            pl.BlockSpec(pool_b.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, s_b), lambda i, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=True,
+    )(idx_b, t, pool_b.astype(jnp.float32))
+
+    return (scale * y).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tiled dense low-rank apply — used for the LoRA baseline inside the L2 model
+# so both methods exercise a pallas path.
+# ---------------------------------------------------------------------------
+
+
+def _lowrank_kernel(x_ref, a_ref, b_ref, y_ref):
+    t = x_ref[...] @ a_ref[...].T  # (m, r)
+    y_ref[...] = t @ b_ref[...].T  # (m, o)
+
+
+def lowrank_apply(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                  scale: float = 1.0) -> jnp.ndarray:
+    """Dense y = scale * (x @ a^T) @ b^T as a single pallas kernel.
+
+    x: (m, h), a: (r, h), b: (o, r) -> (m, o). Matches ``ref.lora_apply``.
+    """
+    m, h = x.shape
+    r, _ = a.shape
+    o, _ = b.shape
+    y = pl.pallas_call(
+        _lowrank_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec(a.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, o), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), a.astype(jnp.float32), b.astype(jnp.float32))
+    return (scale * y).astype(x.dtype)

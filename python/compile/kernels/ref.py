@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracle for the MoS kernels (L1 correctness ground truth).
+
+Notation follows the paper (Sec. 3):
+  - A^k in R^{r x h} is built from an A-pool of shards, pool_a in R^{n_a x s_a}
+    with shard width s_a = h // l, via an index matrix idx_a in N^{r x l}:
+        A[i, j*s_a:(j+1)*s_a] = pool_a[idx_a[i, j]]
+  - B^k in R^{o x r} is built column-wise from a B-pool, pool_b in R^{n_b x s_b}
+    with s_b = o // l, via idx_b in N^{r x l}:
+        B[j*s_b:(j+1)*s_b, i] = pool_b[idx_b[i, j]]
+  - The adapted forward pass is  y = x @ W0^T + scale * (x @ A^T) @ B^T.
+
+These functions are the oracle that the pallas kernels in mos_kernels.py and the
+Rust `adapter::mos::materialize` module are tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def materialize_a(pool_a: jnp.ndarray, idx_a: jnp.ndarray) -> jnp.ndarray:
+    """Gather + concat shards into the dense low-rank matrix A (r x h).
+
+    pool_a: (n_a, s_a) shard pool.
+    idx_a:  (r, l) int32 indices into the pool.
+    returns (r, l * s_a).
+    """
+    r, l = idx_a.shape
+    gathered = pool_a[idx_a.reshape(-1)]  # (r*l, s_a)
+    return gathered.reshape(r, l * pool_a.shape[1])
+
+
+def materialize_b(pool_b: jnp.ndarray, idx_b: jnp.ndarray) -> jnp.ndarray:
+    """Gather + concat shards into the dense low-rank matrix B (o x r).
+
+    pool_b: (n_b, s_b) shard pool.
+    idx_b:  (r, l) int32 indices into the pool.
+    returns (l * s_b, r): column i is the concat of shards idx_b[i, :].
+    """
+    r, l = idx_b.shape
+    gathered = pool_b[idx_b.reshape(-1)]  # (r*l, s_b)
+    return gathered.reshape(r, l * pool_b.shape[1]).T
+
+
+def mos_delta(pool_a, idx_a, pool_b, idx_b) -> jnp.ndarray:
+    """Dense weight update Delta W = B A (o x h). Eq. (4)/(5) of the paper."""
+    a = materialize_a(pool_a, idx_a)
+    b = materialize_b(pool_b, idx_b)
+    return b @ a
+
+
+def mos_apply(x, pool_a, idx_a, pool_b, idx_b, scale=1.0) -> jnp.ndarray:
+    """Routed low-rank product y = scale * (x @ A^T) @ B^T  (m x o).
+
+    This is the serving hot path: it never materializes Delta W.
+    """
+    a = materialize_a(pool_a, idx_a)  # (r, h)
+    b = materialize_b(pool_b, idx_b)  # (o, r)
+    t = x @ a.T  # (m, r)
+    return scale * (t @ b.T)
+
+
+def lora_apply(x, a, b, scale=1.0) -> jnp.ndarray:
+    """Vanilla LoRA path for the same shapes: a (r,h), b (o,r)."""
+    return scale * ((x @ a.T) @ b.T)

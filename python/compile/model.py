@@ -1,0 +1,430 @@
+"""L2: JAX transformer LM with pluggable low-rank adaptation methods.
+
+The model is a standard decoder-only transformer (RMSNorm, causal MHA, SwiGLU)
+with the seven linear-layer types the paper adapts: q, k, v, o, gate, up, down.
+Base weights are frozen inputs; each adaptation method contributes a
+``materialize(params, aux) -> (A_stack, B_stack)`` that produces per-block
+dense low-rank factors, after which a single method-agnostic scanned block
+forward applies ``W0 x + (alpha/r) * B A x``.
+
+Methods implemented (paper Sec. 2-4):
+  lora     per-block trainable A (L,r,in), B (L,out,r)
+  mos      trainable global shard pools per layer type + runtime index
+           matrices (the router state, owned by the Rust coordinator) +
+           frozen per-rank scales. Covers: pure sharing, random scaling,
+           subset selection, MoS and all three ablations (-sp/-vs/-pd) purely
+           through the *contents* of indices/scales/pool-partitioning.
+  vera     frozen shared A/B + trainable scaling vectors d (L,r), b (L,out)
+  tied     shared trainable A/B + per-block trainable scales u (L,r), v (L,out)
+  prolora  per-block trainable chunks replicated m times with rotation
+
+Everything is shape-static; ``aot.py`` lowers ``train_step`` and ``forward``
+per (preset, method-geometry) to HLO text for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+LAYER_TYPES = ("q", "k", "v", "o", "gate", "up", "down")
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Geometry of the base transformer."""
+
+    name: str
+    vocab: int
+    hidden: int
+    blocks: int
+    heads: int
+    ff: int
+    seq: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def dims(self, layer_type: str) -> Tuple[int, int]:
+        """(out_features, in_features) for a layer type."""
+        h, f = self.hidden, self.ff
+        return {
+            "q": (h, h), "k": (h, h), "v": (h, h), "o": (h, h),
+            "gate": (f, h), "up": (f, h), "down": (h, f),
+        }[layer_type]
+
+    def base_param_count(self) -> int:
+        n = self.vocab * self.hidden  # tied embedding / lm head
+        n += self.hidden  # final norm
+        n += self.blocks * 2 * self.hidden  # per-block norms
+        for t in LAYER_TYPES:
+            o, i = self.dims(t)
+            n += self.blocks * o * i
+        return n
+
+
+@dataclass(frozen=True)
+class MethodCfg:
+    """Adapter geometry. Interpretation of fields depends on ``method``.
+
+    r       rank of each per-block low-rank matrix.
+    l       shards per vector (mos only; 1 elsewhere).
+    e       LoRA-equivalent budget rank: pools hold e*L vector-pairs' worth
+            of parameters (mos), or the replication base (prolora: r/m == e).
+    m       replication factor (prolora only).
+    alpha   LoRA scaling numerator; effective scale = alpha / r.
+    """
+
+    method: str
+    r: int
+    l: int = 1
+    e: int = 0
+    m: int = 1
+    alpha: float = 16.0
+
+    def tag(self) -> str:
+        bits = [self.method, f"r{self.r}"]
+        if self.method == "mos":
+            bits.append(f"l{self.l}")
+            bits.append(f"e{self.e}")
+        if self.method == "prolora":
+            bits.append(f"m{self.m}")
+        return "_".join(bits)
+
+    def pool_shards(self, cfg: ModelCfg) -> int:
+        """Number of shards per pool (mos): budget-matched to LoRA rank e.
+
+        A LoRA of rank e over L blocks spends e*L*(in+out) params per layer
+        type; a pool of n shards of width in/l (A side) spends n*in/l, so
+        n = e*L*l reproduces the budget exactly on each side.
+        """
+        return self.e * cfg.blocks * self.l
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction / specs
+# ---------------------------------------------------------------------------
+
+
+def adapter_param_specs(cfg: ModelCfg, mc: MethodCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list of *trainable* adapter tensors."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    L, r = cfg.blocks, mc.r
+    for t in LAYER_TYPES:
+        o, i = cfg.dims(t)
+        if mc.method == "lora":
+            specs.append((f"{t}.a", (L, r, i)))
+            specs.append((f"{t}.b", (L, o, r)))
+        elif mc.method == "mos":
+            n = mc.pool_shards(cfg)
+            assert i % mc.l == 0 and o % mc.l == 0, (t, i, o, mc.l)
+            specs.append((f"{t}.pool_a", (n, i // mc.l)))
+            specs.append((f"{t}.pool_b", (n, o // mc.l)))
+        elif mc.method == "vera":
+            specs.append((f"{t}.d", (L, r)))
+            specs.append((f"{t}.bvec", (L, o)))
+        elif mc.method == "tied":
+            specs.append((f"{t}.a", (r, i)))
+            specs.append((f"{t}.b", (o, r)))
+            specs.append((f"{t}.u", (L, r)))
+            specs.append((f"{t}.v", (L, o)))
+        elif mc.method == "prolora":
+            assert i % mc.m == 0 and o % mc.m == 0, (t, i, o, mc.m)
+            specs.append((f"{t}.a0", (L, r, i // mc.m)))
+            specs.append((f"{t}.b0", (L, o // mc.m, r)))
+        else:
+            raise ValueError(mc.method)
+    return specs
+
+
+def aux_input_specs(cfg: ModelCfg, mc: MethodCfg) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Ordered (name, shape, dtype) list of non-trainable runtime inputs.
+
+    For mos these are the router state (index matrices) and frozen per-rank
+    scales; for vera the frozen shared matrices.
+    """
+    specs: List[Tuple[str, Tuple[int, ...], str]] = []
+    L, r = cfg.blocks, mc.r
+    for t in LAYER_TYPES:
+        o, i = cfg.dims(t)
+        if mc.method == "mos":
+            specs.append((f"{t}.idx_a", (L, r, mc.l), "i32"))
+            specs.append((f"{t}.idx_b", (L, r, mc.l), "i32"))
+            specs.append((f"{t}.rank_scale", (L, r), "f32"))
+        elif mc.method == "vera":
+            specs.append((f"{t}.frozen_a", (r, i), "f32"))
+            specs.append((f"{t}.frozen_b", (o, r), "f32"))
+    return specs
+
+
+def base_param_specs(cfg: ModelCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list of frozen base-model tensors."""
+    specs = [("embed", (cfg.vocab, cfg.hidden))]
+    for t in LAYER_TYPES:
+        o, i = cfg.dims(t)
+        specs.append((f"w.{t}", (cfg.blocks, o, i)))
+    specs.append(("norm_attn", (cfg.blocks, cfg.hidden)))
+    specs.append(("norm_mlp", (cfg.blocks, cfg.hidden)))
+    specs.append(("norm_final", (cfg.hidden,)))
+    return specs
+
+
+def init_base(cfg: ModelCfg, key) -> Dict[str, jnp.ndarray]:
+    """Random frozen base model (stand-in for a pretrained LLM)."""
+    out = {}
+    for name, shape in base_param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.startswith("norm"):
+            out[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            # std 0.1 so token identity is not drowned by the positional
+            # encoding (added at 0.1 scale in forward)
+            out[name] = jax.random.normal(sub, shape, jnp.float32) * 0.1
+        else:
+            fan_in = shape[-1]
+            out[name] = jax.random.normal(sub, shape, jnp.float32) * (
+                fan_in ** -0.5
+            )
+    return out
+
+
+def init_adapter(cfg: ModelCfg, mc: MethodCfg, key) -> Dict[str, jnp.ndarray]:
+    """Trainable adapter init following the paper (Sec. 3.5 Initialization).
+
+    B-side tensors start at zero (delta == 0 at step 0); A-side tensors use
+    Kaiming-uniform bounds matched to the *materialized* fan-in, as PRoLoRA
+    does for replicated chunks and MoS does for pools.
+    """
+    out = {}
+    for name, shape in adapter_param_specs(cfg, mc):
+        key, sub = jax.random.split(key)
+        t = name.split(".")[0]
+        o, i = cfg.dims(t)
+        kind = name.split(".")[1]
+        if kind in ("b", "b0", "pool_b", "bvec"):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        elif kind in ("d", "u"):
+            out[name] = jnp.full(shape, 0.1, jnp.float32)
+        elif kind == "v":
+            # ones, not zeros: with B == 0 the delta is still zero at init,
+            # but a zero v would also zero B's gradient (a dead saddle).
+            out[name] = jnp.ones(shape, jnp.float32)
+        else:  # a-side: uniform(-bound, bound) with materialized fan-in i
+            bound = (1.0 / i) ** 0.5
+            out[name] = jax.random.uniform(
+                sub, shape, jnp.float32, -bound, bound
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Materialization: params (+aux) -> per-block dense (A_stack, B_stack)
+# ---------------------------------------------------------------------------
+
+
+def _mos_materialize_stack(pool, idx):
+    """pool (n,s), idx (L,r,l) -> (L, r, l*s) via gather+concat (rows)."""
+    L, r, l = idx.shape
+    g = jnp.take(pool, idx.reshape(-1), axis=0)  # (L*r*l, s)
+    return g.reshape(L, r, l * pool.shape[1])
+
+
+def materialize(cfg: ModelCfg, mc: MethodCfg, params: Dict, aux: Dict):
+    """Returns dict t -> (A_stack (L,r,in), B_stack (L,out,r)).
+
+    The per-rank scale (mos random-scaling / subset masks) is folded into the
+    A side so the scanned block stays method-agnostic.
+    """
+    stacks = {}
+    L = cfg.blocks
+    for t in LAYER_TYPES:
+        o, i = cfg.dims(t)
+        if mc.method == "lora":
+            a, b = params[f"{t}.a"], params[f"{t}.b"]
+        elif mc.method == "mos":
+            a = _mos_materialize_stack(params[f"{t}.pool_a"], aux[f"{t}.idx_a"])
+            bt = _mos_materialize_stack(params[f"{t}.pool_b"], aux[f"{t}.idx_b"])
+            b = jnp.swapaxes(bt, 1, 2)  # (L, o, r)
+            a = a * aux[f"{t}.rank_scale"][:, :, None]
+        elif mc.method == "vera":
+            a = aux[f"{t}.frozen_a"][None] * params[f"{t}.d"][:, :, None]
+            b = aux[f"{t}.frozen_b"][None] * params[f"{t}.bvec"][:, :, None]
+        elif mc.method == "tied":
+            a = params[f"{t}.a"][None] * params[f"{t}.u"][:, :, None]
+            b = params[f"{t}.b"][None] * params[f"{t}.v"][:, :, None]
+        elif mc.method == "prolora":
+            a = _prolora_replicate_a(params[f"{t}.a0"], mc.m)
+            b = _prolora_replicate_b(params[f"{t}.b0"], mc.m)
+        else:
+            raise ValueError(mc.method)
+        stacks[t] = (a, b)
+    return stacks
+
+
+def _prolora_replicate_a(a0, m):
+    """a0 (L, r, i/m) -> (L, r, i): m chunks, chunk j rotated j along rank.
+
+    This reproduces PRoLoRA's replication + partial-rotation differentiation:
+    identical chunks would collapse the effective rank, rotation restores it.
+    """
+    chunks = [jnp.roll(a0, shift=j, axis=1) for j in range(m)]
+    return jnp.concatenate(chunks, axis=2)
+
+
+def _prolora_replicate_b(b0, m):
+    """b0 (L, o/m, r) -> (L, o, r) with rotation along rank axis."""
+    chunks = [jnp.roll(b0, shift=j, axis=2) for j in range(m)]
+    return jnp.concatenate(chunks, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, g, eps=1e-6):
+    return g * x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _adapted(x, w, ab, scale):
+    """x (B,T,i) @ (w + scale * B A)^T without forming the dense delta."""
+    a, b = ab  # (r, i), (o, r)
+    y = jnp.einsum("bti,oi->bto", x, w)
+    t = jnp.einsum("bti,ri->btr", x, a)
+    return y + scale * jnp.einsum("btr,or->bto", t, b)
+
+
+def forward(cfg: ModelCfg, mc: MethodCfg, base: Dict, params: Dict,
+            aux: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Full forward pass: tokens (B,T) int32 -> logits (B,T,V)."""
+    stacks = materialize(cfg, mc, params, aux)
+    scale = mc.alpha / mc.r
+    B, T = tokens.shape
+    H, D = cfg.heads, cfg.head_dim
+
+    x = jnp.take(base["embed"], tokens, axis=0)  # (B,T,h)
+    # Rotary-free learned-position-free: use causal mask + depth; positions
+    # come from a fixed sinusoidal bias added to the embedding.
+    # positions at 0.1 scale: comparable to the 0.1-std token embeddings
+    # (unit-scale sinusoids would drown token identity at this width)
+    pos = _sinusoid(T, cfg.hidden) * 0.1
+    x = x + pos[None]
+    mask = jnp.tril(jnp.ones((T, T), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    per_block = {
+        "wq": base["w.q"], "wk": base["w.k"], "wv": base["w.v"],
+        "wo": base["w.o"], "wg": base["w.gate"], "wu": base["w.up"],
+        "wd": base["w.down"],
+        "na": base["norm_attn"], "nm": base["norm_mlp"],
+    }
+    for t in LAYER_TYPES:
+        per_block[f"a.{t}"] = stacks[t][0]
+        per_block[f"b.{t}"] = stacks[t][1]
+
+    def block(x, p):
+        hN = _rmsnorm(x, p["na"])
+        q = _adapted(hN, p["wq"], (p["a.q"], p["b.q"]), scale)
+        k = _adapted(hN, p["wk"], (p["a.k"], p["b.k"]), scale)
+        v = _adapted(hN, p["wv"], (p["a.v"], p["b.v"]), scale)
+        q = q.reshape(B, T, H, D).transpose(0, 2, 1, 3)
+        k = k.reshape(B, T, H, D).transpose(0, 2, 1, 3)
+        v = v.reshape(B, T, H, D).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhtd,bhsd->bhts", q, k) * (D ** -0.5)
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhts,bhsd->bhtd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(B, T, cfg.hidden)
+        x = x + _adapted(ctx, p["wo"], (p["a.o"], p["b.o"]), scale)
+
+        hN = _rmsnorm(x, p["nm"])
+        g = _adapted(hN, p["wg"], (p["a.gate"], p["b.gate"]), scale)
+        u = _adapted(hN, p["wu"], (p["a.up"], p["b.up"]), scale)
+        f = jax.nn.silu(g) * u
+        x = x + _adapted(f, p["wd"], (p["a.down"], p["b.down"]), scale)
+        return x, ()
+
+    x, _ = lax.scan(block, x, per_block)
+    x = _rmsnorm(x, base["norm_final"])
+    return jnp.einsum("bth,vh->btv", x, base["embed"])
+
+
+@functools.lru_cache(maxsize=8)
+def _sinusoid_cached(T, h):
+    import numpy as np
+
+    pos = np.arange(T)[:, None]
+    dim = np.arange(h)[None, :]
+    angle = pos / np.power(10000.0, (2 * (dim // 2)) / h)
+    enc = np.where(dim % 2 == 0, np.sin(angle), np.cos(angle))
+    return enc.astype("float32")
+
+
+def _sinusoid(T, h):
+    return jnp.asarray(_sinusoid_cached(T, h))
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step (AdamW inside the artifact)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg, mc, base, params, aux, tokens, targets, weight):
+    """Masked next-token cross entropy. weight (B,T) zeroes out prompt/pad."""
+    logits = forward(cfg, mc, base, params, aux, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(weight), 1.0)
+    return -jnp.sum(tgt * weight) / denom
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.999, 1e-8, 0.0
+
+
+def train_step(cfg, mc, base, params, m, v, step, lr,
+               tokens, targets, weight, aux):
+    """One AdamW step on the adapter params; everything else is frozen.
+
+    step: f32 (1,) 1-based step index; lr: f32 (1,).
+    Returns (new_params, new_m, new_v, loss(1,)).
+    """
+    step = step.reshape(())
+    lr = lr.reshape(())
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, mc, base, p, aux, tokens, targets, weight)
+    )(params)
+    new_p, new_m, new_v = {}, {}, {}
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    for k in params:
+        g = grads[k]
+        m2 = ADAM_B1 * m[k] + (1 - ADAM_B1) * g
+        v2 = ADAM_B2 * v[k] + (1 - ADAM_B2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ADAM_EPS)
+        new_p[k] = params[k] - lr * (upd + WEIGHT_DECAY * params[k])
+        new_m[k], new_v[k] = m2, v2
+    return new_p, new_m, new_v, loss.reshape(1)
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+PRESETS = {
+    # bench workhorse: fast enough for table sweeps on 1 CPU core
+    "tiny": ModelCfg("tiny", vocab=64, hidden=64, blocks=4, heads=4,
+                     ff=160, seq=48, batch=16),
+    # example scale
+    "small": ModelCfg("small", vocab=96, hidden=256, blocks=8, heads=8,
+                      ff=688, seq=96, batch=8),
+    # ~100M-parameter end-to-end driver (examples/train_e2e.rs)
+    "base": ModelCfg("base", vocab=2048, hidden=768, blocks=14, heads=12,
+                     ff=2048, seq=64, batch=4),
+}

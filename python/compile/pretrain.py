@@ -1,0 +1,147 @@
+"""Base-model pretraining (build-time only).
+
+The paper finetunes a *pretrained* LLaMA; adapters only steer an already
+capable base. A random base breaks that premise — low-rank adapters then
+have to learn everything through rank-r deltas and small ranks stall at the
+uniform-loss floor. So `aot.py` pretrains each preset's base with a short
+full-parameter char-LM phase on synthetic "format" text (copying, reversal,
+key:value binding, small sums) before freezing it into the weight bank.
+Content is randomized per sample, so no downstream task answer leaks; only
+*formats and skills* (copy, bind, arithmetic surface forms) are taught —
+the equivalent of generic instruction pretraining.
+
+The charset below MUST match rust/src/data/tokenizer.rs (asserted in
+python/tests/test_pretrain.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+PAD, BOS, SEP, EOS = 0, 1, 2, 3
+SPECIALS = 4
+CHARSET = " abcdefghijklmnopqrstuvwxyz0123456789+-*/=:,.?()[]><#@!%&"
+CHAR_TO_ID = {c: SPECIALS + i for i, c in enumerate(CHARSET)}
+
+
+def encode(s: str) -> list:
+    return [CHAR_TO_ID.get(c, CHAR_TO_ID["?"]) for c in s]
+
+
+def render(prompt: str, completion: str, seq: int):
+    """BOS prompt SEP completion EOS, PAD-filled; loss on completion+EOS.
+
+    Mirrors rust Tokenizer::render (loss weight at positions predicting the
+    completion and EOS)."""
+    toks = [BOS] + encode(prompt) + [SEP]
+    plen = len(toks)
+    toks += encode(completion) + [EOS]
+    if len(toks) > seq:
+        return None
+    weight = np.zeros(seq, np.float32)
+    weight[plen - 1 : len(toks) - 1] = 1.0
+    toks = toks + [PAD] * (seq - len(toks))
+    return np.asarray(toks, np.int32), weight
+
+
+# a fixed letter permutation for the pretraining key->value skill: values
+# must *depend on the key* (so the base learns to attend to it) without
+# leaking any downstream task's fact table (task tables are arbitrary).
+_PERM = "qwertyuiopasdfghjklzxcvbnm"
+
+
+def _permute(s: str) -> str:
+    return "".join(_PERM[ord(c) - ord("a")] for c in s)
+
+
+def sample_example(rng: np.random.Generator):
+    """Format-teaching examples; completions are deterministic functions of
+    the prompt (otherwise the base learns to ignore the prompt, which makes
+    downstream adapter finetuning *harder* than on a random base)."""
+    kind = rng.integers(0, 4)
+    letters = "abcdefghijklmnopqrstuvwxyz"
+    word = "".join(rng.choice(list(letters), rng.integers(3, 7)))
+    if kind == 0:  # copy
+        return word, word
+    if kind == 1:  # reversal
+        return f"rev:{word}", word[::-1]
+    if kind == 2:  # key -> value binding via the fixed permutation
+        key = word[:2]
+        val = _permute(key) + _permute(key[:1])
+        return f"q:{key}", val
+    # small sums with the CoT-ish '#' marker
+    a, b = int(rng.integers(1, 20)), int(rng.integers(1, 20))
+    return f"{a}+{b}=", f"{a + b}#{a + b}"
+
+
+def make_batch(rng, batch: int, seq: int):
+    toks = np.zeros((batch, seq), np.int32)
+    tgts = np.zeros((batch, seq), np.int32)
+    wts = np.zeros((batch, seq), np.float32)
+    i = 0
+    while i < batch:
+        p, c = sample_example(rng)
+        r = render(p, c, seq)
+        if r is None:
+            continue
+        t, w = r
+        toks[i] = t
+        tgts[i, :-1] = t[1:]
+        wts[i] = w
+        i += 1
+    return jnp.asarray(toks), jnp.asarray(tgts), jnp.asarray(wts)
+
+
+def pretrain_base(cfg: M.ModelCfg, base: dict, steps: int, seed: int,
+                  lr: float = 3e-3, log_every: int = 200) -> dict:
+    """Full-parameter AdamW pretraining of the base char-LM."""
+    if steps == 0:
+        return base
+    rng = np.random.default_rng(seed)
+    mc = M.MethodCfg("lora", r=1)  # adapters held at zero during pretraining
+
+    zero_params = {
+        n: jnp.zeros(s, jnp.float32)
+        for n, s in M.adapter_param_specs(cfg, mc)
+    }
+
+    def loss_fn(base, toks, tgts, wts):
+        return M.loss_fn(cfg, mc, base, zero_params, {}, toks, tgts, wts)
+
+    @jax.jit
+    def step_fn(base, m, v, step, toks, tgts, wts):
+        loss, grads = jax.value_and_grad(loss_fn)(base, toks, tgts, wts)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        bc1 = 1.0 - b1 ** step
+        bc2 = 1.0 - b2 ** step
+        new_base, new_m, new_v = {}, {}, {}
+        for k in base:
+            g = grads[k]
+            m2 = b1 * m[k] + (1 - b1) * g
+            v2 = b2 * v[k] + (1 - b2) * g * g
+            new_base[k] = base[k] - lr * (m2 / bc1) / (
+                jnp.sqrt(v2 / bc2) + eps
+            )
+            new_m[k], new_v[k] = m2, v2
+        return new_base, new_m, new_v, loss
+
+    m = {k: jnp.zeros_like(x) for k, x in base.items()}
+    v = {k: jnp.zeros_like(x) for k, x in base.items()}
+    first = last = None
+    for s in range(steps):
+        toks, tgts, wts = make_batch(rng, cfg.batch, cfg.seq)
+        base, m, v, loss = step_fn(base, m, v, jnp.float32(s + 1), toks,
+                                   tgts, wts)
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+        if log_every and (s % log_every == 0 or s + 1 == steps):
+            print(f"[pretrain] step {s + 1}/{steps} loss {float(loss):.4f}",
+                  flush=True)
+    print(f"[pretrain] {cfg.name}: {first:.3f} -> {last:.3f} "
+          f"({steps} steps)", flush=True)
+    return {k: jnp.asarray(x) for k, x in base.items()}

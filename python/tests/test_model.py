@@ -1,0 +1,305 @@
+"""L2 correctness: model shapes, materialization semantics per method,
+training-step behaviour (loss decreases, frozen things stay frozen), and the
+reductions between methods the paper's framing implies."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelCfg("test", vocab=32, hidden=16, blocks=3, heads=2, ff=24,
+                 seq=12, batch=4)
+
+
+def setup(mc, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = M.init_base(CFG, k1)
+    params = M.init_adapter(CFG, mc, k2)
+    aux = make_aux(mc, k3)
+    return base, params, aux
+
+
+def make_aux(mc, key):
+    aux = {}
+    L, r = CFG.blocks, mc.r
+    for t in M.LAYER_TYPES:
+        o, i = CFG.dims(t)
+        if mc.method == "mos":
+            n = mc.pool_shards(CFG)
+            key, ka, kb = jax.random.split(key, 3)
+            aux[f"{t}.idx_a"] = jax.random.randint(
+                ka, (L, r, mc.l), 0, n, jnp.int32
+            )
+            aux[f"{t}.idx_b"] = jax.random.randint(
+                kb, (L, r, mc.l), 0, n, jnp.int32
+            )
+            aux[f"{t}.rank_scale"] = jnp.ones((L, r), jnp.float32)
+        elif mc.method == "vera":
+            key, ka, kb = jax.random.split(key, 3)
+            aux[f"{t}.frozen_a"] = jax.random.normal(ka, (r, i)) * i ** -0.5
+            aux[f"{t}.frozen_b"] = jax.random.normal(kb, (o, r)) * r ** -0.5
+    return aux
+
+
+def batch(seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(
+        rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq)), jnp.int32
+    )
+    targets = jnp.roll(tokens, -1, axis=1)
+    weight = jnp.ones((CFG.batch, CFG.seq), jnp.float32)
+    return tokens, targets, weight
+
+
+METHODS = [
+    M.MethodCfg("lora", r=2),
+    M.MethodCfg("mos", r=4, l=2, e=2),
+    M.MethodCfg("vera", r=4),
+    M.MethodCfg("tied", r=2),
+    M.MethodCfg("prolora", r=4, m=2),
+]
+
+
+@pytest.mark.parametrize("mc", METHODS, ids=lambda m: m.method)
+class TestForward:
+    def test_logit_shape(self, mc):
+        base, params, aux = setup(mc)
+        tokens, _, _ = batch()
+        logits = M.forward(CFG, mc, base, params, aux, tokens)
+        assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_zero_init_matches_base(self, mc):
+        """Paper Sec 3.5: B-side zero init => adapted model == base model."""
+        base, params, aux = setup(mc)
+        tokens, _, _ = batch()
+        adapted = M.forward(CFG, mc, base, params, aux, tokens)
+        zero = {k: jnp.zeros_like(v) for k, v in params.items()}
+        base_out = M.forward(CFG, mc, base, zero, aux, tokens)
+        np.testing.assert_allclose(adapted, base_out, rtol=1e-5, atol=1e-5)
+
+    def test_causality(self, mc):
+        """Changing a future token must not change past logits."""
+        base, params, aux = setup(mc)
+        # make the delta nonzero so adapters are actually on the path
+        params = {
+            k: (jnp.ones_like(v) * 0.05 if v.ndim else v)
+            for k, v in params.items()
+        }
+        tokens, _, _ = batch()
+        logits1 = M.forward(CFG, mc, base, params, aux, tokens)
+        toks2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab)
+        logits2 = M.forward(CFG, mc, base, params, aux, toks2)
+        np.testing.assert_allclose(
+            logits1[:, :-1], logits2[:, :-1], rtol=1e-5, atol=1e-5
+        )
+
+    def test_loss_decreases(self, mc):
+        base, params, aux = setup(mc)
+        tokens, targets, weight = batch()
+        m = {k: jnp.zeros_like(v) for k, v in params.items()}
+        v = {k: jnp.zeros_like(v2) for k, v2 in params.items()}
+        losses = []
+        step_fn = jax.jit(
+            lambda p, m, v, s: M.train_step(
+                CFG, mc, base, p, m, v, s, jnp.asarray([2e-2]),
+                tokens, targets, weight, aux,
+            )
+        )
+        for i in range(25):
+            params, m, v, loss = step_fn(params, m, v, jnp.asarray([i + 1.0]))
+            losses.append(float(loss[0]))
+        assert losses[-1] < losses[0] - 0.05, losses
+
+
+class TestMaterialization:
+    def test_mos_matches_ref_oracle(self):
+        mc = M.MethodCfg("mos", r=4, l=2, e=2)
+        base, params, aux = setup(mc)
+        stacks = M.materialize(CFG, mc, params, aux)
+        for t in M.LAYER_TYPES:
+            a, b = stacks[t]
+            for k in range(CFG.blocks):
+                np.testing.assert_allclose(
+                    a[k],
+                    ref.materialize_a(
+                        params[f"{t}.pool_a"], aux[f"{t}.idx_a"][k]
+                    ),
+                    rtol=1e-6,
+                )
+                np.testing.assert_allclose(
+                    b[k],
+                    ref.materialize_b(
+                        params[f"{t}.pool_b"], aux[f"{t}.idx_b"][k]
+                    ),
+                    rtol=1e-6,
+                )
+
+    def test_rank_scale_folds_into_a(self):
+        mc = M.MethodCfg("mos", r=4, l=2, e=2)
+        base, params, aux = setup(mc)
+        aux2 = dict(aux)
+        for t in M.LAYER_TYPES:
+            aux2[f"{t}.rank_scale"] = aux[f"{t}.rank_scale"] * 0.5
+        s1 = M.materialize(CFG, mc, params, aux)
+        s2 = M.materialize(CFG, mc, params, aux2)
+        for t in M.LAYER_TYPES:
+            np.testing.assert_allclose(s2[t][0], 0.5 * s1[t][0], rtol=1e-6)
+            np.testing.assert_allclose(s2[t][1], s1[t][1], rtol=1e-6)
+
+    def test_subset_selection_masks_rows(self):
+        """rank_scale of 0 disables a rank — the boolean m_i of Eq. (3)."""
+        mc = M.MethodCfg("mos", r=4, l=2, e=2)
+        base, params, aux = setup(mc)
+        tokens, _, _ = batch()
+        # random pools so deltas are nonzero
+        params = {k: jnp.asarray(np.random.default_rng(0).standard_normal(
+            v.shape), jnp.float32) * 0.1 for k, v in params.items()}
+        aux_off = dict(aux)
+        for t in M.LAYER_TYPES:
+            aux_off[f"{t}.rank_scale"] = jnp.zeros((CFG.blocks, mc.r))
+        adapted = M.forward(CFG, mc, base, params, aux_off, tokens)
+        zerop = {k: jnp.zeros_like(v) for k, v in params.items()}
+        base_out = M.forward(CFG, mc, base, zerop, aux, tokens)
+        np.testing.assert_allclose(adapted, base_out, rtol=1e-5, atol=1e-5)
+
+    def test_vera_scaling_vectors(self):
+        mc = M.MethodCfg("vera", r=4)
+        base, params, aux = setup(mc)
+        stacks = M.materialize(CFG, mc, params, aux)
+        t = "q"
+        a, b = stacks[t]
+        k = 1
+        want_a = aux[f"{t}.frozen_a"] * params[f"{t}.d"][k][:, None]
+        np.testing.assert_allclose(a[k], want_a, rtol=1e-6)
+        want_b = aux[f"{t}.frozen_b"] * params[f"{t}.bvec"][k][:, None]
+        np.testing.assert_allclose(b[k], want_b, rtol=1e-6)
+
+    def test_tied_shares_matrices_across_blocks(self):
+        mc = M.MethodCfg("tied", r=2)
+        base, params, aux = setup(mc)
+        params = {k: jnp.abs(v) + 0.1 for k, v in params.items()}
+        stacks = M.materialize(CFG, mc, params, aux)
+        a, _ = stacks["q"]
+        # rows of A differ across blocks only by the per-block scale u
+        ratio01 = a[0] / a[1]
+        expected = (params["q.u"][0] / params["q.u"][1])[:, None]
+        np.testing.assert_allclose(
+            ratio01, jnp.broadcast_to(expected, ratio01.shape), rtol=1e-5
+        )
+
+    def test_prolora_replication_structure(self):
+        mc = M.MethodCfg("prolora", r=4, m=2)
+        base, params, aux = setup(mc)
+        stacks = M.materialize(CFG, mc, params, aux)
+        a, b = stacks["q"]
+        o, i = CFG.dims("q")
+        assert a.shape == (CFG.blocks, mc.r, i)
+        assert b.shape == (CFG.blocks, o, mc.r)
+        half = i // 2
+        # chunk 1 is chunk 0 rotated by 1 along the rank axis
+        np.testing.assert_allclose(
+            a[:, :, half:], jnp.roll(a[:, :, :half], 1, axis=1), rtol=1e-6
+        )
+
+    def test_mos_pure_sharing_identity_routing(self):
+        """idx = arange, r = pool size, l=1: every block gets the same
+        matrices — the paper's 'pure sharing' scheme."""
+        mc = M.MethodCfg("mos", r=6, l=1, e=2)
+        base, params, _ = setup(mc)
+        n = mc.pool_shards(CFG)
+        assert n == 6
+        idx = jnp.broadcast_to(
+            jnp.arange(n, dtype=jnp.int32)[None, :, None],
+            (CFG.blocks, n, 1),
+        )
+        aux = {}
+        for t in M.LAYER_TYPES:
+            aux[f"{t}.idx_a"] = idx
+            aux[f"{t}.idx_b"] = idx
+            aux[f"{t}.rank_scale"] = jnp.ones((CFG.blocks, n))
+        stacks = M.materialize(CFG, mc, params, aux)
+        for t in M.LAYER_TYPES:
+            a, b = stacks[t]
+            for k in range(1, CFG.blocks):
+                np.testing.assert_array_equal(a[0], a[k])
+                np.testing.assert_array_equal(b[0], b[k])
+
+
+class TestParamBudgets:
+    def test_mos_pool_budget_matches_lora(self):
+        """Pool param count == LoRA-rank-e param count, per layer type."""
+        for l in (1, 2, 4):
+            mc = M.MethodCfg("mos", r=8, l=l, e=2)
+            n = mc.pool_shards(CFG)
+            for t in M.LAYER_TYPES:
+                o, i = CFG.dims(t)
+                pool = n * (i // l) + n * (o // l)
+                lora = CFG.blocks * mc.e * (i + o)
+                assert pool == lora, (t, l)
+
+    def test_adapter_param_counts_ordering(self):
+        """VeRA < MoS(e=2) ≈ LoRA(r=2) < LoRA(r=8); tied < lora."""
+
+        def count(mc):
+            return sum(
+                int(np.prod(s)) for _, s in M.adapter_param_specs(CFG, mc)
+            )
+
+        lora2 = count(M.MethodCfg("lora", r=2))
+        mos2 = count(M.MethodCfg("mos", r=8, l=2, e=2))
+        assert mos2 == lora2
+        assert count(M.MethodCfg("vera", r=4)) < lora2
+        assert count(M.MethodCfg("tied", r=2)) < lora2
+        assert count(M.MethodCfg("lora", r=8)) == 4 * lora2
+        assert count(M.MethodCfg("prolora", r=4, m=2)) == lora2
+
+
+class TestTrainStep:
+    def test_mos_grads_touch_only_routed_shards(self):
+        """A pool shard never referenced by any index matrix must not move."""
+        mc = M.MethodCfg("mos", r=2, l=1, e=2)
+        base, params, aux = setup(mc)
+        # nonzero pools: with B == 0 the A-side grad would be zero at step 1
+        rng = np.random.default_rng(0)
+        params = {
+            k: jnp.asarray(rng.standard_normal(v.shape) * 0.05, jnp.float32)
+            for k, v in params.items()
+        }
+        # route everything to shard 0 (A side) / shard 1 (B side) only
+        for t in M.LAYER_TYPES:
+            aux[f"{t}.idx_a"] = jnp.zeros((CFG.blocks, 2, 1), jnp.int32)
+            aux[f"{t}.idx_b"] = jnp.ones((CFG.blocks, 2, 1), jnp.int32)
+        tokens, targets, weight = batch()
+        m = {k: jnp.zeros_like(v) for k, v in params.items()}
+        v = {k: jnp.zeros_like(x) for k, x in params.items()}
+        p2, _, _, _ = M.train_step(
+            CFG, mc, base, params, m, v, jnp.asarray([1.0]),
+            jnp.asarray([1e-2]), tokens, targets, weight, aux,
+        )
+        for t in M.LAYER_TYPES:
+            pa, pa2 = params[f"{t}.pool_a"], p2[f"{t}.pool_a"]
+            np.testing.assert_array_equal(pa[1:], pa2[1:])  # untouched rows
+            assert not np.allclose(pa[0], pa2[0])  # routed row moved
+            pb, pb2 = params[f"{t}.pool_b"], p2[f"{t}.pool_b"]
+            np.testing.assert_array_equal(pb[2:], pb2[2:])
+            np.testing.assert_array_equal(pb[0], pb2[0])
+            assert not np.allclose(pb[1], pb2[1])
+
+    def test_weight_mask_excludes_prompt(self):
+        mc = M.MethodCfg("lora", r=2)
+        base, params, aux = setup(mc)
+        tokens, targets, _ = batch()
+        w_all = jnp.ones((CFG.batch, CFG.seq))
+        w_none = jnp.zeros((CFG.batch, CFG.seq))
+        l_all = M.loss_fn(CFG, mc, base, params, aux, tokens, targets, w_all)
+        l_none = M.loss_fn(CFG, mc, base, params, aux, tokens, targets,
+                           w_none)
+        assert float(l_none) == 0.0
+        assert float(l_all) > 0.0

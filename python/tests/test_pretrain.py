@@ -1,0 +1,59 @@
+"""Pretraining phase: charset parity with the Rust tokenizer, render-mask
+semantics, and that the char-LM loss actually decreases."""
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import pretrain
+
+
+RUST_CHARSET = " abcdefghijklmnopqrstuvwxyz0123456789+-*/=:,.?()[]><#@!%&"
+
+
+def test_charset_matches_rust_tokenizer():
+    # must stay byte-identical to rust/src/data/tokenizer.rs::CHARSET
+    assert pretrain.CHARSET == RUST_CHARSET
+    assert (pretrain.PAD, pretrain.BOS, pretrain.SEP, pretrain.EOS) == (
+        0, 1, 2, 3,
+    )
+
+
+def test_render_mask_matches_rust_semantics():
+    toks, w = pretrain.render("q", "ans", 12)
+    # BOS q SEP a n s EOS PAD...
+    assert toks[0] == pretrain.BOS
+    assert toks[2] == pretrain.SEP
+    assert toks[6] == pretrain.EOS
+    assert toks[7] == pretrain.PAD
+    np.testing.assert_array_equal(
+        w[:8], [0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 0.0, 0.0]
+    )
+    assert pretrain.render("aaaaaaa", "bbbbbbb", 10) is None
+
+
+def test_examples_fit_tiny_vocab():
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        p, c = pretrain.sample_example(rng)
+        for ch in p + c:
+            assert ch in pretrain.CHAR_TO_ID, f"char {ch!r} not in charset"
+        assert max(pretrain.encode(p + c)) < 64
+
+
+def test_pretraining_reduces_loss():
+    import jax
+
+    cfg = M.ModelCfg("pt", vocab=64, hidden=32, blocks=2, heads=2, ff=48,
+                     seq=32, batch=8)
+    base = M.init_base(cfg, jax.random.PRNGKey(0))
+    # measure loss before/after a short pretraining run
+    rng = np.random.default_rng(1)
+    toks, tgts, wts = pretrain.make_batch(rng, cfg.batch, cfg.seq)
+    mc = M.MethodCfg("lora", r=1)
+    zero = {n: np.zeros(s, np.float32)
+            for n, s in M.adapter_param_specs(cfg, mc)}
+    before = float(M.loss_fn(cfg, mc, base, zero, {}, toks, tgts, wts))
+    base2 = pretrain.pretrain_base(cfg, base, steps=60, seed=0, log_every=0)
+    after = float(M.loss_fn(cfg, mc, base2, zero, {}, toks, tgts, wts))
+    assert after < before - 0.3, (before, after)

@@ -1,0 +1,147 @@
+//! Hot-path microbench: shard-gather materialization and the fused routed
+//! apply (the serving-side cost MoS adds over vanilla LoRA), on host and —
+//! when artifacts exist — through the AOT pallas `materialize` program and
+//! the pallas-gather forward artifact.
+//!
+//! Run: cargo bench --bench bench_materialize
+
+use mos::adapter::mos::router::build_router;
+use mos::adapter::mos::materialize::{apply_fused, factors};
+use mos::adapter::{init_params, materialize};
+use mos::bench::Table;
+use mos::config::{presets, MethodCfg, LAYER_TYPES};
+use mos::runtime::{Manifest, Runtime};
+use mos::util::bank::Tensor;
+use mos::util::rng::Rng;
+use std::time::Instant;
+
+fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Materialization & routed-apply hot path",
+        &["operation", "config", "mean time", "throughput"],
+    );
+
+    // 1) full-tenant materialization (all 7 layer types, all blocks)
+    for (pname, cfg) in [("tiny", presets::tiny()), ("small", presets::small())] {
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let params = init_params(&cfg, &mc, 0);
+        let aux = build_router(&cfg, &mc, 0).into_bank();
+        let dt = time_n(20, || {
+            for t in LAYER_TYPES {
+                let f = materialize(&cfg, &mc, &params, &aux, t);
+                std::hint::black_box(&f);
+            }
+        });
+        let bytes: usize = LAYER_TYPES
+            .iter()
+            .map(|t| {
+                let (o, i) = cfg.dims(t);
+                cfg.blocks * mc.r * (i + o) * 4
+            })
+            .sum();
+        table.row(vec![
+            "tenant materialize (gather+concat)".into(),
+            format!("{pname}, r=8 l=2"),
+            format!("{:.3} ms", dt * 1e3),
+            format!("{:.1} MB/s", bytes as f64 / dt / 1e6),
+        ]);
+    }
+
+    // 2) fused routed apply vs dense-delta apply (per layer forward)
+    let cfg = presets::small();
+    let mc = MethodCfg::mos(8, 2, 2, 1);
+    let mut params = init_params(&cfg, &mc, 0);
+    let mut rng = Rng::new(0, 0);
+    for t in LAYER_TYPES {
+        let key = format!("{t}.pool_b");
+        let old = params[&key].clone();
+        params.insert(
+            key,
+            Tensor::from_f32(old.shape(), rng.normal_vec(old.len(), 0.1)),
+        );
+    }
+    let aux = build_router(&cfg, &mc, 0).into_bank();
+    let f = factors(&cfg, &mc, &params, &aux, "q");
+    let (o, i) = cfg.dims("q");
+    let m = 64;
+    let x = rng.normal_vec(m * i, 1.0);
+    let mut y = vec![0.0f32; m * o];
+    let dt_fused = time_n(50, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        apply_fused(&x, m, &f, 0, 1.0, &mut y);
+        std::hint::black_box(&y);
+    });
+    let flops = 2.0 * m as f64 * mc.r as f64 * (i + o) as f64;
+    table.row(vec![
+        "fused routed apply (x->t->y)".into(),
+        format!("small q-proj, m={m}"),
+        format!("{:.3} ms", dt_fused * 1e3),
+        format!("{:.2} GFLOP/s", flops / dt_fused / 1e9),
+    ]);
+    // dense delta path (materializes o*i then matmuls) for contrast
+    let dt_dense = time_n(10, || {
+        let delta = f.delta(0);
+        let mut y2 = vec![0.0f32; m * o];
+        mos::model::math::matmul_nt_acc(&x, &delta, &mut y2, m, i, o);
+        std::hint::black_box(&y2);
+    });
+    table.row(vec![
+        "dense ΔW apply (materialize+matmul)".into(),
+        format!("small q-proj, m={m}"),
+        format!("{:.3} ms", dt_dense * 1e3),
+        format!(
+            "{:.1}x slower than fused",
+            dt_dense / dt_fused
+        ),
+    ]);
+
+    // 3) AOT pallas materialize artifact (if built)
+    if let Ok(manifest) = Manifest::load(&Manifest::default_dir()) {
+        if manifest.artifacts.contains_key("materialize_tiny") {
+            let rt = Runtime::cpu()?;
+            let exe = rt.load(&manifest, "materialize_tiny")?;
+            let tiny = presets::tiny();
+            let mc2 = MethodCfg::mos(8, 2, 2, 0);
+            let n = mc2.pool_shards(tiny.blocks);
+            let s = tiny.hidden / mc2.l;
+            let mut inputs = mos::util::bank::Bank::new();
+            inputs.insert(
+                "pool".into(),
+                Tensor::from_f32(&[n, s], rng.normal_vec(n * s, 1.0)),
+            );
+            inputs.insert(
+                "idx".into(),
+                Tensor::from_i32(
+                    &[mc2.r, mc2.l],
+                    (0..mc2.r * mc2.l).map(|x| (x % n) as i32).collect(),
+                ),
+            );
+            let dt = time_n(20, || {
+                let out = exe.execute_bank(&inputs).unwrap();
+                std::hint::black_box(&out);
+            });
+            table.row(vec![
+                "AOT pallas shard_gather (PJRT)".into(),
+                "tiny q-pool (one block)".into(),
+                format!("{:.3} ms", dt * 1e3),
+                "interpret-mode correctness path".into(),
+            ]);
+        }
+    }
+
+    table.print();
+    println!(
+        "\nnotes: materialization is per-tenant precompute (cached by the \
+         coordinator; amortized to zero on the request path). The fused \
+         apply is the no-materialization alternative for cold tenants."
+    );
+    Ok(())
+}

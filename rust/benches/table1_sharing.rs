@@ -1,0 +1,63 @@
+//! Table 1 (and Figure 1, measured): sharing & differentiation study.
+//!
+//! Paper (LLaMA2-7B, 5.00M trainable params): pure sharing at rank 64
+//! underperforms LoRA r=2 on average; random scaling roughly recovers it;
+//! subset selection surpasses LoRA. Here: tiny preset, budget e=2
+//! (pure-sharing rank = e*L), synthetic proxy tasks. The *ordering*
+//! LoRA ≈ pure < +rs < +ss is the reproduction target.
+//!
+//! Run: cargo bench --bench table1_sharing
+//! Knobs: MOS_BENCH_STEPS / MOS_BENCH_TASKS / MOS_BENCH_SEEDS (bench/mod.rs)
+
+use mos::adapter::params::{fmt_params, trainable_params};
+use mos::bench::{rows, BenchCtx, Table};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::tiny();
+    println!(
+        "table1: backend={} steps={} tasks={:?} seeds={}",
+        ctx.backend_name(),
+        ctx.steps,
+        ctx.tasks.iter().map(|t| t.name()).collect::<Vec<_>>(),
+        ctx.seeds.len()
+    );
+
+    let blocks = ctx.cfg.blocks;
+    let configs = vec![
+        ("LoRA", rows::lora(2), 34.98),
+        ("Pure Sharing", rows::pure_sharing(blocks), 34.33),
+        ("+ Random Scaling", rows::random_scaling(blocks), 34.77),
+        ("+ Subset Selection", rows::subset_selection(), 36.12),
+    ];
+
+    let mut headers = vec!["method", "rank", "# param"];
+    for t in &ctx.tasks {
+        headers.push(t.name());
+    }
+    headers.extend(["avg", "paper avg", "final loss"]);
+    let mut table = Table::new(
+        "Table 1 — sharing & differentiation (paper: LLaMA2-7B; here: tiny preset, proxy tasks)",
+        &headers.iter().map(|s| &**s).collect::<Vec<_>>(),
+    );
+
+    for (name, mc, paper_avg) in configs {
+        let s = ctx.run_method(&mc)?;
+        let mut row = vec![
+            name.to_string(),
+            mc.r.to_string(),
+            fmt_params(trainable_params(&ctx.cfg, &mc)),
+        ];
+        row.extend(s.per_task.iter().map(|v| format!("{v:.2}")));
+        row.push(format!("{:.2}", s.avg));
+        row.push(format!("{paper_avg:.2}"));
+        row.push(format!("{:.3}", s.final_loss));
+        table.row(row);
+        eprintln!("[table1] {name}: avg {:.2} ({:.1}s)", s.avg, s.train_seconds);
+    }
+    table.print();
+    println!(
+        "\nreproduction target: differentiation reverses pure sharing's \
+         degradation (+ss >= pure, +ss >= lora); see EXPERIMENTS.md §Table1"
+    );
+    Ok(())
+}

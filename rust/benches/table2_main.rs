@@ -1,0 +1,81 @@
+//! Table 2: main results — every method at the 1x (5.00M-equivalent) budget,
+//! LoRA at raised budgets, MoS at 4x, and the three MoS ablations.
+//!
+//! The "# param" column is printed twice: measured on the tiny preset AND
+//! analytically on the true LLaMA2-7B geometry, where it reproduces the
+//! paper digit-for-digit (5.00M / 19.99M / 39.98M / 159.91M / 1.42M...).
+//!
+//! Run: cargo bench --bench table2_main
+
+use mos::adapter::params::{fmt_params, trainable_params};
+use mos::bench::{rows, BenchCtx, Table};
+use mos::config::presets;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::tiny();
+    let llama = presets::llama2_7b();
+    println!(
+        "table2: backend={} steps={} tasks={:?} seeds={}",
+        ctx.backend_name(),
+        ctx.steps,
+        ctx.tasks.iter().map(|t| t.name()).collect::<Vec<_>>(),
+        ctx.seeds.len()
+    );
+
+    // (display name, tiny config, llama-geometry config, paper avg)
+    let configs: Vec<(&str, mos::config::MethodCfg, mos::config::MethodCfg, f64)> = vec![
+        ("LoRA r2 (1x)", rows::lora(2), mos::config::MethodCfg::lora(2), 34.98),
+        ("LoRA r8 (4x)", rows::lora(8), mos::config::MethodCfg::lora(8), 36.89),
+        ("LoRA r16 (8x)", rows::lora(16), mos::config::MethodCfg::lora(16), 36.97),
+        ("VeRA", rows::vera(), mos::config::MethodCfg::vera(256), 34.00),
+        ("Tied LoRA", rows::tied(), mos::config::MethodCfg::tied(280), 35.26),
+        ("PRoLoRA 4/8", rows::prolora(), mos::config::MethodCfg::prolora(8, 4), 36.03),
+        ("MoS 4/8 (1x)", rows::mos_1x(), mos::config::MethodCfg::mos(8, 2, 2, 1), 36.39),
+        ("MoS 16/32 (4x)", rows::mos_4x(), mos::config::MethodCfg::mos(32, 2, 8, 1), 37.63),
+        ("MoS -sp", rows::mos_no_sp(), mos::config::MethodCfg::mos(32, 2, 8, 0), 36.54),
+        ("MoS -vs", rows::mos_no_vs(), mos::config::MethodCfg::mos(32, 1, 8, 1), 37.22),
+        ("MoS -pd", rows::mos_no_pd(), mos::config::MethodCfg::mos(32, 2, 8, 1), 36.54),
+    ];
+
+    let mut headers = vec!["method", "rank", "# param(tiny)", "# param(7B)"];
+    for t in &ctx.tasks {
+        headers.push(t.name());
+    }
+    headers.extend(["avg", "paper avg", "loss"]);
+    let mut table = Table::new(
+        "Table 2 — main results (paper: LLaMA2-7B instruction tuning; here: tiny preset, proxy tasks)",
+        &headers.iter().map(|s| &**s).collect::<Vec<_>>(),
+    );
+
+    let mut mos_avg = 0.0;
+    let mut lora_avg = 0.0;
+    for (name, mc_tiny, mc_llama, paper) in configs {
+        let s = ctx.run_method(&mc_tiny)?;
+        if name.starts_with("MoS 4/8") {
+            mos_avg = s.avg;
+        }
+        if name.starts_with("LoRA r2") {
+            lora_avg = s.avg;
+        }
+        let mut row = vec![
+            name.to_string(),
+            mc_tiny.r.to_string(),
+            fmt_params(trainable_params(&ctx.cfg, &mc_tiny)),
+            fmt_params(trainable_params(&llama, &mc_llama)),
+        ];
+        row.extend(s.per_task.iter().map(|v| format!("{v:.2}")));
+        row.push(format!("{:.2}", s.avg));
+        row.push(format!("{paper:.2}"));
+        row.push(format!("{:.3}", s.final_loss));
+        table.row(row);
+        eprintln!("[table2] {name}: avg {:.2} ({:.1}s)", s.avg, s.train_seconds);
+    }
+    table.print();
+    println!(
+        "\nreproduction targets: (1) MoS > LoRA at equal budget \
+         (measured {mos_avg:.2} vs {lora_avg:.2}); (2) # param(7B) column \
+         matches the paper exactly (verified in unit tests); (3) MoS 4x \
+         ≈ LoRA 8x-32x — the ~8x parameter-savings headline."
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Table 3: scalability — LoRA vs PRoLoRA vs MoS at the rank-2 budget on a
+//! *larger* model (paper: LLaMA2-13B; here: the `small` preset when its
+//! artifacts exist, else a mid-size host geometry).
+//!
+//! Reproduction target: the ordering LoRA < PRoLoRA < MoS persists as the
+//! base model grows (paper: 43.92 < 45.04 < 45.98 on MMLU/BBH/GSM).
+//!
+//! Run: cargo bench --bench table3_scale
+
+use mos::adapter::params::{fmt_params, trainable_params};
+use mos::bench::{BenchCtx, Table};
+use mos::config::{presets, MethodCfg, ModelCfg};
+
+fn mid_cfg() -> ModelCfg {
+    // larger than tiny, still host-trainable in bench time
+    ModelCfg {
+        name: "mid".into(),
+        vocab: 64,
+        hidden: 96,
+        blocks: 6,
+        heads: 6,
+        ff: 256,
+        seq: 48,
+        batch: 8,
+        kv_heads: 6,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // prefer the small preset's artifacts; fall back to host mid geometry
+    // (MOS_BENCH_BACKEND=host forces the mid geometry — small host steps
+    // are too slow for bench budgets)
+    let small_available = std::env::var("MOS_BENCH_BACKEND").as_deref()
+        != Ok("host")
+        && mos::runtime::Manifest::load(&mos::runtime::Manifest::default_dir())
+            .map(|m| m.presets.contains_key("small"))
+            .unwrap_or(false);
+    let ctx = if small_available {
+        BenchCtx::for_preset("small", presets::small())
+    } else {
+        BenchCtx::for_preset("mid", mid_cfg())
+    };
+    println!(
+        "table3: scale preset={} backend={} steps={}",
+        ctx.cfg.name,
+        ctx.backend_name(),
+        ctx.steps
+    );
+
+    // artifacts for small: lora_r4 (budget 2e) and mos e=2 (budget e) — the
+    // budget asymmetry *favours LoRA*, so MoS >= LoRA is conservative.
+    // PRoLoRA has no small artifact and host steps at small scale exceed
+    // bench budgets; it is included only in the host/mid fallback.
+    let configs: Vec<(&str, MethodCfg, f64)> = if small_available {
+        vec![
+            ("LoRA (2x budget)", MethodCfg::lora(4), 43.92),
+            ("MoS (1x budget)", MethodCfg::mos(8, 2, 2, 1), 45.98),
+        ]
+    } else {
+        vec![
+            ("LoRA", MethodCfg::lora(2), 43.92),
+            ("PRoLoRA", MethodCfg::prolora(8, 4), 45.04),
+            ("MoS", MethodCfg::mos(8, 2, 2, 1), 45.98),
+        ]
+    };
+
+    let mut headers = vec!["method", "# param"];
+    for t in &ctx.tasks {
+        headers.push(t.name());
+    }
+    headers.extend(["avg", "paper avg (13B)"]);
+    let mut table = Table::new(
+        "Table 3 — scalability (paper: LLaMA2-13B; here: larger preset, proxy tasks)",
+        &headers.iter().map(|s| &**s).collect::<Vec<_>>(),
+    );
+    for (name, mc, paper) in configs {
+        let s = ctx.run_method(&mc)?;
+        let mut row = vec![
+            name.to_string(),
+            fmt_params(trainable_params(&ctx.cfg, &mc)),
+        ];
+        row.extend(s.per_task.iter().map(|v| format!("{v:.2}")));
+        row.push(format!("{:.2}", s.avg));
+        row.push(format!("{paper:.2}"));
+        table.row(row);
+        eprintln!("[table3] {name}: avg {:.2} ({:.1}s)", s.avg, s.train_seconds);
+    }
+    table.print();
+    Ok(())
+}

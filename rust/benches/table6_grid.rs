@@ -1,0 +1,63 @@
+//! Table 6 (Appendix B.3): hyperparameter grid — shards-per-vector l in
+//! {1,2,4,8,16} x private rank in {1,3,5,7} on the BBH proxy (`chain`).
+//!
+//! Pools use the 4x budget (e=8) so private_rank up to 7 < e is feasible,
+//! matching the paper's 19.99M-budget grid. Reproduction targets: a broad
+//! plateau of good configs; as l grows (more differentiation from
+//! sharding), the optimal private rank drifts downward.
+//!
+//! Run: cargo bench --bench table6_grid
+//! (host backend for l values without artifacts; seeds via MOS_BENCH_SEEDS)
+
+use mos::bench::{BenchCtx, Table};
+use mos::config::MethodCfg;
+use mos::data::tasks::TaskKind;
+use mos::stats::mean;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::tiny();
+    ctx.tasks = vec![TaskKind::Chain]; // the BBH proxy
+    let ls = [1usize, 2, 4, 8, 16];
+    let ps = [1usize, 3, 5, 7];
+    println!(
+        "table6: grid {}x{} on chain, backend={} steps={} seeds={}",
+        ls.len(),
+        ps.len(),
+        ctx.backend_name(),
+        ctx.steps,
+        ctx.seeds.len()
+    );
+
+    let mut headers = vec!["shards/vec".to_string()];
+    headers.extend(ps.iter().map(|p| format!("p={p}")));
+    let mut table = Table::new(
+        "Table 6 — shards-per-vector x private rank (chain task, e=8 budget; paper values 38.6-40.0 on BBH)",
+        &headers.iter().map(|s| &**s).collect::<Vec<_>>(),
+    );
+
+    let mut best = (0.0f64, 0usize, 0usize);
+    for &l in &ls {
+        let mut row = vec![format!("{l}")];
+        for &p in &ps {
+            let mc = MethodCfg::mos(8, l, 8, p);
+            let mut scores = Vec::new();
+            for &seed in &ctx.seeds {
+                let r = ctx.run_cell(&mc, TaskKind::Chain, seed)?;
+                scores.push(r.report.score);
+            }
+            let m = mean(&scores);
+            if m > best.0 {
+                best = (m, l, p);
+            }
+            row.push(format!("{m:.1}"));
+            eprintln!("[table6] l={l} p={p}: {m:.1}");
+        }
+        table.row(row);
+    }
+    table.print();
+    println!(
+        "\nbest cell: l={} private_rank={} ({:.1}); paper's best: l=4, p=5 (40.0)",
+        best.1, best.2, best.0
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Table 7 (Appendix B.3): statistical significance of MoS vs LoRA at both
+//! budgets — paired t-test over per-(task, seed) score pairs, plus Welch's
+//! unpaired test. Paper: p < 0.05 at both 5.00M and 19.99M budgets.
+//!
+//! Run: cargo bench --bench table7_significance   (forces 4 seeds)
+
+use mos::bench::{BenchCtx, Table};
+use mos::config::MethodCfg;
+use mos::stats::{mean, paired_t_test, welch_t_test};
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = BenchCtx::tiny();
+    ctx.seeds = vec![0, 1, 2, 3];
+    println!(
+        "table7: backend={} steps={} tasks={:?} seeds={:?}",
+        ctx.backend_name(),
+        ctx.steps,
+        ctx.tasks.iter().map(|t| t.name()).collect::<Vec<_>>(),
+        ctx.seeds
+    );
+
+    let budgets: Vec<(&str, MethodCfg, MethodCfg)> = vec![
+        ("1x (5.00M-eq)", MethodCfg::lora(2), MethodCfg::mos(8, 2, 2, 1)),
+        ("4x (19.99M-eq)", MethodCfg::lora(8), MethodCfg::mos(16, 2, 8, 1)),
+    ];
+
+    let mut table = Table::new(
+        "Table 7 — significance of MoS vs LoRA (paper: p < 0.05 at both budgets)",
+        &["budget", "lora mean", "mos mean", "paired t", "paired p", "welch p"],
+    );
+
+    for (name, lora, mos_cfg) in budgets {
+        let mut lora_scores = Vec::new();
+        let mut mos_scores = Vec::new();
+        for &kind in &ctx.tasks {
+            for &seed in &ctx.seeds {
+                lora_scores.push(ctx.run_cell(&lora, kind, seed)?.report.score);
+                mos_scores
+                    .push(ctx.run_cell(&mos_cfg, kind, seed)?.report.score);
+            }
+        }
+        let (t, _, p_paired) = paired_t_test(&mos_scores, &lora_scores);
+        let (_, _, p_welch) = welch_t_test(&mos_scores, &lora_scores);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", mean(&lora_scores)),
+            format!("{:.2}", mean(&mos_scores)),
+            format!("{t:.3}"),
+            format!("{p_paired:.4}"),
+            format!("{p_welch:.4}"),
+        ]);
+        eprintln!("[table7] {name}: paired p={p_paired:.4}");
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Vanilla LoRA baseline (Hu et al., 2021): per-block trainable A (L,r,in)
+//! and B (L,out,r), applied to all seven projection types (QLoRA setting).
+
+use super::Factors;
+use crate::config::{MethodCfg, ModelCfg};
+use crate::util::bank::Bank;
+
+/// Slice the stacked per-block tensors into dense factors.
+pub fn materialize(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    params: &Bank,
+    layer_type: &str,
+) -> Factors {
+    let (o, i) = cfg.dims(layer_type);
+    let r = mc.r;
+    let a_stack = params[&format!("{layer_type}.a")].f32s().unwrap();
+    let b_stack = params[&format!("{layer_type}.b")].f32s().unwrap();
+    let a = (0..cfg.blocks)
+        .map(|k| a_stack[k * r * i..(k + 1) * r * i].to_vec())
+        .collect();
+    let b = (0..cfg.blocks)
+        .map(|k| b_stack[k * o * r..(k + 1) * o * r].to_vec())
+        .collect();
+    Factors { r, in_dim: i, out_dim: o, a, b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::init_params;
+    use crate::config::presets;
+
+    #[test]
+    fn blocks_are_independent_slices() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::lora(2);
+        let params = init_params(&cfg, &mc, 0);
+        let f = materialize(&cfg, &mc, &params, "q");
+        assert_eq!(f.a.len(), cfg.blocks);
+        // different blocks were initialized independently
+        assert_ne!(f.a[0], f.a[1]);
+        // b zero-init
+        assert!(f.b.iter().all(|b| b.iter().all(|&x| x == 0.0)));
+    }
+}

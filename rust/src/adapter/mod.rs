@@ -1,0 +1,236 @@
+//! Adapter subsystem — the paper's core contribution and its baselines.
+//!
+//! * [`mos`] — global shard pools + the index-based router implementing the
+//!   four differentiation strategies (subset selection, pair dissociation,
+//!   vector sharding, shard privatization), plus host-side materialization
+//!   and the combinatorial-diversity analysis of Appendix B.1.
+//! * [`lora`], [`vera`], [`tied`], [`prolora`] — baseline methods
+//!   (host-side init + per-block dense materialization).
+//! * [`params`] — trainable-parameter accounting for every method on any
+//!   geometry (reproduces Table 2's "# Param" column on LLaMA2-7B).
+//!
+//! All adapters share one currency: a [`Bank`] of named tensors whose names
+//! match the AOT artifact input specs, so runtime binding is by name.
+
+pub mod lora;
+pub mod mos;
+pub mod params;
+pub mod prolora;
+pub mod tied;
+pub mod vera;
+
+use crate::config::{Method, MethodCfg, ModelCfg, LAYER_TYPES};
+use crate::util::bank::{Bank, Tensor};
+use crate::util::rng::Rng;
+
+/// Dense per-block low-rank factors for one layer type:
+/// `a[k]` is (r, in) row-major, `b[k]` is (out, r) row-major.
+#[derive(Debug, Clone)]
+pub struct Factors {
+    pub r: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// per block: r * in_dim
+    pub a: Vec<Vec<f32>>,
+    /// per block: out_dim * r
+    pub b: Vec<Vec<f32>>,
+}
+
+impl Factors {
+    /// Dense delta W = B A for block k: (out, in) row-major.
+    pub fn delta(&self, k: usize) -> Vec<f32> {
+        let (r, i, o) = (self.r, self.in_dim, self.out_dim);
+        let (a, b) = (&self.a[k], &self.b[k]);
+        let mut w = vec![0.0f32; o * i];
+        for oo in 0..o {
+            for rr in 0..r {
+                let brr = b[oo * r + rr];
+                if brr == 0.0 {
+                    continue;
+                }
+                let arow = &a[rr * i..(rr + 1) * i];
+                let wrow = &mut w[oo * i..(oo + 1) * i];
+                for (wv, av) in wrow.iter_mut().zip(arow) {
+                    *wv += brr * av;
+                }
+            }
+        }
+        w
+    }
+}
+
+/// Initialize trainable adapter parameters host-side, matching the init
+/// conventions of `python/compile/model.py::init_adapter` (B-side zero,
+/// A-side uniform with materialized fan-in bounds). Used when running on the
+/// host oracle runtime or when artifacts' init banks are absent.
+pub fn init_params(cfg: &ModelCfg, mc: &MethodCfg, seed: u64) -> Bank {
+    let mut rng = Rng::new(seed, 17);
+    let mut bank = Bank::new();
+    let lcount = cfg.blocks;
+    for t in LAYER_TYPES {
+        let (o, i) = cfg.dims(t);
+        let r = mc.r;
+        let bound = (1.0 / i as f32).sqrt();
+        match mc.method {
+            Method::LoRA => {
+                bank.insert(
+                    format!("{t}.a"),
+                    Tensor::from_f32(
+                        &[lcount, r, i],
+                        rng.uniform_vec(lcount * r * i, bound),
+                    ),
+                );
+                bank.insert(
+                    format!("{t}.b"),
+                    Tensor::zeros(&[lcount, o, r]),
+                );
+            }
+            Method::MoS => {
+                let n = mc.pool_shards(cfg.blocks);
+                bank.insert(
+                    format!("{t}.pool_a"),
+                    Tensor::from_f32(
+                        &[n, i / mc.l],
+                        rng.uniform_vec(n * (i / mc.l), bound),
+                    ),
+                );
+                bank.insert(
+                    format!("{t}.pool_b"),
+                    Tensor::zeros(&[n, o / mc.l]),
+                );
+            }
+            Method::VeRA => {
+                bank.insert(
+                    format!("{t}.d"),
+                    Tensor::from_f32(&[lcount, r], vec![0.1; lcount * r]),
+                );
+                bank.insert(
+                    format!("{t}.bvec"),
+                    Tensor::zeros(&[lcount, o]),
+                );
+            }
+            Method::Tied => {
+                bank.insert(
+                    format!("{t}.a"),
+                    Tensor::from_f32(&[r, i], rng.uniform_vec(r * i, bound)),
+                );
+                bank.insert(format!("{t}.b"), Tensor::zeros(&[o, r]));
+                bank.insert(
+                    format!("{t}.u"),
+                    Tensor::from_f32(&[lcount, r], vec![0.1; lcount * r]),
+                );
+                bank.insert(
+                    format!("{t}.v"),
+                    Tensor::from_f32(&[lcount, o], vec![1.0; lcount * o]),
+                );
+            }
+            Method::PRoLoRA => {
+                let ic = i / mc.m;
+                let oc = o / mc.m;
+                bank.insert(
+                    format!("{t}.a0"),
+                    Tensor::from_f32(
+                        &[lcount, r, ic],
+                        rng.uniform_vec(lcount * r * ic, bound),
+                    ),
+                );
+                bank.insert(
+                    format!("{t}.b0"),
+                    Tensor::zeros(&[lcount, oc, r]),
+                );
+            }
+        }
+    }
+    bank
+}
+
+/// Materialize dense per-block factors for any method.
+///
+/// `aux` carries router state (MoS) or frozen matrices (VeRA); see
+/// [`mos::router::build_router`] and [`vera::frozen_matrices`].
+pub fn materialize(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    params: &Bank,
+    aux: &Bank,
+    layer_type: &str,
+) -> Factors {
+    match mc.method {
+        Method::LoRA => lora::materialize(cfg, mc, params, layer_type),
+        Method::MoS => mos::materialize::factors(cfg, mc, params, aux, layer_type),
+        Method::VeRA => vera::materialize(cfg, mc, params, aux, layer_type),
+        Method::Tied => tied::materialize(cfg, mc, params, layer_type),
+        Method::PRoLoRA => prolora::materialize(cfg, mc, params, layer_type),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn init_shapes_cover_all_layer_types() {
+        let cfg = presets::tiny();
+        for mc in [
+            MethodCfg::lora(2),
+            MethodCfg::mos(8, 2, 2, 1),
+            MethodCfg::vera(4),
+            MethodCfg::tied(4),
+            MethodCfg::prolora(8, 4),
+        ] {
+            let bank = init_params(&cfg, &mc, 0);
+            // every layer type contributes at least one tensor
+            for t in LAYER_TYPES {
+                assert!(
+                    bank.keys().any(|k| k.starts_with(&format!("{t}."))),
+                    "{:?} missing tensors for {t}",
+                    mc.method
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn factors_delta_is_zero_at_init() {
+        // B-side zero init => delta == 0 for every method (paper Sec. 3.5)
+        let cfg = presets::tiny();
+        for mc in [
+            MethodCfg::lora(2),
+            MethodCfg::mos(8, 2, 2, 1),
+            MethodCfg::vera(4),
+            MethodCfg::tied(4),
+            MethodCfg::prolora(8, 4),
+        ] {
+            let params = init_params(&cfg, &mc, 0);
+            let aux = match mc.method {
+                Method::MoS => mos::router::build_router(&cfg, &mc, 0).into_bank(),
+                Method::VeRA => vera::frozen_matrices(&cfg, &mc, 0),
+                _ => Bank::new(),
+            };
+            let f = materialize(&cfg, &mc, &params, &aux, "q");
+            for k in 0..cfg.blocks {
+                assert!(
+                    f.delta(k).iter().all(|&x| x == 0.0),
+                    "{:?} nonzero delta at init",
+                    mc.method
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn factors_delta_matmul_correct() {
+        // delta == B @ A checked against a straightforward triple loop
+        let f = Factors {
+            r: 2,
+            in_dim: 3,
+            out_dim: 2,
+            a: vec![vec![1., 2., 3., 4., 5., 6.]], // (2,3)
+            b: vec![vec![1., 0., 0., 2.]],         // (2,2)
+        };
+        let d = f.delta(0);
+        // row0 = 1*a0 = [1,2,3]; row1 = 2*a1 = [8,10,12]
+        assert_eq!(d, vec![1., 2., 3., 8., 10., 12.]);
+    }
+}

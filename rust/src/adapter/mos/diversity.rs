@@ -1,0 +1,132 @@
+//! Combinatorial-diversity analysis (paper Appendix B.1).
+//!
+//! Differentiation is approximated by the number of potential combinations
+//! each low-rank matrix pair can take:
+//!   pure sharing       C(Le, Le)                      = 1
+//!   subset selection   C(Le, r)
+//!   pair dissociation  C(Le, r)^2
+//!   vector sharding    C(Lle, rl)^2
+//! (with privatization reducing the public pool but adding exclusive
+//! shards). Counts explode, so everything is computed in log10 space via
+//! the log-gamma function.
+
+/// Natural log of Gamma(x) (Lanczos approximation, g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// log10 of C(n, k); 0 when k == 0 or k == n; -inf when k > n.
+pub fn log10_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    if k == 0 || k == n {
+        return 0.0;
+    }
+    let ln = ln_gamma(n as f64 + 1.0)
+        - ln_gamma(k as f64 + 1.0)
+        - ln_gamma((n - k) as f64 + 1.0);
+    ln / std::f64::consts::LN_10
+}
+
+/// log10 of the ordered-selection count P(n, k) = n!/(n-k)! (the router's
+/// index vectors are ordered — dissociation enables this, Sec. 3.3).
+pub fn log10_perm(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    (ln_gamma(n as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0))
+        / std::f64::consts::LN_10
+}
+
+/// Diversity (log10 #combinations per low-rank matrix pair) of each scheme,
+/// for L blocks, budget rank e, selected rank r, shards-per-vector l.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Diversity {
+    pub pure_sharing: f64,
+    pub subset_selection: f64,
+    pub pair_dissociation: f64,
+    pub vector_sharding: f64,
+}
+
+pub fn analyze(blocks: u64, e: u64, r: u64, l: u64) -> Diversity {
+    let le = blocks * e;
+    Diversity {
+        pure_sharing: 0.0, // C(Le, Le) = 1
+        subset_selection: log10_choose(le, r),
+        pair_dissociation: 2.0 * log10_choose(le, r),
+        vector_sharding: 2.0 * log10_choose(le * l, r * l),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Gamma(n) = (n-1)!
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - (24f64).ln()).abs() < 1e-9);
+        assert!((ln_gamma(11.0) - (3628800f64).ln()).abs() < 1e-8);
+        // Gamma(1/2) = sqrt(pi)
+        assert!(
+            (ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn choose_small_cases() {
+        assert!((log10_choose(5, 2) - (10f64).log10()).abs() < 1e-9);
+        assert!((log10_choose(64, 2) - (2016f64).log10()).abs() < 1e-9);
+        assert_eq!(log10_choose(4, 0), 0.0);
+        assert_eq!(log10_choose(4, 4), 0.0);
+        assert_eq!(log10_choose(3, 5), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn perm_exceeds_choose() {
+        assert!(log10_perm(10, 3) > log10_choose(10, 3));
+        assert!((log10_perm(5, 5) - (120f64).log10()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_ordering_holds() {
+        // Appendix B.1: C(Le,r) < C(Lle, rl) when r < Le and l > 1, and
+        // dissociation squares the count.
+        let d = analyze(32, 2, 8, 4);
+        assert_eq!(d.pure_sharing, 0.0);
+        assert!(d.subset_selection > 0.0);
+        assert!((d.pair_dissociation - 2.0 * d.subset_selection).abs() < 1e-12);
+        assert!(d.vector_sharding > d.pair_dissociation);
+    }
+
+    #[test]
+    fn sharding_no_gain_when_l1() {
+        let d = analyze(32, 2, 8, 1);
+        assert!((d.vector_sharding - d.pair_dissociation).abs() < 1e-12);
+    }
+}

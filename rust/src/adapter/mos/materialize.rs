@@ -1,0 +1,239 @@
+//! Host-side MoS materialization: gather + concat shards into dense
+//! per-block low-rank factors, and the fused routed apply.
+//!
+//! This is the Rust twin of the L1 pallas kernels (`shard_gather`,
+//! `mos_apply_fused`) and the `python/compile/kernels/ref.py` oracle; the
+//! integration tests cross-check all three. The coordinator uses it for
+//! its precompute pipeline (paper Limitations §C: index routing lets dense
+//! matrices be prepared in parallel with preceding blocks).
+
+use super::super::Factors;
+use crate::config::{MethodCfg, ModelCfg};
+use crate::util::bank::{Bank, Tensor};
+
+/// Gather + concat pool shards into one dense (r, l*s) matrix, row-major.
+/// `idx` is the (r*l,) slice of the index matrix for one block.
+pub fn gather_rows(pool: &Tensor, idx: &[i32], r: usize, l: usize) -> Vec<f32> {
+    let s = pool.shape()[1];
+    let data = pool.f32s().expect("pool must be f32");
+    let mut out = vec![0.0f32; r * l * s];
+    for row in 0..r {
+        for j in 0..l {
+            let shard = idx[row * l + j] as usize;
+            let src = &data[shard * s..(shard + 1) * s];
+            let dst_off = row * (l * s) + j * s;
+            out[dst_off..dst_off + s].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Transpose a row-major (rows, cols) matrix into (cols, rows).
+pub fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = m[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Dense per-block factors for one layer type.
+///
+/// `params` holds `<t>.pool_a` (n, in/l) and `<t>.pool_b` (n, out/l);
+/// `aux` holds `<t>.idx_a`, `<t>.idx_b` (L, r, l) and `<t>.rank_scale`
+/// (L, r). The rank scale folds into the A side, matching
+/// `python/compile/model.py::materialize`.
+pub fn factors(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    params: &Bank,
+    aux: &Bank,
+    layer_type: &str,
+) -> Factors {
+    let (o, i) = cfg.dims(layer_type);
+    let (r, l) = (mc.r, mc.l);
+    let pool_a = &params[&format!("{layer_type}.pool_a")];
+    let pool_b = &params[&format!("{layer_type}.pool_b")];
+    let idx_a = aux[&format!("{layer_type}.idx_a")].i32s().unwrap();
+    let idx_b = aux[&format!("{layer_type}.idx_b")].i32s().unwrap();
+    let scale = aux[&format!("{layer_type}.rank_scale")].f32s().unwrap();
+
+    let per = r * l;
+    let mut a = Vec::with_capacity(cfg.blocks);
+    let mut b = Vec::with_capacity(cfg.blocks);
+    for k in 0..cfg.blocks {
+        let mut ak = gather_rows(pool_a, &idx_a[k * per..(k + 1) * per], r, l);
+        // fold rank scale into A rows
+        for row in 0..r {
+            let s = scale[k * r + row];
+            if s != 1.0 {
+                for v in &mut ak[row * i..(row + 1) * i] {
+                    *v *= s;
+                }
+            }
+        }
+        // B: gather as rows (r, o) then transpose to (o, r)
+        let bt = gather_rows(pool_b, &idx_b[k * per..(k + 1) * per], r, l);
+        a.push(ak);
+        b.push(transpose(&bt, r, o));
+    }
+    Factors { r, in_dim: i, out_dim: o, a, b }
+}
+
+/// Fused routed low-rank apply for one block:
+/// `y[m, o] += scale * (x[m, i] @ A^T) @ B^T` without materializing `ΔW`.
+/// The Rust twin of the pallas `mos_apply_fused` kernel.
+pub fn apply_fused(
+    x: &[f32],
+    m: usize,
+    factors: &Factors,
+    block: usize,
+    scale: f32,
+    y: &mut [f32],
+) {
+    let (r, i, o) = (factors.r, factors.in_dim, factors.out_dim);
+    debug_assert_eq!(x.len(), m * i);
+    debug_assert_eq!(y.len(), m * o);
+    let a = &factors.a[block];
+    let b = &factors.b[block];
+    // t = x @ A^T : (m, r)
+    let mut t = vec![0.0f32; m * r];
+    for mm in 0..m {
+        let xrow = &x[mm * i..(mm + 1) * i];
+        for rr in 0..r {
+            let arow = &a[rr * i..(rr + 1) * i];
+            let mut acc = 0.0f32;
+            for (xv, av) in xrow.iter().zip(arow) {
+                acc += xv * av;
+            }
+            t[mm * r + rr] = acc;
+        }
+    }
+    // y += scale * t @ B^T : B is (o, r) so B^T is (r, o)
+    for mm in 0..m {
+        let trow = &t[mm * r..(mm + 1) * r];
+        let yrow = &mut y[mm * o..(mm + 1) * o];
+        for oo in 0..o {
+            let brow = &b[oo * r..(oo + 1) * r];
+            let mut acc = 0.0f32;
+            for (tv, bv) in trow.iter().zip(brow) {
+                acc += tv * bv;
+            }
+            yrow[oo] += scale * acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::mos::router::build_router;
+    use crate::adapter::init_params;
+    use crate::config::presets;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gather_exact() {
+        let pool = Tensor::from_f32(
+            &[6, 2],
+            (0..12).map(|x| x as f32).collect(),
+        );
+        let out = gather_rows(&pool, &[0, 5, 3, 3], 2, 2);
+        assert_eq!(out, vec![0., 1., 10., 11., 6., 7., 6., 7.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        prop::check("transpose-involutive", 20, |rng| {
+            let r = rng.range(1, 8);
+            let c = rng.range(1, 8);
+            let m: Vec<f32> = (0..r * c).map(|_| rng.normal()).collect();
+            let back = transpose(&transpose(&m, r, c), c, r);
+            prop::assert_allclose(&m, &back, 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn factors_shapes_and_scale_folding() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let mut params = init_params(&cfg, &mc, 0);
+        // randomize pool_b so B is nonzero
+        let mut rng = Rng::new(1, 0);
+        for t in crate::config::LAYER_TYPES {
+            let key = format!("{t}.pool_b");
+            let old = params[&key].clone();
+            params.insert(
+                key,
+                Tensor::from_f32(old.shape(), rng.normal_vec(old.len(), 0.1)),
+            );
+        }
+        let rs = build_router(&cfg, &mc, 0);
+        let f = factors(&cfg, &mc, &params, rs.bank(), "gate");
+        let (o, i) = cfg.dims("gate");
+        assert_eq!(f.a.len(), cfg.blocks);
+        assert_eq!(f.a[0].len(), mc.r * i);
+        assert_eq!(f.b[0].len(), o * mc.r);
+        // doubling rank_scale doubles A, leaves B
+        let mut bank2 = rs.bank().clone();
+        let key = "gate.rank_scale".to_string();
+        let sc = bank2[&key].clone();
+        bank2.insert(
+            key,
+            Tensor::from_f32(
+                sc.shape(),
+                sc.f32s().unwrap().iter().map(|x| x * 2.0).collect(),
+            ),
+        );
+        let f2 = factors(&cfg, &mc, &params, &bank2, "gate");
+        for k in 0..cfg.blocks {
+            let want: Vec<f32> = f.a[k].iter().map(|x| x * 2.0).collect();
+            prop::assert_allclose(&f2.a[k], &want, 1e-6, 1e-6).unwrap();
+            prop::assert_allclose(&f2.b[k], &f.b[k], 0.0, 0.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn fused_apply_matches_dense_delta() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(4, 2, 2, 0);
+        prop::check("fused-vs-dense", 10, |rng| {
+            let mut params = init_params(&cfg, &mc, rng.next_u64());
+            for t in crate::config::LAYER_TYPES {
+                let key = format!("{t}.pool_b");
+                let old = params[&key].clone();
+                params.insert(
+                    key,
+                    Tensor::from_f32(
+                        old.shape(),
+                        rng.normal_vec(old.len(), 0.2),
+                    ),
+                );
+            }
+            let rs = build_router(&cfg, &mc, rng.next_u64());
+            let f = factors(&cfg, &mc, &params, rs.bank(), "q");
+            let (o, i) = cfg.dims("q");
+            let m = rng.range(1, 4);
+            let x = rng.normal_vec(m * i, 1.0);
+            let block = rng.range(0, cfg.blocks);
+            let mut y = vec![0.0f32; m * o];
+            apply_fused(&x, m, &f, block, 0.5, &mut y);
+            // dense: y2 = 0.5 * x @ delta^T
+            let delta = f.delta(block); // (o, i)
+            let mut y2 = vec![0.0f32; m * o];
+            for mm in 0..m {
+                for oo in 0..o {
+                    let mut acc = 0.0;
+                    for ii in 0..i {
+                        acc += x[mm * i + ii] * delta[oo * i + ii];
+                    }
+                    y2[mm * o + oo] = 0.5 * acc;
+                }
+            }
+            prop::assert_allclose(&y, &y2, 1e-4, 1e-4)
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! Mixture of Shards (paper Sec. 3): global shard pools, the index-based
+//! router with all four differentiation strategies, host-side
+//! materialization, and the combinatorial-diversity analysis.
+
+pub mod diversity;
+pub mod materialize;
+pub mod pool;
+pub mod router;

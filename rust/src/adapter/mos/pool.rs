@@ -1,0 +1,126 @@
+//! Global shard-pool layout (paper Sec. 3.1, 3.5).
+//!
+//! Per linear-layer type the pool holds `n = e * L * l` shards — exactly the
+//! trainable budget of a rank-`e` LoRA over `L` blocks. Privatization splits
+//! the pool into a public prefix and a private tail; the private tail is
+//! sized so each block can own `private_rank` rank-slots of `l` shards per
+//! side, each private shard used exactly once globally.
+
+use crate::config::{MethodCfg, ModelCfg};
+
+/// Resolved pool geometry for one layer type & side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolLayout {
+    /// total shards in the pool
+    pub n: usize,
+    /// shards in the public segment `[0, n_public)`
+    pub n_public: usize,
+    /// shard width (in/l for the A side, out/l for the B side)
+    pub shard_width: usize,
+    /// shards per rank-vector
+    pub l: usize,
+    /// rank of each materialized low-rank matrix
+    pub r: usize,
+    /// rank slots per block routed to the private segment
+    pub private_rank: usize,
+    /// number of blocks sharing this pool
+    pub blocks: usize,
+}
+
+impl PoolLayout {
+    /// Layout for the A side (`dim` = in features) or B side (`dim` = out).
+    pub fn new(cfg: &ModelCfg, mc: &MethodCfg, dim: usize) -> PoolLayout {
+        assert_eq!(dim % mc.l, 0, "l={} must divide dim={dim}", mc.l);
+        let n = mc.pool_shards(cfg.blocks);
+        let private = cfg.blocks * mc.private_rank * mc.l;
+        assert!(
+            private < n,
+            "privatization exhausts the pool: {private} private of {n} \
+             (need private_rank < e = {})",
+            mc.e
+        );
+        PoolLayout {
+            n,
+            n_public: n - private,
+            shard_width: dim / mc.l,
+            l: mc.l,
+            r: mc.r,
+            private_rank: mc.private_rank,
+            blocks: cfg.blocks,
+        }
+    }
+
+    /// Total f32 parameter count of this pool.
+    pub fn param_count(&self) -> usize {
+        self.n * self.shard_width
+    }
+
+    /// The private shard owned by `(block, private_slot, shard_pos)`.
+    /// Deterministic, collision-free, covers the whole private tail.
+    pub fn private_shard(&self, block: usize, slot: usize, pos: usize) -> usize {
+        debug_assert!(slot < self.private_rank && pos < self.l);
+        self.n_public + (block * self.private_rank + slot) * self.l + pos
+    }
+
+    /// True if shard index lies in the private tail.
+    pub fn is_private(&self, shard: usize) -> bool {
+        shard >= self.n_public
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn budget_matches_rank_e_lora() {
+        let cfg = presets::tiny();
+        for l in [1, 2, 4, 8] {
+            let mc = MethodCfg::mos(8, l, 2, 0);
+            let (o, i) = cfg.dims("q");
+            let a = PoolLayout::new(&cfg, &mc, i);
+            let b = PoolLayout::new(&cfg, &mc, o);
+            assert_eq!(
+                a.param_count() + b.param_count(),
+                mc.e * cfg.blocks * (i + o),
+                "l={l}"
+            );
+        }
+    }
+
+    #[test]
+    fn private_shards_unique_and_cover_tail() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let lay = PoolLayout::new(&cfg, &mc, 64);
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..lay.blocks {
+            for s in 0..lay.private_rank {
+                for p in 0..lay.l {
+                    let sh = lay.private_shard(k, s, p);
+                    assert!(lay.is_private(sh));
+                    assert!(sh < lay.n);
+                    assert!(seen.insert(sh), "shard {sh} reused");
+                }
+            }
+        }
+        assert_eq!(seen.len(), lay.n - lay.n_public);
+    }
+
+    #[test]
+    #[should_panic(expected = "privatization exhausts")]
+    fn rejects_private_rank_ge_e() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 2); // private_rank == e
+        PoolLayout::new(&cfg, &mc, 64);
+    }
+
+    #[test]
+    fn no_privatization_means_all_public() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 0);
+        let lay = PoolLayout::new(&cfg, &mc, 64);
+        assert_eq!(lay.n_public, lay.n);
+    }
+}

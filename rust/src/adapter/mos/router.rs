@@ -1,0 +1,299 @@
+//! The MoE-like index router (paper Sec. 3.2-3.5 and Limitations §C).
+//!
+//! The router is *index-based, not activation-based*: all routing decisions
+//! are frozen at adapter-creation time into index matrices `I_a, I_b ∈
+//! N^{L×r×l}` plus per-rank scales. This is what lets the coordinator
+//! precompute dense low-rank matrices in parallel with preceding blocks and
+//! reuse every existing LoRA serving technique.
+//!
+//! Differentiation strategies and how they map to index-space:
+//! * **subset selection** — each block samples its own (ordered) subset of
+//!   pool shards instead of taking the whole pool in order;
+//! * **pair dissociation** — `I_b` sampled independently of `I_a`
+//!   (ablation `-pd`: `I_b == I_a`);
+//! * **vector sharding** — `l > 1` shards concatenated per rank-vector
+//!   (ablation `-vs`: `l == 1`);
+//! * **shard privatization** — the last `private_rank` rank-slots of every
+//!   block route to block-owned shards in the private pool tail, each used
+//!   exactly once globally (ablation `-sp`: `private_rank == 0`).
+
+use super::pool::PoolLayout;
+use crate::config::{MethodCfg, ModelCfg, LAYER_TYPES};
+use crate::util::bank::{Bank, Tensor};
+use crate::util::rng::Rng;
+
+/// Frozen router state for every layer type, stored as a [`Bank`] whose
+/// tensor names match the AOT artifact aux-input specs
+/// (`<type>.idx_a`, `<type>.idx_b`, `<type>.rank_scale`).
+#[derive(Debug, Clone)]
+pub struct RouterState {
+    bank: Bank,
+    pub seed: u64,
+}
+
+impl RouterState {
+    pub fn into_bank(self) -> Bank {
+        self.bank
+    }
+
+    pub fn bank(&self) -> &Bank {
+        &self.bank
+    }
+
+    /// (L, r, l) indices for one layer type & side ("idx_a"/"idx_b").
+    pub fn indices(&self, layer_type: &str, side: &str) -> &Tensor {
+        &self.bank[&format!("{layer_type}.{side}")]
+    }
+
+    pub fn rank_scale(&self, layer_type: &str) -> &Tensor {
+        &self.bank[&format!("{layer_type}.rank_scale")]
+    }
+}
+
+/// Build the frozen router for a MoS adapter. Deterministic in
+/// `(cfg, mc, seed)`; distinct tenants use distinct seeds.
+pub fn build_router(cfg: &ModelCfg, mc: &MethodCfg, seed: u64) -> RouterState {
+    let mut bank = Bank::new();
+    let mut rng = Rng::new(seed, 23);
+    for (ti, t) in LAYER_TYPES.iter().enumerate() {
+        let (o, i) = cfg.dims(t);
+        let lay_a = PoolLayout::new(cfg, mc, i);
+        let lay_b = PoolLayout::new(cfg, mc, o);
+        let mut lrng = rng.fork(ti as u64 + 1);
+
+        let idx_a = sample_side(&lay_a, mc, &mut lrng);
+        let idx_b = if mc.pair_dissociation {
+            sample_side(&lay_b, mc, &mut lrng)
+        } else {
+            idx_a.clone() // -pd ablation / paper Sec. 2 schemes
+        };
+        let scale = sample_scale(cfg.blocks, mc, &mut lrng);
+
+        let shape = [cfg.blocks, mc.r, mc.l];
+        bank.insert(format!("{t}.idx_a"), Tensor::from_i32(&shape, idx_a));
+        bank.insert(format!("{t}.idx_b"), Tensor::from_i32(&shape, idx_b));
+        bank.insert(
+            format!("{t}.rank_scale"),
+            Tensor::from_f32(&[cfg.blocks, mc.r], scale),
+        );
+    }
+    RouterState { bank, seed }
+}
+
+/// Index matrix (L*r*l, flattened) for one side of one layer type.
+fn sample_side(lay: &PoolLayout, mc: &MethodCfg, rng: &mut Rng) -> Vec<i32> {
+    let (blocks, r, l) = (lay.blocks, lay.r, lay.l);
+    let mut out = vec![0i32; blocks * r * l];
+    for k in 0..blocks {
+        let public_slots = r - lay.private_rank;
+        if mc.subset_selection {
+            // Ordered subset: sample r*l shard picks from the public
+            // segment, all-distinct when the pool is large enough (the
+            // C(n, k) regime of Appendix B.1), iid otherwise.
+            let need = public_slots * l;
+            let picks: Vec<usize> = if need <= lay.n_public {
+                rng.sample_distinct(lay.n_public, need)
+            } else {
+                (0..need).map(|_| rng.range(0, lay.n_public)).collect()
+            };
+            for slot in 0..public_slots {
+                for j in 0..l {
+                    out[(k * r + slot) * l + j] = picks[slot * l + j] as i32;
+                }
+            }
+        } else {
+            // Pure sharing: every block takes the pool in order. r == e*L
+            // and l == 1 in the paper's scheme; generalized to any r by
+            // cycling.
+            for slot in 0..public_slots {
+                for j in 0..l {
+                    out[(k * r + slot) * l + j] =
+                        ((slot * l + j) % lay.n_public) as i32;
+                }
+            }
+        }
+        // Private tail: block-owned shards, each used exactly once.
+        for slot in 0..lay.private_rank {
+            for j in 0..l {
+                out[(k * r + public_slots + slot) * l + j] =
+                    lay.private_shard(k, slot, j) as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Per-(block, rank) scale vector: ones normally, frozen N(0,1) draws for
+/// the "random scaling" scheme of Sec. 2.
+fn sample_scale(blocks: usize, mc: &MethodCfg, rng: &mut Rng) -> Vec<f32> {
+    let n = blocks * mc.r;
+    if mc.random_scaling {
+        (0..n).map(|_| rng.normal()).collect()
+    } else {
+        vec![1.0; n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::prop;
+    use std::collections::HashSet;
+
+    fn tiny() -> ModelCfg {
+        presets::tiny()
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let r1 = build_router(&cfg, &mc, 42);
+        let r2 = build_router(&cfg, &mc, 42);
+        assert_eq!(r1.bank(), r2.bank());
+        let r3 = build_router(&cfg, &mc, 43);
+        assert_ne!(r1.bank(), r3.bank());
+    }
+
+    #[test]
+    fn indices_in_pool_bounds() {
+        let cfg = tiny();
+        prop::check("router-bounds", 30, |rng| {
+            let l = *rng.choice(&[1usize, 2, 4]);
+            let e = *rng.choice(&[2usize, 4]);
+            let p = rng.range(0, e); // private_rank < e
+            let r = rng.range(p.max(1), 3 * e);
+            let mc = MethodCfg::mos(r, l, e, p);
+            let rs = build_router(&cfg, &mc, rng.next_u64());
+            for t in LAYER_TYPES {
+                for side in ["idx_a", "idx_b"] {
+                    let dim = if side == "idx_a" {
+                        cfg.dims(t).1
+                    } else {
+                        cfg.dims(t).0
+                    };
+                    let lay = PoolLayout::new(&cfg, &mc, dim);
+                    let idx = rs.indices(t, side).i32s().unwrap();
+                    if idx.iter().any(|&x| x < 0 || x as usize >= lay.n) {
+                        return Err(format!("{t}.{side} out of bounds"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn private_shards_used_exactly_once() {
+        let cfg = tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let rs = build_router(&cfg, &mc, 7);
+        for t in LAYER_TYPES {
+            for (side, dim) in [("idx_a", cfg.dims(t).1), ("idx_b", cfg.dims(t).0)] {
+                let lay = PoolLayout::new(&cfg, &mc, dim);
+                let idx = rs.indices(t, side).i32s().unwrap();
+                let mut seen = HashSet::new();
+                for &x in idx {
+                    if lay.is_private(x as usize) {
+                        assert!(
+                            seen.insert(x),
+                            "{t}.{side}: private shard {x} reused"
+                        );
+                    }
+                }
+                // every block contributed private_rank * l private shards
+                assert_eq!(
+                    seen.len(),
+                    cfg.blocks * mc.private_rank * mc.l,
+                    "{t}.{side}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dissociation_controls_idx_b() {
+        let cfg = tiny();
+        let mut mc = MethodCfg::mos(8, 2, 2, 0);
+        let rs = build_router(&cfg, &mc, 3);
+        assert_ne!(
+            rs.indices("q", "idx_a").i32s().unwrap(),
+            rs.indices("q", "idx_b").i32s().unwrap(),
+            "dissociated indices should differ"
+        );
+        mc.pair_dissociation = false;
+        let rs = build_router(&cfg, &mc, 3);
+        assert_eq!(
+            rs.indices("q", "idx_a").i32s().unwrap(),
+            rs.indices("q", "idx_b").i32s().unwrap()
+        );
+    }
+
+    #[test]
+    fn pure_sharing_identical_across_blocks() {
+        let cfg = tiny();
+        let mc = MethodCfg::pure_sharing(2, cfg.blocks);
+        let rs = build_router(&cfg, &mc, 0);
+        let idx = rs.indices("q", "idx_a").i32s().unwrap();
+        let per = mc.r * mc.l;
+        for k in 1..cfg.blocks {
+            assert_eq!(idx[..per], idx[k * per..(k + 1) * per]);
+        }
+        // identity order: shard i at slot i
+        for (i, &x) in idx[..per].iter().enumerate() {
+            assert_eq!(x as usize, i % mc.pool_shards(cfg.blocks));
+        }
+        let s = rs.rank_scale("q").f32s().unwrap();
+        assert!(s.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn subset_selection_differentiates_blocks() {
+        let cfg = tiny();
+        // r=4 of pool 8, l=1, no privatization, tied pairs: the Sec. 2
+        // "+ Subset Selection" scheme
+        let mc = MethodCfg {
+            pair_dissociation: false,
+            ..MethodCfg::mos(4, 1, 2, 0)
+        };
+        let rs = build_router(&cfg, &mc, 1);
+        let idx = rs.indices("q", "idx_a").i32s().unwrap();
+        let per = mc.r * mc.l;
+        let mut distinct_blocks = HashSet::new();
+        for k in 0..cfg.blocks {
+            distinct_blocks.insert(idx[k * per..(k + 1) * per].to_vec());
+            // within a block: distinct shards (subset semantics)
+            let set: HashSet<i32> =
+                idx[k * per..(k + 1) * per].iter().copied().collect();
+            assert_eq!(set.len(), per, "block {k} has duplicate shards");
+        }
+        assert!(distinct_blocks.len() > 1, "all blocks chose the same subset");
+    }
+
+    #[test]
+    fn random_scaling_draws_normals() {
+        let cfg = tiny();
+        let mc = MethodCfg {
+            random_scaling: true,
+            subset_selection: false,
+            pair_dissociation: false,
+            ..MethodCfg::pure_sharing(2, cfg.blocks)
+        };
+        let rs = build_router(&cfg, &mc, 5);
+        let s = rs.rank_scale("q").f32s().unwrap();
+        assert!(s.iter().any(|&x| x != 1.0));
+        assert!(s.iter().any(|&x| x < 0.0), "normals should be signed");
+    }
+
+    #[test]
+    fn layer_types_routed_independently() {
+        let cfg = tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 0);
+        let rs = build_router(&cfg, &mc, 9);
+        assert_ne!(
+            rs.indices("q", "idx_a").i32s().unwrap(),
+            rs.indices("k", "idx_a").i32s().unwrap()
+        );
+    }
+}

@@ -1,0 +1,189 @@
+//! Trainable-parameter accounting for every method on any geometry.
+//!
+//! Reproduces the paper's "# Param" column: on the LLaMA2-7B geometry,
+//! LoRA r=2 -> 5.00M, r=8 -> 19.99M, r=16 -> 39.98M, r=64 -> 159.91M,
+//! VeRA r=256 -> 1.42M, and MoS at budget e matches LoRA rank e exactly.
+//! Also powers the intro's serving-memory claim (3.36 TB for 10k users of
+//! rank-16 LoRA on a 70B model) and the fig_memory_scaling bench.
+
+use crate::config::{Method, MethodCfg, ModelCfg, LAYER_TYPES};
+
+/// Trainable parameters of an adapter on a model geometry.
+pub fn trainable_params(cfg: &ModelCfg, mc: &MethodCfg) -> usize {
+    let blocks = cfg.blocks;
+    let mut total = 0usize;
+    for t in LAYER_TYPES {
+        let (o, i) = cfg.dims(t);
+        total += match mc.method {
+            Method::LoRA => blocks * mc.r * (i + o),
+            // pools: n*(i/l) + n*(o/l) with n = e*L*l  ==  e*L*(i+o),
+            // independent of both l and r (Sec. 3.1)
+            Method::MoS => mc.e * blocks * (i + o),
+            Method::VeRA => blocks * (mc.r + o),
+            Method::Tied => mc.r * (i + o) + blocks * (mc.r + o),
+            Method::PRoLoRA => blocks * mc.r * (i + o) / mc.m,
+        };
+    }
+    total
+}
+
+/// Per-tenant *serving state* in bytes: what must sit in accelerator memory
+/// to serve one customized model (paper intro scenario).
+///
+/// * LoRA-family: the dense per-block factors (fp16 = 2 bytes by default).
+/// * MoS: the pools + the index matrices (i32) + rank scales — the whole
+///   point of the paper: tenants share nothing here; each tenant's pools
+///   are their own, but they are ~L× smaller than LoRA factors of equal
+///   rank (and the indices are negligible).
+pub fn serving_bytes(cfg: &ModelCfg, mc: &MethodCfg, bytes_per_param: usize) -> usize {
+    let mut total = trainable_params(cfg, mc) * bytes_per_param;
+    if mc.method == Method::MoS {
+        // index matrices: 2 sides * L*r*l i32 per layer type + scales
+        let idx = 2 * cfg.blocks * mc.r * mc.l * LAYER_TYPES.len() * 4;
+        let scales = cfg.blocks * mc.r * LAYER_TYPES.len() * bytes_per_param;
+        total += idx + scales;
+    }
+    if mc.method == Method::VeRA {
+        // the frozen shared matrices are per-deployment, not per-tenant —
+        // excluded, matching how VeRA reports parameter counts.
+    }
+    total
+}
+
+/// The intro's headline: GPU bytes for `tenants` concurrently-loaded
+/// customized models (excluding the shared base model).
+pub fn multi_tenant_bytes(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    tenants: usize,
+    bytes_per_param: usize,
+) -> usize {
+    tenants * serving_bytes(cfg, mc, bytes_per_param)
+}
+
+/// Human-readable param count, paper-style ("5.00M").
+pub fn fmt_params(n: usize) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.2}K", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Human-readable bytes ("3.36 TB").
+pub fn fmt_bytes(n: usize) -> String {
+    let f = n as f64;
+    if f >= 1e12 {
+        format!("{:.2} TB", f / 1e12)
+    } else if f >= 1e9 {
+        format!("{:.2} GB", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2} MB", f / 1e6)
+    } else {
+        format!("{:.2} KB", f / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    /// Table 2 "# Param" column, digit-for-digit on LLaMA2-7B.
+    #[test]
+    fn table2_param_column_llama2_7b() {
+        let cfg = presets::llama2_7b();
+        let cases = [
+            (MethodCfg::lora(2), 5.00),
+            (MethodCfg::lora(8), 19.99),
+            (MethodCfg::lora(16), 39.98),
+            (MethodCfg::lora(64), 159.91),
+            (MethodCfg::vera(256), 1.42),
+            (MethodCfg::mos(8, 2, 2, 1), 5.00),   // "4/8" row
+            (MethodCfg::mos(32, 2, 8, 1), 19.99), // "16/32" row
+            (MethodCfg::prolora(8, 4), 5.00),     // "4/8" row
+        ];
+        for (mc, want_m) in cases {
+            let got = trainable_params(&cfg, &mc) as f64 / 1e6;
+            assert!(
+                (got - want_m).abs() < 0.01,
+                "{:?} r={}: got {got:.2}M want {want_m}M",
+                mc.method,
+                mc.r
+            );
+        }
+    }
+
+    #[test]
+    fn mos_count_independent_of_r_and_l() {
+        let cfg = presets::llama2_7b();
+        let a = trainable_params(&cfg, &MethodCfg::mos(4, 1, 2, 0));
+        let b = trainable_params(&cfg, &MethodCfg::mos(32, 8, 2, 1));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mos_equals_lora_at_budget_rank() {
+        for cfg in [presets::tiny(), presets::llama2_7b(), presets::llama32_3b()]
+        {
+            for e in [2usize, 8] {
+                assert_eq!(
+                    trainable_params(&cfg, &MethodCfg::mos(4 * e, 2, e, 1)),
+                    trainable_params(&cfg, &MethodCfg::lora(e)),
+                    "{} e={e}",
+                    cfg.name
+                );
+            }
+        }
+    }
+
+    /// Intro claim: 10,000 users x LoRA r=16 on a 70B model ≈ 3.36 TB
+    /// (fp16). The paper's arithmetic: 10k * ~42M LoRA params * 2B * ...
+    #[test]
+    fn intro_memory_claim_70b() {
+        let cfg = presets::llama2_70b();
+        let lora16 = multi_tenant_bytes(&cfg, &MethodCfg::lora(16), 10_000, 2);
+        let tb = lora16 as f64 / 1e12;
+        // GQA shrinks k/v so the exact value depends on conventions; the
+        // claim's order (a few TB) must hold.
+        assert!((1.0..5.0).contains(&tb), "got {tb:.2} TB");
+        // MoS at 8x savings serves the same population in ~1/8 the bytes
+        let mos = multi_tenant_bytes(&cfg, &MethodCfg::mos(8, 2, 2, 1), 10_000, 2);
+        let ratio = lora16 as f64 / mos as f64;
+        assert!(ratio > 6.0, "MoS saving ratio {ratio:.1}");
+    }
+
+    #[test]
+    fn llama32_3b_lora_param_count_matches_table4() {
+        // Table 4: LoRA r=2 on LLaMA3.2-3B = 3.04M
+        let cfg = presets::llama32_3b();
+        let got = trainable_params(&cfg, &MethodCfg::lora(2)) as f64 / 1e6;
+        assert!((got - 3.04).abs() < 0.03, "got {got:.2}M want 3.04M");
+        // Table 5: LoRA r=8 = 12.16M, r=64 = 97.26M
+        let r8 = trainable_params(&cfg, &MethodCfg::lora(8)) as f64 / 1e6;
+        assert!((r8 - 12.16).abs() < 0.1, "got {r8:.2}M want 12.16M");
+        let r64 = trainable_params(&cfg, &MethodCfg::lora(64)) as f64 / 1e6;
+        assert!((r64 - 97.26).abs() < 0.5, "got {r64:.2}M want 97.26M");
+    }
+
+    #[test]
+    fn serving_bytes_mos_overhead_is_small() {
+        let cfg = presets::llama2_7b();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let params = trainable_params(&cfg, &mc) * 2;
+        let serve = serving_bytes(&cfg, &mc, 2);
+        let overhead = (serve - params) as f64 / params as f64;
+        assert!(overhead < 0.01, "index overhead {overhead:.4}");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_params(4_997_120), "5.00M");
+        assert_eq!(fmt_params(1_420_000_000), "1.42B");
+        assert_eq!(fmt_bytes(3_360_000_000_000), "3.36 TB");
+    }
+}

@@ -1,0 +1,91 @@
+//! PRoLoRA baseline (Wang et al., 2024b): intra-layer sharing by chunk
+//! replication with partial rotation. The trainable chunk a0 (L,r,in/m) is
+//! tiled m times along the feature axis, chunk j rotated by j along the
+//! rank axis (rotation restores the effective rank that plain replication
+//! would collapse). Mirrors `python/compile/model.py::_prolora_replicate_*`.
+
+use super::Factors;
+use crate::config::{MethodCfg, ModelCfg};
+use crate::util::bank::Bank;
+
+pub fn materialize(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    params: &Bank,
+    layer_type: &str,
+) -> Factors {
+    let (o, i) = cfg.dims(layer_type);
+    let (r, m) = (mc.r, mc.m);
+    let (ic, oc) = (i / m, o / m);
+    let a0 = params[&format!("{layer_type}.a0")].f32s().unwrap();
+    let b0 = params[&format!("{layer_type}.b0")].f32s().unwrap();
+    let mut a = Vec::with_capacity(cfg.blocks);
+    let mut b = Vec::with_capacity(cfg.blocks);
+    for k in 0..cfg.blocks {
+        let a0k = &a0[k * r * ic..(k + 1) * r * ic]; // (r, ic)
+        let mut ak = vec![0.0f32; r * i];
+        for j in 0..m {
+            for rr in 0..r {
+                // chunk j takes rows rotated by +j (jnp.roll semantics:
+                // out[rr] = in[(rr - j) mod r])
+                let src = ((rr + r - (j % r)) % r) * ic;
+                let dst = rr * i + j * ic;
+                ak[dst..dst + ic].copy_from_slice(&a0k[src..src + ic]);
+            }
+        }
+        let b0k = &b0[k * oc * r..(k + 1) * oc * r]; // (oc, r)
+        let mut bk = vec![0.0f32; o * r];
+        for j in 0..m {
+            for row in 0..oc {
+                for rr in 0..r {
+                    // roll along rank axis: out[row, rr] = in[row, (rr-j) mod r]
+                    let src = row * r + ((rr + r - (j % r)) % r);
+                    bk[(j * oc + row) * r + rr] = b0k[src];
+                }
+            }
+        }
+        a.push(ak);
+        b.push(bk);
+    }
+    Factors { r, in_dim: i, out_dim: o, a, b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::init_params;
+    use crate::config::presets;
+
+    #[test]
+    fn replication_with_rotation() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::prolora(4, 2);
+        let params = init_params(&cfg, &mc, 0);
+        let f = materialize(&cfg, &mc, &params, "q");
+        let i = cfg.dims("q").1;
+        let (r, ic) = (4, i / 2);
+        let ak = &f.a[0];
+        // chunk 1 row rr == chunk 0 row (rr-1) mod r
+        for rr in 0..r {
+            let prev = (rr + r - 1) % r;
+            assert_eq!(
+                &ak[rr * i + ic..rr * i + 2 * ic],
+                &ak[prev * i..prev * i + ic],
+                "row {rr}"
+            );
+        }
+    }
+
+    #[test]
+    fn param_budget_is_lora_over_m() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::prolora(8, 4);
+        let params = init_params(&cfg, &mc, 0);
+        let total: usize = params.values().map(|t| t.len()).sum();
+        let lora8: usize = {
+            let p = init_params(&cfg, &MethodCfg::lora(8), 0);
+            p.values().map(|t| t.len()).sum()
+        };
+        assert_eq!(total, lora8 / 4);
+    }
+}

@@ -1,0 +1,64 @@
+//! Tied-LoRA baseline (Renduchintala et al., 2023): shared *trainable*
+//! low-rank matrices across blocks + per-block trainable scaling vectors.
+//! ΔW^k = Λ_v^k B Λ_u^k A.
+
+use super::Factors;
+use crate::config::{MethodCfg, ModelCfg};
+use crate::util::bank::Bank;
+
+pub fn materialize(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    params: &Bank,
+    layer_type: &str,
+) -> Factors {
+    let (o, i) = cfg.dims(layer_type);
+    let r = mc.r;
+    let sa = params[&format!("{layer_type}.a")].f32s().unwrap();
+    let sb = params[&format!("{layer_type}.b")].f32s().unwrap();
+    let u = params[&format!("{layer_type}.u")].f32s().unwrap();
+    let v = params[&format!("{layer_type}.v")].f32s().unwrap();
+    let mut a = Vec::with_capacity(cfg.blocks);
+    let mut b = Vec::with_capacity(cfg.blocks);
+    for k in 0..cfg.blocks {
+        let mut ak = sa.to_vec();
+        for rr in 0..r {
+            let s = u[k * r + rr];
+            for val in &mut ak[rr * i..(rr + 1) * i] {
+                *val *= s;
+            }
+        }
+        let mut bk = sb.to_vec();
+        for oo in 0..o {
+            let s = v[k * o + oo];
+            for val in &mut bk[oo * r..(oo + 1) * r] {
+                *val *= s;
+            }
+        }
+        a.push(ak);
+        b.push(bk);
+    }
+    Factors { r, in_dim: i, out_dim: o, a, b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::init_params;
+    use crate::config::presets;
+
+    #[test]
+    fn blocks_share_up_to_scale() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::tied(2);
+        let params = init_params(&cfg, &mc, 0);
+        let f = materialize(&cfg, &mc, &params, "q");
+        // init: u = 0.1 everywhere -> identical A across blocks
+        assert_eq!(f.a[0], f.a[1]);
+        let i = cfg.dims("q").1;
+        let sa = params["q.a"].f32s().unwrap();
+        for c in 0..i {
+            assert!((f.a[0][c] - 0.1 * sa[c]).abs() < 1e-6);
+        }
+    }
+}

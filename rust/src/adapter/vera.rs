@@ -1,0 +1,102 @@
+//! VeRA baseline (Kopiczko et al., 2023): frozen random shared matrices
+//! A (r,in), B (out,r) per layer type + trainable per-block scaling vectors
+//! d (L,r) and b (L,out). ΔW^k = Λ_b^k B Λ_d^k A.
+
+use super::Factors;
+use crate::config::{MethodCfg, ModelCfg, LAYER_TYPES};
+use crate::util::bank::{Bank, Tensor};
+use crate::util::rng::Rng;
+
+/// Generate the frozen shared matrices (host-side twin of
+/// `python/compile/aot.py::gen_frozen_aux`). Stored in the aux bank under
+/// `<t>.frozen_a` / `<t>.frozen_b`.
+pub fn frozen_matrices(cfg: &ModelCfg, mc: &MethodCfg, seed: u64) -> Bank {
+    let mut rng = Rng::new(seed, 31);
+    let mut bank = Bank::new();
+    for t in LAYER_TYPES {
+        let (o, i) = cfg.dims(t);
+        let r = mc.r;
+        bank.insert(
+            format!("{t}.frozen_a"),
+            Tensor::from_f32(&[r, i], rng.normal_vec(r * i, (i as f32).powf(-0.5))),
+        );
+        bank.insert(
+            format!("{t}.frozen_b"),
+            Tensor::from_f32(&[o, r], rng.normal_vec(o * r, (r as f32).powf(-0.5))),
+        );
+    }
+    bank
+}
+
+pub fn materialize(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    params: &Bank,
+    aux: &Bank,
+    layer_type: &str,
+) -> Factors {
+    let (o, i) = cfg.dims(layer_type);
+    let r = mc.r;
+    let fa = aux[&format!("{layer_type}.frozen_a")].f32s().unwrap();
+    let fb = aux[&format!("{layer_type}.frozen_b")].f32s().unwrap();
+    let d = params[&format!("{layer_type}.d")].f32s().unwrap();
+    let bv = params[&format!("{layer_type}.bvec")].f32s().unwrap();
+    let mut a = Vec::with_capacity(cfg.blocks);
+    let mut b = Vec::with_capacity(cfg.blocks);
+    for k in 0..cfg.blocks {
+        let mut ak = fa.to_vec();
+        for rr in 0..r {
+            let s = d[k * r + rr];
+            for v in &mut ak[rr * i..(rr + 1) * i] {
+                *v *= s;
+            }
+        }
+        let mut bk = fb.to_vec();
+        for oo in 0..o {
+            let s = bv[k * o + oo];
+            for v in &mut bk[oo * r..(oo + 1) * r] {
+                *v *= s;
+            }
+        }
+        a.push(ak);
+        b.push(bk);
+    }
+    Factors { r, in_dim: i, out_dim: o, a, b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::init_params;
+    use crate::config::presets;
+
+    #[test]
+    fn shared_matrices_scaled_per_block() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::vera(4);
+        let mut params = init_params(&cfg, &mc, 0);
+        let aux = frozen_matrices(&cfg, &mc, 0);
+        // give block 0 a distinctive d
+        let key = "q.d".to_string();
+        let t = params[&key].clone();
+        let mut d = t.f32s().unwrap().to_vec();
+        d[0] = 2.0; // block 0, rank 0
+        params.insert(key, Tensor::from_f32(t.shape(), d));
+        let f = materialize(&cfg, &mc, &params, &aux, "q");
+        let fa = aux["q.frozen_a"].f32s().unwrap();
+        let i = cfg.dims("q").1;
+        // block 0 rank-0 row == 2 * frozen row; block 1 == 0.1 * frozen
+        for c in 0..i {
+            assert!((f.a[0][c] - 2.0 * fa[c]).abs() < 1e-6);
+            assert!((f.a[1][c] - 0.1 * fa[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn frozen_deterministic() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::vera(4);
+        assert_eq!(frozen_matrices(&cfg, &mc, 1), frozen_matrices(&cfg, &mc, 1));
+        assert_ne!(frozen_matrices(&cfg, &mc, 1), frozen_matrices(&cfg, &mc, 2));
+    }
+}

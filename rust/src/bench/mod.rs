@@ -1,0 +1,337 @@
+//! Bench harness shared by all `benches/*.rs` binaries (criterion is not
+//! vendored offline; benches are `harness = false` table printers).
+//!
+//! Every paper table/figure bench uses [`BenchCtx`]: it trains a method
+//! config on synthetic tasks via the PJRT artifacts when available (fast:
+//! XLA-compiled steps) and falls back to the host oracle otherwise, then
+//! prints paper-value vs measured rows.
+//!
+//! Scale knobs (env): `MOS_BENCH_STEPS` (default 120), `MOS_BENCH_EVAL`
+//! (default 24), `MOS_BENCH_SEEDS` (default 1), `MOS_BENCH_TASKS`
+//! (default "recall,arith"), `MOS_BENCH_BACKEND` (auto|host|pjrt).
+
+use crate::config::{MethodCfg, ModelCfg};
+use crate::data::tasks::{Task, TaskKind};
+use crate::runtime::{Manifest, Runtime};
+use crate::train::host::HostBackend;
+use crate::train::pjrt::PjrtBackend;
+use crate::train::{run, RunResult};
+use anyhow::Result;
+
+/// Column-aligned table printer.
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Shared bench context.
+pub struct BenchCtx {
+    pub cfg: ModelCfg,
+    pub preset: String,
+    pub steps: usize,
+    pub eval_n: usize,
+    pub seeds: Vec<u64>,
+    pub tasks: Vec<TaskKind>,
+    pub lr: f64,
+    runtime: Option<(Runtime, Manifest)>,
+    force_host: bool,
+}
+
+impl BenchCtx {
+    /// Standard context on the tiny preset.
+    pub fn tiny() -> BenchCtx {
+        BenchCtx::for_preset("tiny", crate::config::presets::tiny())
+    }
+
+    pub fn for_preset(preset: &str, cfg: ModelCfg) -> BenchCtx {
+        let steps = env_usize("MOS_BENCH_STEPS", 120);
+        let eval_n = env_usize("MOS_BENCH_EVAL", 24);
+        let nseeds = env_usize("MOS_BENCH_SEEDS", 1);
+        let tasks: Vec<TaskKind> = std::env::var("MOS_BENCH_TASKS")
+            .unwrap_or_else(|_| "recall,arith".to_string())
+            .split(',')
+            .filter_map(TaskKind::parse)
+            .collect();
+        let backend =
+            std::env::var("MOS_BENCH_BACKEND").unwrap_or_else(|_| "auto".into());
+        let force_host = backend == "host";
+        let runtime = if backend != "host" {
+            let dir = Manifest::default_dir();
+            match (Runtime::cpu(), Manifest::load(&dir)) {
+                (Ok(rt), Ok(m)) if m.presets.contains_key(preset) => {
+                    Some((rt, m))
+                }
+                _ => {
+                    if backend == "pjrt" {
+                        panic!(
+                            "MOS_BENCH_BACKEND=pjrt but artifacts are \
+                             missing (run `make artifacts`)"
+                        );
+                    }
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        BenchCtx {
+            cfg,
+            preset: preset.to_string(),
+            steps,
+            eval_n,
+            seeds: (0..nseeds as u64).collect(),
+            tasks,
+            lr: 2e-2,
+            runtime,
+            force_host,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        if self.runtime.is_some() {
+            "pjrt(artifacts)"
+        } else {
+            "host(oracle)"
+        }
+    }
+
+    /// True if this method config has a lowered artifact available.
+    fn has_artifact(&self, mc: &MethodCfg) -> bool {
+        self.runtime
+            .as_ref()
+            .map(|(_, m)| {
+                m.artifacts
+                    .contains_key(&format!("train_{}_{}", mc.tag(), self.preset))
+            })
+            .unwrap_or(false)
+    }
+
+    /// Train + evaluate one (method, task, seed) cell.
+    pub fn run_cell(
+        &self,
+        mc: &MethodCfg,
+        kind: TaskKind,
+        seed: u64,
+    ) -> Result<RunResult> {
+        let task_seed = seed; // task data varies with the seed, like resampled batches
+        if !self.force_host && self.has_artifact(mc) {
+            let (rt, m) = self.runtime.as_ref().unwrap();
+            let mut be = PjrtBackend::load(rt, m, &self.preset, mc, seed)?;
+            run(
+                &mut be,
+                || Task::new(kind, task_seed),
+                self.steps,
+                self.lr,
+                self.eval_n,
+                0,
+            )
+        } else {
+            // host fallback: reuse the artifact bank's *pretrained* base
+            // when geometry matches, so host and pjrt cells are comparable
+            let mut be = match self.runtime.as_ref().and_then(|(_, m)| {
+                if m.presets.get(&self.preset) == Some(&self.cfg) {
+                    crate::util::bank::read_bank(&m.bank_path(&self.preset))
+                        .ok()
+                } else {
+                    None
+                }
+            }) {
+                Some(bank) => HostBackend::with_base(&self.cfg, mc, seed, bank),
+                None => HostBackend::new(&self.cfg, mc, seed),
+            };
+            run(
+                &mut be,
+                || Task::new(kind, task_seed),
+                self.steps,
+                self.lr,
+                self.eval_n,
+                0,
+            )
+        }
+    }
+
+    /// Mean score across tasks and seeds; returns (per-task means, average,
+    /// mean final loss, total train seconds).
+    pub fn run_method(&self, mc: &MethodCfg) -> Result<MethodScores> {
+        let mut per_task = Vec::new();
+        let mut losses = Vec::new();
+        let mut secs = 0.0;
+        for &kind in &self.tasks {
+            let mut scores = Vec::new();
+            for &seed in &self.seeds {
+                let r = self.run_cell(mc, kind, seed)?;
+                scores.push(r.report.score);
+                losses.push(crate::train::final_loss(&r.losses, 10));
+                secs += r.train_seconds;
+            }
+            per_task.push(crate::stats::mean(&scores));
+        }
+        let avg = crate::stats::mean(&per_task);
+        let loss = crate::stats::mean(&losses);
+        Ok(MethodScores { per_task, avg, final_loss: loss, train_seconds: secs })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MethodScores {
+    pub per_task: Vec<f64>,
+    pub avg: f64,
+    pub final_loss: f64,
+    pub train_seconds: f64,
+}
+
+/// The paper-scaled method rows shared by the table benches (tiny preset;
+/// budgets mirror Table 2's 5.00M/19.99M tiers scaled to e=2/e=8).
+pub mod rows {
+    use crate::config::MethodCfg;
+
+    pub fn lora(r: usize) -> MethodCfg {
+        MethodCfg::lora(r)
+    }
+
+    /// Main MoS at the 1x budget (paper "4/8" row): r=4e, l=2, private 1.
+    pub fn mos_1x() -> MethodCfg {
+        MethodCfg::mos(8, 2, 2, 1)
+    }
+
+    /// MoS at the 4x budget (paper "16/32" row).
+    pub fn mos_4x() -> MethodCfg {
+        MethodCfg::mos(16, 2, 8, 1)
+    }
+
+    pub fn mos_no_sp() -> MethodCfg {
+        MethodCfg::mos(8, 2, 2, 0)
+    }
+
+    pub fn mos_no_vs() -> MethodCfg {
+        MethodCfg::mos(8, 1, 2, 1)
+    }
+
+    pub fn mos_no_pd() -> MethodCfg {
+        MethodCfg { pair_dissociation: false, ..MethodCfg::mos(8, 2, 2, 1) }
+    }
+
+    /// Sec. 2 pure sharing (rank = eL, identity routing).
+    pub fn pure_sharing(blocks: usize) -> MethodCfg {
+        MethodCfg::pure_sharing(2, blocks)
+    }
+
+    /// Sec. 2 pure sharing + random scaling.
+    pub fn random_scaling(blocks: usize) -> MethodCfg {
+        MethodCfg {
+            random_scaling: true,
+            ..MethodCfg::pure_sharing(2, blocks)
+        }
+    }
+
+    /// Sec. 2 pure sharing + subset selection (r of eL, tied pairs, l=1).
+    pub fn subset_selection() -> MethodCfg {
+        MethodCfg {
+            pair_dissociation: false,
+            ..MethodCfg::mos(4, 1, 2, 0)
+        }
+    }
+
+    pub fn vera() -> MethodCfg {
+        MethodCfg::vera(16)
+    }
+
+    pub fn tied() -> MethodCfg {
+        MethodCfg::tied(8)
+    }
+
+    pub fn prolora() -> MethodCfg {
+        MethodCfg::prolora(8, 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new("demo", &["a", "method"]);
+        t.row(vec!["1".into(), "lora".into()]);
+        t.row(vec!["22".into(), "mos".into()]);
+        t.print(); // smoke: no panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn row_configs_valid_on_tiny() {
+        let cfg = crate::config::presets::tiny();
+        for mc in [
+            rows::lora(2),
+            rows::mos_1x(),
+            rows::mos_4x(),
+            rows::mos_no_sp(),
+            rows::mos_no_vs(),
+            rows::mos_no_pd(),
+            rows::pure_sharing(cfg.blocks),
+            rows::random_scaling(cfg.blocks),
+            rows::subset_selection(),
+            rows::vera(),
+            rows::tied(),
+            rows::prolora(),
+        ] {
+            mc.validate(&cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn budget_tiers_match() {
+        use crate::adapter::params::trainable_params;
+        let cfg = crate::config::presets::tiny();
+        let b1 = trainable_params(&cfg, &rows::lora(2));
+        assert_eq!(trainable_params(&cfg, &rows::mos_1x()), b1);
+        assert_eq!(trainable_params(&cfg, &rows::pure_sharing(cfg.blocks)), b1);
+        assert_eq!(trainable_params(&cfg, &rows::subset_selection()), b1);
+        assert_eq!(trainable_params(&cfg, &rows::prolora()), b1);
+        assert_eq!(trainable_params(&cfg, &rows::mos_4x()), 4 * b1);
+        assert_eq!(trainable_params(&cfg, &rows::lora(8)), 4 * b1);
+    }
+}

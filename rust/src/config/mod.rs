@@ -1,0 +1,338 @@
+//! Model/adapter/training configuration.
+//!
+//! `ModelCfg` mirrors `python/compile/model.py::ModelCfg` exactly (the
+//! manifest is the source of truth at runtime; presets here are for
+//! analytic work — parameter accounting, memory modelling — without
+//! artifacts). LLaMA geometries are retained so the paper's "# Param"
+//! column (Table 2) reproduces to the digit.
+
+pub mod presets;
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// The seven linear-layer types the paper adapts (QLoRA convention).
+pub const LAYER_TYPES: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
+
+/// Base transformer geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub blocks: usize,
+    pub heads: usize,
+    /// kv heads (GQA); == heads for MHA. LLaMA2-70B uses 8.
+    pub kv_heads: usize,
+    pub ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// (out_features, in_features) for a layer type.
+    pub fn dims(&self, layer_type: &str) -> (usize, usize) {
+        let h = self.hidden;
+        let kv = self.kv_heads * self.head_dim();
+        match layer_type {
+            "q" => (h, h),
+            "k" | "v" => (kv, h),
+            "o" => (h, h),
+            "gate" | "up" => (self.ff, h),
+            "down" => (h, self.ff),
+            t => panic!("unknown layer type {t}"),
+        }
+    }
+
+    /// Frozen base parameter count (tied embedding, norms, projections).
+    pub fn base_param_count(&self) -> usize {
+        let mut n = self.vocab * self.hidden + self.hidden;
+        n += self.blocks * 2 * self.hidden;
+        for t in LAYER_TYPES {
+            let (o, i) = self.dims(t);
+            n += self.blocks * o * i;
+        }
+        n
+    }
+
+    pub fn from_manifest(name: &str, j: &Json) -> Result<ModelCfg> {
+        let heads = j.req_usize("heads")?;
+        Ok(ModelCfg {
+            name: name.to_string(),
+            vocab: j.req_usize("vocab")?,
+            hidden: j.req_usize("hidden")?,
+            blocks: j.req_usize("blocks")?,
+            heads,
+            kv_heads: heads,
+            ff: j.req_usize("ff")?,
+            seq: j.req_usize("seq")?,
+            batch: j.req_usize("batch")?,
+        })
+    }
+}
+
+/// Adaptation method family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    LoRA,
+    MoS,
+    VeRA,
+    Tied,
+    PRoLoRA,
+}
+
+impl Method {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::LoRA => "lora",
+            Method::MoS => "mos",
+            Method::VeRA => "vera",
+            Method::Tied => "tied",
+            Method::PRoLoRA => "prolora",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "lora" => Method::LoRA,
+            "mos" => Method::MoS,
+            "vera" => Method::VeRA,
+            "tied" => Method::Tied,
+            "prolora" => Method::PRoLoRA,
+            _ => anyhow::bail!("unknown method '{s}'"),
+        })
+    }
+}
+
+/// Adapter geometry (mirrors python MethodCfg; see that docstring for field
+/// semantics). For MoS, `private_rank` of the `r` rank slots per matrix are
+/// routed to the private pool segment — a pure index-space convention that
+/// needs no artifact change (paper Sec. 3.5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MethodCfg {
+    pub method: Method,
+    pub r: usize,
+    pub l: usize,
+    pub e: usize,
+    pub m: usize,
+    pub alpha: f64,
+    pub private_rank: usize,
+    /// MoS differentiation toggles (for ablations & the Sec. 2 schemes).
+    pub pair_dissociation: bool,
+    pub subset_selection: bool,
+    /// Random per-rank scaling (Sec. 2 "Random Scaling"): frozen N(0,1)
+    /// scalars folded into rank_scale instead of all-ones.
+    pub random_scaling: bool,
+}
+
+impl MethodCfg {
+    pub fn lora(r: usize) -> MethodCfg {
+        MethodCfg {
+            method: Method::LoRA,
+            r,
+            l: 1,
+            e: 0,
+            m: 1,
+            alpha: 16.0,
+            private_rank: 0,
+            pair_dissociation: false,
+            subset_selection: false,
+            random_scaling: false,
+        }
+    }
+
+    /// Full MoS with all four differentiation strategies on.
+    pub fn mos(r: usize, l: usize, e: usize, private_rank: usize) -> MethodCfg {
+        MethodCfg {
+            method: Method::MoS,
+            r,
+            l,
+            e,
+            m: 1,
+            alpha: 16.0,
+            private_rank,
+            pair_dissociation: true,
+            subset_selection: true,
+            random_scaling: false,
+        }
+    }
+
+    pub fn vera(r: usize) -> MethodCfg {
+        MethodCfg { method: Method::VeRA, r, ..MethodCfg::lora(r) }
+    }
+
+    pub fn tied(r: usize) -> MethodCfg {
+        MethodCfg { method: Method::Tied, r, ..MethodCfg::lora(r) }
+    }
+
+    pub fn prolora(r: usize, m: usize) -> MethodCfg {
+        MethodCfg { method: Method::PRoLoRA, r, m, ..MethodCfg::lora(r) }
+    }
+
+    /// The paper's "pure sharing" (Sec. 2): every block selects the whole
+    /// pool in order; no dissociation, sharding, or privatization.
+    pub fn pure_sharing(e: usize, blocks: usize) -> MethodCfg {
+        MethodCfg {
+            method: Method::MoS,
+            r: e * blocks,
+            l: 1,
+            e,
+            m: 1,
+            alpha: 16.0,
+            private_rank: 0,
+            pair_dissociation: false,
+            subset_selection: false,
+            random_scaling: false,
+        }
+    }
+
+    /// Shards per pool, budget-matched to LoRA rank `e` (see python
+    /// MethodCfg.pool_shards): n = e * L * l.
+    pub fn pool_shards(&self, blocks: usize) -> usize {
+        self.e * blocks * self.l
+    }
+
+    /// Artifact tag (must match python MethodCfg.tag()).
+    pub fn tag(&self) -> String {
+        let mut bits = vec![self.method.as_str().to_string(), format!("r{}", self.r)];
+        if self.method == Method::MoS {
+            bits.push(format!("l{}", self.l));
+            bits.push(format!("e{}", self.e));
+        }
+        if self.method == Method::PRoLoRA {
+            bits.push(format!("m{}", self.m));
+        }
+        bits.join("_")
+    }
+
+    /// Validate against a model geometry.
+    pub fn validate(&self, cfg: &ModelCfg) -> Result<()> {
+        anyhow::ensure!(self.r > 0, "rank must be positive");
+        if self.method == Method::MoS {
+            anyhow::ensure!(self.l > 0 && self.e > 0, "mos needs l, e > 0");
+            anyhow::ensure!(
+                self.private_rank <= self.r,
+                "private_rank {} > r {}",
+                self.private_rank,
+                self.r
+            );
+            for t in LAYER_TYPES {
+                let (o, i) = cfg.dims(t);
+                anyhow::ensure!(
+                    i % self.l == 0 && o % self.l == 0,
+                    "l={} does not divide dims of layer '{t}' ({o},{i})",
+                    self.l
+                );
+            }
+        }
+        if self.method == Method::PRoLoRA {
+            for t in LAYER_TYPES {
+                let (o, i) = cfg.dims(t);
+                anyhow::ensure!(
+                    i % self.m == 0 && o % self.m == 0,
+                    "m={} does not divide dims of layer '{t}' ({o},{i})",
+                    self.m
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Training hyperparameters (paper Appendix A.2 scaled to our presets).
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup_frac: f64,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 300,
+            lr: 2e-3,
+            warmup_frac: 0.03,
+            seed: 0,
+            log_every: 50,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelCfg {
+        ModelCfg {
+            name: "tiny".into(),
+            vocab: 64,
+            hidden: 64,
+            blocks: 4,
+            heads: 4,
+            kv_heads: 4,
+            ff: 160,
+            seq: 48,
+            batch: 16,
+        }
+    }
+
+    #[test]
+    fn dims_per_layer_type() {
+        let c = tiny();
+        assert_eq!(c.dims("q"), (64, 64));
+        assert_eq!(c.dims("gate"), (160, 64));
+        assert_eq!(c.dims("down"), (64, 160));
+    }
+
+    #[test]
+    fn base_param_count_matches_python() {
+        // python: tiny base_params is recorded in the manifest; the formula
+        // here must agree: vocab*h + h + L*2h + L*sum(o*i)
+        let c = tiny();
+        let per_block = 4 * 64 * 64 + 2 * 160 * 64 + 64 * 160;
+        let want = 64 * 64 + 64 + 4 * 2 * 64 + 4 * per_block;
+        assert_eq!(c.base_param_count(), want);
+    }
+
+    #[test]
+    fn tag_matches_python_convention() {
+        assert_eq!(MethodCfg::lora(8).tag(), "lora_r8");
+        assert_eq!(MethodCfg::mos(8, 2, 2, 2).tag(), "mos_r8_l2_e2");
+        assert_eq!(MethodCfg::prolora(8, 4).tag(), "prolora_r8_m4");
+    }
+
+    #[test]
+    fn pure_sharing_rank_is_el() {
+        let mc = MethodCfg::pure_sharing(2, 4);
+        assert_eq!(mc.r, 8);
+        assert_eq!(mc.pool_shards(4), 8);
+        assert!(!mc.subset_selection && !mc.pair_dissociation);
+    }
+
+    #[test]
+    fn validate_rejects_bad_shard_count() {
+        let c = tiny();
+        // l=7 does not divide 64
+        let mc = MethodCfg::mos(8, 7, 2, 0);
+        assert!(mc.validate(&c).is_err());
+        assert!(MethodCfg::mos(8, 2, 2, 0).validate(&c).is_ok());
+        // private rank > r
+        assert!(MethodCfg::mos(4, 2, 2, 5).validate(&c).is_err());
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::LoRA, Method::MoS, Method::VeRA, Method::Tied,
+                  Method::PRoLoRA] {
+            assert_eq!(Method::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! Dynamic batcher: requests are queued per tenant; a batch is released
+//! when it reaches `max_batch` or the oldest request exceeds `max_wait`.
+//! Per-tenant batching is what makes multi-LoRA serving efficient — one
+//! forward pass per tenant per batch window (S-LoRA/Punica-style).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One generation request.
+pub struct Request {
+    pub tenant: String,
+    pub prompt: String,
+    pub respond: mpsc::Sender<Response>,
+    pub enqueued: Instant,
+}
+
+/// One generation response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub tenant: String,
+    pub prompt: String,
+    pub text: String,
+    pub latency: Duration,
+    pub ok: bool,
+    pub error: Option<String>,
+}
+
+struct Queues {
+    by_tenant: HashMap<String, VecDeque<Request>>,
+    /// FIFO of tenants with pending work (may contain duplicates; filtered
+    /// on pop)
+    ready: VecDeque<String>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batcher.
+pub struct Batcher {
+    q: Mutex<Queues>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        Batcher {
+            q: Mutex::new(Queues {
+                by_tenant: HashMap::new(),
+                ready: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            max_batch,
+            max_wait,
+        }
+    }
+
+    pub fn push(&self, req: Request) {
+        let mut q = self.q.lock().unwrap();
+        if q.closed {
+            let _ = req.respond.send(Response {
+                tenant: req.tenant.clone(),
+                prompt: req.prompt.clone(),
+                text: String::new(),
+                latency: Duration::ZERO,
+                ok: false,
+                error: Some("server shutting down".into()),
+            });
+            return;
+        }
+        q.ready.push_back(req.tenant.clone());
+        q.by_tenant.entry(req.tenant.clone()).or_default().push_back(req);
+        self.cv.notify_one();
+    }
+
+    /// Pop the next per-tenant batch. Blocks until a batch is ready (full,
+    /// or oldest request aged past `max_wait`), or returns None when closed
+    /// and drained.
+    pub fn pop_batch(&self) -> Option<(String, Vec<Request>)> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            // find a tenant whose batch should be released
+            let mut candidate: Option<String> = None;
+            let mut sleep = self.max_wait;
+            for t in q.ready.iter() {
+                let Some(reqs) = q.by_tenant.get(t) else { continue };
+                if reqs.is_empty() {
+                    continue;
+                }
+                let age = reqs.front().unwrap().enqueued.elapsed();
+                if reqs.len() >= self.max_batch || age >= self.max_wait || q.closed {
+                    candidate = Some(t.clone());
+                    break;
+                }
+                sleep = sleep.min(self.max_wait - age);
+            }
+            if let Some(t) = candidate {
+                let reqs = q.by_tenant.get_mut(&t).unwrap();
+                let take = reqs.len().min(self.max_batch);
+                let batch: Vec<Request> = reqs.drain(..take).collect();
+                // drop stale ready markers for this tenant
+                q.ready.retain(|x| x != &t);
+                if !q.by_tenant.get(&t).map(|r| r.is_empty()).unwrap_or(true) {
+                    q.ready.push_back(t.clone());
+                }
+                return Some((t, batch));
+            }
+            let has_pending =
+                q.by_tenant.values().any(|r| !r.is_empty());
+            if q.closed && !has_pending {
+                return None;
+            }
+            let (q2, _timeout) = self
+                .cv
+                .wait_timeout(q, sleep.max(Duration::from_millis(1)))
+                .unwrap();
+            q = q2;
+        }
+    }
+
+    /// Signal shutdown: pending requests are still drained.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(tenant: &str, prompt: &str) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                tenant: tenant.into(),
+                prompt: prompt.into(),
+                respond: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let b = Batcher::new(2, Duration::from_secs(60));
+        let (r1, _rx1) = req("a", "p1");
+        let (r2, _rx2) = req("a", "p2");
+        b.push(r1);
+        b.push(r2);
+        let (tenant, batch) = b.pop_batch().unwrap();
+        assert_eq!(tenant, "a");
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn timeout_releases_partial_batch() {
+        let b = Batcher::new(8, Duration::from_millis(20));
+        let (r1, _rx) = req("a", "p1");
+        b.push(r1);
+        let t0 = Instant::now();
+        let (_, batch) = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn tenants_batched_separately() {
+        let b = Batcher::new(2, Duration::from_millis(10));
+        let (r1, _x1) = req("a", "p1");
+        let (r2, _x2) = req("b", "p2");
+        let (r3, _x3) = req("a", "p3");
+        b.push(r1);
+        b.push(r2);
+        b.push(r3);
+        let (t1, batch1) = b.pop_batch().unwrap();
+        let (t2, batch2) = b.pop_batch().unwrap();
+        assert_ne!(t1, t2);
+        assert_eq!(batch1.len() + batch2.len(), 3);
+        // no cross-tenant mixing
+        for r in batch1 {
+            assert_eq!(r.tenant, t1);
+        }
+        for r in batch2 {
+            assert_eq!(r.tenant, t2);
+        }
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(5)));
+        let (r1, _x1) = req("a", "p1");
+        b.push(r1);
+        b.close();
+        assert!(b.pop_batch().is_some());
+        assert!(b.pop_batch().is_none());
+    }
+
+    #[test]
+    fn push_after_close_errors_request() {
+        let b = Batcher::new(4, Duration::from_millis(5));
+        b.close();
+        let (r, rx) = req("a", "p");
+        b.push(r);
+        let resp = rx.recv().unwrap();
+        assert!(!resp.ok);
+    }
+
+    #[test]
+    fn concurrent_producers_consumer() {
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(10)));
+        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..12 {
+            let (r, rx) = req(&format!("t{}", i % 3), &format!("p{i}"));
+            rxs.push(rx);
+            let b2 = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || b2.push(r)));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut total = 0;
+        while let Some((_, batch)) = b.pop_batch() {
+            total += batch.len();
+        }
+        assert_eq!(total, 12);
+    }
+}

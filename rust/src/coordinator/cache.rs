@@ -1,0 +1,167 @@
+//! Materialization cache: dense per-tenant low-rank factors, built once per
+//! tenant (index-based routing = pure precompute, paper Limitations §C) and
+//! LRU-evicted under a capacity bound.
+//!
+//! This is the serving hot path's key optimization: gather+concat happens
+//! once per tenant, not once per request.
+
+use crate::adapter::{self, Factors};
+use crate::config::{ModelCfg, LAYER_TYPES};
+use crate::coordinator::registry::Tenant;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// All dense factors for one tenant.
+pub type TenantFactors = Arc<BTreeMap<String, Factors>>;
+
+/// LRU cache of materialized factors, keyed by (tenant id, version).
+pub struct MaterializeCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    map: HashMap<String, TenantFactors>,
+    order: VecDeque<String>,
+    hits: u64,
+    misses: u64,
+}
+
+impl MaterializeCache {
+    pub fn new(capacity: usize) -> MaterializeCache {
+        assert!(capacity > 0);
+        MaterializeCache {
+            capacity,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Fetch (or build) the dense factors for a tenant.
+    pub fn get(&self, cfg: &ModelCfg, tenant: &Tenant) -> TenantFactors {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(f) = inner.map.get(&tenant.id).cloned() {
+                inner.hits += 1;
+                let id = tenant.id.clone();
+                inner.order.retain(|x| x != &id);
+                inner.order.push_back(id);
+                return f;
+            }
+            inner.misses += 1;
+        }
+        // build outside the lock (materialization can be slow)
+        let mut factors = BTreeMap::new();
+        for t in LAYER_TYPES {
+            factors.insert(
+                t.to_string(),
+                adapter::materialize(cfg, &tenant.mc, &tenant.params, &tenant.aux, t),
+            );
+        }
+        let factors: TenantFactors = Arc::new(factors);
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.map.contains_key(&tenant.id) {
+            while inner.map.len() >= self.capacity {
+                if let Some(victim) = inner.order.pop_front() {
+                    inner.map.remove(&victim);
+                } else {
+                    break;
+                }
+            }
+            inner.map.insert(tenant.id.clone(), Arc::clone(&factors));
+            inner.order.push_back(tenant.id.clone());
+        }
+        factors
+    }
+
+    /// Drop a tenant (e.g. after re-training updated its params).
+    pub fn invalidate(&self, tenant_id: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.remove(tenant_id);
+        inner.order.retain(|x| x != tenant_id);
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::MethodCfg;
+
+    fn tenant(cfg: &ModelCfg, id: &str, seed: u64) -> Tenant {
+        let mc = MethodCfg::mos(4, 2, 2, 0);
+        Tenant {
+            id: id.into(),
+            mc: mc.clone(),
+            params: adapter::init_params(cfg, &mc, seed),
+            aux: adapter::mos::router::build_router(cfg, &mc, seed).into_bank(),
+            router_seed: seed,
+        }
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let cfg = presets::tiny();
+        let cache = MaterializeCache::new(4);
+        let t = tenant(&cfg, "a", 1);
+        let f1 = cache.get(&cfg, &t);
+        let f2 = cache.get(&cfg, &t);
+        assert!(Arc::ptr_eq(&f1, &f2));
+        assert_eq!(cache.stats(), (1, 1));
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let cfg = presets::tiny();
+        let cache = MaterializeCache::new(2);
+        let (ta, tb, tc) = (tenant(&cfg, "a", 1), tenant(&cfg, "b", 2), tenant(&cfg, "c", 3));
+        cache.get(&cfg, &ta);
+        cache.get(&cfg, &tb);
+        cache.get(&cfg, &ta); // b becomes LRU
+        cache.get(&cfg, &tc); // evicts b
+        assert_eq!(cache.len(), 2);
+        let (h0, m0) = cache.stats();
+        cache.get(&cfg, &tb); // miss again
+        let (h1, m1) = cache.stats();
+        assert_eq!(h1, h0);
+        assert_eq!(m1, m0 + 1);
+    }
+
+    #[test]
+    fn invalidate_forces_rebuild() {
+        let cfg = presets::tiny();
+        let cache = MaterializeCache::new(4);
+        let t = tenant(&cfg, "a", 1);
+        let f1 = cache.get(&cfg, &t);
+        cache.invalidate("a");
+        let f2 = cache.get(&cfg, &t);
+        assert!(!Arc::ptr_eq(&f1, &f2));
+    }
+
+    #[test]
+    fn factors_cover_all_layer_types() {
+        let cfg = presets::tiny();
+        let cache = MaterializeCache::new(1);
+        let f = cache.get(&cfg, &tenant(&cfg, "a", 1));
+        for t in LAYER_TYPES {
+            assert!(f.contains_key(t));
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Serving metrics: latency histogram (log-spaced buckets), counters, and
+//! percentile snapshots for the serving benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 40;
+
+/// Log-spaced latency histogram from 10µs to ~100s plus counters.
+#[derive(Debug)]
+pub struct Metrics {
+    buckets: [AtomicU64; BUCKETS],
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub generated_tokens: AtomicU64,
+    total_latency_us: AtomicU64,
+}
+
+fn bucket_of(us: u64) -> usize {
+    // bucket i covers [10 * 1.5^i, 10 * 1.5^(i+1)) microseconds
+    let mut bound = 10.0f64;
+    for i in 0..BUCKETS {
+        bound *= 1.5;
+        if (us as f64) < bound {
+            return i;
+        }
+    }
+    BUCKETS - 1
+}
+
+fn bucket_upper(i: usize) -> f64 {
+    10.0 * 1.5f64.powi(i as i32 + 1)
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            generated_tokens: AtomicU64::new(0),
+            total_latency_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.total_latency_us.fetch_add(us, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Latency percentile estimate (upper bucket bound), in microseconds.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total: u64 = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} errors={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms mean_batch={:.2} tokens={}",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.mean_latency_us() / 1e3,
+            self.percentile_us(50.0) / 1e3,
+            self.percentile_us(95.0) / 1e3,
+            self.percentile_us(99.0) / 1e3,
+            self.mean_batch_size(),
+            self.generated_tokens.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_monotone() {
+        assert!(bucket_of(5) <= bucket_of(50));
+        assert!(bucket_of(50) <= bucket_of(5000));
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_latency(Duration::from_micros(i * 100));
+        }
+        let p50 = m.percentile_us(50.0);
+        let p95 = m.percentile_us(95.0);
+        let p99 = m.percentile_us(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of 100..10000us should land in the few-ms range
+        assert!((1_000.0..20_000.0).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.percentile_us(99.0), 0.0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+        let _ = m.summary();
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+}

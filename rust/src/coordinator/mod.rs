@@ -1,0 +1,25 @@
+//! Multi-tenant adapter-serving coordinator — the deployable system around
+//! the paper's contribution (the intro scenario: thousands of customized
+//! models served concurrently, where LoRA state alone would occupy TBs and
+//! MoS shrinks it ~8×).
+//!
+//! Pipeline: requests enter the [`batcher`] keyed by tenant; worker threads
+//! pull per-tenant batches, materialize the tenant's low-rank factors
+//! through the [`cache`] (index-based routing makes this a *precompute*,
+//! paper Limitations §C), run batched greedy decoding, and respond.
+//! The [`registry`] owns tenant state and the [`memory`] ledger enforces
+//! an accelerator-memory budget with LRU eviction; [`metrics`] records
+//! latency/throughput.
+
+pub mod batcher;
+pub mod cache;
+pub mod memory;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{Batcher, Request, Response};
+pub use memory::MemoryLedger;
+pub use metrics::Metrics;
+pub use registry::{Registry, Tenant};
+pub use server::Server;

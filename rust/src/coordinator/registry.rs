@@ -1,0 +1,184 @@
+//! Tenant registry: per-tenant adapter state (method config, trainable
+//! params, router state) plus memory accounting via the ledger.
+//!
+//! Low-cost switching (paper Sec. 3.6): swapping tenants swaps only the
+//! adapter tensors — the frozen base is shared by everyone.
+
+use super::memory::MemoryLedger;
+use crate::adapter::params::serving_bytes;
+use crate::config::{MethodCfg, ModelCfg};
+use crate::train::checkpoint::Checkpoint;
+use crate::util::bank::Bank;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One customized model.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub id: String,
+    pub mc: MethodCfg,
+    pub params: Bank,
+    pub aux: Bank,
+    pub router_seed: u64,
+}
+
+impl Tenant {
+    pub fn from_checkpoint(id: &str, ck: Checkpoint) -> Tenant {
+        Tenant {
+            id: id.to_string(),
+            mc: ck.mc,
+            params: ck.params,
+            aux: ck.aux,
+            router_seed: ck.router_seed,
+        }
+    }
+
+    /// Actual bytes of this tenant's serving state (f32 host copy).
+    pub fn actual_bytes(&self) -> usize {
+        self.params.values().map(|t| t.nbytes()).sum::<usize>()
+            + self.aux.values().map(|t| t.nbytes()).sum::<usize>()
+    }
+}
+
+/// Thread-safe tenant registry with a memory budget.
+pub struct Registry {
+    pub cfg: ModelCfg,
+    tenants: RwLock<HashMap<String, Arc<Tenant>>>,
+    pub ledger: Mutex<MemoryLedger>,
+}
+
+impl Registry {
+    pub fn new(cfg: ModelCfg, capacity_bytes: usize) -> Registry {
+        Registry {
+            cfg,
+            tenants: RwLock::new(HashMap::new()),
+            ledger: Mutex::new(MemoryLedger::new(capacity_bytes)),
+        }
+    }
+
+    /// Register (or replace) a tenant; may evict LRU tenants to fit.
+    /// Returns the evicted tenant ids.
+    pub fn register(&self, tenant: Tenant) -> Result<Vec<String>> {
+        tenant.mc.validate(&self.cfg)?;
+        // the analytic model (what a GPU deployment would allocate, fp32)
+        let bytes = serving_bytes(&self.cfg, &tenant.mc, 4);
+        let mut ledger = self.ledger.lock().unwrap();
+        let Some(evicted) = ledger.admit(&tenant.id, bytes) else {
+            bail!(
+                "tenant '{}' needs {bytes} B > capacity {} B",
+                tenant.id,
+                ledger.capacity
+            );
+        };
+        drop(ledger);
+        let mut map = self.tenants.write().unwrap();
+        for id in &evicted {
+            map.remove(id);
+        }
+        map.insert(tenant.id.clone(), Arc::new(tenant));
+        Ok(evicted)
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<Tenant>> {
+        let t = self.tenants.read().unwrap().get(id).cloned();
+        if t.is_some() {
+            self.ledger.lock().unwrap().touch(id);
+        }
+        t
+    }
+
+    pub fn remove(&self, id: &str) -> bool {
+        let removed = self.tenants.write().unwrap().remove(id).is_some();
+        if removed {
+            self.ledger.lock().unwrap().release(id);
+        }
+        removed
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.tenants.read().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter;
+    use crate::config::presets;
+
+    fn mk_tenant(cfg: &ModelCfg, id: &str, seed: u64) -> Tenant {
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        Tenant {
+            id: id.into(),
+            mc: mc.clone(),
+            params: adapter::init_params(cfg, &mc, seed),
+            aux: adapter::mos::router::build_router(cfg, &mc, seed).into_bank(),
+            router_seed: seed,
+        }
+    }
+
+    #[test]
+    fn register_and_get() {
+        let cfg = presets::tiny();
+        let reg = Registry::new(cfg.clone(), 1 << 30);
+        let t = mk_tenant(&cfg, "alice", 1);
+        assert!(reg.register(t).unwrap().is_empty());
+        assert!(reg.get("alice").is_some());
+        assert!(reg.get("bob").is_none());
+        assert_eq!(reg.len(), 1);
+        assert!(reg.remove("alice"));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let one = serving_bytes(&cfg, &mc, 4);
+        let reg = Registry::new(cfg.clone(), 2 * one + one / 2);
+        reg.register(mk_tenant(&cfg, "a", 1)).unwrap();
+        reg.register(mk_tenant(&cfg, "b", 2)).unwrap();
+        let _ = reg.get("a"); // touch a; b is LRU
+        let evicted = reg.register(mk_tenant(&cfg, "c", 3)).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert!(reg.get("b").is_none());
+        assert!(reg.get("a").is_some() && reg.get("c").is_some());
+    }
+
+    #[test]
+    fn mos_budget_fits_8x_more_than_lora_r16() {
+        // capacity sized for exactly 10 LoRA-r16 tenants fits ~80 MoS ones
+        let cfg = presets::tiny();
+        let lora = serving_bytes(&cfg, &MethodCfg::lora(16), 4);
+        let reg = Registry::new(cfg.clone(), 10 * lora);
+        let mut admitted = 0;
+        for i in 0..200 {
+            let t = mk_tenant(&cfg, &format!("t{i}"), i as u64);
+            let evicted = reg.register(t).unwrap();
+            if evicted.is_empty() {
+                admitted += 1;
+            } else {
+                break;
+            }
+        }
+        assert!(admitted >= 60, "only {admitted} MoS tenants fit");
+    }
+
+    #[test]
+    fn rejects_invalid_method_for_geometry() {
+        let cfg = presets::tiny();
+        let reg = Registry::new(cfg.clone(), 1 << 30);
+        let mut t = mk_tenant(&cfg, "bad", 0);
+        t.mc.l = 7; // doesn't divide dims
+        assert!(reg.register(t).is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! The serving event loop: worker threads pull per-tenant batches from the
+//! batcher, materialize factors through the cache, run batched greedy
+//! decoding, and deliver responses. Engines are worker-owned (one PJRT
+//! executable or host model per worker), so no engine needs to be `Sync`.
+
+use super::batcher::{Batcher, Request, Response};
+use super::cache::{MaterializeCache, TenantFactors};
+use super::metrics::Metrics;
+use super::registry::{Registry, Tenant};
+use crate::data::tokenizer::Tokenizer;
+use crate::eval::greedy_decode;
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// A per-worker inference engine.
+pub trait ServeEngine {
+    /// Batched forward for one tenant: padded tokens (batch*seq) -> logits
+    /// (batch*seq*vocab).
+    fn forward(
+        &mut self,
+        tenant: &Tenant,
+        factors: &TenantFactors,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>>;
+    /// (batch, seq, vocab)
+    fn shape(&self) -> (usize, usize, usize);
+}
+
+/// Host-model serving engine: shared frozen base + cached tenant factors.
+pub struct HostEngine {
+    pub cfg: crate::config::ModelCfg,
+    pub base: crate::util::bank::Bank,
+}
+
+impl HostEngine {
+    pub fn new(cfg: crate::config::ModelCfg, seed: u64) -> HostEngine {
+        let base = crate::model::transformer::init_base(&cfg, seed);
+        HostEngine { cfg, base }
+    }
+}
+
+impl ServeEngine for HostEngine {
+    fn forward(
+        &mut self,
+        tenant: &Tenant,
+        factors: &TenantFactors,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let (cache, _) = crate::model::transformer::forward(
+            &self.cfg,
+            &tenant.mc,
+            &self.base,
+            factors,
+            tokens,
+        );
+        Ok(cache.logits)
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.cfg.batch, self.cfg.seq, self.cfg.vocab)
+    }
+}
+
+/// The coordinator server.
+pub struct Server {
+    pub registry: Arc<Registry>,
+    pub batcher: Arc<Batcher>,
+    pub metrics: Arc<Metrics>,
+    pub cache: Arc<MaterializeCache>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn new(
+        registry: Arc<Registry>,
+        max_batch: usize,
+        max_wait: Duration,
+        cache_capacity: usize,
+    ) -> Server {
+        Server {
+            registry,
+            batcher: Arc::new(Batcher::new(max_batch, max_wait)),
+            metrics: Arc::new(Metrics::new()),
+            cache: Arc::new(MaterializeCache::new(cache_capacity)),
+            workers: Vec::new(),
+        }
+    }
+
+    /// Spawn `n` workers, each owning an engine built by `factory`.
+    pub fn start<F, E>(&mut self, n: usize, factory: F)
+    where
+        F: Fn(usize) -> E + Send + Sync + 'static,
+        E: ServeEngine + 'static,
+    {
+        let factory = Arc::new(factory);
+        for wid in 0..n {
+            let registry = Arc::clone(&self.registry);
+            let batcher = Arc::clone(&self.batcher);
+            let metrics = Arc::clone(&self.metrics);
+            let cache = Arc::clone(&self.cache);
+            let factory = Arc::clone(&factory);
+            self.workers.push(
+                thread::Builder::new()
+                    .name(format!("mos-serve-{wid}"))
+                    .spawn(move || {
+                        let mut engine = factory(wid);
+                        while let Some((tenant_id, batch)) = batcher.pop_batch()
+                        {
+                            process_batch(
+                                &registry, &metrics, &cache, &mut engine,
+                                &tenant_id, batch,
+                            );
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+    }
+
+    /// Enqueue a request; returns the response channel.
+    pub fn submit(&self, tenant: &str, prompt: &str) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.batcher.push(Request {
+            tenant: tenant.to_string(),
+            prompt: prompt.to_string(),
+            respond: tx,
+            enqueued: Instant::now(),
+        });
+        rx
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(&mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn process_batch<E: ServeEngine>(
+    registry: &Registry,
+    metrics: &Metrics,
+    cache: &MaterializeCache,
+    engine: &mut E,
+    tenant_id: &str,
+    batch: Vec<Request>,
+) {
+    metrics.record_batch(batch.len());
+    let Some(tenant) = registry.get(tenant_id) else {
+        for req in batch {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = req.respond.send(Response {
+                tenant: tenant_id.to_string(),
+                prompt: req.prompt.clone(),
+                text: String::new(),
+                latency: req.enqueued.elapsed(),
+                ok: false,
+                error: Some(format!("unknown tenant '{tenant_id}'")),
+            });
+        }
+        return;
+    };
+    let factors = cache.get(&registry.cfg, &tenant);
+    let (bsz, seq, vocab) = engine.shape();
+    let tk = Tokenizer::new();
+
+    // chunk requests into engine-sized sub-batches
+    for chunk in batch.chunks(bsz) {
+        let mut prompts: Vec<Vec<i32>> =
+            chunk.iter().map(|r| tk.prompt_tokens(&r.prompt)).collect();
+        while prompts.len() < bsz {
+            prompts.push(vec![crate::data::tokenizer::BOS]);
+        }
+        let mut err: Option<String> = None;
+        let mut fwd = |tokens: &[i32]| -> Vec<f32> {
+            match engine.forward(&tenant, &factors, tokens) {
+                Ok(l) => l,
+                Err(e) => {
+                    err = Some(e.to_string());
+                    vec![0.0; bsz * seq * vocab]
+                }
+            }
+        };
+        let outs = greedy_decode(&mut fwd, &prompts, seq, vocab);
+        for (req, out) in chunk.iter().zip(&outs) {
+            let latency = req.enqueued.elapsed();
+            if err.is_none() {
+                metrics.record_latency(latency);
+                metrics
+                    .generated_tokens
+                    .fetch_add(out.len() as u64, Ordering::Relaxed);
+            } else {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            let _ = req.respond.send(Response {
+                tenant: tenant_id.to_string(),
+                prompt: req.prompt.clone(),
+                text: tk.decode(out),
+                latency,
+                ok: err.is_none(),
+                error: err.clone(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter;
+    use crate::config::{presets, MethodCfg};
+
+    fn make_server(capacity: usize) -> (Server, crate::config::ModelCfg) {
+        let mut cfg = presets::tiny();
+        cfg.batch = 4; // keep unit tests fast
+        let registry =
+            Arc::new(Registry::new(cfg.clone(), capacity));
+        let server = Server::new(
+            registry,
+            4,
+            Duration::from_millis(10),
+            8,
+        );
+        (server, cfg)
+    }
+
+    fn add_tenant(server: &Server, cfg: &crate::config::ModelCfg, id: &str, seed: u64) {
+        let mc = MethodCfg::mos(4, 2, 2, 0);
+        server
+            .registry
+            .register(Tenant {
+                id: id.into(),
+                mc: mc.clone(),
+                params: adapter::init_params(cfg, &mc, seed),
+                aux: adapter::mos::router::build_router(cfg, &mc, seed)
+                    .into_bank(),
+                router_seed: seed,
+            })
+            .unwrap();
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let (mut server, cfg) = make_server(1 << 30);
+        add_tenant(&server, &cfg, "alice", 1);
+        add_tenant(&server, &cfg, "bob", 2);
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let tenant = if i % 2 == 0 { "alice" } else { "bob" };
+            rxs.push(server.submit(tenant, &format!("q:{i}")));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(resp.ok, "{:?}", resp.error);
+        }
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_tenant_errors() {
+        let (mut server, cfg) = make_server(1 << 30);
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let rx = server.submit("ghost", "hello");
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(!resp.ok);
+        assert!(resp.error.unwrap().contains("unknown tenant"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn cache_reused_across_requests() {
+        let (mut server, cfg) = make_server(1 << 30);
+        add_tenant(&server, &cfg, "alice", 1);
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        for _ in 0..3 {
+            let rx = server.submit("alice", "q:aa");
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        let (hits, misses) = server.cache.stats();
+        assert_eq!(misses, 1, "factors must be materialized exactly once");
+        assert!(hits >= 1);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,28 @@
+//! Synthetic-task data substrate.
+//!
+//! The paper finetunes LLaMA on SuperNI / Flan-V2 / CoT / CodeAlpaca and
+//! evaluates on MMLU / BBH / GSM8K / TyDiQA / HumanEval. None of those are
+//! usable at our scale, so each benchmark is replaced by a *synthetic task
+//! family* stressing the same capability axis (DESIGN.md §1 substitution
+//! table):
+//!
+//! | paper benchmark | proxy task   | capability            | metric |
+//! |-----------------|--------------|------------------------|--------|
+//! | MMLU            | [`recall`]   | factual memorization    | EM     |
+//! | BBH             | [`chain`]    | multi-step symbolic ops | EM     |
+//! | GSM8K           | [`arith`]    | arithmetic + CoT        | EM(final) |
+//! | TyDiQA          | [`cipherqa`] | cross-"lingual" mapping | F1/EM  |
+//! | HumanEval       | [`stackvm`]  | program synthesis       | pass@1 |
+//!
+//! Every example is rendered chatbot-style as
+//! `BOS <prompt> SEP <completion> EOS` with the loss mask covering only
+//! `<completion> EOS` (the paper's Tulu-style schema with `<|assistant|>`).
+
+pub mod loader;
+pub mod stackvm;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use loader::{Batch, Loader};
+pub use tasks::{Example, Metric, Task, TaskKind};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,142 @@
+//! Tiny arithmetic program VM — the executable substrate behind the
+//! HumanEval-proxy task (`stackvm`): generated "programs" are scored by
+//! *running* them (functional correctness / pass@1), exactly as HumanEval
+//! scores synthesized Python against unit tests.
+//!
+//! Program syntax: a sequence of ops applied left-to-right to an integer
+//! accumulator, e.g. `*2+3` maps x to 2x+3. Ops: `+k`, `-k`, `*k` with a
+//! single digit k, and `n` (negate).
+
+/// One VM operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Add(i64),
+    Sub(i64),
+    Mul(i64),
+    Neg,
+}
+
+/// A parsed program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Program(pub Vec<Op>);
+
+/// Parse error (position + message).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BadProgram(pub String);
+
+impl Program {
+    /// Parse `+3*2n-1` style source.
+    pub fn parse(src: &str) -> Result<Program, BadProgram> {
+        let mut ops = Vec::new();
+        let mut it = src.chars().peekable();
+        while let Some(c) = it.next() {
+            match c {
+                'n' => ops.push(Op::Neg),
+                '+' | '-' | '*' => {
+                    let d = it
+                        .next()
+                        .and_then(|d| d.to_digit(10))
+                        .ok_or_else(|| {
+                            BadProgram(format!("op '{c}' needs a digit"))
+                        })? as i64;
+                    ops.push(match c {
+                        '+' => Op::Add(d),
+                        '-' => Op::Sub(d),
+                        _ => Op::Mul(d),
+                    });
+                }
+                c => return Err(BadProgram(format!("bad char '{c}'"))),
+            }
+        }
+        if ops.is_empty() {
+            return Err(BadProgram("empty program".into()));
+        }
+        Ok(Program(ops))
+    }
+
+    /// Run on an input (saturating to avoid overflow on garbage programs).
+    pub fn run(&self, x: i64) -> i64 {
+        let mut acc = x;
+        for op in &self.0 {
+            acc = match *op {
+                Op::Add(k) => acc.saturating_add(k),
+                Op::Sub(k) => acc.saturating_sub(k),
+                Op::Mul(k) => acc.saturating_mul(k),
+                Op::Neg => acc.saturating_neg(),
+            };
+        }
+        acc
+    }
+
+    /// Render back to source.
+    pub fn source(&self) -> String {
+        let mut s = String::new();
+        for op in &self.0 {
+            match *op {
+                Op::Add(k) => s.push_str(&format!("+{k}")),
+                Op::Sub(k) => s.push_str(&format!("-{k}")),
+                Op::Mul(k) => s.push_str(&format!("*{k}")),
+                Op::Neg => s.push('n'),
+            }
+        }
+        s
+    }
+}
+
+/// Functional-equivalence check on probe inputs — pass@1 semantics: a
+/// generated program passes iff it matches the reference on every probe.
+pub fn passes(reference: &Program, candidate: &str, probes: &[i64]) -> bool {
+    match Program::parse(candidate) {
+        Err(_) => false,
+        Ok(p) => probes.iter().all(|&x| p.run(x) == reference.run(x)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_run() {
+        let p = Program::parse("*2+3").unwrap();
+        assert_eq!(p.run(2), 7);
+        assert_eq!(p.run(5), 13);
+        assert_eq!(p.run(0), 3);
+        assert_eq!(p.source(), "*2+3");
+    }
+
+    #[test]
+    fn negate() {
+        let p = Program::parse("n+1").unwrap();
+        assert_eq!(p.run(4), -3);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Program::parse("").is_err());
+        assert!(Program::parse("+x").is_err());
+        assert!(Program::parse("q").is_err());
+        assert!(Program::parse("+").is_err());
+    }
+
+    #[test]
+    fn pass_at_1_semantics() {
+        let r = Program::parse("*2+3").unwrap();
+        let probes = [0, 1, -2, 7, 11];
+        assert!(passes(&r, "*2+3", &probes));
+        // semantically equal but syntactically different program passes
+        assert!(passes(&r, "*2+1+2", &probes));
+        // wrong program fails
+        assert!(!passes(&r, "*2+4", &probes));
+        // unparseable fails (does not panic)
+        assert!(!passes(&r, "hello", &probes));
+    }
+
+    #[test]
+    fn saturating_no_panic() {
+        let p = Program::parse("*9*9*9*9*9*9*9*9*9*9*9*9*9*9*9*9*9*9*9*9*9*9")
+            .unwrap();
+        let _ = p.run(i64::MAX);
+        let _ = p.run(i64::MIN);
+    }
+}

@@ -1,0 +1,479 @@
+//! The five synthetic task families (see `data::mod` docs for the mapping
+//! to the paper's benchmarks). Each task is deterministic in its seed; the
+//! train and eval splits are disjoint index ranges over the same generator,
+//! except `recall`, which (like MMLU-after-SuperNI) evaluates memorized
+//! facts.
+
+use super::stackvm::{self, Program};
+use crate::util::rng::Rng;
+
+/// Scoring metric, matching the paper's per-benchmark choices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// exact match of the whole completion
+    Em,
+    /// exact match of the final number after '#' (GSM-style CoT)
+    EmFinal,
+    /// char-level F1 (TyDiQA-style) — EM also reported
+    F1,
+    /// run the generated program on probes (HumanEval-style)
+    PassAt1,
+}
+
+/// One prompt/completion pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub prompt: String,
+    pub completion: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Recall,
+    Chain,
+    Arith,
+    CipherQa,
+    StackVm,
+}
+
+impl TaskKind {
+    pub fn all() -> [TaskKind; 5] {
+        [
+            TaskKind::Recall,
+            TaskKind::Chain,
+            TaskKind::Arith,
+            TaskKind::CipherQa,
+            TaskKind::StackVm,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Recall => "recall",
+            TaskKind::Chain => "chain",
+            TaskKind::Arith => "arith",
+            TaskKind::CipherQa => "cipherqa",
+            TaskKind::StackVm => "stackvm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        TaskKind::all().into_iter().find(|t| t.name() == s)
+    }
+
+    /// The paper benchmark this task proxies.
+    pub fn proxies(&self) -> &'static str {
+        match self {
+            TaskKind::Recall => "MMLU",
+            TaskKind::Chain => "BBH",
+            TaskKind::Arith => "GSM8K",
+            TaskKind::CipherQa => "TyDiQA",
+            TaskKind::StackVm => "HumanEval",
+        }
+    }
+}
+
+/// A task instance: generator + scorer, deterministic in `seed`.
+pub struct Task {
+    pub kind: TaskKind,
+    pub seed: u64,
+    /// recall fact table / cipher permutation etc.
+    state: TaskState,
+}
+
+enum TaskState {
+    Recall { facts: Vec<(String, String)> },
+    Cipher { perm: [u8; 26] },
+    Programs { family: Vec<Program> },
+    None,
+}
+
+impl Task {
+    pub fn new(kind: TaskKind, seed: u64) -> Task {
+        let mut rng = Rng::new(seed, 0x7A5E ^ kind as u64);
+        let state = match kind {
+            TaskKind::Recall => {
+                // 24 facts: 2-letter key -> 3-letter value. Values follow a
+                // *task-seeded* letter permutation (val = σ(k0)σ(k1)σ(k0)),
+                // so the table is consistent and systematically learnable —
+                // the MMLU-proxy tests whether the adapter can instill a
+                // new fact system over the pretrained base's wrong prior,
+                // not rote low-rank memorization (DESIGN.md §1).
+                let mut perm: Vec<u8> = (0..26).collect();
+                rng.shuffle(&mut perm);
+                let map = |c: u8| (b'a' + perm[(c - b'a') as usize]) as char;
+                let mut facts = Vec::new();
+                let mut used = std::collections::HashSet::new();
+                while facts.len() < 24 {
+                    let k = rand_word(&mut rng, 2);
+                    if !used.insert(k.clone()) {
+                        continue;
+                    }
+                    let kb = k.as_bytes();
+                    let v: String = [map(kb[0]), map(kb[1]), map(kb[0])]
+                        .into_iter()
+                        .collect();
+                    facts.push((k, v));
+                }
+                TaskState::Recall { facts }
+            }
+            TaskKind::CipherQa => {
+                let mut perm: Vec<u8> = (0..26).collect();
+                rng.shuffle(&mut perm);
+                TaskState::Cipher { perm: perm.try_into().unwrap() }
+            }
+            TaskKind::StackVm => {
+                // a finite program family the model can learn end-to-end
+                let mut family = Vec::new();
+                let mut seen = std::collections::HashSet::new();
+                while family.len() < 16 {
+                    let p = rand_program(&mut rng);
+                    if seen.insert(p.source()) {
+                        family.push(p);
+                    }
+                }
+                TaskState::Programs { family }
+            }
+            _ => TaskState::None,
+        };
+        Task { kind, seed, state }
+    }
+
+    pub fn metric(&self) -> Metric {
+        match self.kind {
+            TaskKind::Recall | TaskKind::Chain => Metric::Em,
+            TaskKind::Arith => Metric::EmFinal,
+            TaskKind::CipherQa => Metric::F1,
+            TaskKind::StackVm => Metric::PassAt1,
+        }
+    }
+
+    /// The i-th example of a split ("train" uses even stream, "eval" odd) —
+    /// deterministic, so eval sets are reproducible across methods/seeds.
+    pub fn example(&self, split: &str, i: usize) -> Example {
+        let stream = if split == "train" { 2 } else { 3 };
+        let mut rng = Rng::new(
+            self.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            stream,
+        );
+        match (&self.kind, &self.state) {
+            (TaskKind::Recall, TaskState::Recall { facts }) => {
+                let (k, v) = &facts[rng.range(0, facts.len())];
+                Example {
+                    prompt: format!("q:{k}"),
+                    completion: v.clone(),
+                }
+            }
+            (TaskKind::Chain, _) => {
+                // 2 chained ops over a 4-char word: rev, rot1, swap ends
+                let w: Vec<char> = rand_word(&mut rng, 4).chars().collect();
+                let ops: Vec<usize> = (0..2).map(|_| rng.range(0, 3)).collect();
+                let mut cur = w.clone();
+                let mut names = Vec::new();
+                for &op in &ops {
+                    match op {
+                        0 => {
+                            cur.reverse();
+                            names.push("rev");
+                        }
+                        1 => {
+                            cur.rotate_left(1);
+                            names.push("rot");
+                        }
+                        _ => {
+                            let n = cur.len();
+                            cur.swap(0, n - 1);
+                            names.push("swp");
+                        }
+                    }
+                }
+                Example {
+                    prompt: format!(
+                        "{} {}:{}",
+                        names[0],
+                        names[1],
+                        w.iter().collect::<String>()
+                    ),
+                    completion: cur.iter().collect(),
+                }
+            }
+            (TaskKind::Arith, _) => {
+                // a+b-c with CoT steps; final answer after '#'
+                let a = rng.range(1, 20) as i64;
+                let b = rng.range(1, 20) as i64;
+                let c = rng.range(1, 15) as i64;
+                let s1 = a + b;
+                let s2 = s1 - c;
+                Example {
+                    prompt: format!("{a}+{b}-{c}="),
+                    completion: format!("{a}+{b}={s1},{s1}-{c}={s2}#{s2}"),
+                }
+            }
+            (TaskKind::CipherQa, TaskState::Cipher { perm }) => {
+                let len = rng.range(3, 6);
+                let w = rand_word(&mut rng, len);
+                let enc: String = w
+                    .chars()
+                    .map(|c| (b'a' + perm[(c as u8 - b'a') as usize]) as char)
+                    .collect();
+                Example {
+                    prompt: format!("enc:{w}"),
+                    completion: enc,
+                }
+            }
+            (TaskKind::StackVm, TaskState::Programs { family }) => {
+                let p = &family[rng.range(0, family.len())];
+                let x1 = rng.range(0, 9) as i64;
+                let x2 = rng.range(0, 9) as i64;
+                Example {
+                    prompt: format!(
+                        "f({x1})={},f({x2})={};f=",
+                        p.run(x1),
+                        p.run(x2)
+                    ),
+                    completion: p.source(),
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Score a generated completion against the reference example.
+    /// Returns the metric value in [0, 1].
+    pub fn score(&self, example: &Example, generated: &str) -> f64 {
+        match self.metric() {
+            Metric::Em => {
+                if generated.trim() == example.completion {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Metric::EmFinal => {
+                let want = final_answer(&example.completion);
+                let got = final_answer(generated);
+                if !want.is_empty() && want == got {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Metric::F1 => char_f1(&example.completion, generated.trim()),
+            Metric::PassAt1 => {
+                if let TaskState::Programs { .. } = &self.state {
+                    // reference program reconstructed from the completion
+                    let reference =
+                        Program::parse(&example.completion).expect("ref");
+                    let probes = [0, 1, 2, 3, 5, 8, -4, 13];
+                    if stackvm::passes(&reference, generated.trim(), &probes) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Exact-match variant (reported alongside F1 for cipherqa, paper
+    /// TyDiQA style).
+    pub fn score_em(&self, example: &Example, generated: &str) -> f64 {
+        if generated.trim() == example.completion {
+            1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+fn rand_word(rng: &mut Rng, len: usize) -> String {
+    (0..len)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect()
+}
+
+fn rand_program(rng: &mut Rng) -> Program {
+    let n = rng.range(2, 4);
+    let ops = (0..n)
+        .map(|_| match rng.range(0, 4) {
+            0 => stackvm::Op::Add(rng.range(1, 10) as i64),
+            1 => stackvm::Op::Sub(rng.range(1, 10) as i64),
+            2 => stackvm::Op::Mul(rng.range(2, 4) as i64),
+            _ => stackvm::Op::Neg,
+        })
+        .collect();
+    Program(ops)
+}
+
+/// Text after the last '#' (GSM-style final answer extraction).
+pub fn final_answer(s: &str) -> &str {
+    match s.rfind('#') {
+        Some(i) => s[i + 1..].trim(),
+        None => "",
+    }
+}
+
+/// Char-level F1 between reference and candidate (bag-of-chars overlap).
+pub fn char_f1(reference: &str, candidate: &str) -> f64 {
+    if reference.is_empty() && candidate.is_empty() {
+        return 1.0;
+    }
+    if reference.is_empty() || candidate.is_empty() {
+        return 0.0;
+    }
+    let mut counts = std::collections::HashMap::new();
+    for c in reference.chars() {
+        *counts.entry(c).or_insert(0i64) += 1;
+    }
+    let mut overlap = 0i64;
+    for c in candidate.chars() {
+        let e = counts.entry(c).or_insert(0);
+        if *e > 0 {
+            overlap += 1;
+            *e -= 1;
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let p = overlap as f64 / candidate.chars().count() as f64;
+    let r = overlap as f64 / reference.chars().count() as f64;
+    2.0 * p * r / (p + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_examples() {
+        for kind in TaskKind::all() {
+            let t1 = Task::new(kind, 7);
+            let t2 = Task::new(kind, 7);
+            for i in 0..10 {
+                assert_eq!(t1.example("train", i), t2.example("train", i));
+            }
+            assert_ne!(
+                (0..10).map(|i| t1.example("train", i)).collect::<Vec<_>>(),
+                (0..10).map(|i| t1.example("eval", i)).collect::<Vec<_>>(),
+            );
+        }
+    }
+
+    #[test]
+    fn chain_completions_are_correct() {
+        let t = Task::new(TaskKind::Chain, 3);
+        for i in 0..50 {
+            let ex = t.example("train", i);
+            // re-apply the ops named in the prompt
+            let (ops_part, word) = ex.prompt.split_once(':').unwrap();
+            let mut cur: Vec<char> = word.chars().collect();
+            for op in ops_part.split_whitespace() {
+                match op {
+                    "rev" => cur.reverse(),
+                    "rot" => cur.rotate_left(1),
+                    "swp" => {
+                        let n = cur.len();
+                        cur.swap(0, n - 1)
+                    }
+                    _ => panic!("bad op {op}"),
+                }
+            }
+            assert_eq!(cur.iter().collect::<String>(), ex.completion);
+        }
+    }
+
+    #[test]
+    fn arith_cot_is_consistent() {
+        let t = Task::new(TaskKind::Arith, 1);
+        for i in 0..50 {
+            let ex = t.example("eval", i);
+            // prompt "a+b-c=", final answer must equal a+b-c
+            let body = ex.prompt.trim_end_matches('=');
+            let (ab, c) = body.rsplit_once('-').unwrap();
+            let (a, b) = ab.split_once('+').unwrap();
+            let want = a.parse::<i64>().unwrap() + b.parse::<i64>().unwrap()
+                - c.parse::<i64>().unwrap();
+            assert_eq!(final_answer(&ex.completion), want.to_string());
+            assert_eq!(t.score(&ex, &ex.completion), 1.0);
+        }
+    }
+
+    #[test]
+    fn recall_is_consistent_across_splits() {
+        let t = Task::new(TaskKind::Recall, 5);
+        // same key must always map to same value (it's a fact table)
+        let mut map = std::collections::HashMap::new();
+        for split in ["train", "eval"] {
+            for i in 0..80 {
+                let ex = t.example(split, i);
+                let prev = map.insert(ex.prompt.clone(), ex.completion.clone());
+                if let Some(p) = prev {
+                    assert_eq!(p, ex.completion, "fact changed for {}", ex.prompt);
+                }
+            }
+        }
+        assert!(map.len() > 4, "should cover multiple facts");
+    }
+
+    #[test]
+    fn cipher_is_a_permutation() {
+        let t = Task::new(TaskKind::CipherQa, 9);
+        let ex = t.example("train", 0);
+        assert_eq!(
+            ex.prompt.trim_start_matches("enc:").chars().count(),
+            ex.completion.chars().count()
+        );
+        // score: perfect completion = 1.0 for both F1 and EM
+        assert_eq!(t.score(&ex, &ex.completion), 1.0);
+        assert_eq!(t.score_em(&ex, &ex.completion), 1.0);
+        // partial overlap gives partial F1
+        let partial = t.score(&ex, &ex.completion[1..]);
+        assert!(partial > 0.0 && partial < 1.0);
+    }
+
+    #[test]
+    fn stackvm_scores_functionally() {
+        let t = Task::new(TaskKind::StackVm, 2);
+        let ex = t.example("eval", 4);
+        assert_eq!(t.score(&ex, &ex.completion), 1.0);
+        assert_eq!(t.score(&ex, "not a program"), 0.0);
+    }
+
+    #[test]
+    fn final_answer_extraction() {
+        assert_eq!(final_answer("1+2=3,3-1=2#2"), "2");
+        assert_eq!(final_answer("no marker"), "");
+        assert_eq!(final_answer("a#b#c"), "c");
+    }
+
+    #[test]
+    fn char_f1_properties() {
+        assert_eq!(char_f1("abc", "abc"), 1.0);
+        assert_eq!(char_f1("abc", "xyz"), 0.0);
+        assert!(char_f1("abc", "abx") > 0.5);
+        assert_eq!(char_f1("", ""), 1.0);
+        assert_eq!(char_f1("a", ""), 0.0);
+        // order-insensitive (bag of chars)
+        assert_eq!(char_f1("abc", "cba"), 1.0);
+    }
+
+    #[test]
+    fn prompts_fit_tiny_seq() {
+        let tk = super::super::tokenizer::Tokenizer::new();
+        for kind in TaskKind::all() {
+            let t = Task::new(kind, 0);
+            for i in 0..30 {
+                let ex = t.example("train", i);
+                assert!(
+                    tk.render(&ex.prompt, &ex.completion, 48).is_some(),
+                    "{:?} example too long: {:?}",
+                    kind,
+                    ex
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Character-level tokenizer with the chatbot special tokens of the paper's
+//! Tulu-style schema (Appendix A.1): BOS, SEP (= `<|assistant|>`), EOS, PAD.
+//!
+//! The charset fits the tiny preset's 64-token vocab; larger presets simply
+//! leave the tail of the embedding unused.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const EOS: i32 = 3;
+const SPECIALS: usize = 4;
+
+const CHARSET: &str =
+    " abcdefghijklmnopqrstuvwxyz0123456789+-*/=:,.?()[]><#@!%&";
+
+/// Char-level tokenizer (stateless; the charset is fixed).
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    to_id: [i32; 128],
+    to_char: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        let mut to_id = [-1i32; 128];
+        let mut to_char = Vec::new();
+        for (i, c) in CHARSET.chars().enumerate() {
+            to_id[c as usize] = (SPECIALS + i) as i32;
+            to_char.push(c);
+        }
+        Tokenizer { to_id, to_char }
+    }
+
+    /// Total vocabulary size (specials + charset).
+    pub fn vocab_size(&self) -> usize {
+        SPECIALS + self.to_char.len()
+    }
+
+    /// Encode a string; unknown characters map to '?'.
+    pub fn encode(&self, s: &str) -> Vec<i32> {
+        s.chars()
+            .map(|c| {
+                let idx = c as usize;
+                if idx < 128 && self.to_id[idx] >= 0 {
+                    self.to_id[idx]
+                } else {
+                    self.to_id['?' as usize]
+                }
+            })
+            .collect()
+    }
+
+    /// Decode ids; specials are dropped, decoding stops at EOS.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == EOS {
+                break;
+            }
+            if id < SPECIALS as i32 {
+                continue;
+            }
+            let idx = id as usize - SPECIALS;
+            if idx < self.to_char.len() {
+                out.push(self.to_char[idx]);
+            }
+        }
+        out
+    }
+
+    /// Render one chatbot-style example:
+    /// returns (tokens, loss_weight) both of length `seq`, PAD-filled.
+    /// Loss covers completion + EOS only. Returns None if it doesn't fit.
+    pub fn render(
+        &self,
+        prompt: &str,
+        completion: &str,
+        seq: usize,
+    ) -> Option<(Vec<i32>, Vec<f32>)> {
+        let mut toks = vec![BOS];
+        toks.extend(self.encode(prompt));
+        toks.push(SEP);
+        let prompt_len = toks.len();
+        toks.extend(self.encode(completion));
+        toks.push(EOS);
+        if toks.len() > seq {
+            return None;
+        }
+        let mut weight = vec![0.0f32; seq];
+        // next-token loss: position t predicts t+1, so weight[t] = 1 for
+        // t in [prompt_len-1, len-2] (those predict completion tokens + EOS)
+        for t in prompt_len - 1..toks.len() - 1 {
+            weight[t] = 1.0;
+        }
+        toks.resize(seq, PAD);
+        Some((toks, weight))
+    }
+
+    /// The prompt prefix used at generation time: `BOS <prompt> SEP`.
+    pub fn prompt_tokens(&self, prompt: &str) -> Vec<i32> {
+        let mut toks = vec![BOS];
+        toks.extend(self.encode(prompt));
+        toks.push(SEP);
+        toks
+    }
+}
+
+/// Shifted next-token targets for a token row (targets[t] = tokens[t+1]).
+pub fn shift_targets(tokens: &[i32]) -> Vec<i32> {
+    let mut tgt = tokens[1..].to_vec();
+    tgt.push(PAD);
+    tgt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_tiny_preset() {
+        let tk = Tokenizer::new();
+        assert!(tk.vocab_size() <= 64, "vocab {}", tk.vocab_size());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let tk = Tokenizer::new();
+        let s = "ab 3+4=7, x>y?";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn unknown_chars_become_question_mark() {
+        let tk = Tokenizer::new();
+        assert_eq!(tk.decode(&tk.encode("aΩb")), "a?b");
+    }
+
+    #[test]
+    fn render_masks_prompt() {
+        let tk = Tokenizer::new();
+        let (toks, w) = tk.render("q", "ans", 12).unwrap();
+        // layout: BOS q SEP a n s EOS PAD...
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks[2], SEP);
+        assert_eq!(toks[6], EOS);
+        assert_eq!(toks[7], PAD);
+        // weights: positions 2..=5 predict (a, n, s, EOS)
+        assert_eq!(&w[..8], &[0., 0., 1., 1., 1., 1., 0., 0.]);
+    }
+
+    #[test]
+    fn render_rejects_overflow() {
+        let tk = Tokenizer::new();
+        assert!(tk.render("aaaaaaa", "bbbbbbb", 10).is_none());
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let tk = Tokenizer::new();
+        let mut ids = tk.encode("hi");
+        ids.push(EOS);
+        ids.extend(tk.encode("garbage"));
+        assert_eq!(tk.decode(&ids), "hi");
+    }
+
+    #[test]
+    fn shift_targets_basic() {
+        assert_eq!(shift_targets(&[5, 6, 7]), vec![6, 7, PAD]);
+    }
+}

@@ -1,0 +1,200 @@
+//! Evaluation harness: batched greedy decoding through any forward function
+//! (host model or PJRT artifact) + per-task scoring, reporting the paper's
+//! metrics (EM / final-number EM / F1 / pass@1).
+
+use crate::data::tasks::{Metric, Task};
+use crate::data::tokenizer::{Tokenizer, EOS, PAD};
+
+/// Forward function: padded tokens (batch*seq) -> logits (batch*seq*vocab).
+pub type ForwardFn<'a> = dyn FnMut(&[i32]) -> Vec<f32> + 'a;
+
+/// Batched greedy decoding.
+///
+/// `prompts` are token prefixes (already `BOS .. SEP`). Each row decodes
+/// until EOS or `seq` is full; every decode step is one full forward pass
+/// (no KV cache — the presets are small; see DESIGN.md §Perf for the
+/// decode-step artifact discussion).
+pub fn greedy_decode(
+    forward: &mut ForwardFn,
+    prompts: &[Vec<i32>],
+    seq: usize,
+    vocab: usize,
+) -> Vec<Vec<i32>> {
+    let bsz = prompts.len();
+    let mut tokens = vec![PAD; bsz * seq];
+    let mut lens: Vec<usize> = Vec::with_capacity(bsz);
+    for (row, p) in prompts.iter().enumerate() {
+        let n = p.len().min(seq);
+        tokens[row * seq..row * seq + n].copy_from_slice(&p[..n]);
+        lens.push(n);
+    }
+    let mut done = vec![false; bsz];
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); bsz];
+    loop {
+        if done.iter().all(|&d| d) || lens.iter().all(|&l| l >= seq) {
+            break;
+        }
+        let logits = forward(&tokens);
+        debug_assert_eq!(logits.len(), bsz * seq * vocab);
+        let mut progressed = false;
+        for row in 0..bsz {
+            if done[row] || lens[row] >= seq {
+                continue;
+            }
+            let pos = lens[row] - 1;
+            let lrow = &logits[(row * seq + pos) * vocab..(row * seq + pos + 1) * vocab];
+            let next = (0..vocab)
+                .max_by(|&a, &b| lrow[a].total_cmp(&lrow[b]))
+                .unwrap() as i32;
+            if next == EOS {
+                done[row] = true;
+            } else {
+                tokens[row * seq + lens[row]] = next;
+                out[row].push(next);
+                lens[row] += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    out
+}
+
+/// Scores for one task evaluation.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub task: String,
+    pub metric: Metric,
+    /// primary metric in [0, 100] (paper-style percentage)
+    pub score: f64,
+    /// exact match in [0, 100] (same as score for EM metrics)
+    pub em: f64,
+    pub n: usize,
+}
+
+/// Evaluate a task: generate completions for `n` eval examples with the
+/// given forward function and aggregate the task metric.
+pub fn evaluate(
+    task: &Task,
+    forward: &mut ForwardFn,
+    n: usize,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+) -> EvalReport {
+    let tk = Tokenizer::new();
+    let mut scores = Vec::with_capacity(n);
+    let mut ems = Vec::with_capacity(n);
+    let mut idx = 0;
+    while idx < n {
+        let take = batch.min(n - idx);
+        let mut examples = Vec::with_capacity(take);
+        let mut prompts = Vec::with_capacity(batch);
+        for i in idx..idx + take {
+            let ex = task.example("eval", i);
+            prompts.push(tk.prompt_tokens(&ex.prompt));
+            examples.push(ex);
+        }
+        // pad the batch up to the artifact's fixed batch size
+        while prompts.len() < batch {
+            prompts.push(vec![crate::data::tokenizer::BOS]);
+        }
+        let generations = greedy_decode(forward, &prompts, seq, vocab);
+        let debug = std::env::var("MOS_EVAL_DEBUG").is_ok();
+        for (ex, gen) in examples.iter().zip(&generations) {
+            let text = tk.decode(gen);
+            if debug {
+                eprintln!(
+                    "[eval] prompt={:?} want={:?} got={:?}",
+                    ex.prompt, ex.completion, text
+                );
+            }
+            scores.push(task.score(ex, &text));
+            ems.push(task.score_em(ex, &text));
+        }
+        idx += take;
+    }
+    EvalReport {
+        task: task.kind.name().to_string(),
+        metric: task.metric(),
+        score: 100.0 * scores.iter().sum::<f64>() / scores.len().max(1) as f64,
+        em: 100.0 * ems.iter().sum::<f64>() / ems.len().max(1) as f64,
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::TaskKind;
+    use crate::data::tokenizer::SEP;
+
+    /// A fake "model" that echoes the prompt chars after SEP — lets us test
+    /// decoding mechanics without a trained model.
+    fn echo_forward(vocab: usize, seq: usize) -> impl FnMut(&[i32]) -> Vec<f32> {
+        move |tokens: &[i32]| {
+            let bsz = tokens.len() / seq;
+            let mut logits = vec![0.0f32; bsz * seq * vocab];
+            for row in 0..bsz {
+                let toks = &tokens[row * seq..(row + 1) * seq];
+                let sep_pos = toks.iter().position(|&t| t == SEP);
+                let len = toks.iter().position(|&t| t == PAD).unwrap_or(seq);
+                if let Some(sp) = sep_pos {
+                    let pos = len - 1; // position whose next token is queried
+                    // number of generated tokens so far
+                    let k = pos - sp;
+                    // echo prompt token k+1 (after BOS), else EOS
+                    let src = 1 + k;
+                    let next = if src < sp { toks[src] } else { EOS };
+                    logits[(row * seq + pos) * vocab + next as usize] = 10.0;
+                }
+            }
+            logits
+        }
+    }
+
+    #[test]
+    fn greedy_decode_echo() {
+        let tk = Tokenizer::new();
+        let vocab = tk.vocab_size();
+        let seq = 24;
+        let mut fwd = echo_forward(vocab, seq);
+        let prompts =
+            vec![tk.prompt_tokens("abc"), tk.prompt_tokens("hello")];
+        let outs = greedy_decode(&mut fwd, &prompts, seq, vocab);
+        assert_eq!(tk.decode(&outs[0]), "abc");
+        assert_eq!(tk.decode(&outs[1]), "hello");
+    }
+
+    #[test]
+    fn evaluate_echo_scores_cipher_partially() {
+        // echo model returns the plaintext, which shares chars with the
+        // cipher output only by chance -> F1 must be < 100
+        let task = Task::new(TaskKind::CipherQa, 0);
+        let tk = Tokenizer::new();
+        let vocab = tk.vocab_size();
+        let mut fwd = echo_forward(vocab, 32);
+        let rep = evaluate(&task, &mut fwd, 8, 4, 32, vocab);
+        assert_eq!(rep.n, 8);
+        assert!(rep.score < 100.0);
+    }
+
+    #[test]
+    fn decode_respects_seq_bound() {
+        let vocab = 8;
+        let seq = 6;
+        // model that never emits EOS
+        let mut fwd = |tokens: &[i32]| {
+            let bsz = tokens.len() / seq;
+            let mut l = vec![0.0f32; bsz * seq * vocab];
+            for i in 0..bsz * seq {
+                l[i * vocab + 5] = 1.0;
+            }
+            l
+        };
+        let outs = greedy_decode(&mut fwd, &[vec![1, 4, 2]], seq, vocab);
+        assert_eq!(outs[0].len(), seq - 3);
+    }
+}

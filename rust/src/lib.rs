@@ -1,0 +1,26 @@
+//! # mos — Mixture of Shards, as a deployable multi-tenant adapter framework
+//!
+//! Rust + JAX + Pallas reproduction of *"MoS: Unleashing Parameter Efficiency
+//! of Low-Rank Adaptation with Mixture of Shards"* (ICLR 2025).
+//!
+//! Layering (Python never on the request path):
+//! * **L3 (this crate)** — adapter pools + index-based router (the paper's
+//!   contribution), multi-tenant serving coordinator, training orchestrator,
+//!   synthetic-task substrates, stats, benches.
+//! * **L2** — JAX transformer lowered AOT to HLO text (`python/compile/`).
+//! * **L1** — Pallas kernels for shard gather / fused routed low-rank apply.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index mapping
+//! every paper table/figure to a bench target.
+
+pub mod adapter;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod runtime;
+pub mod stats;
+pub mod train;
+pub mod util;

@@ -1,0 +1,319 @@
+//! `mos` CLI — leader entrypoint for the framework.
+//!
+//! Subcommands:
+//!   train     train one adapter on a synthetic task (pjrt or host backend)
+//!   serve     multi-tenant serving demo (registers tenants, runs traffic)
+//!   eval      evaluate a checkpoint on a task
+//!   params    parameter accounting / memory model on any geometry
+//!   info      show manifest / artifact inventory
+//!
+//! Examples:
+//!   mos train --preset tiny --method mos --r 8 --l 2 --e 2 --task recall
+//!   mos params --geometry llama2-7b
+//!   mos info
+
+use anyhow::{bail, Context, Result};
+use mos::adapter::params::{fmt_bytes, fmt_params, multi_tenant_bytes, trainable_params};
+use mos::config::{presets, Method, MethodCfg};
+use mos::coordinator::server::HostEngine;
+use mos::coordinator::{Registry, Server, Tenant};
+use mos::data::tasks::{Task, TaskKind};
+use mos::runtime::{Manifest, Runtime};
+use mos::train::checkpoint::Checkpoint;
+use mos::train::host::HostBackend;
+use mos::train::pjrt::PjrtBackend;
+use mos::train::{final_loss, run, Backend};
+use mos::util::cli::Args;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.has("verbose") {
+        mos::util::log::set_level(mos::util::log::Level::Debug);
+    }
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("params") => cmd_params(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "mos — Mixture of Shards multi-tenant adapter framework\n\n\
+         USAGE: mos <train|serve|eval|params|info> [flags]\n\n\
+         train:  --preset tiny --method mos --r 8 --l 2 --e 2 \
+         [--private-rank 1] --task recall --steps 300 --lr 0.02 \
+         [--backend auto|host|pjrt] [--seed 0] [--out ckpt_dir]\n\
+         serve:  --preset tiny --tenants 8 --requests 64 \
+         [--capacity-mb 64] [--workers 1]\n\
+         eval:   --ckpt ckpt_dir --task recall [--n 32]\n\
+         params: --geometry llama2-7b [--tenants 10000]\n\
+         info:   [--artifacts DIR]"
+    );
+}
+
+fn parse_method(args: &Args, blocks: usize) -> Result<MethodCfg> {
+    let name = args.str("method", "mos");
+    let r = args.usize("r", 8)?;
+    let mut mc = match Method::parse(&name)? {
+        Method::LoRA => MethodCfg::lora(r),
+        Method::MoS => MethodCfg::mos(
+            r,
+            args.usize("l", 2)?,
+            args.usize("e", 2)?,
+            args.usize("private-rank", 1)?,
+        ),
+        Method::VeRA => MethodCfg::vera(r),
+        Method::Tied => MethodCfg::tied(r),
+        Method::PRoLoRA => MethodCfg::prolora(r, args.usize("m", 4)?),
+    };
+    if args.str("variant", "") == "pure" {
+        mc = MethodCfg::pure_sharing(args.usize("e", 2)?, blocks);
+    }
+    Ok(mc)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let cfg = presets::by_name(&preset)
+        .with_context(|| format!("unknown preset {preset}"))?;
+    let mc = parse_method(args, cfg.blocks)?;
+    mc.validate(&cfg)?;
+    let kind = TaskKind::parse(&args.str("task", "recall"))
+        .context("unknown task")?;
+    let steps = args.usize("steps", 300)?;
+    let lr = args.f64("lr", 2e-2)?;
+    let seed = args.u64("seed", 0)?;
+    let eval_n = args.usize("eval-n", 32)?;
+    let backend_kind = args.str("backend", "auto");
+
+    println!(
+        "train: preset={preset} method={} ({} trainable params) task={} steps={steps}",
+        mc.tag(),
+        fmt_params(trainable_params(&cfg, &mc)),
+        kind.name()
+    );
+
+    let manifest_dir = Manifest::default_dir();
+    let use_pjrt = match backend_kind.as_str() {
+        "host" => false,
+        "pjrt" => true,
+        _ => manifest_dir.join("manifest.json").exists(),
+    };
+
+    let result = if use_pjrt {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(&manifest_dir)?;
+        let mut be = PjrtBackend::load(&rt, &manifest, &preset, &mc, seed)?;
+        let r = run(&mut be, || Task::new(kind, seed), steps, lr, eval_n, 25)?;
+        maybe_save(args, &preset, &mc, seed, be.params().clone(), be.aux.clone())?;
+        r
+    } else {
+        let mut be = HostBackend::new(&cfg, &mc, seed);
+        let r = run(&mut be, || Task::new(kind, seed), steps, lr, eval_n, 25)?;
+        maybe_save(
+            args,
+            &preset,
+            &mc,
+            seed,
+            be.params().clone(),
+            be.model.aux.clone(),
+        )?;
+        r
+    };
+
+    println!(
+        "done: final_loss={:.4} {}={:.2} ({} eval examples) in {:.1}s",
+        final_loss(&result.losses, 10),
+        match result.report.metric {
+            mos::data::tasks::Metric::F1 => "F1",
+            mos::data::tasks::Metric::PassAt1 => "pass@1",
+            _ => "EM",
+        },
+        result.report.score,
+        result.report.n,
+        result.train_seconds,
+    );
+    Ok(())
+}
+
+fn maybe_save(
+    args: &Args,
+    preset: &str,
+    mc: &MethodCfg,
+    seed: u64,
+    params: mos::util::bank::Bank,
+    aux: mos::util::bank::Bank,
+) -> Result<()> {
+    if let Some(dir) = args.get("out") {
+        let ck = Checkpoint {
+            preset: preset.to_string(),
+            mc: mc.clone(),
+            router_seed: seed,
+            params,
+            aux,
+        };
+        ck.save(std::path::Path::new(dir))?;
+        println!("checkpoint saved to {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let mut cfg = presets::by_name(&preset).context("unknown preset")?;
+    cfg.batch = args.usize("batch", 8)?;
+    let n_tenants = args.usize("tenants", 8)?;
+    let n_requests = args.usize("requests", 64)?;
+    let capacity = args.usize("capacity-mb", 64)? << 20;
+    let workers = args.usize("workers", 1)?;
+
+    let registry = Arc::new(Registry::new(cfg.clone(), capacity));
+    for i in 0..n_tenants {
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let seed = i as u64;
+        registry.register(Tenant {
+            id: format!("tenant-{i}"),
+            mc: mc.clone(),
+            params: mos::adapter::init_params(&cfg, &mc, seed),
+            aux: mos::adapter::mos::router::build_router(&cfg, &mc, seed)
+                .into_bank(),
+            router_seed: seed,
+        })?;
+    }
+    println!(
+        "registered {n_tenants} MoS tenants; ledger used {} of {}",
+        fmt_bytes(registry.ledger.lock().unwrap().used()),
+        fmt_bytes(capacity)
+    );
+
+    let mut server = Server::new(
+        Arc::clone(&registry),
+        cfg.batch,
+        Duration::from_millis(5),
+        n_tenants.max(4),
+    );
+    let cfg2 = cfg.clone();
+    server.start(workers, move |_| HostEngine::new(cfg2.clone(), 0));
+
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let tenant = format!("tenant-{}", i % n_tenants);
+        rxs.push(server.submit(&tenant, &format!("q:{:02}", i % 24)));
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv_timeout(Duration::from_secs(120))?.ok {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{n_requests} requests in {dt:.2}s ({:.1} req/s)",
+        n_requests as f64 / dt
+    );
+    println!("{}", server.metrics.summary());
+    let (hits, misses) = server.cache.stats();
+    println!("materialization cache: {hits} hits / {misses} builds");
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ckpt_dir = args.req("ckpt")?;
+    let ck = Checkpoint::load(std::path::Path::new(ckpt_dir))?;
+    let cfg = presets::by_name(&ck.preset).context("unknown preset")?;
+    let kind =
+        TaskKind::parse(&args.str("task", "recall")).context("unknown task")?;
+    let n = args.usize("n", 32)?;
+    let task = Task::new(kind, args.u64("seed", 0)?);
+
+    let mut model = mos::model::HostModel::new(
+        cfg.clone(),
+        ck.mc.clone(),
+        mos::model::transformer::init_base(&cfg, 0),
+        ck.params,
+        ck.aux,
+    );
+    let mut fwd = |tokens: &[i32]| model.forward(tokens);
+    let rep = mos::eval::evaluate(&task, &mut fwd, n, cfg.batch, cfg.seq, cfg.vocab);
+    println!("{}: score={:.2} em={:.2} (n={})", rep.task, rep.score, rep.em, rep.n);
+    Ok(())
+}
+
+fn cmd_params(args: &Args) -> Result<()> {
+    let geom = args.str("geometry", "llama2-7b");
+    let cfg = presets::by_name(&geom).context("unknown geometry")?;
+    let tenants = args.usize("tenants", 10_000)?;
+    println!(
+        "geometry {geom}: {} base params",
+        fmt_params(cfg.base_param_count())
+    );
+    let rows: Vec<(&str, MethodCfg)> = vec![
+        ("LoRA r=2", MethodCfg::lora(2)),
+        ("LoRA r=8", MethodCfg::lora(8)),
+        ("LoRA r=16", MethodCfg::lora(16)),
+        ("LoRA r=64", MethodCfg::lora(64)),
+        ("VeRA r=256", MethodCfg::vera(256)),
+        ("Tied r=280", MethodCfg::tied(280)),
+        ("PRoLoRA 4/8", MethodCfg::prolora(8, 4)),
+        ("MoS 4/8 (e=2)", MethodCfg::mos(8, 2, 2, 1)),
+        ("MoS 16/32 (e=8)", MethodCfg::mos(32, 2, 8, 1)),
+    ];
+    println!("{:<16} {:>10} {:>14}", "method", "# param", format!("{tenants} tenants"));
+    for (name, mc) in rows {
+        println!(
+            "{:<16} {:>10} {:>14}",
+            name,
+            fmt_params(trainable_params(&cfg, &mc)),
+            fmt_bytes(multi_tenant_bytes(&cfg, &mc, tenants, 2)),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    if !dir.join("manifest.json").exists() {
+        bail!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        );
+    }
+    let m = Manifest::load(&dir)?;
+    println!("artifacts at {}:", dir.display());
+    for (name, cfg) in &m.presets {
+        println!(
+            "  preset {name}: vocab={} hidden={} blocks={} seq={} batch={}",
+            cfg.vocab, cfg.hidden, cfg.blocks, cfg.seq, cfg.batch
+        );
+    }
+    for (name, art) in &m.artifacts {
+        println!(
+            "  {name}: kind={} inputs={} outputs={}",
+            art.kind,
+            art.inputs.len(),
+            art.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! AdamW optimizer over parameter banks — host twin of the optimizer baked
+//! into the AOT train-step artifact (same hyperparameters, python
+//! `model.py::train_step`).
+
+use crate::util::bank::{Bank, Tensor};
+
+pub const B1: f32 = 0.9;
+pub const B2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+pub const WEIGHT_DECAY: f32 = 0.0;
+
+/// Optimizer state (first/second moments), shaped like the params bank.
+pub struct AdamW {
+    pub m: Bank,
+    pub v: Bank,
+    pub step: u64,
+}
+
+impl AdamW {
+    pub fn new(params: &Bank) -> AdamW {
+        let zeros = |b: &Bank| -> Bank {
+            b.iter()
+                .map(|(k, t)| (k.clone(), Tensor::zeros(t.shape())))
+                .collect()
+        };
+        AdamW { m: zeros(params), v: zeros(params), step: 0 }
+    }
+
+    /// One update step; mutates `params` in place.
+    pub fn update(&mut self, params: &mut Bank, grads: &Bank, lr: f32) {
+        self.step += 1;
+        let bc1 = 1.0 - B1.powi(self.step as i32);
+        let bc2 = 1.0 - B2.powi(self.step as i32);
+        for (key, g) in grads {
+            let g = g.f32s().expect("grad must be f32");
+            let pt = params.get_mut(key).expect("param/grad mismatch");
+            let (shape, p) = match pt {
+                Tensor::F32 { shape, data } => (shape.clone(), data),
+                _ => panic!("params must be f32"),
+            };
+            let m = match self.m.get_mut(key).unwrap() {
+                Tensor::F32 { data, .. } => data,
+                _ => unreachable!(),
+            };
+            let v = match self.v.get_mut(key).unwrap() {
+                Tensor::F32 { data, .. } => data,
+                _ => unreachable!(),
+            };
+            debug_assert_eq!(shape.iter().product::<usize>(), g.len());
+            for i in 0..g.len() {
+                m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+                v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+                let upd = (m[i] / bc1) / ((v[i] / bc2).sqrt() + EPS);
+                p[i] -= lr * (upd + WEIGHT_DECAY * p[i]);
+            }
+        }
+    }
+}
+
+/// Linear warmup then linear decay to zero (paper Appendix A.2).
+pub fn lr_schedule(step: usize, total: usize, peak: f64, warmup_frac: f64) -> f64 {
+    let warmup = ((total as f64 * warmup_frac).ceil() as usize).max(1);
+    if step < warmup {
+        peak * (step + 1) as f64 / warmup as f64
+    } else {
+        let rem = (total - step) as f64 / (total - warmup).max(1) as f64;
+        peak * rem.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (p - 3)^2 elementwise
+        let mut params = Bank::new();
+        params.insert("p".into(), Tensor::from_f32(&[4], vec![0.0; 4]));
+        let mut opt = AdamW::new(&params);
+        for _ in 0..800 {
+            let p = params["p"].f32s().unwrap();
+            let g: Vec<f32> = p.iter().map(|x| 2.0 * (x - 3.0)).collect();
+            let mut grads = Bank::new();
+            grads.insert("p".into(), Tensor::from_f32(&[4], g));
+            opt.update(&mut params, &grads, 0.05);
+        }
+        for &x in params["p"].f32s().unwrap() {
+            assert!((x - 3.0).abs() < 1e-2, "x={x}");
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // bias correction makes the first Adam step ~= lr * sign(g)
+        let mut params = Bank::new();
+        params.insert("p".into(), Tensor::from_f32(&[1], vec![1.0]));
+        let mut opt = AdamW::new(&params);
+        let mut grads = Bank::new();
+        grads.insert("p".into(), Tensor::from_f32(&[1], vec![0.5]));
+        opt.update(&mut params, &grads, 0.01);
+        let p = params["p"].f32s().unwrap()[0];
+        assert!((p - (1.0 - 0.01)).abs() < 1e-4, "p={p}");
+    }
+
+    #[test]
+    fn schedule_warmup_and_decay() {
+        let peak = 1e-3;
+        let s0 = lr_schedule(0, 100, peak, 0.1);
+        let s9 = lr_schedule(9, 100, peak, 0.1);
+        let s55 = lr_schedule(55, 100, peak, 0.1);
+        let s99 = lr_schedule(99, 100, peak, 0.1);
+        assert!(s0 < s9);
+        assert!((s9 - peak).abs() < 1e-9);
+        assert!(s55 < peak && s55 > s99);
+        assert!(s99 > 0.0 && s99 < 0.02 * peak + 1e-9);
+    }
+}

@@ -1,0 +1,230 @@
+//! Dense math kernels for the host model (row-major f32).
+//!
+//! Loop orders are chosen for contiguous inner loops; the perf pass
+//! (EXPERIMENTS.md §Perf) iterates on these.
+
+/// Dot product with 4 independent accumulators (breaks the fp dependency
+/// chain so the autovectorizer emits wide fma; EXPERIMENTS.md §Perf).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// c (m,n) += a (m,k) @ b^T where b is (n,k). Contiguous dot products.
+pub fn matmul_nt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] += dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// c (m,n) = a (m,k) @ b^T.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_nt_acc(a, b, &mut c, m, k, n);
+    c
+}
+
+/// c (m,n) += a (m,k) @ b where b is (k,n). axpy inner loop.
+pub fn matmul_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_nn_acc(a, b, &mut c, m, k, n);
+    c
+}
+
+/// c (m,n) += a^T @ b where a is (k,m), b is (k,n). axpy over k.
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_tn_acc(a, b, &mut c, k, m, n);
+    c
+}
+
+/// In-place numerically-stable softmax over the last `n` of each row.
+pub fn softmax_rows(x: &mut [f32], rows: usize, n: usize) {
+    for i in 0..rows {
+        let row = &mut x[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// SiLU (swish) activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// d silu / dx.
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        at: bool,
+        bt: bool,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    let av = if at { a[p * m + i] } else { a[i * k + p] };
+                    let bv = if bt { b[j * k + p] } else { b[p * n + j] };
+                    acc += av * bv;
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_variants_match_naive() {
+        prop::check("matmul-variants", 25, |rng| {
+            let m = rng.range(1, 9);
+            let k = rng.range(1, 9);
+            let n = rng.range(1, 9);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            let bn: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let at: Vec<f32> = (0..k * m).map(|_| rng.normal()).collect();
+            prop::assert_allclose(
+                &matmul_nt(&a, &bt, m, k, n),
+                &naive_matmul(&a, &bt, m, k, n, false, true),
+                1e-4,
+                1e-4,
+            )?;
+            prop::assert_allclose(
+                &matmul_nn(&a, &bn, m, k, n),
+                &naive_matmul(&a, &bn, m, k, n, false, false),
+                1e-4,
+                1e-4,
+            )?;
+            prop::assert_allclose(
+                &matmul_tn(&at, &bn, k, m, n),
+                &naive_matmul(&at, &bn, m, k, n, true, false),
+                1e-4,
+                1e-4,
+            )
+        });
+    }
+
+    #[test]
+    fn softmax_rows_properties() {
+        let mut rng = Rng::new(1, 0);
+        let (rows, n) = (5, 9);
+        let mut x: Vec<f32> = (0..rows * n).map(|_| rng.normal() * 4.0).collect();
+        let orig = x.clone();
+        softmax_rows(&mut x, rows, n);
+        for i in 0..rows {
+            let row = &x[i * n..(i + 1) * n];
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&v| v >= 0.0));
+            // argmax preserved
+            let am_in = (0..n)
+                .max_by(|&a, &b| orig[i * n + a].total_cmp(&orig[i * n + b]))
+                .unwrap();
+            let am_out =
+                (0..n).max_by(|&a, &b| row[a].total_cmp(&row[b])).unwrap();
+            assert_eq!(am_in, am_out);
+        }
+    }
+
+    #[test]
+    fn softmax_extreme_values_stable() {
+        let mut x = vec![1000.0, 1000.0, -1000.0];
+        softmax_rows(&mut x, 1, 3);
+        assert!((x[0] - 0.5).abs() < 1e-6);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn silu_grad_matches_fd() {
+        for &x in &[-3.0f32, -0.5, 0.0, 0.7, 2.5] {
+            let eps = 1e-3;
+            let fd = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((fd - silu_grad(x)).abs() < 1e-4, "x={x}");
+        }
+    }
+}

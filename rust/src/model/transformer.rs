@@ -1,0 +1,725 @@
+//! Decoder-only transformer forward/backward on the host, mirroring
+//! `python/compile/model.py::forward` op-for-op (RMSNorm -> causal MHA ->
+//! RMSNorm -> SwiGLU, sinusoidal positions, tied embedding/lm-head).
+//!
+//! Gradients flow only into the dense adapter factors (base is frozen),
+//! matching the AOT train-step semantics.
+
+use super::math::*;
+use crate::adapter::Factors;
+use crate::config::{MethodCfg, ModelCfg, LAYER_TYPES};
+use crate::util::bank::{Bank, Tensor};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+const EPS: f32 = 1e-6;
+
+/// Host-side random frozen base (twin of python `init_base`, independent
+/// RNG — host and artifact runs use their own banks).
+pub fn init_base(cfg: &ModelCfg, seed: u64) -> Bank {
+    let mut rng = Rng::new(seed, 41);
+    let mut bank = Bank::new();
+    bank.insert(
+        "embed".into(),
+        Tensor::from_f32(
+            &[cfg.vocab, cfg.hidden],
+            // std 0.1, matching python init_base (see the positional-
+            // encoding scale note in forward)
+            rng.normal_vec(cfg.vocab * cfg.hidden, 0.1),
+        ),
+    );
+    for t in LAYER_TYPES {
+        let (o, i) = cfg.dims(t);
+        bank.insert(
+            format!("w.{t}"),
+            Tensor::from_f32(
+                &[cfg.blocks, o, i],
+                rng.normal_vec(cfg.blocks * o * i, (i as f32).powf(-0.5)),
+            ),
+        );
+    }
+    bank.insert(
+        "norm_attn".into(),
+        Tensor::from_f32(&[cfg.blocks, cfg.hidden], vec![1.0; cfg.blocks * cfg.hidden]),
+    );
+    bank.insert(
+        "norm_mlp".into(),
+        Tensor::from_f32(&[cfg.blocks, cfg.hidden], vec![1.0; cfg.blocks * cfg.hidden]),
+    );
+    bank.insert(
+        "norm_final".into(),
+        Tensor::from_f32(&[cfg.hidden], vec![1.0; cfg.hidden]),
+    );
+    bank
+}
+
+/// Sinusoidal positional encoding, matching python `_sinusoid`.
+pub fn sinusoid(t_len: usize, h: usize) -> Vec<f32> {
+    let mut enc = vec![0.0f32; t_len * h];
+    for pos in 0..t_len {
+        for d in 0..h {
+            let angle = pos as f64
+                / (10000f64).powf((2 * (d / 2)) as f64 / h as f64);
+            enc[pos * h + d] =
+                if d % 2 == 0 { angle.sin() } else { angle.cos() } as f32;
+        }
+    }
+    enc
+}
+
+/// Per-block activation cache for backward.
+pub struct BlockCache {
+    pub x_in: Vec<f32>,  // (BT, C)
+    pub rstd1: Vec<f32>, // (BT,)
+    pub hn1: Vec<f32>,   // (BT, C)
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,     // (BT, C) each
+    pub probs: Vec<f32>, // (B, H, T, T)
+    pub ctx: Vec<f32>,   // (BT, C)
+    pub x_mid: Vec<f32>, // (BT, C) after attention residual
+    pub rstd2: Vec<f32>,
+    pub hn2: Vec<f32>,
+    pub g_pre: Vec<f32>, // (BT, F) gate pre-activation
+    pub u_val: Vec<f32>, // (BT, F)
+    pub f_val: Vec<f32>, // (BT, F)
+    pub ta: BTreeMap<String, Vec<f32>>, // adapter mid products t = x@A^T (BT,r)
+}
+
+pub struct ForwardCache {
+    pub blocks: Vec<BlockCache>,
+    pub x_final_in: Vec<f32>, // input to final norm
+    pub rstd_f: Vec<f32>,
+    pub xf: Vec<f32>, // after final norm
+    pub logits: Vec<f32>,
+}
+
+fn rmsnorm_fwd(x: &[f32], g: &[f32], c: usize) -> (Vec<f32>, Vec<f32>) {
+    let rows = x.len() / c;
+    let mut y = vec![0.0f32; x.len()];
+    let mut rstd = vec![0.0f32; rows];
+    for i in 0..rows {
+        let xr = &x[i * c..(i + 1) * c];
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / c as f32;
+        let s = 1.0 / (ms + EPS).sqrt();
+        rstd[i] = s;
+        for j in 0..c {
+            y[i * c + j] = g[j] * xr[j] * s;
+        }
+    }
+    (y, rstd)
+}
+
+fn rmsnorm_bwd(
+    x: &[f32],
+    g: &[f32],
+    rstd: &[f32],
+    dy: &[f32],
+    c: usize,
+    dx: &mut [f32],
+) {
+    let rows = x.len() / c;
+    for i in 0..rows {
+        let xr = &x[i * c..(i + 1) * c];
+        let dyr = &dy[i * c..(i + 1) * c];
+        let s = rstd[i];
+        let mut dot = 0.0f32;
+        for j in 0..c {
+            dot += dyr[j] * g[j] * xr[j];
+        }
+        let coef = s * s * s * dot / c as f32;
+        let dxr = &mut dx[i * c..(i + 1) * c];
+        for j in 0..c {
+            dxr[j] += s * g[j] * dyr[j] - coef * xr[j];
+        }
+    }
+}
+
+/// Adapted linear forward: y = x@W^T + scale * (x@A^T)@B^T.
+/// Returns (y, t) where t = x@A^T is cached for backward.
+fn adapted_fwd(
+    x: &[f32],
+    w: &[f32],
+    f: &Factors,
+    block: usize,
+    scale: f32,
+    rows: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (i, o, r) = (f.in_dim, f.out_dim, f.r);
+    let mut y = matmul_nt(x, w, rows, i, o);
+    let t = matmul_nt(x, &f.a[block], rows, i, r);
+    // y += scale * t @ B^T  (B is (o,r))
+    let mut delta = matmul_nt(&t, &f.b[block], rows, r, o);
+    for (yv, dv) in y.iter_mut().zip(&mut delta) {
+        *yv += scale * *dv;
+    }
+    (y, t)
+}
+
+/// Adapted linear backward. Accumulates dx, dA, dB.
+#[allow(clippy::too_many_arguments)]
+fn adapted_bwd(
+    x: &[f32],
+    w: &[f32],
+    f: &Factors,
+    t: &[f32],
+    block: usize,
+    scale: f32,
+    rows: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    df: &mut Factors,
+) {
+    let (i, o, r) = (f.in_dim, f.out_dim, f.r);
+    // dx += dy @ W  (W is (o,i))
+    matmul_nn_acc(dy, w, dx, rows, o, i);
+    // dt = scale * dy @ B  (B (o,r))
+    let mut dt = matmul_nn(dy, &f.b[block], rows, o, r);
+    for v in &mut dt {
+        *v *= scale;
+    }
+    // dB += scale * dy^T @ t  (o,r)
+    let mut dyt_t = matmul_tn(dy, t, rows, o, r);
+    for (d, v) in df.b[block].iter_mut().zip(&mut dyt_t) {
+        *d += scale * *v;
+    }
+    // dA += dt^T @ x  (r,i)
+    matmul_tn_acc(&dt, x, &mut df.a[block], rows, r, i);
+    // dx += dt @ A  (A (r,i))
+    matmul_nn_acc(&dt, &f.a[block], dx, rows, r, i);
+}
+
+/// Full forward. `tokens` is (B*T,) i32. Returns the cache (logits inside).
+pub fn forward(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    base: &Bank,
+    factors: &BTreeMap<String, Factors>,
+    tokens: &[i32],
+) -> (ForwardCache, f32) {
+    let (bsz, t_len, c) = (tokens.len() / cfg.seq, cfg.seq, cfg.hidden);
+    let (heads, hd, ff) = (cfg.heads, cfg.head_dim(), cfg.ff);
+    let rows = bsz * t_len;
+    let scale = (mc.alpha / mc.r as f64) as f32;
+    let embed = base["embed"].f32s().unwrap();
+    let pos = sinusoid(t_len, c);
+
+    let mut x = vec![0.0f32; rows * c];
+    for (row, &tok) in tokens.iter().enumerate() {
+        let e = &embed[tok as usize * c..(tok as usize + 1) * c];
+        let p = &pos[(row % t_len) * c..(row % t_len + 1) * c];
+        for j in 0..c {
+            // 0.1-scaled positions, matching python forward
+            x[row * c + j] = e[j] + 0.1 * p[j];
+        }
+    }
+
+    let att_scale = (hd as f32).powf(-0.5);
+    let mut blocks = Vec::with_capacity(cfg.blocks);
+    for kb in 0..cfg.blocks {
+        let na = &base["norm_attn"].f32s().unwrap()[kb * c..(kb + 1) * c];
+        let nm = &base["norm_mlp"].f32s().unwrap()[kb * c..(kb + 1) * c];
+        let w = |t: &str| {
+            let (o, i) = cfg.dims(t);
+            &base[&format!("w.{t}")].f32s().unwrap()[kb * o * i..(kb + 1) * o * i]
+        };
+
+        let x_in = x.clone();
+        let (hn1, rstd1) = rmsnorm_fwd(&x, na, c);
+        let mut ta = BTreeMap::new();
+        let (q, tq) = adapted_fwd(&hn1, w("q"), &factors["q"], kb, scale, rows);
+        let (k, tk) = adapted_fwd(&hn1, w("k"), &factors["k"], kb, scale, rows);
+        let (v, tv) = adapted_fwd(&hn1, w("v"), &factors["v"], kb, scale, rows);
+        ta.insert("q".into(), tq);
+        ta.insert("k".into(), tk);
+        ta.insert("v".into(), tv);
+
+        // attention per (batch, head)
+        let mut probs = vec![0.0f32; bsz * heads * t_len * t_len];
+        let mut ctx = vec![0.0f32; rows * c];
+        for b in 0..bsz {
+            for h in 0..heads {
+                // gather head slices: q_h (T, hd)
+                let mut qh = vec![0.0f32; t_len * hd];
+                let mut kh = vec![0.0f32; t_len * hd];
+                let mut vh = vec![0.0f32; t_len * hd];
+                for tt in 0..t_len {
+                    let row = b * t_len + tt;
+                    qh[tt * hd..(tt + 1) * hd]
+                        .copy_from_slice(&q[row * c + h * hd..row * c + (h + 1) * hd]);
+                    kh[tt * hd..(tt + 1) * hd]
+                        .copy_from_slice(&k[row * c + h * hd..row * c + (h + 1) * hd]);
+                    vh[tt * hd..(tt + 1) * hd]
+                        .copy_from_slice(&v[row * c + h * hd..row * c + (h + 1) * hd]);
+                }
+                let mut att = matmul_nt(&qh, &kh, t_len, hd, t_len);
+                for i in 0..t_len {
+                    for j in 0..t_len {
+                        att[i * t_len + j] = if j <= i {
+                            att[i * t_len + j] * att_scale
+                        } else {
+                            -1e9
+                        };
+                    }
+                }
+                softmax_rows(&mut att, t_len, t_len);
+                let ch = matmul_nn(&att, &vh, t_len, t_len, hd);
+                let off = (b * heads + h) * t_len * t_len;
+                probs[off..off + t_len * t_len].copy_from_slice(&att);
+                for tt in 0..t_len {
+                    let row = b * t_len + tt;
+                    ctx[row * c + h * hd..row * c + (h + 1) * hd]
+                        .copy_from_slice(&ch[tt * hd..(tt + 1) * hd]);
+                }
+            }
+        }
+
+        let (attn_out, to) =
+            adapted_fwd(&ctx, w("o"), &factors["o"], kb, scale, rows);
+        ta.insert("o".into(), to);
+        for (xv, av) in x.iter_mut().zip(&attn_out) {
+            *xv += av;
+        }
+        let x_mid = x.clone();
+
+        let (hn2, rstd2) = rmsnorm_fwd(&x, nm, c);
+        let (g_pre, tg) =
+            adapted_fwd(&hn2, w("gate"), &factors["gate"], kb, scale, rows);
+        let (u_val, tu) =
+            adapted_fwd(&hn2, w("up"), &factors["up"], kb, scale, rows);
+        ta.insert("gate".into(), tg);
+        ta.insert("up".into(), tu);
+        let mut f_val = vec![0.0f32; rows * ff];
+        for idx in 0..rows * ff {
+            f_val[idx] = silu(g_pre[idx]) * u_val[idx];
+        }
+        let (down_out, td) =
+            adapted_fwd(&f_val, w("down"), &factors["down"], kb, scale, rows);
+        ta.insert("down".into(), td);
+        for (xv, dv) in x.iter_mut().zip(&down_out) {
+            *xv += dv;
+        }
+
+        blocks.push(BlockCache {
+            x_in,
+            rstd1,
+            hn1,
+            q,
+            k,
+            v,
+            probs,
+            ctx,
+            x_mid,
+            rstd2,
+            hn2,
+            g_pre,
+            u_val,
+            f_val,
+            ta,
+        });
+    }
+
+    let nf = base["norm_final"].f32s().unwrap();
+    let x_final_in = x.clone();
+    let (xf, rstd_f) = rmsnorm_fwd(&x, nf, c);
+    let logits = matmul_nt(&xf, embed, rows, c, cfg.vocab);
+
+    (
+        ForwardCache { blocks, x_final_in, rstd_f, xf, logits },
+        0.0,
+    )
+}
+
+/// Masked next-token cross-entropy loss over cached logits.
+pub fn loss(
+    cache: &ForwardCache,
+    targets: &[i32],
+    weight: &[f32],
+    vocab: usize,
+) -> f32 {
+    let rows = targets.len();
+    let denom: f32 = weight.iter().sum::<f32>().max(1.0);
+    let mut total = 0.0f32;
+    for row in 0..rows {
+        if weight[row] == 0.0 {
+            continue;
+        }
+        let lr = &cache.logits[row * vocab..(row + 1) * vocab];
+        let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = mx + lr.iter().map(|v| (v - mx).exp()).sum::<f32>().ln();
+        total += weight[row] * (lse - lr[targets[row] as usize]);
+    }
+    total / denom
+}
+
+/// Full backward: returns (loss, per-type dense factor gradients).
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    base: &Bank,
+    factors: &BTreeMap<String, Factors>,
+    cache: &ForwardCache,
+    tokens: &[i32],
+    targets: &[i32],
+    weight: &[f32],
+) -> (f32, BTreeMap<String, Factors>) {
+    let (t_len, c, vocab) = (cfg.seq, cfg.hidden, cfg.vocab);
+    let bsz = tokens.len() / t_len;
+    let rows = bsz * t_len;
+    let (heads, hd, ff) = (cfg.heads, cfg.head_dim(), cfg.ff);
+    let scale = (mc.alpha / mc.r as f64) as f32;
+    let embed = base["embed"].f32s().unwrap();
+    let att_scale = (hd as f32).powf(-0.5);
+
+    let loss_val = loss(cache, targets, weight, vocab);
+
+    // zero-initialized factor grads
+    let mut dfactors: BTreeMap<String, Factors> = BTreeMap::new();
+    for t in LAYER_TYPES {
+        let f = &factors[t];
+        dfactors.insert(
+            t.to_string(),
+            Factors {
+                r: f.r,
+                in_dim: f.in_dim,
+                out_dim: f.out_dim,
+                a: vec![vec![0.0; f.r * f.in_dim]; cfg.blocks],
+                b: vec![vec![0.0; f.out_dim * f.r]; cfg.blocks],
+            },
+        );
+    }
+
+    // dlogits = (softmax - onehot) * weight / denom
+    let denom: f32 = weight.iter().sum::<f32>().max(1.0);
+    let mut dlogits = vec![0.0f32; rows * vocab];
+    for row in 0..rows {
+        if weight[row] == 0.0 {
+            continue;
+        }
+        let lr = &cache.logits[row * vocab..(row + 1) * vocab];
+        let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        let dr = &mut dlogits[row * vocab..(row + 1) * vocab];
+        for (d, &l) in dr.iter_mut().zip(lr) {
+            *d = (l - mx).exp();
+            sum += *d;
+        }
+        let wrow = weight[row] / denom;
+        for d in dr.iter_mut() {
+            *d = *d / sum * wrow;
+        }
+        dr[targets[row] as usize] -= wrow;
+    }
+
+    // dxf = dlogits @ E (V,c)
+    let mut dxf = matmul_nn(&dlogits, embed, rows, vocab, c);
+    // final rmsnorm backward
+    let nf = base["norm_final"].f32s().unwrap();
+    let mut dx = vec![0.0f32; rows * c];
+    rmsnorm_bwd(&cache.x_final_in, nf, &cache.rstd_f, &dxf, c, &mut dx);
+    dxf.clear();
+
+    for kb in (0..cfg.blocks).rev() {
+        let bc = &cache.blocks[kb];
+        let na = &base["norm_attn"].f32s().unwrap()[kb * c..(kb + 1) * c];
+        let nm = &base["norm_mlp"].f32s().unwrap()[kb * c..(kb + 1) * c];
+        let w = |t: &str| {
+            let (o, i) = cfg.dims(t);
+            &base[&format!("w.{t}")].f32s().unwrap()[kb * o * i..(kb + 1) * o * i]
+        };
+
+        // ---- MLP residual: x = x_mid + down(f)
+        let d_down_out = dx.clone(); // gradient wrt down output
+        let mut d_f = vec![0.0f32; rows * ff];
+        adapted_bwd(
+            &bc.f_val,
+            w("down"),
+            &factors["down"],
+            &bc.ta["down"],
+            kb,
+            scale,
+            rows,
+            &d_down_out,
+            &mut d_f,
+            dfactors.get_mut("down").unwrap(),
+        );
+        // f = silu(g_pre) * u_val
+        let mut d_g = vec![0.0f32; rows * ff];
+        let mut d_u = vec![0.0f32; rows * ff];
+        for idx in 0..rows * ff {
+            d_g[idx] = d_f[idx] * bc.u_val[idx] * silu_grad(bc.g_pre[idx]);
+            d_u[idx] = d_f[idx] * silu(bc.g_pre[idx]);
+        }
+        let mut d_hn2 = vec![0.0f32; rows * c];
+        adapted_bwd(
+            &bc.hn2,
+            w("gate"),
+            &factors["gate"],
+            &bc.ta["gate"],
+            kb,
+            scale,
+            rows,
+            &d_g,
+            &mut d_hn2,
+            dfactors.get_mut("gate").unwrap(),
+        );
+        adapted_bwd(
+            &bc.hn2,
+            w("up"),
+            &factors["up"],
+            &bc.ta["up"],
+            kb,
+            scale,
+            rows,
+            &d_u,
+            &mut d_hn2,
+            dfactors.get_mut("up").unwrap(),
+        );
+        // rmsnorm2 backward adds into dx (residual path already in dx)
+        rmsnorm_bwd(&bc.x_mid, nm, &bc.rstd2, &d_hn2, c, &mut dx);
+
+        // ---- attention residual: x_mid = x_in + o(ctx)
+        let d_attn_out = dx.clone();
+        let mut d_ctx = vec![0.0f32; rows * c];
+        adapted_bwd(
+            &bc.ctx,
+            w("o"),
+            &factors["o"],
+            &bc.ta["o"],
+            kb,
+            scale,
+            rows,
+            &d_attn_out,
+            &mut d_ctx,
+            dfactors.get_mut("o").unwrap(),
+        );
+
+        // attention backward per (b, h)
+        let mut d_q = vec![0.0f32; rows * c];
+        let mut d_k = vec![0.0f32; rows * c];
+        let mut d_v = vec![0.0f32; rows * c];
+        for b in 0..bsz {
+            for h in 0..heads {
+                let mut kh = vec![0.0f32; t_len * hd];
+                let mut vh = vec![0.0f32; t_len * hd];
+                let mut qh = vec![0.0f32; t_len * hd];
+                let mut dch = vec![0.0f32; t_len * hd];
+                for tt in 0..t_len {
+                    let row = b * t_len + tt;
+                    qh[tt * hd..(tt + 1) * hd]
+                        .copy_from_slice(&bc.q[row * c + h * hd..row * c + (h + 1) * hd]);
+                    kh[tt * hd..(tt + 1) * hd]
+                        .copy_from_slice(&bc.k[row * c + h * hd..row * c + (h + 1) * hd]);
+                    vh[tt * hd..(tt + 1) * hd]
+                        .copy_from_slice(&bc.v[row * c + h * hd..row * c + (h + 1) * hd]);
+                    dch[tt * hd..(tt + 1) * hd].copy_from_slice(
+                        &d_ctx[row * c + h * hd..row * c + (h + 1) * hd],
+                    );
+                }
+                let off = (b * heads + h) * t_len * t_len;
+                let probs = &bc.probs[off..off + t_len * t_len];
+                // dprobs = dch @ vh^T
+                let dprobs = matmul_nt(&dch, &vh, t_len, hd, t_len);
+                // dvh = probs^T @ dch
+                let dvh = matmul_tn(probs, &dch, t_len, t_len, hd);
+                // softmax backward: ds = p * (dp - sum(dp * p))
+                let mut dscores = vec![0.0f32; t_len * t_len];
+                for i in 0..t_len {
+                    let pr = &probs[i * t_len..(i + 1) * t_len];
+                    let dpr = &dprobs[i * t_len..(i + 1) * t_len];
+                    let dot: f32 =
+                        pr.iter().zip(dpr).map(|(p, d)| p * d).sum();
+                    for j in 0..=i {
+                        dscores[i * t_len + j] =
+                            pr[j] * (dpr[j] - dot) * att_scale;
+                    }
+                }
+                // dqh = dscores @ kh ; dkh = dscores^T @ qh
+                let dqh = matmul_nn(&dscores, &kh, t_len, t_len, hd);
+                let dkh = matmul_tn(&dscores, &qh, t_len, t_len, hd);
+                for tt in 0..t_len {
+                    let row = b * t_len + tt;
+                    d_q[row * c + h * hd..row * c + (h + 1) * hd]
+                        .copy_from_slice(&dqh[tt * hd..(tt + 1) * hd]);
+                    d_k[row * c + h * hd..row * c + (h + 1) * hd]
+                        .copy_from_slice(&dkh[tt * hd..(tt + 1) * hd]);
+                    d_v[row * c + h * hd..row * c + (h + 1) * hd]
+                        .copy_from_slice(&dvh[tt * hd..(tt + 1) * hd]);
+                }
+            }
+        }
+
+        let mut d_hn1 = vec![0.0f32; rows * c];
+        adapted_bwd(
+            &bc.hn1,
+            w("q"),
+            &factors["q"],
+            &bc.ta["q"],
+            kb,
+            scale,
+            rows,
+            &d_q,
+            &mut d_hn1,
+            dfactors.get_mut("q").unwrap(),
+        );
+        adapted_bwd(
+            &bc.hn1,
+            w("k"),
+            &factors["k"],
+            &bc.ta["k"],
+            kb,
+            scale,
+            rows,
+            &d_k,
+            &mut d_hn1,
+            dfactors.get_mut("k").unwrap(),
+        );
+        adapted_bwd(
+            &bc.hn1,
+            w("v"),
+            &factors["v"],
+            &bc.ta["v"],
+            kb,
+            scale,
+            rows,
+            &d_v,
+            &mut d_hn1,
+            dfactors.get_mut("v").unwrap(),
+        );
+        rmsnorm_bwd(&bc.x_in, na, &bc.rstd1, &d_hn1, c, &mut dx);
+    }
+
+    (loss_val, dfactors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter;
+    use crate::config::presets;
+
+    fn micro() -> ModelCfg {
+        ModelCfg {
+            name: "micro".into(),
+            vocab: 11,
+            hidden: 8,
+            blocks: 2,
+            heads: 2,
+            kv_heads: 2,
+            ff: 12,
+            seq: 5,
+            batch: 2,
+        }
+    }
+
+    fn setup(cfg: &ModelCfg, mc: &MethodCfg, seed: u64) -> (Bank, BTreeMap<String, Factors>) {
+        let base = init_base(cfg, seed);
+        let mut rng = Rng::new(seed + 9, 0);
+        let mut params = adapter::init_params(cfg, mc, seed);
+        // randomize everything so deltas are active
+        let keys: Vec<String> = params.keys().cloned().collect();
+        for kname in keys {
+            let t = params[&kname].clone();
+            params.insert(
+                kname,
+                Tensor::from_f32(t.shape(), rng.normal_vec(t.len(), 0.05)),
+            );
+        }
+        let aux = match mc.method {
+            crate::config::Method::MoS => {
+                adapter::mos::router::build_router(cfg, mc, seed).into_bank()
+            }
+            crate::config::Method::VeRA => {
+                adapter::vera::frozen_matrices(cfg, mc, seed)
+            }
+            _ => Bank::new(),
+        };
+        let mut f = BTreeMap::new();
+        for t in LAYER_TYPES {
+            f.insert(
+                t.to_string(),
+                adapter::materialize(cfg, mc, &params, &aux, t),
+            );
+        }
+        (base, f)
+    }
+
+    #[test]
+    fn sinusoid_matches_python_formula() {
+        let enc = sinusoid(3, 4);
+        // pos 0: sin(0)=0, cos(0)=1 alternating
+        assert_eq!(&enc[0..4], &[0.0, 1.0, 0.0, 1.0]);
+        // pos 1 dim 0: sin(1)
+        assert!((enc[4] - 1f64.sin() as f32).abs() < 1e-6);
+        // pos 2 dim 2: sin(2 / 10000^(2/4))
+        let want = (2.0f64 / 10000f64.powf(0.5)).sin() as f32;
+        assert!((enc[2 * 4 + 2] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn causality_on_host() {
+        let cfg = micro();
+        let mc = MethodCfg::mos(3, 2, 2, 0);
+        let (base, f) = setup(&cfg, &mc, 1);
+        let n = cfg.batch * cfg.seq;
+        let tokens: Vec<i32> = (0..n).map(|i| (i % cfg.vocab) as i32).collect();
+        let (c1, _) = forward(&cfg, &mc, &base, &f, &tokens);
+        let mut tokens2 = tokens.clone();
+        // change last token of each sequence
+        for b in 0..cfg.batch {
+            let idx = b * cfg.seq + cfg.seq - 1;
+            tokens2[idx] = (tokens2[idx] + 1) % cfg.vocab as i32;
+        }
+        let (c2, _) = forward(&cfg, &mc, &base, &f, &tokens2);
+        let v = cfg.vocab;
+        for b in 0..cfg.batch {
+            for tt in 0..cfg.seq - 1 {
+                let row = b * cfg.seq + tt;
+                for j in 0..v {
+                    assert!(
+                        (c1.logits[row * v + j] - c2.logits[row * v + j]).abs()
+                            < 1e-5,
+                        "future token leaked into position {tt}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loss_masked_rows_do_not_contribute() {
+        let cfg = micro();
+        let mc = MethodCfg::lora(2);
+        let (base, f) = setup(&cfg, &mc, 2);
+        let n = cfg.batch * cfg.seq;
+        let tokens: Vec<i32> = (0..n).map(|i| (i % cfg.vocab) as i32).collect();
+        let targets = tokens.clone();
+        let (cache, _) = forward(&cfg, &mc, &base, &f, &tokens);
+        let w_all = vec![1.0f32; n];
+        let mut w_half = vec![0.0f32; n];
+        for (i, w) in w_half.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *w = 1.0;
+            }
+        }
+        let l_all = loss(&cache, &targets, &w_all, cfg.vocab);
+        let l_half = loss(&cache, &targets, &w_half, cfg.vocab);
+        assert!(l_all > 0.0 && l_half > 0.0);
+        assert_ne!(l_all, l_half);
+        let l_none = loss(&cache, &targets, &vec![0.0; n], cfg.vocab);
+        assert_eq!(l_none, 0.0);
+    }
+
+    #[test]
+    fn tiny_preset_forward_shape() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::lora(2);
+        let (base, f) = setup(&cfg, &mc, 0);
+        let n = cfg.batch * cfg.seq;
+        let tokens: Vec<i32> = (0..n).map(|i| (i % cfg.vocab) as i32).collect();
+        let (cache, _) = forward(&cfg, &mc, &base, &f, &tokens);
+        assert_eq!(cache.logits.len(), n * cfg.vocab);
+        assert!(cache.logits.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,212 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`). The manifest is the runtime source of truth
+//! for model geometry and the flat input/output ordering of every HLO
+//! program.
+
+use crate::config::{Method, MethodCfg, ModelCfg};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor slot in an artifact's flat signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32"
+    pub dtype: String,
+    /// base | param | opt_m | opt_v | scalar | data | aux | loss | logits | out
+    pub role: String,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.req_str("name")?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("shape not an array")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j.req_str("dtype")?.to_string(),
+            role: j.req_str("role")?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled program.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    /// train | fwd | materialize
+    pub kind: String,
+    pub preset: String,
+    pub method_cfg: MethodCfg,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl Artifact {
+    /// Input specs with a given role, in signature order.
+    pub fn inputs_with_role(&self, role: &str) -> Vec<&IoSpec> {
+        self.inputs.iter().filter(|s| s.role == role).collect()
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// The parsed artifact index.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub presets: BTreeMap<String, ModelCfg>,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.req("presets")?.as_obj().context("presets")? {
+            presets.insert(name.clone(), ModelCfg::from_manifest(name, pj)?);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for aj in j.req("artifacts")?.as_arr().context("artifacts")? {
+            let method = Method::parse(aj.req_str("method")?)?;
+            let mut mc = match method {
+                Method::LoRA => MethodCfg::lora(aj.req_usize("r")?),
+                Method::MoS => MethodCfg::mos(
+                    aj.req_usize("r")?,
+                    aj.req_usize("l")?,
+                    aj.req_usize("e")?,
+                    0,
+                ),
+                Method::VeRA => MethodCfg::vera(aj.req_usize("r")?),
+                Method::Tied => MethodCfg::tied(aj.req_usize("r")?),
+                Method::PRoLoRA => MethodCfg::prolora(
+                    aj.req_usize("r")?,
+                    aj.req_usize("m")?,
+                ),
+            };
+            mc.alpha = aj.req_f64("alpha")?;
+            let art = Artifact {
+                name: aj.req_str("name")?.to_string(),
+                file: aj.req_str("file")?.to_string(),
+                kind: aj.req_str("kind")?.to_string(),
+                preset: aj.req_str("preset")?.to_string(),
+                method_cfg: mc,
+                inputs: aj
+                    .req("inputs")?
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: aj
+                    .req("outputs")?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(art.name.clone(), art);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), presets, artifacts })
+    }
+
+    /// Default artifacts directory (./artifacts or $MOS_ARTIFACTS).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MOS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Artifact for (kind, method tag, preset), e.g. ("train", "mos_r8_l2_e2", "tiny").
+    pub fn find(&self, kind: &str, tag: &str, preset: &str) -> Result<&Artifact> {
+        self.get(&format!("{kind}_{tag}_{preset}"))
+    }
+
+    pub fn hlo_path(&self, art: &Artifact) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+
+    pub fn bank_path(&self, preset: &str) -> PathBuf {
+        self.dir.join(format!("bank_{preset}.bin"))
+    }
+
+    pub fn init_path(&self, preset: &str, tag: &str) -> PathBuf {
+        self.dir.join(format!("init_{preset}_{tag}.bin"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "presets": {"tiny": {"vocab": 64, "hidden": 64, "blocks": 4,
+                            "heads": 4, "ff": 160, "seq": 48, "batch": 16,
+                            "base_params": 999}},
+      "artifacts": [{
+        "name": "train_mos_r8_l2_e2_tiny", "file": "train.hlo.txt",
+        "kind": "train", "preset": "tiny", "method": "mos",
+        "r": 8, "l": 2, "e": 2, "m": 1, "alpha": 16.0,
+        "inputs": [
+          {"name": "embed", "shape": [64, 64], "dtype": "f32", "role": "base"},
+          {"name": "q.pool_a", "shape": [16, 32], "dtype": "f32", "role": "param"},
+          {"name": "tokens", "shape": [16, 48], "dtype": "i32", "role": "data"}
+        ],
+        "outputs": [
+          {"name": "loss", "shape": [1], "dtype": "f32", "role": "loss"}
+        ]
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("mos_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.presets["tiny"].hidden, 64);
+        let a = m.get("train_mos_r8_l2_e2_tiny").unwrap();
+        assert_eq!(a.method_cfg.method, Method::MoS);
+        assert_eq!(a.method_cfg.tag(), "mos_r8_l2_e2");
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[2].dtype, "i32");
+        assert_eq!(a.inputs_with_role("param").len(), 1);
+        assert_eq!(a.input_index("tokens"), Some(2));
+        assert!(m.find("train", "mos_r8_l2_e2", "tiny").is_ok());
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("mos_manifest_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

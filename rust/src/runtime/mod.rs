@@ -1,0 +1,13 @@
+//! Runtime layer: loads AOT artifacts (HLO text) and executes them on the
+//! PJRT CPU client via the `xla` crate. Python is never on this path —
+//! after `make artifacts`, the Rust binary is self-contained.
+//!
+//! * [`manifest`] — artifact index parsing (`artifacts/manifest.json`).
+//! * [`pjrt`] — client wrapper: compile once, execute many, bind tensors
+//!   by name against the manifest's io specs.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{Artifact, IoSpec, Manifest};
+pub use pjrt::{Executable, Runtime};

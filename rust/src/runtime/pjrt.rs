@@ -1,0 +1,226 @@
+//! PJRT execution: load HLO text -> compile once -> execute many.
+//!
+//! Two execution paths:
+//! * [`Executable::execute_bank`] — host tensors in/out (simple, copies).
+//! * [`Executable::execute_buffers`] — device-resident [`xla::PjRtBuffer`]s
+//!   for state that survives across calls (params/opt-state in the training
+//!   loop; adapter pools in serving). This is the hot path: only the small
+//!   per-step tensors (tokens/lr) are re-uploaded. See EXPERIMENTS.md §Perf.
+
+use super::manifest::{Artifact, IoSpec, Manifest};
+use crate::util::bank::{Bank, Tensor};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Wrapper around the PJRT CPU client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Load + compile one artifact. Compilation happens once; the returned
+    /// executable is reusable and cheap to call.
+    pub fn load(&self, manifest: &Manifest, name: &str) -> Result<Executable> {
+        let art = manifest.get(name)?.clone();
+        let path = manifest.hlo_path(&art);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable { exe, art })
+    }
+}
+
+/// A compiled program plus its manifest signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub art: Artifact,
+}
+
+fn literal_for(spec: &IoSpec, t: &Tensor) -> Result<xla::Literal> {
+    if t.shape() != spec.shape.as_slice() {
+        bail!(
+            "input '{}': shape {:?} != spec {:?}",
+            spec.name,
+            t.shape(),
+            spec.shape
+        );
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (spec.dtype.as_str(), t) {
+        ("f32", Tensor::F32 { data, .. }) => {
+            xla::Literal::vec1(data.as_slice())
+        }
+        ("i32", Tensor::I32 { data, .. }) => {
+            xla::Literal::vec1(data.as_slice())
+        }
+        (dt, _) => bail!("input '{}': dtype mismatch (spec {dt})", spec.name),
+    };
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape '{}': {e:?}", spec.name))
+}
+
+fn tensor_from_literal(spec: &IoSpec, lit: &xla::Literal) -> Result<Tensor> {
+    Ok(match spec.dtype.as_str() {
+        "f32" => Tensor::from_f32(
+            &spec.shape,
+            lit.to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("read '{}': {e:?}", spec.name))?,
+        ),
+        "i32" => Tensor::from_i32(
+            &spec.shape,
+            lit.to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("read '{}': {e:?}", spec.name))?,
+        ),
+        dt => bail!("output '{}': unsupported dtype {dt}", spec.name),
+    })
+}
+
+impl Executable {
+    /// Execute with named host tensors. Inputs are bound by the manifest's
+    /// signature order; missing names error out. Returns named outputs.
+    pub fn execute_bank(&self, inputs: &Bank) -> Result<Bank> {
+        let lits = self
+            .art
+            .inputs
+            .iter()
+            .map(|spec| {
+                let t = inputs.get(&spec.name).with_context(|| {
+                    format!("missing input '{}'", spec.name)
+                })?;
+                literal_for(spec, t)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.art.name))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        self.unpack(out_lit)
+    }
+
+    /// Upload a host tensor as a device-resident buffer.
+    pub fn upload(&self, spec: &IoSpec, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        if t.shape() != spec.shape.as_slice() {
+            bail!(
+                "upload '{}': shape {:?} != spec {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+        }
+        let client = self.exe.client();
+        let buf = match (spec.dtype.as_str(), t) {
+            ("f32", Tensor::F32 { data, .. }) => {
+                client.buffer_from_host_buffer(data, &spec.shape, None)
+            }
+            ("i32", Tensor::I32 { data, .. }) => {
+                client.buffer_from_host_buffer(data, &spec.shape, None)
+            }
+            (dt, _) => bail!("upload '{}': dtype mismatch ({dt})", spec.name),
+        };
+        buf.map_err(|e| anyhow::anyhow!("upload '{}': {e:?}", spec.name))
+    }
+
+    /// Execute over device buffers (in signature order). Returns the raw
+    /// output buffers so callers can keep state device-resident across
+    /// steps (the tuple result is decomposed into per-output buffers by
+    /// position; see `unpack` for the host path).
+    pub fn execute_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        if inputs.len() != self.art.inputs.len() {
+            bail!(
+                "{}: got {} buffers, want {}",
+                self.art.name,
+                inputs.len(),
+                self.art.inputs.len()
+            );
+        }
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.to_vec();
+        let mut result = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow::anyhow!("execute_b {}: {e:?}", self.art.name))?;
+        Ok(result.remove(0).remove(0))
+    }
+
+    /// Read a tuple result buffer back to named host tensors.
+    pub fn read_outputs(&self, result: &xla::PjRtBuffer) -> Result<Bank> {
+        let lit = result
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        self.unpack(lit)
+    }
+
+    fn unpack(&self, tuple: xla::Literal) -> Result<Bank> {
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        if parts.len() != self.art.outputs.len() {
+            bail!(
+                "{}: {} outputs returned, manifest says {}",
+                self.art.name,
+                parts.len(),
+                self.art.outputs.len()
+            );
+        }
+        let mut out = BTreeMap::new();
+        for (spec, lit) in self.art.outputs.iter().zip(&parts) {
+            out.insert(spec.name.clone(), tensor_from_literal(spec, lit)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT round-trip tests that need real artifacts live in
+    // rust/tests/artifacts_roundtrip.rs (integration), since unit tests
+    // must pass without `make artifacts`. Here we test the binding logic.
+
+    fn spec(name: &str, shape: &[usize], dtype: &str) -> IoSpec {
+        IoSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: dtype.into(),
+            role: "data".into(),
+        }
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        let s = spec("x", &[2, 3], "f32");
+        let ok = Tensor::from_f32(&[2, 3], vec![0.0; 6]);
+        assert!(literal_for(&s, &ok).is_ok());
+        let bad_shape = Tensor::from_f32(&[3, 2], vec![0.0; 6]);
+        assert!(literal_for(&s, &bad_shape).is_err());
+        let bad_dtype = Tensor::from_i32(&[2, 3], vec![0; 6]);
+        assert!(literal_for(&s, &bad_dtype).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_values() {
+        let s = spec("x", &[4], "i32");
+        let t = Tensor::from_i32(&[4], vec![1, -2, 3, 40]);
+        let lit = literal_for(&s, &t).unwrap();
+        let back = tensor_from_literal(&s, &lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

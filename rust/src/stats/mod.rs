@@ -1,0 +1,186 @@
+//! Statistics substrate: summary stats and Welch's t-test (used by the
+//! Table 5 robustness and Table 7 significance benches).
+//!
+//! The p-value needs the regularized incomplete beta function; implemented
+//! via the continued-fraction expansion (Lentz's algorithm), no deps.
+
+use crate::adapter::mos::diversity::ln_gamma;
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var =
+        xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Regularized incomplete beta I_x(a, b).
+pub fn betainc(a: f64, b: f64, x: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x), "x={x} out of [0,1]");
+    if x == 0.0 || x == 1.0 {
+        return x;
+    }
+    // symmetry for faster convergence
+    if x > (a + 1.0) / (a + b + 2.0) {
+        return 1.0 - betainc(b, a, 1.0 - x);
+    }
+    let ln_front =
+        a * x.ln() + b * (1.0 - x).ln() + ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b);
+    let front = ln_front.exp() / a;
+    // Lentz continued fraction
+    let tiny = 1e-300;
+    let mut f = 1.0f64;
+    let mut c = 1.0f64;
+    let mut d = 0.0f64;
+    for i in 0..400 {
+        let m = i / 2;
+        let numerator = if i == 0 {
+            1.0
+        } else if i % 2 == 0 {
+            let m = m as f64;
+            m * (b - m) * x / ((a + 2.0 * m - 1.0) * (a + 2.0 * m))
+        } else {
+            let m = m as f64;
+            -(a + m) * (a + b + m) * x / ((a + 2.0 * m) * (a + 2.0 * m + 1.0))
+        };
+        d = 1.0 + numerator * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        d = 1.0 / d;
+        c = 1.0 + numerator / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-12 {
+            break;
+        }
+    }
+    front * (f - 1.0)
+}
+
+/// Two-sided p-value of Student's t with `df` degrees of freedom.
+pub fn t_pvalue(t: f64, df: f64) -> f64 {
+    let x = df / (df + t * t);
+    betainc(df / 2.0, 0.5, x)
+}
+
+/// Welch's unequal-variance t-test. Returns (t statistic, df, two-sided p).
+pub fn welch_t_test(a: &[f64], b: &[f64]) -> (f64, f64, f64) {
+    assert!(a.len() >= 2 && b.len() >= 2, "need >= 2 samples per group");
+    let (ma, mb) = (mean(a), mean(b));
+    let (va, vb) = (std_dev(a).powi(2), std_dev(b).powi(2));
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let se2 = va / na + vb / nb;
+    if se2 == 0.0 {
+        // identical constant samples: no evidence of difference
+        return (0.0, na + nb - 2.0, 1.0);
+    }
+    let t = (ma - mb) / se2.sqrt();
+    let df = se2 * se2
+        / ((va / na).powi(2) / (na - 1.0) + (vb / nb).powi(2) / (nb - 1.0));
+    (t, df, t_pvalue(t, df))
+}
+
+/// Paired t-test over per-benchmark score pairs (the paper's Table 7 setup:
+/// same benchmarks, two methods). Returns (t, df, two-sided p).
+pub fn paired_t_test(a: &[f64], b: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(a.len(), b.len());
+    assert!(a.len() >= 2);
+    let d: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let md = mean(&d);
+    let sd = std_dev(&d);
+    let n = d.len() as f64;
+    if sd == 0.0 {
+        return (0.0, n - 1.0, if md == 0.0 { 1.0 } else { 0.0 });
+    }
+    let t = md / (sd / n.sqrt());
+    let df = n - 1.0;
+    (t, df, t_pvalue(t, df))
+}
+
+/// mean ± std formatting, paper Table 5 style.
+pub fn fmt_mean_std(xs: &[f64]) -> String {
+    format!("{:.2}±{:.2}", mean(xs), std_dev(xs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn betainc_reference_values() {
+        // I_x(a,b) reference values (scipy.special.betainc)
+        assert!((betainc(2.0, 3.0, 0.5) - 0.6875).abs() < 1e-9);
+        assert!((betainc(0.5, 0.5, 0.3) - 0.36901).abs() < 1e-4);
+        assert!((betainc(5.0, 1.0, 0.8) - 0.32768).abs() < 1e-9);
+        assert_eq!(betainc(1.0, 1.0, 0.0), 0.0);
+        assert_eq!(betainc(1.0, 1.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn t_pvalue_reference() {
+        // scipy.stats.t.sf(2.0, 10)*2 = 0.07338...
+        assert!((t_pvalue(2.0, 10.0) - 0.073388).abs() < 1e-4);
+        // df=1 (Cauchy): p(t=1) = 0.5
+        assert!((t_pvalue(1.0, 1.0) - 0.5).abs() < 1e-6);
+        // symmetric in t
+        assert!((t_pvalue(-2.5, 7.0) - t_pvalue(2.5, 7.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welch_detects_difference() {
+        let a = [5.1, 5.3, 4.9, 5.2, 5.0, 5.15];
+        let b = [6.1, 6.0, 6.3, 5.9, 6.2, 6.05];
+        let (t, _, p) = welch_t_test(&a, &b);
+        assert!(t < -5.0);
+        assert!(p < 0.001);
+    }
+
+    #[test]
+    fn welch_no_difference() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.1, 1.9, 3.1, 3.9];
+        let (_, _, p) = welch_t_test(&a, &b);
+        assert!(p > 0.5);
+    }
+
+    #[test]
+    fn welch_identical_constant() {
+        let a = [2.0, 2.0, 2.0];
+        let (t, _, p) = welch_t_test(&a, &a);
+        assert_eq!(t, 0.0);
+        assert_eq!(p, 1.0);
+    }
+
+    #[test]
+    fn paired_test_sensitive_to_consistent_shift() {
+        // small consistent improvement across benchmarks
+        let lora = [44.77, 36.22, 26.28, 48.67, 35.70, 18.24];
+        let mos = [46.09, 37.29, 28.43, 50.21, 37.19, 19.12];
+        let (t, df, p) = paired_t_test(&mos, &lora);
+        assert!(t > 3.0, "t={t}");
+        assert_eq!(df, 5.0);
+        assert!(p < 0.05, "p={p}"); // the paper's Table 7 conclusion
+    }
+}

@@ -1,0 +1,117 @@
+//! Checkpointing: adapter params + router state + metadata. The bank format
+//! is the same binary container the artifacts use; metadata is JSON.
+
+use crate::config::{Method, MethodCfg};
+use crate::util::bank::{read_bank, write_bank, Bank};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A saved adapter: everything needed to serve a tenant.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub preset: String,
+    pub mc: MethodCfg,
+    pub router_seed: u64,
+    pub params: Bank,
+    pub aux: Bank,
+}
+
+impl Checkpoint {
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("mkdir {}", dir.display()))?;
+        write_bank(&dir.join("params.bin"), &self.params)?;
+        write_bank(&dir.join("aux.bin"), &self.aux)?;
+        let meta = Json::obj(vec![
+            ("preset", Json::str(&self.preset)),
+            ("method", Json::str(self.mc.method.as_str())),
+            ("r", Json::num(self.mc.r as f64)),
+            ("l", Json::num(self.mc.l as f64)),
+            ("e", Json::num(self.mc.e as f64)),
+            ("m", Json::num(self.mc.m as f64)),
+            ("alpha", Json::num(self.mc.alpha)),
+            ("private_rank", Json::num(self.mc.private_rank as f64)),
+            ("pair_dissociation", Json::Bool(self.mc.pair_dissociation)),
+            ("subset_selection", Json::Bool(self.mc.subset_selection)),
+            ("random_scaling", Json::Bool(self.mc.random_scaling)),
+            ("router_seed", Json::num(self.router_seed as f64)),
+        ]);
+        std::fs::write(dir.join("meta.json"), meta.to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Checkpoint> {
+        let meta = Json::parse(
+            &std::fs::read_to_string(dir.join("meta.json"))
+                .with_context(|| format!("reading {}/meta.json", dir.display()))?,
+        )?;
+        let method = Method::parse(meta.req_str("method")?)?;
+        let mc = MethodCfg {
+            method,
+            r: meta.req_usize("r")?,
+            l: meta.req_usize("l")?,
+            e: meta.req_usize("e")?,
+            m: meta.req_usize("m")?,
+            alpha: meta.req_f64("alpha")?,
+            private_rank: meta.req_usize("private_rank")?,
+            pair_dissociation: meta
+                .get("pair_dissociation")
+                .and_then(|j| j.as_bool())
+                .unwrap_or(true),
+            subset_selection: meta
+                .get("subset_selection")
+                .and_then(|j| j.as_bool())
+                .unwrap_or(true),
+            random_scaling: meta
+                .get("random_scaling")
+                .and_then(|j| j.as_bool())
+                .unwrap_or(false),
+        };
+        Ok(Checkpoint {
+            preset: meta.req_str("preset")?.to_string(),
+            mc,
+            router_seed: meta.req_usize("router_seed")? as u64,
+            params: read_bank(&dir.join("params.bin"))?,
+            aux: read_bank(&dir.join("aux.bin"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter;
+    use crate::config::presets;
+
+    #[test]
+    fn roundtrip() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let params = adapter::init_params(&cfg, &mc, 3);
+        let aux = adapter::mos::router::build_router(&cfg, &mc, 9).into_bank();
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            mc: mc.clone(),
+            router_seed: 9,
+            params,
+            aux,
+        };
+        let dir = std::env::temp_dir().join("mos_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.mc, mc);
+        assert_eq!(back.preset, "tiny");
+        assert_eq!(back.router_seed, 9);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.aux, ck.aux);
+    }
+
+    #[test]
+    fn load_missing_errors() {
+        let dir = std::env::temp_dir().join("mos_ckpt_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Checkpoint::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Host training backend: the pure-Rust model + AdamW. Used by the table
+//! benches (no per-config XLA compile) and as the numerics oracle.
+
+use super::Backend;
+use crate::config::{MethodCfg, ModelCfg};
+use crate::data::loader::Batch;
+use crate::model::adamw::AdamW;
+use crate::model::HostModel;
+use crate::util::bank::Bank;
+use anyhow::Result;
+
+pub struct HostBackend {
+    pub model: HostModel,
+    opt: AdamW,
+}
+
+impl HostBackend {
+    pub fn new(cfg: &ModelCfg, mc: &MethodCfg, seed: u64) -> HostBackend {
+        let model = HostModel::init(cfg, mc, seed);
+        let opt = AdamW::new(&model.params);
+        HostBackend { model, opt }
+    }
+
+    pub fn from_model(model: HostModel) -> HostBackend {
+        let opt = AdamW::new(&model.params);
+        HostBackend { model, opt }
+    }
+
+    /// Init with an explicit (e.g. pretrained, artifact-bank) base.
+    pub fn with_base(
+        cfg: &ModelCfg,
+        mc: &MethodCfg,
+        seed: u64,
+        base: Bank,
+    ) -> HostBackend {
+        let mut model = HostModel::init(cfg, mc, seed);
+        model.base = base;
+        HostBackend::from_model(model)
+    }
+}
+
+impl Backend for HostBackend {
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<f32> {
+        let (loss, grads) = self.model.loss_and_grads(
+            &batch.tokens,
+            &batch.targets,
+            &batch.weight,
+        );
+        self.opt.update(&mut self.model.params, &grads, lr);
+        self.model.invalidate_factors();
+        Ok(loss)
+    }
+
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        Ok(self.model.forward(tokens))
+    }
+
+    fn params(&self) -> &Bank {
+        &self.model.params
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.model.cfg.batch, self.model.cfg.seq, self.model.cfg.vocab)
+    }
+
+    fn name(&self) -> &'static str {
+        "host"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::tasks::{Task, TaskKind};
+    use crate::train::{final_loss, run};
+
+    fn fast_tiny() -> ModelCfg {
+        // tiny preset with a smaller batch for quick unit tests
+        let mut c = presets::tiny();
+        c.batch = 4;
+        c
+    }
+
+    #[test]
+    fn host_training_reduces_loss_lora() {
+        let cfg = fast_tiny();
+        let mut be = HostBackend::new(&cfg, &MethodCfg::lora(2), 0);
+        let r = run(
+            &mut be,
+            || Task::new(TaskKind::Recall, 0),
+            30,
+            5e-3,
+            0,
+            0,
+        )
+        .unwrap();
+        let first = final_loss(&r.losses[..5], 5);
+        let last = final_loss(&r.losses, 5);
+        assert!(
+            last < first - 0.2,
+            "loss did not drop: {first:.3} -> {last:.3}"
+        );
+    }
+
+    #[test]
+    fn host_training_reduces_loss_mos() {
+        let cfg = fast_tiny();
+        let mut be = HostBackend::new(&cfg, &MethodCfg::mos(8, 2, 2, 1), 0);
+        let r = run(
+            &mut be,
+            || Task::new(TaskKind::Recall, 0),
+            30,
+            5e-3,
+            0,
+            0,
+        )
+        .unwrap();
+        let first = final_loss(&r.losses[..5], 5);
+        let last = final_loss(&r.losses, 5);
+        assert!(
+            last < first - 0.2,
+            "loss did not drop: {first:.3} -> {last:.3}"
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Training orchestrator: drives the AOT train-step artifact (PJRT backend)
+//! or the host model (host backend) over the synthetic task loaders, with
+//! the paper's linear-warmup schedule, logging, eval, and checkpointing.
+
+pub mod checkpoint;
+pub mod host;
+pub mod pjrt;
+
+use crate::data::loader::{Batch, Loader};
+use crate::data::tasks::Task;
+use crate::eval::{evaluate, EvalReport};
+use crate::model::adamw::lr_schedule;
+use crate::util::bank::Bank;
+use anyhow::Result;
+
+/// A training/inference backend. The coordinator and benches are generic
+/// over this, so every experiment can run on the host oracle or on the
+/// PJRT artifacts interchangeably.
+pub trait Backend {
+    /// One optimizer step; returns the loss.
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<f32>;
+    /// Forward: padded tokens (batch*seq) -> logits (batch*seq*vocab).
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+    /// Current trainable parameters.
+    fn params(&self) -> &Bank;
+    /// Geometry.
+    fn shape(&self) -> (usize, usize, usize); // (batch, seq, vocab)
+    fn name(&self) -> &'static str;
+}
+
+/// Result of a full train-then-eval run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub losses: Vec<f32>,
+    pub report: EvalReport,
+    pub train_seconds: f64,
+}
+
+/// Train `backend` on `task` for `steps`, then evaluate `eval_n` examples.
+pub fn run(
+    backend: &mut dyn Backend,
+    task_ctor: impl Fn() -> Task,
+    steps: usize,
+    peak_lr: f64,
+    eval_n: usize,
+    log_every: usize,
+) -> Result<RunResult> {
+    let (batch, seq, vocab) = backend.shape();
+    let mut loader = Loader::new(task_ctor(), batch, seq);
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let lr = lr_schedule(step, steps, peak_lr, 0.03) as f32;
+        let b = loader.next_train();
+        let loss = backend.train_step(&b, lr)?;
+        losses.push(loss);
+        if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
+            crate::info!(
+                "step {:>4}/{} loss {:.4} lr {:.2e} [{}]",
+                step + 1,
+                steps,
+                loss,
+                lr,
+                backend.name()
+            );
+        }
+    }
+    let train_seconds = t0.elapsed().as_secs_f64();
+    let task = task_ctor();
+    let mut fwd = |tokens: &[i32]| backend.forward(tokens).expect("forward");
+    let report = evaluate(&task, &mut fwd, eval_n, batch, seq, vocab);
+    Ok(RunResult { losses, report, train_seconds })
+}
+
+/// Smoothed final loss (mean of last k) — the bench tables' loss column.
+pub fn final_loss(losses: &[f32], k: usize) -> f64 {
+    let k = k.min(losses.len()).max(1);
+    let tail = &losses[losses.len() - k..];
+    tail.iter().map(|&x| x as f64).sum::<f64>() / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_loss_tail_mean() {
+        let l = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(final_loss(&l, 2), 1.5);
+        assert_eq!(final_loss(&l, 100), 3.0);
+        assert_eq!(final_loss(&l, 0), 1.0);
+    }
+}

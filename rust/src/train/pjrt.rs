@@ -1,0 +1,164 @@
+//! PJRT training backend: drives the AOT train-step artifact. State
+//! (params, optimizer moments) round-trips as named tensors; the hot-path
+//! buffer-resident variant is used by the perf pass.
+
+use super::Backend;
+use crate::config::{Method, MethodCfg, ModelCfg};
+use crate::data::loader::Batch;
+use crate::runtime::{Executable, Manifest, Runtime};
+use crate::util::bank::{read_bank, Bank, Tensor};
+use anyhow::{Context, Result};
+
+pub struct PjrtBackend {
+    pub cfg: ModelCfg,
+    pub mc: MethodCfg,
+    train_exe: Executable,
+    fwd_exe: Executable,
+    /// frozen base + frozen aux from the artifact bank
+    pub bank: Bank,
+    /// trainable params (updated in place each step)
+    pub params: Bank,
+    pub opt_m: Bank,
+    pub opt_v: Bank,
+    /// router state / frozen matrices (runtime inputs)
+    pub aux: Bank,
+    step: u64,
+}
+
+impl PjrtBackend {
+    /// Load everything for (preset, method tag). The router seed controls
+    /// MoS index sampling — the Rust-owned routing decision.
+    pub fn load(
+        rt: &Runtime,
+        manifest: &Manifest,
+        preset: &str,
+        mc: &MethodCfg,
+        router_seed: u64,
+    ) -> Result<PjrtBackend> {
+        let tag = mc.tag();
+        let cfg = manifest
+            .presets
+            .get(preset)
+            .with_context(|| format!("preset '{preset}'"))?
+            .clone();
+        mc.validate(&cfg)?;
+        let train_exe = rt.load(manifest, &format!("train_{tag}_{preset}"))?;
+        let fwd_exe = rt.load(manifest, &format!("fwd_{tag}_{preset}"))?;
+        let bank = read_bank(&manifest.bank_path(preset))?;
+        let params = read_bank(&manifest.init_path(preset, &tag))?;
+        let zeros: Bank = params
+            .iter()
+            .map(|(k, t)| (k.clone(), Tensor::zeros(t.shape())))
+            .collect();
+        let aux = build_aux(&cfg, mc, &bank, router_seed);
+        Ok(PjrtBackend {
+            cfg,
+            mc: mc.clone(),
+            train_exe,
+            fwd_exe,
+            bank,
+            params,
+            opt_m: zeros.clone(),
+            opt_v: zeros,
+            aux,
+            step: 0,
+        })
+    }
+
+    fn assemble_train_inputs(&self, batch: &Batch, lr: f32) -> Bank {
+        let mut inp = Bank::new();
+        for spec in &self.train_exe.art.inputs {
+            let t = match spec.role.as_str() {
+                "base" => self.bank[&spec.name].clone(),
+                "param" => self.params[&spec.name].clone(),
+                "opt_m" => self.opt_m[&spec.name["m.".len()..]].clone(),
+                "opt_v" => self.opt_v[&spec.name["v.".len()..]].clone(),
+                "scalar" => match spec.name.as_str() {
+                    "step" => Tensor::from_f32(&[1], vec![(self.step + 1) as f32]),
+                    "lr" => Tensor::from_f32(&[1], vec![lr]),
+                    s => panic!("unknown scalar {s}"),
+                },
+                "data" => match spec.name.as_str() {
+                    "tokens" => Tensor::from_i32(&spec.shape, batch.tokens.clone()),
+                    "targets" => Tensor::from_i32(&spec.shape, batch.targets.clone()),
+                    "weight" => Tensor::from_f32(&spec.shape, batch.weight.clone()),
+                    s => panic!("unknown data input {s}"),
+                },
+                "aux" => self
+                    .aux
+                    .get(&spec.name)
+                    .or_else(|| self.bank.get(&spec.name))
+                    .unwrap_or_else(|| panic!("missing aux '{}'", spec.name))
+                    .clone(),
+                r => panic!("unknown role {r}"),
+            };
+            inp.insert(spec.name.clone(), t);
+        }
+        inp
+    }
+}
+
+/// Build runtime aux inputs for a method: MoS router state (indices +
+/// scales) from the Rust router; VeRA frozen matrices come from the bank.
+pub fn build_aux(cfg: &ModelCfg, mc: &MethodCfg, _bank: &Bank, seed: u64) -> Bank {
+    match mc.method {
+        Method::MoS => {
+            crate::adapter::mos::router::build_router(cfg, mc, seed).into_bank()
+        }
+        _ => Bank::new(), // vera frozen matrices live in the artifact bank
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<f32> {
+        let inputs = self.assemble_train_inputs(batch, lr);
+        let out = self.train_exe.execute_bank(&inputs)?;
+        let mut loss = 0.0f32;
+        for (name, t) in out {
+            if name == "loss" {
+                loss = t.f32s().unwrap()[0];
+            } else if let Some(p) = name.strip_prefix("m.") {
+                self.opt_m.insert(p.to_string(), t);
+            } else if let Some(p) = name.strip_prefix("v.") {
+                self.opt_v.insert(p.to_string(), t);
+            } else {
+                self.params.insert(name, t);
+            }
+        }
+        self.step += 1;
+        Ok(loss)
+    }
+
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut inp = Bank::new();
+        for spec in &self.fwd_exe.art.inputs {
+            let t = match spec.role.as_str() {
+                "base" => self.bank[&spec.name].clone(),
+                "param" => self.params[&spec.name].clone(),
+                "aux" => self
+                    .aux
+                    .get(&spec.name)
+                    .or_else(|| self.bank.get(&spec.name))
+                    .unwrap_or_else(|| panic!("missing aux '{}'", spec.name))
+                    .clone(),
+                "data" => Tensor::from_i32(&spec.shape, tokens.to_vec()),
+                r => panic!("unexpected role {r} in fwd"),
+            };
+            inp.insert(spec.name.clone(), t);
+        }
+        let out = self.fwd_exe.execute_bank(&inp)?;
+        Ok(out["logits"].f32s().unwrap().to_vec())
+    }
+
+    fn params(&self) -> &Bank {
+        &self.params
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.cfg.batch, self.cfg.seq, self.cfg.vocab)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

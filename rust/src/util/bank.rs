@@ -1,0 +1,214 @@
+//! Weight-bank container IO — the binary interchange format shared with
+//! `python/compile/aot.py::write_bank` (magic `MOSBANK1`).
+//!
+//! Layout: `[8B magic][u32 n]` then per tensor:
+//! `[u16 name_len][name][u8 dtype][u8 ndim][u32 dims...][raw LE data]`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"MOSBANK1";
+
+/// A named host tensor (f32 or i32), row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32s(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn i32s(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    /// Bytes of payload (for the memory ledger).
+    pub fn nbytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+/// Ordered name -> tensor map.
+pub type Bank = BTreeMap<String, Tensor>;
+
+pub fn read_bank(path: &Path) -> Result<Bank> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading bank {}", path.display()))?;
+    parse_bank(&buf).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse_bank(buf: &[u8]) -> Result<Bank> {
+    let mut r = buf;
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic {:?}", magic);
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = Bank::new();
+    for _ in 0..n {
+        let name_len = read_u16(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let mut raw = vec![0u8; count * 4];
+        r.read_exact(&mut raw)?;
+        let t = match dtype {
+            0 => Tensor::F32 {
+                shape,
+                data: raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            1 => Tensor::I32 {
+                shape,
+                data: raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            d => bail!("tensor '{name}': unknown dtype {d}"),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+pub fn write_bank(path: &Path, bank: &Bank) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.write_all(MAGIC)?;
+    buf.write_all(&(bank.len() as u32).to_le_bytes())?;
+    for (name, t) in bank {
+        buf.write_all(&(name.len() as u16).to_le_bytes())?;
+        buf.write_all(name.as_bytes())?;
+        let (dtype, shape): (u8, &[usize]) = match t {
+            Tensor::F32 { shape, .. } => (0, shape),
+            Tensor::I32 { shape, .. } => (1, shape),
+        };
+        buf.write_all(&[dtype, shape.len() as u8])?;
+        for &d in shape {
+            buf.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            Tensor::F32 { data, .. } => {
+                for v in data {
+                    buf.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                for v in data {
+                    buf.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    std::fs::write(path, buf)
+        .with_context(|| format!("writing bank {}", path.display()))?;
+    Ok(())
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut &[u8]) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut bank = Bank::new();
+        bank.insert(
+            "a.w".into(),
+            Tensor::from_f32(&[2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, 9.0]),
+        );
+        bank.insert("idx".into(), Tensor::from_i32(&[4], vec![0, -1, 7, 3]));
+        bank.insert("scalar".into(), Tensor::from_f32(&[1], vec![42.0]));
+        let dir = std::env::temp_dir().join("mos_bank_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.bin");
+        write_bank(&path, &bank).unwrap();
+        let back = read_bank(&path).unwrap();
+        assert_eq!(bank, back);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_bank(b"NOTABANKxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut bank = Bank::new();
+        bank.insert("t".into(), Tensor::from_f32(&[8], vec![0.0; 8]));
+        let dir = std::env::temp_dir().join("mos_bank_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        write_bank(&path, &bank).unwrap();
+        let mut buf = std::fs::read(&path).unwrap();
+        buf.truncate(buf.len() - 5);
+        assert!(parse_bank(&buf).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared substrates: RNG, JSON, weight-bank IO, CLI parsing, logging,
+//! thread pool, and a tiny property-testing harness.
+//!
+//! The offline build image vendors only `xla` + `anyhow`, so these are
+//! hand-rolled rather than pulled from crates.io (see DESIGN.md §1).
+
+pub mod bank;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,82 @@
+//! Minimal property-testing harness (proptest is not vendored offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a randomized predicate many times
+//! with deterministic per-case seeds; on failure it reports the failing seed
+//! so the case can be replayed with `check_seed`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` deterministic random cases. Panics with the failing
+/// case seed on the first violation.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    cases: u64,
+    mut f: F,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ case, case);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at case {case}: {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seed<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    case: u64,
+    mut f: F,
+) {
+    let mut rng = Rng::new(0xC0FFEE ^ case, case);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{name}' failed at replayed case {case}: {msg}");
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "element {i}: {x} vs {y} (|diff|={}, tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |rng| {
+            let (a, b) = (rng.f32(), rng.f32());
+            if (a + b - (b + a)).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6)
+            .is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+    }
+}

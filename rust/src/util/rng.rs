@@ -1,0 +1,241 @@
+//! Deterministic, seedable RNG (SplitMix64 seeding a PCG32 stream).
+//!
+//! All stochastic choices in the framework — router index sampling, synthetic
+//! task generation, adapter init fallback — flow through this module so every
+//! experiment is reproducible from a `(seed, stream)` pair, matching the
+//! paper's seed-averaged protocol (Appendix A.2, B.3).
+
+/// PCG32 (XSH-RR 64/32) with SplitMix64 seed expansion.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// New RNG from a seed and a stream id (independent streams for the same
+    /// seed never collide: PCG stream selection).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut s = seed;
+        let state0 = splitmix64(&mut s);
+        let mut t = stream.wrapping_mul(0xA0761D6478BD642F).wrapping_add(seed);
+        let inc = splitmix64(&mut t) | 1;
+        let mut rng = Rng { state: 0, inc };
+        rng.state = state0.wrapping_add(rng.inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child RNG (for per-layer / per-block streams).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let seed = (self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add(tag);
+        Rng::new(seed, tag)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in [0, n). Lemire's unbiased method.
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(n as u64);
+            let l = m as u32;
+            if l >= n || l >= (u32::MAX - n + 1) % n {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u32) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (1.0 - self.f64()) as f64; // (0, 1]
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos())
+            as f32
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        if xs.is_empty() {
+            return;
+        }
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices sampled uniformly from [0, n) (k <= n),
+    /// order randomized (partial Fisher-Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Pick one element uniformly.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Vector of iid normals scaled by `std`.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+
+    /// Vector of iid uniforms in [-bound, bound].
+    pub fn uniform_vec(&mut self, n: usize, bound: f32) -> Vec<f32> {
+        (0..n).map(|_| self.uniform(-bound, bound)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7, 0);
+        let mut b = Rng::new(7, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::new(7, 0);
+        let mut b = Rng::new(7, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(0, 0);
+        let mut b = Rng::new(1, 0);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3, 0);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            let x = r.below(7);
+            assert!(x < 7);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut r = Rng::new(11, 2);
+        for _ in 0..1000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5, 0);
+        let n = 20000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Rng::new(9, 0);
+        for _ in 0..50 {
+            let n = r.range(1, 30);
+            let k = r.range(0, n + 1);
+            let s = r.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates in {s:?}");
+            assert!(s.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(2, 0);
+        let mut xs: Vec<usize> = (0..20).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut parent = Rng::new(1, 0);
+        let mut c1 = parent.fork(1);
+        let mut c2 = parent.fork(2);
+        let same = (0..64).filter(|_| c1.next_u32() == c2.next_u32()).count();
+        assert!(same < 4);
+    }
+}

@@ -1,0 +1,261 @@
+//! Integration tests over the real AOT artifacts (PJRT round trips).
+//! These exercise the full L1/L2/L3 composition:
+//!   - Rust gather materialization == AOT pallas shard_gather kernel
+//!   - fwd artifact with zero adapters == base model (for every method)
+//!   - pallas-gather fwd artifact == fused fwd artifact (same logits)
+//!   - train artifact reduces loss and only moves routed pool shards
+//!
+//! All tests skip gracefully when `make artifacts` hasn't been run.
+
+use mos::adapter::mos::materialize::gather_rows;
+use mos::adapter::mos::router::build_router;
+use mos::config::MethodCfg;
+use mos::runtime::{Manifest, Runtime};
+use mos::util::bank::{read_bank, Bank, Tensor};
+use mos::util::rng::Rng;
+
+fn setup() -> Option<(Runtime, Manifest)> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some((Runtime::cpu().expect("pjrt"), Manifest::load(&dir).expect("manifest")))
+}
+
+#[test]
+fn pallas_shard_gather_matches_rust_gather() {
+    let Some((rt, manifest)) = setup() else { return };
+    let exe = rt.load(&manifest, "materialize_tiny").expect("load");
+    let art = &exe.art;
+    let (r, l) = (art.method_cfg.r, art.method_cfg.l);
+    let pool_spec = &art.inputs[0];
+    let (n, s) = (pool_spec.shape[0], pool_spec.shape[1]);
+
+    let mut rng = Rng::new(7, 0);
+    let pool = Tensor::from_f32(&[n, s], rng.normal_vec(n * s, 1.0));
+    let idx: Vec<i32> =
+        (0..r * l).map(|_| rng.range(0, n) as i32).collect();
+
+    let mut inputs = Bank::new();
+    inputs.insert("pool".into(), pool.clone());
+    inputs.insert("idx".into(), Tensor::from_i32(&[r, l], idx.clone()));
+    let out = exe.execute_bank(&inputs).expect("execute");
+    let dense_pjrt = out["dense"].f32s().unwrap();
+
+    let dense_rust = gather_rows(&pool, &idx, r, l);
+    assert_eq!(dense_pjrt.len(), dense_rust.len());
+    for (a, b) in dense_pjrt.iter().zip(&dense_rust) {
+        assert_eq!(a, b, "pallas gather and rust gather disagree");
+    }
+}
+
+fn fwd_with_zero_params(
+    rt: &Runtime,
+    manifest: &Manifest,
+    name: &str,
+    mc: &MethodCfg,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let exe = rt.load(manifest, name).expect("load fwd");
+    let bank = read_bank(&manifest.bank_path("tiny")).expect("bank");
+    let cfg = manifest.presets["tiny"].clone();
+    let router = if mc.method == mos::config::Method::MoS {
+        build_router(&cfg, mc, 0).into_bank()
+    } else {
+        Bank::new()
+    };
+    let mut inputs = Bank::new();
+    for spec in &exe.art.inputs {
+        let t = match spec.role.as_str() {
+            "base" => bank[&spec.name].clone(),
+            "param" => match spec.dtype.as_str() {
+                // zero adapters => base behaviour... except scale-vector
+                // params whose zero also zeroes the (zero) B side; fine.
+                _ => Tensor::zeros(&spec.shape),
+            },
+            "aux" => router
+                .get(&spec.name)
+                .or_else(|| bank.get(&spec.name))
+                .cloned()
+                .unwrap_or_else(|| Tensor::zeros(&spec.shape)),
+            "data" => Tensor::from_i32(&spec.shape, tokens.to_vec()),
+            r => panic!("role {r}"),
+        };
+        inputs.insert(spec.name.clone(), t);
+    }
+    let out = exe.execute_bank(&inputs).expect("exec");
+    out["logits"].f32s().unwrap().to_vec()
+}
+
+#[test]
+fn zero_adapters_make_all_methods_equal_base() {
+    let Some((rt, manifest)) = setup() else { return };
+    let cfg = manifest.presets["tiny"].clone();
+    let n = cfg.batch * cfg.seq;
+    let tokens: Vec<i32> = (0..n).map(|i| (i % cfg.vocab) as i32).collect();
+
+    let lora = fwd_with_zero_params(
+        &rt, &manifest, "fwd_lora_r2_tiny", &MethodCfg::lora(2), &tokens,
+    );
+    let mos_cfg = MethodCfg::mos(8, 2, 2, 1);
+    let mos = fwd_with_zero_params(
+        &rt, &manifest, "fwd_mos_r8_l2_e2_tiny", &mos_cfg, &tokens,
+    );
+    assert_eq!(lora.len(), mos.len());
+    for (a, b) in lora.iter().zip(&mos) {
+        assert!(
+            (a - b).abs() < 1e-4,
+            "zero-adapter logits differ between lora and mos: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn pallas_fwd_matches_fused_fwd() {
+    let Some((rt, manifest)) = setup() else { return };
+    if !manifest.artifacts.contains_key("fwd_mos_r8_l2_e2_tiny_pallas") {
+        eprintln!("skipping: pallas fwd artifact not built");
+        return;
+    }
+    let cfg = manifest.presets["tiny"].clone();
+    let mc = MethodCfg::mos(8, 2, 2, 1);
+    let bank = read_bank(&manifest.bank_path("tiny")).unwrap();
+    let params = read_bank(&manifest.init_path("tiny", "mos_r8_l2_e2")).unwrap();
+    // randomize pool_b so adapters actually contribute
+    let mut rng = Rng::new(3, 0);
+    let mut params2 = params.clone();
+    for t in mos::config::LAYER_TYPES {
+        let key = format!("{t}.pool_b");
+        let old = params2[&key].clone();
+        params2.insert(
+            key,
+            Tensor::from_f32(old.shape(), rng.normal_vec(old.len(), 0.05)),
+        );
+    }
+    let router = build_router(&cfg, &mc, 5).into_bank();
+    let n = cfg.batch * cfg.seq;
+    let tokens: Vec<i32> = (0..n).map(|i| ((i * 7) % cfg.vocab) as i32).collect();
+
+    let run = |name: &str| -> Vec<f32> {
+        let exe = rt.load(&manifest, name).unwrap();
+        let mut inputs = Bank::new();
+        for spec in &exe.art.inputs {
+            let t = match spec.role.as_str() {
+                "base" => bank[&spec.name].clone(),
+                "param" => params2[&spec.name].clone(),
+                "aux" => router[&spec.name].clone(),
+                "data" => Tensor::from_i32(&spec.shape, tokens.clone()),
+                r => panic!("role {r}"),
+            };
+            inputs.insert(spec.name.clone(), t);
+        }
+        exe.execute_bank(&inputs).unwrap()["logits"]
+            .f32s()
+            .unwrap()
+            .to_vec()
+    };
+    let fused = run("fwd_mos_r8_l2_e2_tiny");
+    let pallas = run("fwd_mos_r8_l2_e2_tiny_pallas");
+    for (a, b) in fused.iter().zip(&pallas) {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "pallas-gather fwd disagrees with fused fwd: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn train_artifact_moves_only_routed_shards() {
+    let Some((rt, manifest)) = setup() else { return };
+    let cfg = manifest.presets["tiny"].clone();
+    // l=1, rank 4 of pool 8: half the pool stays unrouted per side
+    let mc = MethodCfg::mos(4, 1, 2, 0);
+    let mut be = mos::train::pjrt::PjrtBackend::load(&rt, &manifest, "tiny", &mc, 11)
+        .expect("backend");
+    // randomize pool_b so A-side gradients are live too
+    let mut rng = Rng::new(1, 0);
+    for t in mos::config::LAYER_TYPES {
+        let key = format!("{t}.pool_b");
+        let old = be.params[&key].clone();
+        be.params.insert(
+            key,
+            Tensor::from_f32(old.shape(), rng.normal_vec(old.len(), 0.05)),
+        );
+    }
+    // constrain the router: every block routes A to shards {0,1} and B to
+    // shards {2,3} only, guaranteeing unrouted shards exist
+    for t in mos::config::LAYER_TYPES {
+        let shape = [cfg.blocks, mc.r, mc.l];
+        let n = cfg.blocks * mc.r * mc.l;
+        be.aux.insert(
+            format!("{t}.idx_a"),
+            Tensor::from_i32(&shape, (0..n).map(|i| (i % 2) as i32).collect()),
+        );
+        be.aux.insert(
+            format!("{t}.idx_b"),
+            Tensor::from_i32(&shape, (0..n).map(|i| 2 + (i % 2) as i32).collect()),
+        );
+    }
+    let before = be.params.clone();
+    let routed_a: std::collections::HashSet<i32> = be.aux["q.idx_a"]
+        .i32s()
+        .unwrap()
+        .iter()
+        .copied()
+        .collect();
+    assert!(routed_a.len() < 8, "test requires unrouted shards");
+
+    let mut loader = mos::data::Loader::new(
+        mos::data::tasks::Task::new(mos::data::tasks::TaskKind::Recall, 0),
+        cfg.batch,
+        cfg.seq,
+    );
+    use mos::train::Backend;
+    let batch = loader.next_train();
+    let loss0 = be.train_step(&batch, 1e-2).unwrap();
+    assert!(loss0.is_finite() && loss0 > 0.0);
+
+    let pa0 = before["q.pool_a"].f32s().unwrap();
+    let pa1 = be.params["q.pool_a"].f32s().unwrap();
+    let width = before["q.pool_a"].shape()[1];
+    for shard in 0..8 {
+        let moved = pa0[shard * width..(shard + 1) * width]
+            != pa1[shard * width..(shard + 1) * width];
+        let routed = routed_a.contains(&(shard as i32));
+        assert_eq!(
+            moved, routed,
+            "shard {shard}: moved={moved} but routed={routed}"
+        );
+    }
+}
+
+#[test]
+fn train_artifact_learns() {
+    let Some((rt, manifest)) = setup() else { return };
+    let mc = MethodCfg::mos(8, 2, 2, 1);
+    let mut be =
+        mos::train::pjrt::PjrtBackend::load(&rt, &manifest, "tiny", &mc, 0)
+            .expect("backend");
+    use mos::train::Backend;
+    let (batch_sz, seq, _) = be.shape();
+    let mut loader = mos::data::Loader::new(
+        mos::data::tasks::Task::new(mos::data::tasks::TaskKind::Recall, 0),
+        batch_sz,
+        seq,
+    );
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..30 {
+        let b = loader.next_train();
+        let loss = be.train_step(&b, 2e-2).unwrap();
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < first - 0.3,
+        "pjrt training did not learn: {first:.3} -> {last:.3}"
+    );
+}

@@ -1,0 +1,130 @@
+//! Cross-backend integration: the host oracle and the PJRT artifacts must
+//! agree on the *semantics* of training (same init conventions, same
+//! optimizer, comparable learning behaviour), and checkpoints must
+//! round-trip into servable tenants.
+
+use mos::config::{presets, MethodCfg};
+use mos::data::tasks::{Task, TaskKind};
+use mos::train::checkpoint::Checkpoint;
+use mos::train::host::HostBackend;
+use mos::train::{final_loss, run};
+
+#[test]
+fn all_methods_learn_on_host() {
+    // every adapter family must be able to fit `recall` at tiny scale
+    let mut cfg = presets::tiny();
+    cfg.batch = 8;
+    for mc in [
+        MethodCfg::lora(2),
+        MethodCfg::mos(8, 2, 2, 1),
+        MethodCfg::vera(16),
+        MethodCfg::tied(8),
+        MethodCfg::prolora(8, 4),
+    ] {
+        let mut be = HostBackend::new(&cfg, &mc, 0);
+        let r = run(&mut be, || Task::new(TaskKind::Recall, 0), 40, 2e-2, 0, 0)
+            .unwrap();
+        let first = final_loss(&r.losses[..5], 5);
+        let last = final_loss(&r.losses, 5);
+        assert!(
+            last < first - 0.15,
+            "{:?} failed to learn: {first:.3} -> {last:.3}",
+            mc.method
+        );
+    }
+}
+
+#[test]
+fn ablations_preserve_budget_and_learn() {
+    let mut cfg = presets::tiny();
+    cfg.batch = 8;
+    use mos::adapter::params::trainable_params;
+    let full = MethodCfg::mos(8, 2, 2, 1);
+    let budget = trainable_params(&cfg, &full);
+    for (name, mc) in [
+        ("-sp", MethodCfg::mos(8, 2, 2, 0)),
+        ("-vs", MethodCfg::mos(8, 1, 2, 1)),
+        (
+            "-pd",
+            MethodCfg { pair_dissociation: false, ..MethodCfg::mos(8, 2, 2, 1) },
+        ),
+    ] {
+        assert_eq!(
+            trainable_params(&cfg, &mc),
+            budget,
+            "{name} changed the trainable budget"
+        );
+        let mut be = HostBackend::new(&cfg, &mc, 0);
+        let r = run(&mut be, || Task::new(TaskKind::Recall, 0), 40, 2e-2, 0, 0)
+            .unwrap();
+        assert!(
+            final_loss(&r.losses, 5) < final_loss(&r.losses[..5], 5) - 0.15,
+            "{name} failed to learn"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_behaviour() {
+    let mut cfg = presets::tiny();
+    cfg.batch = 4;
+    let mc = MethodCfg::mos(8, 2, 2, 1);
+    let mut be = HostBackend::new(&cfg, &mc, 0);
+    run(&mut be, || Task::new(TaskKind::Recall, 0), 20, 2e-2, 0, 0).unwrap();
+
+    let ck = Checkpoint {
+        preset: "tiny".into(),
+        mc: mc.clone(),
+        router_seed: 0,
+        params: be.model.params.clone(),
+        aux: be.model.aux.clone(),
+    };
+    let dir = std::env::temp_dir().join("mos_int_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    ck.save(&dir).unwrap();
+    let loaded = Checkpoint::load(&dir).unwrap();
+
+    // a model rebuilt from the checkpoint produces identical logits
+    let tokens: Vec<i32> = (0..cfg.batch * cfg.seq)
+        .map(|i| (i % cfg.vocab) as i32)
+        .collect();
+    let want = be.model.forward(&tokens);
+    let mut rebuilt = mos::model::HostModel::new(
+        cfg.clone(),
+        loaded.mc,
+        be.model.base.clone(),
+        loaded.params,
+        loaded.aux,
+    );
+    let got = rebuilt.forward(&tokens);
+    assert_eq!(want.len(), got.len());
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a, b, "checkpoint did not preserve behaviour");
+    }
+}
+
+#[test]
+fn mos_beats_pure_sharing_at_equal_budget() {
+    // the paper's core qualitative claim, as a smoke-level integration test
+    // (full sweeps live in the benches): differentiated MoS should reach a
+    // lower training loss than pure sharing on a mixed workload.
+    let mut cfg = presets::tiny();
+    cfg.batch = 8;
+    let steps = 60;
+    let task = || Task::new(TaskKind::Recall, 0);
+
+    let mut pure = HostBackend::new(&cfg, &MethodCfg::pure_sharing(2, cfg.blocks), 0);
+    let r_pure = run(&mut pure, task, steps, 2e-2, 0, 0).unwrap();
+    let mut mos_be = HostBackend::new(&cfg, &MethodCfg::mos(8, 2, 2, 1), 0);
+    let r_mos = run(&mut mos_be, task, steps, 2e-2, 0, 0).unwrap();
+
+    let lp = final_loss(&r_pure.losses, 10);
+    let lm = final_loss(&r_mos.losses, 10);
+    // allow slack: single-seed, tiny model — require MoS not to be worse
+    // by more than noise, and report values for the record.
+    eprintln!("pure={lp:.4} mos={lm:.4}");
+    assert!(
+        lm < lp + 0.05,
+        "MoS ({lm:.4}) should not lose to pure sharing ({lp:.4})"
+    );
+}

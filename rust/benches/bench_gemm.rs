@@ -1,0 +1,205 @@
+//! GEMM engine bench: the blocked, panel-packed, multithreaded engine in
+//! `model::math` vs the seed's scalar kernels, swept over (m,k,n) shapes
+//! from `presets::tiny()` up to serving scale. Emits `BENCH_gemm.json` so
+//! the perf trajectory is tracked from PR to PR (ROADMAP.md §Perf).
+//!
+//! Run: cargo bench --bench bench_gemm   (or scripts/bench.sh)
+//! Knobs: MOS_THREADS (engine pool width), MOS_GEMM_MS (per-case time
+//! budget, default 200), MOS_BENCH_OUT (dir for BENCH_gemm.json, default .)
+
+use mos::bench::Table;
+use mos::config::presets;
+use mos::model::math::{self, gemm_with, Trans};
+use mos::util::json::Json;
+use mos::util::rng::Rng;
+use std::time::Instant;
+
+/// The seed's scalar `matmul_nt` (contiguous multi-accumulator dots),
+/// frozen here as the fixed baseline the engine is measured against.
+fn seed_matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for c in 0..chunks {
+            let i = c * 8;
+            s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+            s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+            s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+            s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * 8..n {
+            tail += a[i] * b[i];
+        }
+        s0 + s1 + s2 + s3 + tail
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] += dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+struct Case {
+    name: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    /// counts toward the serving-scale headline speedup
+    serving_scale: bool,
+}
+
+fn cases() -> Vec<Case> {
+    let t = presets::tiny();
+    let s = presets::small();
+    let b = presets::base();
+    let case = |name, m, k, n, serving_scale| Case { name, m, k, n, serving_scale };
+    vec![
+        case("tiny qkv", t.batch * t.seq, t.hidden, t.hidden, false),
+        case("tiny lm-head", t.batch * t.seq, t.hidden, t.vocab, false),
+        case("small ffn", s.batch * s.seq, s.hidden, s.ff, false),
+        case("base qkv", b.batch * b.seq, b.hidden, b.hidden, true),
+        case("base ffn", b.batch * b.seq, b.hidden, b.ff, true),
+        case("base lm-head", b.batch * b.seq, b.hidden, b.vocab, true),
+        case("serving batch", 512, 1024, 1024, true),
+        // memory-bound shapes: reported, excluded from the headline
+        case("decode row", 1, 1024, 1024, false),
+        case("low-rank r=8", b.batch * b.seq, b.hidden, 8, false),
+    ]
+}
+
+/// Mean seconds per call after one calibration run, spending ~budget_ms.
+fn time_secs<F: FnMut()>(budget_ms: f64, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64();
+    let reps = ((budget_ms / 1e3) / once.max(1e-9)).ceil().max(1.0).min(1e4) as usize;
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t1.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let budget_ms: f64 = std::env::var("MOS_GEMM_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200.0);
+    let threads = math::pool().workers();
+
+    let mut table = Table::new(
+        "GEMM engine (nt layout, f32): seed scalar vs blocked vs blocked+threads",
+        &["shape (m,k,n)", "case", "seed GF/s", "blocked 1t", "blocked mt", "speedup"],
+    );
+    let mut json_cases = Vec::new();
+    let mut serving_speedups = Vec::new();
+    let mut all_speedups = Vec::new();
+
+    for case in cases() {
+        let (m, k, n) = (case.m, case.k, case.n);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let mut rng = Rng::new(0xBE7C4, 0);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(n * k, 1.0); // (n, k): B^T storage
+        let mut c = vec![0.0f32; m * n];
+
+        // sanity: engine output matches the seed baseline
+        c.fill(0.0);
+        seed_matmul_nt(&a, &b, &mut c, m, k, n);
+        let want = c.clone();
+        c.fill(0.0);
+        gemm_with(Some(math::pool()), m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c);
+        let kf = k as f32;
+        for (i, (&got, &exp)) in c.iter().zip(&want).enumerate() {
+            assert!(
+                (got - exp).abs() <= 1e-3 * kf.sqrt() + 1e-2 * exp.abs(),
+                "{}: engine diverges from seed at {i}: {got} vs {exp}",
+                case.name
+            );
+        }
+
+        let seed_s = time_secs(budget_ms, || {
+            c.fill(0.0);
+            seed_matmul_nt(&a, &b, &mut c, m, k, n);
+        });
+        let b1_s = time_secs(budget_ms, || {
+            c.fill(0.0);
+            gemm_with(None, m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c);
+        });
+        let bmt_s = time_secs(budget_ms, || {
+            c.fill(0.0);
+            gemm_with(Some(math::pool()), m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c);
+        });
+
+        let (gf_seed, gf_b1, gf_mt) =
+            (flops / seed_s / 1e9, flops / b1_s / 1e9, flops / bmt_s / 1e9);
+        let speedup = seed_s / bmt_s;
+        if case.serving_scale {
+            serving_speedups.push(speedup);
+        }
+        all_speedups.push(speedup);
+
+        table.row(vec![
+            format!("{m}x{k}x{n}"),
+            case.name.into(),
+            format!("{gf_seed:.2}"),
+            format!("{gf_b1:.2}"),
+            format!("{gf_mt:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        eprintln!(
+            "[gemm] {} ({m}x{k}x{n}): {gf_seed:.2} -> {gf_mt:.2} GF/s ({speedup:.2}x)",
+            case.name
+        );
+
+        json_cases.push(Json::obj(vec![
+            ("name", Json::str(case.name)),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("n", Json::num(n as f64)),
+            ("serving_scale", Json::Bool(case.serving_scale)),
+            ("seed_scalar_gflops", Json::num(gf_seed)),
+            ("blocked_1t_gflops", Json::num(gf_b1)),
+            ("blocked_mt_gflops", Json::num(gf_mt)),
+            ("speedup_mt_vs_seed", Json::num(speedup)),
+        ]));
+    }
+
+    table.print();
+
+    let geomean = (all_speedups.iter().map(|s| s.ln()).sum::<f64>()
+        / all_speedups.len() as f64)
+        .exp();
+    let min_serving = serving_speedups
+        .iter()
+        .cloned()
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "\nthreads={threads}; serving-scale speedup (min) {min_serving:.2}x, \
+         geomean over all shapes {geomean:.2}x (target: >= 4x at serving \
+         scale on a multi-core box)"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("gemm")),
+        ("threads", Json::num(threads as f64)),
+        ("budget_ms", Json::num(budget_ms)),
+        ("cases", Json::Arr(json_cases)),
+        (
+            "headline",
+            Json::obj(vec![
+                ("min_speedup_serving_scale", Json::num(min_serving)),
+                ("geomean_speedup", Json::num(geomean)),
+            ]),
+        ),
+    ]);
+    let out_dir = std::env::var("MOS_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out_dir).join("BENCH_gemm.json");
+    std::fs::write(&path, json.to_string_pretty() + "\n")
+        .expect("write BENCH_gemm.json");
+    eprintln!("[gemm] wrote {}", path.display());
+}

@@ -4,13 +4,15 @@
 //! switching; intro scenario of many concurrent customized models).
 //!
 //! Run: cargo bench --bench bench_serving
-//! Knobs: MOS_SERVE_REQS (default 48), MOS_SERVE_TENANTS (default "1,4,16")
+//! Knobs: MOS_SERVE_REQS (default 48), MOS_SERVE_TENANTS (default "1,4,16"),
+//! MOS_BENCH_OUT (dir for BENCH_serving.json, default .)
 
 use mos::adapter::{self, mos::router::build_router};
 use mos::bench::Table;
 use mos::config::{presets, MethodCfg};
 use mos::coordinator::server::HostEngine;
 use mos::coordinator::{Registry, Server, Tenant};
+use mos::util::json::Json;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -77,6 +79,7 @@ fn main() {
         "Coordinator serving (tiny preset, host engine, 1 worker)",
         &["tenants", "batching", "req/s", "p50 ms", "p95 ms", "tok/s"],
     );
+    let mut json_cases = Vec::new();
     for &nt in &tenant_counts {
         for (label, mb) in [("batched (8)", 8usize), ("unbatched (1)", 1)] {
             let (rps, p50, p95, toks) = run_scenario(nt, n_requests, mb);
@@ -89,6 +92,14 @@ fn main() {
                 format!("{toks:.0}"),
             ]);
             eprintln!("[serving] tenants={nt} {label}: {rps:.2} req/s");
+            json_cases.push(Json::obj(vec![
+                ("tenants", Json::num(nt as f64)),
+                ("max_batch", Json::num(mb as f64)),
+                ("req_per_s", Json::num(rps)),
+                ("p50_ms", Json::num(p50)),
+                ("p95_ms", Json::num(p95)),
+                ("tok_per_s", Json::num(toks)),
+            ]));
         }
     }
     table.print();
@@ -97,4 +108,15 @@ fn main() {
          tenant count grows (low-cost switching — only adapter tensors \
          change per batch), and batched >> unbatched."
     );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("requests", Json::num(n_requests as f64)),
+        ("cases", Json::Arr(json_cases)),
+    ]);
+    let out_dir = std::env::var("MOS_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out_dir).join("BENCH_serving.json");
+    std::fs::write(&path, json.to_string_pretty() + "\n")
+        .expect("write BENCH_serving.json");
+    eprintln!("[serving] wrote {}", path.display());
 }

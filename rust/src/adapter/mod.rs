@@ -37,25 +37,11 @@ pub struct Factors {
 }
 
 impl Factors {
-    /// Dense delta W = B A for block k: (out, in) row-major.
+    /// Dense delta W = B A for block k: (out, in) row-major, computed
+    /// through the shared GEMM engine (`B (o,r) @ A (r,i)`).
     pub fn delta(&self, k: usize) -> Vec<f32> {
         let (r, i, o) = (self.r, self.in_dim, self.out_dim);
-        let (a, b) = (&self.a[k], &self.b[k]);
-        let mut w = vec![0.0f32; o * i];
-        for oo in 0..o {
-            for rr in 0..r {
-                let brr = b[oo * r + rr];
-                if brr == 0.0 {
-                    continue;
-                }
-                let arow = &a[rr * i..(rr + 1) * i];
-                let wrow = &mut w[oo * i..(oo + 1) * i];
-                for (wv, av) in wrow.iter_mut().zip(arow) {
-                    *wv += brr * av;
-                }
-            }
-        }
-        w
+        crate::model::math::matmul_nn(&self.b[k], &self.a[k], o, r, i)
     }
 }
 

@@ -9,6 +9,7 @@
 
 use super::super::Factors;
 use crate::config::{MethodCfg, ModelCfg};
+use crate::model::math;
 use crate::util::bank::{Bank, Tensor};
 
 /// Gather + concat pool shards into one dense (r, l*s) matrix, row-major.
@@ -29,14 +30,9 @@ pub fn gather_rows(pool: &Tensor, idx: &[i32], r: usize, l: usize) -> Vec<f32> {
 }
 
 /// Transpose a row-major (rows, cols) matrix into (cols, rows).
+/// (Thin wrapper: the cache-blocked kernel lives in [`math::transpose`].)
 pub fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m.len()];
-    for r in 0..rows {
-        for c in 0..cols {
-            out[c * rows + r] = m[r * cols + c];
-        }
-    }
-    out
+    math::transpose(m, rows, cols)
 }
 
 /// Dense per-block factors for one layer type.
@@ -61,9 +57,7 @@ pub fn factors(
     let scale = aux[&format!("{layer_type}.rank_scale")].f32s().unwrap();
 
     let per = r * l;
-    let mut a = Vec::with_capacity(cfg.blocks);
-    let mut b = Vec::with_capacity(cfg.blocks);
-    for k in 0..cfg.blocks {
+    let build_block = |k: usize| -> (Vec<f32>, Vec<f32>) {
         let mut ak = gather_rows(pool_a, &idx_a[k * per..(k + 1) * per], r, l);
         // fold rank scale into A rows
         for row in 0..r {
@@ -76,8 +70,21 @@ pub fn factors(
         }
         // B: gather as rows (r, o) then transpose to (o, r)
         let bt = gather_rows(pool_b, &idx_b[k * per..(k + 1) * per], r, l);
+        (ak, transpose(&bt, r, o))
+    };
+    // per-block gathers are independent (index routing = pure precompute,
+    // paper Limitations §C) — fan them out on the shared pool when the
+    // tenant is big enough for the sync overhead to pay off
+    let built: Vec<(Vec<f32>, Vec<f32>)> = if cfg.blocks * r * (i + o) >= 1 << 16 {
+        math::pool().scoped_map((0..cfg.blocks).collect(), build_block)
+    } else {
+        (0..cfg.blocks).map(build_block).collect()
+    };
+    let mut a = Vec::with_capacity(cfg.blocks);
+    let mut b = Vec::with_capacity(cfg.blocks);
+    for (ak, bk) in built {
         a.push(ak);
-        b.push(transpose(&bt, r, o));
+        b.push(bk);
     }
     Factors { r, in_dim: i, out_dim: o, a, b }
 }
@@ -96,34 +103,22 @@ pub fn apply_fused(
     let (r, i, o) = (factors.r, factors.in_dim, factors.out_dim);
     debug_assert_eq!(x.len(), m * i);
     debug_assert_eq!(y.len(), m * o);
-    let a = &factors.a[block];
-    let b = &factors.b[block];
-    // t = x @ A^T : (m, r)
-    let mut t = vec![0.0f32; m * r];
-    for mm in 0..m {
-        let xrow = &x[mm * i..(mm + 1) * i];
-        for rr in 0..r {
-            let arow = &a[rr * i..(rr + 1) * i];
-            let mut acc = 0.0f32;
-            for (xv, av) in xrow.iter().zip(arow) {
-                acc += xv * av;
-            }
-            t[mm * r + rr] = acc;
-        }
-    }
-    // y += scale * t @ B^T : B is (o, r) so B^T is (r, o)
-    for mm in 0..m {
-        let trow = &t[mm * r..(mm + 1) * r];
-        let yrow = &mut y[mm * o..(mm + 1) * o];
-        for oo in 0..o {
-            let brow = &b[oo * r..(oo + 1) * r];
-            let mut acc = 0.0f32;
-            for (tv, bv) in trow.iter().zip(brow) {
-                acc += tv * bv;
-            }
-            yrow[oo] += scale * acc;
-        }
-    }
+    // one GEMM engine for everything (model::math):
+    // t = x @ A^T : (m, r), then y += scale * t @ B^T (B is (o, r))
+    let mut t = math::scratch_take(m * r);
+    math::matmul_nt_acc(x, &factors.a[block], &mut t, m, i, r);
+    math::gemm(
+        m,
+        o,
+        r,
+        scale,
+        &t,
+        math::Trans::N,
+        &factors.b[block],
+        math::Trans::T,
+        y,
+    );
+    math::scratch_put(t);
 }
 
 #[cfg(test)]

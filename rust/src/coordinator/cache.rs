@@ -54,15 +54,24 @@ impl MaterializeCache {
             }
             inner.misses += 1;
         }
-        // build outside the lock (materialization can be slow)
-        let mut factors = BTreeMap::new();
-        for t in LAYER_TYPES {
-            factors.insert(
-                t.to_string(),
-                adapter::materialize(cfg, &tenant.mc, &tenant.params, &tenant.aux, t),
-            );
-        }
-        let factors: TenantFactors = Arc::new(factors);
+        // build outside the lock (materialization can be slow); the seven
+        // layer types are independent, so fan them out on the shared math
+        // pool (nested calls inside a pool worker run inline)
+        let built: Vec<(String, Factors)> = crate::model::math::pool()
+            .scoped_map(LAYER_TYPES.to_vec(), |t| {
+                (
+                    t.to_string(),
+                    adapter::materialize(
+                        cfg,
+                        &tenant.mc,
+                        &tenant.params,
+                        &tenant.aux,
+                        t,
+                    ),
+                )
+            });
+        let factors: TenantFactors =
+            Arc::new(built.into_iter().collect::<BTreeMap<_, _>>());
         let mut inner = self.inner.lock().unwrap();
         if !inner.map.contains_key(&tenant.id) {
             while inner.map.len() >= self.capacity {

@@ -120,6 +120,27 @@ impl Server {
         }
     }
 
+    /// Materialize dense factors for every registered tenant ahead of
+    /// traffic, fanning the per-tenant (and, inside, per-block) precompute
+    /// out over the shared math pool. First requests then hit a warm
+    /// cache instead of paying materialization latency. Returns the
+    /// number of tenants warmed.
+    pub fn prewarm(&self) -> usize {
+        let tenants: Vec<Arc<Tenant>> = self
+            .registry
+            .ids()
+            .iter()
+            .filter_map(|id| self.registry.get(id))
+            .collect();
+        let n = tenants.len();
+        let cfg = &self.registry.cfg;
+        let cache = &*self.cache;
+        crate::model::math::pool().scoped_map(tenants, |t| {
+            cache.get(cfg, &t);
+        });
+        n
+    }
+
     /// Enqueue a request; returns the response channel.
     pub fn submit(&self, tenant: &str, prompt: &str) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
@@ -279,6 +300,27 @@ mod tests {
         let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
         assert!(!resp.ok);
         assert!(resp.error.unwrap().contains("unknown tenant"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn prewarm_materializes_every_tenant_once() {
+        let (mut server, cfg) = make_server(1 << 30);
+        for (i, id) in ["alice", "bob", "carol"].iter().enumerate() {
+            add_tenant(&server, &cfg, id, i as u64 + 1);
+        }
+        assert_eq!(server.prewarm(), 3);
+        assert_eq!(server.cache.stats(), (0, 3));
+        // traffic after prewarm only hits the cache
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        for id in ["alice", "bob", "carol"] {
+            let rx = server.submit(id, "q:warm");
+            assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().ok);
+        }
+        let (hits, misses) = server.cache.stats();
+        assert_eq!(misses, 3, "prewarmed tenants must not re-materialize");
+        assert!(hits >= 3);
         server.shutdown();
     }
 

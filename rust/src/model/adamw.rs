@@ -26,7 +26,9 @@ impl AdamW {
         AdamW { m: zeros(params), v: zeros(params), step: 0 }
     }
 
-    /// One update step; mutates `params` in place.
+    /// One update step; mutates `params` in place. Large tensors are
+    /// chunked across the shared math pool (the update is elementwise, so
+    /// results are identical for any worker count).
     pub fn update(&mut self, params: &mut Bank, grads: &Bank, lr: f32) {
         self.step += 1;
         let bc1 = 1.0 - B1.powi(self.step as i32);
@@ -34,8 +36,8 @@ impl AdamW {
         for (key, g) in grads {
             let g = g.f32s().expect("grad must be f32");
             let pt = params.get_mut(key).expect("param/grad mismatch");
-            let (shape, p) = match pt {
-                Tensor::F32 { shape, data } => (shape.clone(), data),
+            let p = match pt {
+                Tensor::F32 { data, .. } => data,
                 _ => panic!("params must be f32"),
             };
             let m = match self.m.get_mut(key).unwrap() {
@@ -46,14 +48,42 @@ impl AdamW {
                 Tensor::F32 { data, .. } => data,
                 _ => unreachable!(),
             };
-            debug_assert_eq!(shape.iter().product::<usize>(), g.len());
-            for i in 0..g.len() {
-                m[i] = B1 * m[i] + (1.0 - B1) * g[i];
-                v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
-                let upd = (m[i] / bc1) / ((v[i] / bc2).sqrt() + EPS);
-                p[i] -= lr * (upd + WEIGHT_DECAY * p[i]);
+            debug_assert_eq!(p.len(), g.len());
+            const PAR_MIN: usize = 1 << 16;
+            if g.len() < PAR_MIN {
+                step_chunk(p, m, v, g, lr, bc1, bc2);
+            } else {
+                let pool = crate::model::math::pool();
+                let chunk = g.len().div_euclid(pool.workers()).max(1 << 12);
+                let items: Vec<_> = p
+                    .chunks_mut(chunk)
+                    .zip(m.chunks_mut(chunk))
+                    .zip(v.chunks_mut(chunk))
+                    .zip(g.chunks(chunk))
+                    .collect();
+                pool.scoped_map(items, |(((pc, mc), vc), gc)| {
+                    step_chunk(pc, mc, vc, gc, lr, bc1, bc2)
+                });
             }
         }
+    }
+}
+
+/// Elementwise AdamW update over one contiguous chunk.
+fn step_chunk(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+) {
+    for i in 0..g.len() {
+        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+        v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        let upd = (m[i] / bc1) / ((v[i] / bc2).sqrt() + EPS);
+        p[i] -= lr * (upd + WEIGHT_DECAY * p[i]);
     }
 }
 

@@ -1,7 +1,559 @@
-//! Dense math kernels for the host model (row-major f32).
+//! Dense math kernels for the host model (row-major f32): a blocked,
+//! panel-packed, multithreaded GEMM engine plus softmax/activation helpers.
 //!
-//! Loop orders are chosen for contiguous inner loops; the perf pass
-//! (EXPERIMENTS.md §Perf) iterates on these.
+//! ## Tiling scheme
+//!
+//! Every `matmul_*` entry funnels into one engine, [`gemm`] /
+//! [`gemm_with`]: `C (m,n) += alpha * op(A) (m,k) @ op(B) (k,n)` where
+//! `op` is identity or transpose ([`Trans`]), so all four storage
+//! combinations (`nt`, `nn`, `tn`, `tt`) share a single optimized path.
+//!
+//! * **Microkernel** — a register-tiled `MR x NR` (4x8) block of C held in
+//!   independent accumulators; the inner loop walks packed panels so the
+//!   autovectorizer emits wide fma (same multi-accumulator trick as
+//!   [`dot`]).
+//! * **Packing** — B is packed once per call into `NR`-wide column panels
+//!   (`KC`-deep blocks, k-major inside each panel) and A into `MR`-wide
+//!   row panels per `(row-block, k-block)`, so the microkernel reads both
+//!   operands contiguously regardless of the source layout/transpose.
+//! * **Blocking** — k is split into `KC` blocks (packed-B block stays
+//!   cache-resident), rows into `MC` blocks (packed-A fits L2).
+//! * **Threading** — row-blocks of C are distributed over the process
+//!   global [`pool`] (worker count from `MOS_THREADS`, default
+//!   `available_parallelism`). Each C element is accumulated by exactly
+//!   one worker in the same k-order regardless of the worker count, so
+//!   results are **bitwise identical** for any `MOS_THREADS` (see the
+//!   thread-invariance tests).
+//! * **Small shapes** fall back to the scalar kernels (packing overhead
+//!   dominates below ~64k flops); `m = 1` decode rows use a
+//!   column-partitioned dot/axpy path instead of row tiles.
+//!
+//! Scratch buffers (packing panels, per-head attention temporaries, the
+//! backward pass) come from a per-thread [`Arena`] via [`scratch_take`] /
+//! [`scratch_put`] so steady-state training/serving does not allocate.
+
+use crate::util::threadpool::{self, ThreadPool};
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------------
+// thread pool
+// ---------------------------------------------------------------------------
+
+/// Process-global worker pool for GEMM and factor precompute. Sized by
+/// `MOS_THREADS` (default: `available_parallelism`). Built lazily on first
+/// use so short CLI paths never spawn workers.
+pub fn pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::env::var("MOS_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            });
+        ThreadPool::new(n)
+    })
+}
+
+/// Pool for an auto-parallel kernel call from the current thread: the
+/// global pool, unless this thread *is* a pool worker (nested fan-out runs
+/// serial — see `threadpool::in_worker`).
+fn auto_pool() -> Option<&'static ThreadPool> {
+    if threadpool::in_worker() {
+        None
+    } else {
+        Some(pool())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scratch arena
+// ---------------------------------------------------------------------------
+
+/// A recycling pool of `Vec<f32>` scratch buffers: `take` hands out a
+/// zero-filled buffer (reusing the allocation of a previously `put` one
+/// when large enough), so hot loops stop allocating fresh vectors.
+#[derive(Default)]
+pub struct Arena {
+    free: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena { free: Vec::new() }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = match self.free.iter().position(|b| b.capacity() >= len) {
+            Some(i) => self.free.swap_remove(i),
+            None => self.free.pop().unwrap_or_default(),
+        };
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer for reuse by a later `take`.
+    pub fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.free.push(v);
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Arena> = RefCell::new(Arena::new());
+}
+
+/// Take a zero-filled buffer from the current thread's scratch arena.
+pub fn scratch_take(len: usize) -> Vec<f32> {
+    SCRATCH.with(|a| a.borrow_mut().take(len))
+}
+
+/// Return a buffer to the current thread's scratch arena.
+pub fn scratch_put(v: Vec<f32>) {
+    SCRATCH.with(|a| a.borrow_mut().put(v))
+}
+
+// ---------------------------------------------------------------------------
+// GEMM engine
+// ---------------------------------------------------------------------------
+
+/// Storage of an operand: `N` = stored as the logical matrix, `T` = stored
+/// as its transpose (so logical `A (m,k)` with `Trans::T` is a `(k,m)`
+/// row-major buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trans {
+    N,
+    T,
+}
+
+/// Microkernel tile height (C rows per register tile).
+const MR: usize = 4;
+/// Microkernel tile width (C cols per register tile).
+const NR: usize = 8;
+/// k-blocking: depth of one packed panel block.
+const KC: usize = 256;
+/// Row-blocking: A rows packed per inner block (multiple of MR).
+const MC: usize = 64;
+/// Below this many flops the scalar kernels win (packing overhead).
+const SMALL_FLOPS: usize = 1 << 16;
+/// Below this many flops a single core is faster than fan-out.
+const PAR_FLOPS: usize = 1 << 21;
+
+fn div_up(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// `c (m,n) += alpha * op(a) @ op(b)` on the auto-selected pool (global
+/// pool, or inline when already on a pool worker).
+pub fn gemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    gemm_with(auto_pool(), m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// [`gemm`] with an explicit pool (`None` = single-threaded). Benches and
+/// the thread-invariance tests pin pools through this entry.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with(
+    pool: Option<&ThreadPool>,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(n)
+        .saturating_mul(k);
+    if m == 1 {
+        // decode row: no row tiles to pack; dot/axpy split across columns
+        return gemm_row(pool.filter(|_| flops >= PAR_FLOPS), n, k, alpha, a, b, tb, c);
+    }
+    if m < MR {
+        // too few rows for a register tile (e.g. low-rank dA: m = r); below
+        // the parallel threshold use the scalar kernels, above it run each
+        // row through the column-partitioned path (a low-rank backward GEMM
+        // can be many MFLOP even with m = 2)
+        if flops < PAR_FLOPS || pool.is_none() {
+            return gemm_small(m, n, k, alpha, a, ta, b, tb, c);
+        }
+        let mut arow = scratch_take(k);
+        for i in 0..m {
+            match ta {
+                Trans::N => arow.copy_from_slice(&a[i * k..(i + 1) * k]),
+                Trans::T => {
+                    for (p, v) in arow.iter_mut().enumerate() {
+                        *v = a[p * m + i];
+                    }
+                }
+            }
+            gemm_row(pool, n, k, alpha, &arow, b, tb, &mut c[i * n..(i + 1) * n]);
+        }
+        scratch_put(arow);
+        return;
+    }
+    if flops < SMALL_FLOPS {
+        return gemm_small(m, n, k, alpha, a, ta, b, tb, c);
+    }
+    let pool = pool.filter(|_| flops >= PAR_FLOPS);
+    gemm_blocked(pool, m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// Scalar fallback for small problems — the seed's loop-ordered kernels,
+/// kept as the low-overhead path (and mirrored by the naive test oracle).
+#[allow(clippy::too_many_arguments)]
+fn gemm_small(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    match (ta, tb) {
+        (Trans::N, Trans::T) => {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += alpha * dot(arow, &b[j * k..(j + 1) * k]);
+                }
+            }
+        }
+        (Trans::N, Trans::N) => {
+            for i in 0..m {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for p in 0..k {
+                    let av = a[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let av = av * alpha;
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        (Trans::T, Trans::N) => {
+            for p in 0..k {
+                let arow = &a[p * m..(p + 1) * m];
+                let brow = &b[p * n..(p + 1) * n];
+                for i in 0..m {
+                    let av = arow[i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let av = av * alpha;
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        (Trans::T, Trans::T) => {
+            for i in 0..m {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in 0..n {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for p in 0..k {
+                        acc += a[p * m + i] * brow[p];
+                    }
+                    crow[j] += alpha * acc;
+                }
+            }
+        }
+    }
+}
+
+/// `m == 1` path: one C row, partitioned across columns when a pool is
+/// given. With a single row, `a` has identical layout under `N` and `T`
+/// (a length-k strip), so only `tb` matters.
+fn gemm_row(
+    pool: Option<&ThreadPool>,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    let row_range = |j0: usize, cchunk: &mut [f32]| match tb {
+        Trans::T => {
+            for (jj, cv) in cchunk.iter_mut().enumerate() {
+                let j = j0 + jj;
+                *cv += alpha * dot(a, &b[j * k..(j + 1) * k]);
+            }
+        }
+        Trans::N => {
+            for (p, &av) in a.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let av = av * alpha;
+                let brow = &b[p * n + j0..p * n + j0 + cchunk.len()];
+                for (cv, bv) in cchunk.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    };
+    let nth = pool.map(|p| p.workers()).unwrap_or(1);
+    if nth <= 1 || n < 2 * NR {
+        return row_range(0, c);
+    }
+    let chunk = div_up(n, nth).max(NR);
+    let mut tasks: Vec<(usize, &mut [f32])> = Vec::new();
+    let mut rest: &mut [f32] = c;
+    let mut j0 = 0usize;
+    while !rest.is_empty() {
+        let w = chunk.min(rest.len());
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(w);
+        tasks.push((j0, head));
+        rest = tail;
+        j0 += w;
+    }
+    pool.unwrap().scoped_map(tasks, |(j0, cchunk)| row_range(j0, cchunk));
+}
+
+/// Blocked path: pack B once, then fan row-blocks of C out over the pool.
+#[allow(clippy::too_many_arguments)]
+fn gemm_blocked(
+    pool: Option<&ThreadPool>,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    let n_round = div_up(n, NR) * NR;
+    let mut bp = scratch_take(k * n_round);
+    pack_b(&mut bp, b, tb, k, n, n_round);
+
+    let nth = pool.map(|p| p.workers()).unwrap_or(1);
+    let max_chunks = div_up(m, MR);
+    if nth <= 1 || max_chunks < 2 {
+        run_chunk(a, ta, m, k, n, n_round, alpha, &bp, 0, m, c);
+    } else {
+        let nchunks = nth.min(max_chunks);
+        let chunk_rows = div_up(div_up(m, nchunks), MR) * MR;
+        let mut tasks: Vec<(usize, usize, &mut [f32])> = Vec::new();
+        let mut rest: &mut [f32] = c;
+        let mut i0 = 0usize;
+        while i0 < m {
+            let rows = chunk_rows.min(m - i0);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+            tasks.push((i0, rows, head));
+            rest = tail;
+            i0 += rows;
+        }
+        let bp_ref: &[f32] = &bp;
+        pool.unwrap().scoped_map(tasks, |(i0, rows, cchunk)| {
+            run_chunk(a, ta, m, k, n, n_round, alpha, bp_ref, i0, rows, cchunk)
+        });
+    }
+    scratch_put(bp);
+}
+
+/// Pack all of B into NR-wide column panels, KC-deep blocks: the block for
+/// k-range `[pc, pc+kc)` starts at `pc * n_round`; inside it, panel `jp`
+/// (columns `[jp*NR, jp*NR+NR)`) is `kc * NR` contiguous floats, k-major.
+/// Padded columns (n..n_round) stay zero (the scratch buffer is zeroed).
+fn pack_b(bp: &mut [f32], b: &[f32], tb: Trans, k: usize, n: usize, n_round: usize) {
+    let npanels = n_round / NR;
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        let block = &mut bp[pc * n_round..pc * n_round + kc * n_round];
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let w = NR.min(n - j0);
+            let panel = &mut block[jp * kc * NR..(jp + 1) * kc * NR];
+            match tb {
+                Trans::N => {
+                    for p in 0..kc {
+                        let src = (pc + p) * n + j0;
+                        panel[p * NR..p * NR + w]
+                            .copy_from_slice(&b[src..src + w]);
+                    }
+                }
+                Trans::T => {
+                    for jj in 0..w {
+                        let col = &b[(j0 + jj) * k + pc..(j0 + jj) * k + pc + kc];
+                        for (p, &v) in col.iter().enumerate() {
+                            panel[p * NR + jj] = v;
+                        }
+                    }
+                }
+            }
+        }
+        pc += kc;
+    }
+}
+
+/// Pack A rows `[i0, i0+mc)`, k-range `[pc, pc+kc)` into MR-wide row
+/// panels, k-major inside each panel. Lanes past the last real row hold
+/// stale values; their accumulators are discarded at writeback.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    ap: &mut [f32],
+    a: &[f32],
+    ta: Trans,
+    m: usize,
+    k: usize,
+    i0: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+) {
+    let rpanels = div_up(mc, MR);
+    for rp in 0..rpanels {
+        let r0 = i0 + rp * MR;
+        let h = MR.min(i0 + mc - r0);
+        let panel = &mut ap[rp * kc * MR..(rp + 1) * kc * MR];
+        match ta {
+            Trans::N => {
+                for r in 0..h {
+                    let row = &a[(r0 + r) * k + pc..(r0 + r) * k + pc + kc];
+                    for (p, &v) in row.iter().enumerate() {
+                        panel[p * MR + r] = v;
+                    }
+                }
+            }
+            Trans::T => {
+                // a is (k, m): logical A[i, p] = a[p*m + i]
+                for p in 0..kc {
+                    let src = (pc + p) * m + r0;
+                    panel[p * MR..p * MR + h].copy_from_slice(&a[src..src + h]);
+                }
+            }
+        }
+    }
+}
+
+/// Register-tiled MR x NR microkernel over packed panels: independent
+/// accumulators per C element break the fp dependency chain so the
+/// autovectorizer emits wide fma over the NR lane dimension.
+#[inline(always)]
+fn micro_tile(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(ap.len() >= kc * MR);
+    debug_assert!(bp.len() >= kc * NR);
+    for p in 0..kc {
+        let ar = &ap[p * MR..p * MR + MR];
+        let br = &bp[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let av = ar[r];
+            let accr = &mut acc[r];
+            for j in 0..NR {
+                accr[j] += av * br[j];
+            }
+        }
+    }
+}
+
+/// One worker's share: C rows `[i0, i0+rows)` (given as the matching
+/// `cchunk` slice), all k-blocks, all column panels. k-blocks accumulate
+/// in ascending order per element, so the result is independent of how
+/// rows were chunked across workers.
+#[allow(clippy::too_many_arguments)]
+fn run_chunk(
+    a: &[f32],
+    ta: Trans,
+    m: usize,
+    k: usize,
+    n: usize,
+    n_round: usize,
+    alpha: f32,
+    bp: &[f32],
+    i0: usize,
+    rows: usize,
+    cchunk: &mut [f32],
+) {
+    debug_assert_eq!(cchunk.len(), rows * n);
+    let npanels = n_round / NR;
+    let mut ap = scratch_take(MC * KC);
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        let bblock = &bp[pc * n_round..pc * n_round + kc * n_round];
+        let mut ic = 0;
+        while ic < rows {
+            let mc = MC.min(rows - ic);
+            pack_a(&mut ap, a, ta, m, k, i0 + ic, mc, pc, kc);
+            let rpanels = div_up(mc, MR);
+            for rp in 0..rpanels {
+                let appanel = &ap[rp * kc * MR..(rp + 1) * kc * MR];
+                let r0 = ic + rp * MR; // chunk-local row of this tile
+                let h = MR.min(mc - rp * MR);
+                for jp in 0..npanels {
+                    let bpanel = &bblock[jp * kc * NR..(jp + 1) * kc * NR];
+                    let mut acc = [[0.0f32; NR]; MR];
+                    micro_tile(kc, appanel, bpanel, &mut acc);
+                    let j0 = jp * NR;
+                    let w = NR.min(n - j0);
+                    for r in 0..h {
+                        let coff = (r0 + r) * n + j0;
+                        let crow = &mut cchunk[coff..coff + w];
+                        let accr = &acc[r];
+                        if alpha == 1.0 {
+                            for (cv, av) in crow.iter_mut().zip(accr) {
+                                *cv += av;
+                            }
+                        } else {
+                            for (cv, av) in crow.iter_mut().zip(accr) {
+                                *cv += alpha * av;
+                            }
+                        }
+                    }
+                }
+            }
+            ic += mc;
+        }
+        pc += kc;
+    }
+    scratch_put(ap);
+}
+
+// ---------------------------------------------------------------------------
+// public wrappers (seed-compatible signatures)
+// ---------------------------------------------------------------------------
 
 /// Dot product with 4 independent accumulators (breaks the fp dependency
 /// chain so the autovectorizer emits wide fma; EXPERIMENTS.md §Perf).
@@ -24,18 +576,9 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     s0 + s1 + s2 + s3 + tail
 }
 
-/// c (m,n) += a (m,k) @ b^T where b is (n,k). Contiguous dot products.
+/// c (m,n) += a (m,k) @ b^T where b is (n,k).
 pub fn matmul_nt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            crow[j] += dot(arow, &b[j * k..(j + 1) * k]);
-        }
-    }
+    gemm(m, n, k, 1.0, a, Trans::N, b, Trans::T, c)
 }
 
 /// c (m,n) = a (m,k) @ b^T.
@@ -45,24 +588,9 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     c
 }
 
-/// c (m,n) += a (m,k) @ b where b is (k,n). axpy inner loop.
+/// c (m,n) += a (m,k) @ b where b is (k,n).
 pub fn matmul_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for p in 0..k {
-            let av = a[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    gemm(m, n, k, 1.0, a, Trans::N, b, Trans::N, c)
 }
 
 pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -71,25 +599,9 @@ pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     c
 }
 
-/// c (m,n) += a^T @ b where a is (k,m), b is (k,n). axpy over k.
+/// c (m,n) += a^T @ b where a is (k,m), b is (k,n).
 pub fn matmul_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    gemm(m, n, k, 1.0, a, Trans::T, b, Trans::N, c)
 }
 
 pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
@@ -97,6 +609,35 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32>
     matmul_tn_acc(a, b, &mut c, k, m, n);
     c
 }
+
+/// Cache-blocked transpose of a row-major (rows, cols) matrix into
+/// (cols, rows): 32x32 tiles keep both the reads and the strided writes
+/// inside one cache-line working set.
+pub fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(m.len(), rows * cols);
+    const TB: usize = 32;
+    let mut out = vec![0.0f32; m.len()];
+    let mut r0 = 0;
+    while r0 < rows {
+        let rend = (r0 + TB).min(rows);
+        let mut c0 = 0;
+        while c0 < cols {
+            let cend = (c0 + TB).min(cols);
+            for r in r0..rend {
+                for c in c0..cend {
+                    out[c * rows + r] = m[r * cols + c];
+                }
+            }
+            c0 = cend;
+        }
+        r0 = rend;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// softmax / activations
+// ---------------------------------------------------------------------------
 
 /// In-place numerically-stable softmax over the last `n` of each row.
 pub fn softmax_rows(x: &mut [f32], rows: usize, n: usize) {
@@ -186,6 +727,178 @@ mod tests {
                 1e-4,
                 1e-4,
             )
+        });
+    }
+
+    /// Shapes chosen to cross every tile/panel boundary: not multiples of
+    /// MR/NR/KC, m=1 decode rows, k=2 low-rank, plus the seed's smalls.
+    fn awkward_dims(rng: &mut Rng) -> (usize, usize, usize) {
+        const DIMS: [usize; 12] = [1, 2, 3, 4, 5, 7, 8, 9, 17, 33, 65, 130];
+        (
+            DIMS[rng.range(0, DIMS.len())],
+            DIMS[rng.range(0, DIMS.len())],
+            DIMS[rng.range(0, DIMS.len())],
+        )
+    }
+
+    #[test]
+    fn blocked_engine_matches_naive_all_layouts() {
+        prop::check("blocked-vs-naive", 40, |rng| {
+            let (m, k, n) = awkward_dims(rng);
+            let an: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let at: Vec<f32> = (0..k * m).map(|_| rng.normal()).collect();
+            let bn: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            for (a, ta, b, tb, at_flag, bt_flag) in [
+                (&an, Trans::N, &bt, Trans::T, false, true),
+                (&an, Trans::N, &bn, Trans::N, false, false),
+                (&at, Trans::T, &bn, Trans::N, true, false),
+                (&at, Trans::T, &bt, Trans::T, true, true),
+            ] {
+                // force the blocked path regardless of flop thresholds
+                let mut c = vec![0.0f32; m * n];
+                gemm_blocked(None, m, n, k, 1.0, a, ta, b, tb, &mut c);
+                let want = naive_matmul(a, b, m, k, n, at_flag, bt_flag);
+                prop::assert_allclose(&c, &want, 1e-3, 1e-3)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn public_wrappers_match_naive_medium_shapes() {
+        prop::check("wrappers-medium", 15, |rng| {
+            let m = rng.range(1, 70);
+            let k = rng.range(1, 70);
+            let n = rng.range(1, 70);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            let bn: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let at: Vec<f32> = (0..k * m).map(|_| rng.normal()).collect();
+            prop::assert_allclose(
+                &matmul_nt(&a, &bt, m, k, n),
+                &naive_matmul(&a, &bt, m, k, n, false, true),
+                1e-3,
+                1e-3,
+            )?;
+            prop::assert_allclose(
+                &matmul_nn(&a, &bn, m, k, n),
+                &naive_matmul(&a, &bn, m, k, n, false, false),
+                1e-3,
+                1e-3,
+            )?;
+            prop::assert_allclose(
+                &matmul_tn(&at, &bn, k, m, n),
+                &naive_matmul(&at, &bn, m, k, n, true, false),
+                1e-3,
+                1e-3,
+            )
+        });
+    }
+
+    #[test]
+    fn alpha_scales_accumulation() {
+        let mut rng = Rng::new(7, 0);
+        let (m, k, n) = (13, 21, 17);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut c = vec![1.0f32; m * n];
+        gemm(m, n, k, 0.5, &a, Trans::N, &b, Trans::N, &mut c);
+        let full = naive_matmul(&a, &b, m, k, n, false, false);
+        let want: Vec<f32> = full.iter().map(|v| 1.0 + 0.5 * v).collect();
+        prop::assert_allclose(&c, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        // bitwise identity between serial, 1-thread, and 4-thread runs,
+        // on shapes that exercise the row-chunked and m=1 column paths
+        let pool1 = ThreadPool::new(1);
+        let pool4 = ThreadPool::new(4);
+        let mut rng = Rng::new(11, 3);
+        for (m, k, n) in [(65, 47, 33), (128, 96, 64), (1, 512, 301), (37, 2, 129)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            let run = |pool: Option<&ThreadPool>| -> Vec<u32> {
+                let mut c = vec![0.0f32; m * n];
+                if m == 1 {
+                    gemm_row(pool, n, k, 1.0, &a, &b, Trans::T, &mut c);
+                } else {
+                    gemm_blocked(pool, m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c);
+                }
+                c.iter().map(|v| v.to_bits()).collect()
+            };
+            let serial = run(None);
+            assert_eq!(serial, run(Some(&pool1)), "({m},{k},{n}) 1 thread");
+            assert_eq!(serial, run(Some(&pool4)), "({m},{k},{n}) 4 threads");
+        }
+    }
+
+    #[test]
+    fn public_entry_thread_invariant_above_parallel_threshold() {
+        // flops > PAR_FLOPS: gemm_with engages the pool; covers the row-
+        // chunked blocked path (m=160) and the low-rank m < MR row-split
+        // path (m=2, the backward dA shape)
+        let pool1 = ThreadPool::new(1);
+        let pool4 = ThreadPool::new(4);
+        for (m, k, n, ta) in [
+            (160, 128, 96, Trans::N),
+            (2, 1024, 600, Trans::T),
+            (3, 700, 512, Trans::N),
+        ] {
+            let mut rng = Rng::new(13, 1);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let run = |pool: &ThreadPool| -> Vec<u32> {
+                let mut c = vec![0.0f32; m * n];
+                gemm_with(Some(pool), m, n, k, 1.0, &a, ta, &b, Trans::N, &mut c);
+                c.iter().map(|v| v.to_bits()).collect()
+            };
+            assert_eq!(run(&pool1), run(&pool4), "({m},{k},{n})");
+            // and the parallel path agrees with the serial oracle
+            let mut c = vec![0.0f32; m * n];
+            gemm_with(Some(&pool4), m, n, k, 1.0, &a, ta, &b, Trans::N, &mut c);
+            let want = naive_matmul(&a, &b, m, k, n, ta == Trans::T, false);
+            prop::assert_allclose(&c, &want, 1e-3, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn arena_reuses_and_rezeroes() {
+        let mut ar = Arena::new();
+        let mut v = ar.take(128);
+        assert!(v.iter().all(|&x| x == 0.0));
+        for x in v.iter_mut() {
+            *x = 7.0;
+        }
+        let cap = v.capacity();
+        ar.put(v);
+        let v2 = ar.take(64);
+        assert!(v2.capacity() >= cap.min(128), "allocation not reused");
+        assert_eq!(v2.len(), 64);
+        assert!(v2.iter().all(|&x| x == 0.0), "stale values leaked");
+        ar.put(v2);
+        // larger request than any freed buffer still works
+        let v3 = ar.take(4096);
+        assert_eq!(v3.len(), 4096);
+        assert!(v3.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn transpose_matches_naive() {
+        prop::check("transpose-blocked", 20, |rng| {
+            let r = rng.range(1, 80);
+            let c = rng.range(1, 80);
+            let m: Vec<f32> = (0..r * c).map(|_| rng.normal()).collect();
+            let t = transpose(&m, r, c);
+            for i in 0..r {
+                for j in 0..c {
+                    if t[j * r + i] != m[i * c + j] {
+                        return Err(format!("mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
         });
     }
 

@@ -148,11 +148,8 @@ fn adapted_fwd(
     let (i, o, r) = (f.in_dim, f.out_dim, f.r);
     let mut y = matmul_nt(x, w, rows, i, o);
     let t = matmul_nt(x, &f.a[block], rows, i, r);
-    // y += scale * t @ B^T  (B is (o,r))
-    let mut delta = matmul_nt(&t, &f.b[block], rows, r, o);
-    for (yv, dv) in y.iter_mut().zip(&mut delta) {
-        *yv += scale * *dv;
-    }
+    // y += scale * t @ B^T  (B is (o,r)); scale folds into the GEMM
+    gemm(rows, o, r, scale, &t, Trans::N, &f.b[block], Trans::T, &mut y);
     (y, t)
 }
 
@@ -174,19 +171,15 @@ fn adapted_bwd(
     // dx += dy @ W  (W is (o,i))
     matmul_nn_acc(dy, w, dx, rows, o, i);
     // dt = scale * dy @ B  (B (o,r))
-    let mut dt = matmul_nn(dy, &f.b[block], rows, o, r);
-    for v in &mut dt {
-        *v *= scale;
-    }
+    let mut dt = scratch_take(rows * r);
+    gemm(rows, r, o, scale, dy, Trans::N, &f.b[block], Trans::N, &mut dt);
     // dB += scale * dy^T @ t  (o,r)
-    let mut dyt_t = matmul_tn(dy, t, rows, o, r);
-    for (d, v) in df.b[block].iter_mut().zip(&mut dyt_t) {
-        *d += scale * *v;
-    }
+    gemm(o, r, rows, scale, dy, Trans::T, t, Trans::N, &mut df.b[block]);
     // dA += dt^T @ x  (r,i)
     matmul_tn_acc(&dt, x, &mut df.a[block], rows, r, i);
     // dx += dt @ A  (A (r,i))
     matmul_nn_acc(&dt, &f.a[block], dx, rows, r, i);
+    scratch_put(dt);
 }
 
 /// Full forward. `tokens` is (B*T,) i32. Returns the cache (logits inside).
@@ -215,6 +208,13 @@ pub fn forward(
     }
 
     let att_scale = (hd as f32).powf(-0.5);
+    // per-head gather/score scratch, reused across every (block, batch,
+    // head) iteration instead of reallocating bsz*heads*blocks times
+    let mut qh = scratch_take(t_len * hd);
+    let mut kh = scratch_take(t_len * hd);
+    let mut vh = scratch_take(t_len * hd);
+    let mut ch = scratch_take(t_len * hd);
+    let mut att = scratch_take(t_len * t_len);
     let mut blocks = Vec::with_capacity(cfg.blocks);
     for kb in 0..cfg.blocks {
         let na = &base["norm_attn"].f32s().unwrap()[kb * c..(kb + 1) * c];
@@ -240,9 +240,6 @@ pub fn forward(
         for b in 0..bsz {
             for h in 0..heads {
                 // gather head slices: q_h (T, hd)
-                let mut qh = vec![0.0f32; t_len * hd];
-                let mut kh = vec![0.0f32; t_len * hd];
-                let mut vh = vec![0.0f32; t_len * hd];
                 for tt in 0..t_len {
                     let row = b * t_len + tt;
                     qh[tt * hd..(tt + 1) * hd]
@@ -252,7 +249,8 @@ pub fn forward(
                     vh[tt * hd..(tt + 1) * hd]
                         .copy_from_slice(&v[row * c + h * hd..row * c + (h + 1) * hd]);
                 }
-                let mut att = matmul_nt(&qh, &kh, t_len, hd, t_len);
+                att.fill(0.0);
+                matmul_nt_acc(&qh, &kh, &mut att, t_len, hd, t_len);
                 for i in 0..t_len {
                     for j in 0..t_len {
                         att[i * t_len + j] = if j <= i {
@@ -263,7 +261,8 @@ pub fn forward(
                     }
                 }
                 softmax_rows(&mut att, t_len, t_len);
-                let ch = matmul_nn(&att, &vh, t_len, t_len, hd);
+                ch.fill(0.0);
+                matmul_nn_acc(&att, &vh, &mut ch, t_len, t_len, hd);
                 let off = (b * heads + h) * t_len * t_len;
                 probs[off..off + t_len * t_len].copy_from_slice(&att);
                 for tt in 0..t_len {
@@ -318,6 +317,12 @@ pub fn forward(
             ta,
         });
     }
+
+    scratch_put(qh);
+    scratch_put(kh);
+    scratch_put(vh);
+    scratch_put(ch);
+    scratch_put(att);
 
     let nf = base["norm_final"].f32s().unwrap();
     let x_final_in = x.clone();
@@ -392,7 +397,7 @@ pub fn backward(
 
     // dlogits = (softmax - onehot) * weight / denom
     let denom: f32 = weight.iter().sum::<f32>().max(1.0);
-    let mut dlogits = vec![0.0f32; rows * vocab];
+    let mut dlogits = scratch_take(rows * vocab);
     for row in 0..rows {
         if weight[row] == 0.0 {
             continue;
@@ -413,12 +418,35 @@ pub fn backward(
     }
 
     // dxf = dlogits @ E (V,c)
-    let mut dxf = matmul_nn(&dlogits, embed, rows, vocab, c);
+    let mut dxf = scratch_take(rows * c);
+    matmul_nn_acc(&dlogits, embed, &mut dxf, rows, vocab, c);
+    scratch_put(dlogits);
     // final rmsnorm backward
     let nf = base["norm_final"].f32s().unwrap();
-    let mut dx = vec![0.0f32; rows * c];
+    let mut dx = scratch_take(rows * c);
     rmsnorm_bwd(&cache.x_final_in, nf, &cache.rstd_f, &dxf, c, &mut dx);
-    dxf.clear();
+    scratch_put(dxf);
+
+    // per-block / per-head backward scratch, reused across the whole sweep
+    let mut d_out = scratch_take(rows * c); // residual-branch dy (down / o)
+    let mut d_f = scratch_take(rows * ff);
+    let mut d_g = scratch_take(rows * ff);
+    let mut d_u = scratch_take(rows * ff);
+    let mut d_hn2 = scratch_take(rows * c);
+    let mut d_ctx = scratch_take(rows * c);
+    let mut d_q = scratch_take(rows * c);
+    let mut d_k = scratch_take(rows * c);
+    let mut d_v = scratch_take(rows * c);
+    let mut d_hn1 = scratch_take(rows * c);
+    let mut qh = scratch_take(t_len * hd);
+    let mut kh = scratch_take(t_len * hd);
+    let mut vh = scratch_take(t_len * hd);
+    let mut dch = scratch_take(t_len * hd);
+    let mut dprobs = scratch_take(t_len * t_len);
+    let mut dvh = scratch_take(t_len * hd);
+    let mut dscores = scratch_take(t_len * t_len);
+    let mut dqh = scratch_take(t_len * hd);
+    let mut dkh = scratch_take(t_len * hd);
 
     for kb in (0..cfg.blocks).rev() {
         let bc = &cache.blocks[kb];
@@ -430,8 +458,8 @@ pub fn backward(
         };
 
         // ---- MLP residual: x = x_mid + down(f)
-        let d_down_out = dx.clone(); // gradient wrt down output
-        let mut d_f = vec![0.0f32; rows * ff];
+        d_out.copy_from_slice(&dx); // gradient wrt down output
+        d_f.fill(0.0);
         adapted_bwd(
             &bc.f_val,
             w("down"),
@@ -440,18 +468,16 @@ pub fn backward(
             kb,
             scale,
             rows,
-            &d_down_out,
+            &d_out,
             &mut d_f,
             dfactors.get_mut("down").unwrap(),
         );
-        // f = silu(g_pre) * u_val
-        let mut d_g = vec![0.0f32; rows * ff];
-        let mut d_u = vec![0.0f32; rows * ff];
+        // f = silu(g_pre) * u_val  (d_g/d_u fully overwritten)
         for idx in 0..rows * ff {
             d_g[idx] = d_f[idx] * bc.u_val[idx] * silu_grad(bc.g_pre[idx]);
             d_u[idx] = d_f[idx] * silu(bc.g_pre[idx]);
         }
-        let mut d_hn2 = vec![0.0f32; rows * c];
+        d_hn2.fill(0.0);
         adapted_bwd(
             &bc.hn2,
             w("gate"),
@@ -480,8 +506,8 @@ pub fn backward(
         rmsnorm_bwd(&bc.x_mid, nm, &bc.rstd2, &d_hn2, c, &mut dx);
 
         // ---- attention residual: x_mid = x_in + o(ctx)
-        let d_attn_out = dx.clone();
-        let mut d_ctx = vec![0.0f32; rows * c];
+        d_out.copy_from_slice(&dx);
+        d_ctx.fill(0.0);
         adapted_bwd(
             &bc.ctx,
             w("o"),
@@ -490,21 +516,19 @@ pub fn backward(
             kb,
             scale,
             rows,
-            &d_attn_out,
+            &d_out,
             &mut d_ctx,
             dfactors.get_mut("o").unwrap(),
         );
 
-        // attention backward per (b, h)
-        let mut d_q = vec![0.0f32; rows * c];
-        let mut d_k = vec![0.0f32; rows * c];
-        let mut d_v = vec![0.0f32; rows * c];
+        // attention backward per (b, h); the per-head scatters only cover
+        // heads*head_dim columns, which can be < hidden — re-zero so no
+        // stale gradient survives from the previous block
+        d_q.fill(0.0);
+        d_k.fill(0.0);
+        d_v.fill(0.0);
         for b in 0..bsz {
             for h in 0..heads {
-                let mut kh = vec![0.0f32; t_len * hd];
-                let mut vh = vec![0.0f32; t_len * hd];
-                let mut qh = vec![0.0f32; t_len * hd];
-                let mut dch = vec![0.0f32; t_len * hd];
                 for tt in 0..t_len {
                     let row = b * t_len + tt;
                     qh[tt * hd..(tt + 1) * hd]
@@ -520,11 +544,14 @@ pub fn backward(
                 let off = (b * heads + h) * t_len * t_len;
                 let probs = &bc.probs[off..off + t_len * t_len];
                 // dprobs = dch @ vh^T
-                let dprobs = matmul_nt(&dch, &vh, t_len, hd, t_len);
+                dprobs.fill(0.0);
+                matmul_nt_acc(&dch, &vh, &mut dprobs, t_len, hd, t_len);
                 // dvh = probs^T @ dch
-                let dvh = matmul_tn(probs, &dch, t_len, t_len, hd);
-                // softmax backward: ds = p * (dp - sum(dp * p))
-                let mut dscores = vec![0.0f32; t_len * t_len];
+                dvh.fill(0.0);
+                matmul_tn_acc(probs, &dch, &mut dvh, t_len, t_len, hd);
+                // softmax backward: ds = p * (dp - sum(dp * p));
+                // only the lower triangle is written, so re-zero first
+                dscores.fill(0.0);
                 for i in 0..t_len {
                     let pr = &probs[i * t_len..(i + 1) * t_len];
                     let dpr = &dprobs[i * t_len..(i + 1) * t_len];
@@ -536,8 +563,10 @@ pub fn backward(
                     }
                 }
                 // dqh = dscores @ kh ; dkh = dscores^T @ qh
-                let dqh = matmul_nn(&dscores, &kh, t_len, t_len, hd);
-                let dkh = matmul_tn(&dscores, &qh, t_len, t_len, hd);
+                dqh.fill(0.0);
+                matmul_nn_acc(&dscores, &kh, &mut dqh, t_len, t_len, hd);
+                dkh.fill(0.0);
+                matmul_tn_acc(&dscores, &qh, &mut dkh, t_len, t_len, hd);
                 for tt in 0..t_len {
                     let row = b * t_len + tt;
                     d_q[row * c + h * hd..row * c + (h + 1) * hd]
@@ -550,7 +579,7 @@ pub fn backward(
             }
         }
 
-        let mut d_hn1 = vec![0.0f32; rows * c];
+        d_hn1.fill(0.0);
         adapted_bwd(
             &bc.hn1,
             w("q"),
@@ -588,6 +617,13 @@ pub fn backward(
             dfactors.get_mut("v").unwrap(),
         );
         rmsnorm_bwd(&bc.x_in, na, &bc.rstd1, &d_hn1, c, &mut dx);
+    }
+
+    for buf in [
+        dx, d_out, d_f, d_g, d_u, d_hn2, d_ctx, d_q, d_k, d_v, d_hn1, qh, kh,
+        vh, dch, dprobs, dvh, dscores, dqh, dkh,
+    ] {
+        scratch_put(buf);
     }
 
     (loss_val, dfactors)

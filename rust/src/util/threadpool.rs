@@ -1,11 +1,29 @@
 //! Fixed-size worker thread pool over std::sync primitives (tokio is not
-//! vendored offline; the coordinator uses this for its event loop workers).
+//! vendored offline). The GEMM engine (`model::math::pool`) and the
+//! coordinator's factor precompute share one process-global instance;
+//! [`ThreadPool::scoped_map`] lets hot paths fan work out over *borrowed*
+//! slices without `'static` bounds or per-job clones.
 
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+/// True when the current thread is a pool worker. Nested `scoped_map`
+/// calls (a pool job fanning out onto its own pool) would deadlock a FIFO
+/// queue once every worker is blocked waiting on queued sub-jobs, so
+/// pool-aware callers use this to fall back to inline execution.
+pub fn in_worker() -> bool {
+    IN_POOL.with(|f| f.get())
+}
 
 /// A simple FIFO thread pool. Jobs submitted with [`ThreadPool::execute`]
 /// run on one of `n` workers; dropping the pool joins all workers after the
@@ -25,11 +43,14 @@ impl ThreadPool {
                 let rx = Arc::clone(&rx);
                 thread::Builder::new()
                     .name(format!("mos-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = rx.lock().unwrap().recv();
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // all senders dropped
+                    .spawn(move || {
+                        IN_POOL.with(|f| f.set(true));
+                        loop {
+                            let job = rx.lock().unwrap().recv();
+                            match job {
+                                Ok(job) => job(),
+                                Err(_) => break, // all senders dropped
+                            }
                         }
                     })
                     .expect("spawn worker")
@@ -38,38 +59,111 @@ impl ThreadPool {
         ThreadPool { sender: Some(tx), workers }
     }
 
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn execute_boxed(&self, job: Job) {
         self.sender
             .as_ref()
             .expect("pool shut down")
-            .send(Box::new(f))
+            .send(job)
             .expect("workers alive");
     }
 
-    /// Run `f` over all items, collecting results in order.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.execute_boxed(Box::new(f));
+    }
+
+    /// Run `f` over all items, collecting results in order. Alias for
+    /// [`ThreadPool::scoped_map`] (kept for the original API; unlike the
+    /// old channel-based version, a panicking job no longer kills a
+    /// worker thread).
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
-        T: Send + 'static,
-        R: Send + 'static,
-        F: Fn(T) -> R + Send + Sync + 'static,
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Send + Sync,
     {
-        let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel();
+        self.scoped_map(items, f)
+    }
+
+    /// Run `f` over all items on the pool, blocking until every job has
+    /// finished, and collect results in submission order.
+    ///
+    /// Unlike [`ThreadPool::map`], items, results, and the closure may
+    /// borrow from the caller's stack (no `'static` bound, no `Arc`/clone
+    /// per job): the call does not return until all jobs completed, so the
+    /// borrows stay valid for the jobs' whole lifetime. Called from inside
+    /// a pool worker (nested fan-out) or with 0/1 items, it runs inline on
+    /// the current thread instead of enqueueing.
+    pub fn scoped_map<'scope, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'scope,
+        R: Send + 'scope,
+        F: Fn(T) -> R + Send + Sync + 'scope,
+    {
+        if items.len() <= 1 || self.workers.len() <= 1 || in_worker() {
+            return items.into_iter().map(f).collect();
+        }
+        struct ScopeState {
+            done: Mutex<usize>,
+            cvar: Condvar,
+            panicked: AtomicBool,
+        }
         let n = items.len();
-        for (i, item) in items.into_iter().enumerate() {
-            let tx = tx.clone();
-            let f = Arc::clone(&f);
-            self.execute(move || {
-                let r = f(item);
-                let _ = tx.send((i, r));
-            });
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let state = ScopeState {
+            done: Mutex::new(0),
+            cvar: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        };
+        {
+            let f = &f;
+            let state_ref = &state;
+            let out_addr = out.as_mut_ptr() as usize;
+            for (i, item) in items.into_iter().enumerate() {
+                let job: Box<dyn FnOnce() + Send + 'scope> =
+                    Box::new(move || {
+                        let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                        match r {
+                            // SAFETY: slot i is written by exactly one job,
+                            // and `out` outlives the wait loop below.
+                            Ok(v) => unsafe {
+                                *(out_addr as *mut Option<R>).add(i) = Some(v);
+                            },
+                            Err(_) => {
+                                state_ref.panicked.store(true, Ordering::SeqCst)
+                            }
+                        }
+                        let mut done = state_ref.done.lock().unwrap();
+                        *done += 1;
+                        state_ref.cvar.notify_all();
+                    });
+                // SAFETY: the wait loop below blocks until every job has
+                // run, so the borrows captured by `job` ('scope) are live
+                // for its whole execution; the lifetime is erased only to
+                // pass through the 'static job channel.
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                self.execute_boxed(job);
+            }
+            let mut done = state.done.lock().unwrap();
+            while *done < n {
+                done = state.cvar.wait(done).unwrap();
+            }
         }
-        drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            out[i] = Some(r);
-        }
-        out.into_iter().map(|r| r.expect("worker panicked")).collect()
+        assert!(
+            !state.panicked.load(Ordering::SeqCst),
+            "scoped_map job panicked"
+        );
+        out.into_iter().map(|r| r.expect("job completed")).collect()
     }
 }
 
@@ -113,5 +207,68 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x: i32| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<f32> = (0..64).map(|x| x as f32).collect();
+        // closure borrows `data`; items borrow disjoint chunks of a local
+        let mut sums = vec![0.0f32; 8];
+        let chunks: Vec<(usize, &mut f32)> =
+            sums.iter_mut().enumerate().collect();
+        let out = pool.scoped_map(chunks, |(i, slot)| {
+            let s: f32 = data[i * 8..(i + 1) * 8].iter().sum();
+            *slot = s;
+            i
+        });
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+        for (i, s) in sums.iter().enumerate() {
+            let want: f32 = (i * 8..(i + 1) * 8).map(|x| x as f32).sum();
+            assert_eq!(*s, want);
+        }
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_under_load() {
+        let pool = ThreadPool::new(3);
+        let out = pool.scoped_map((0..200).collect::<Vec<usize>>(), |x| x * 3);
+        assert_eq!(out, (0..200).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_nested_runs_inline() {
+        // a scoped_map job fanning out on the same pool must not deadlock
+        let pool = Arc::new(ThreadPool::new(2));
+        let p2 = Arc::clone(&pool);
+        let out = pool.scoped_map(vec![10usize, 20, 30], move |x| {
+            // in_worker() is set here, so this inner call runs inline
+            p2.scoped_map(vec![x, x + 1], |y| y * 2).iter().sum::<usize>()
+        });
+        assert_eq!(out, vec![42, 82, 122]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped_map job panicked")]
+    fn scoped_map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        pool.scoped_map(vec![0usize, 1, 2, 3], |x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn worker_survives_scoped_panic() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_map(vec![0usize, 1, 2, 3], |_| panic!("boom"));
+        }));
+        assert!(r.is_err());
+        // pool still functional afterwards
+        let out = pool.scoped_map(vec![1usize, 2, 3, 4], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4, 5]);
     }
 }

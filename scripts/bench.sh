@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Perf-trajectory runner: GEMM engine + serving benches with pinned knobs,
+# writing BENCH_gemm.json / BENCH_serving.json at the repo root so every PR
+# can append to the trajectory (ROADMAP.md §Perf).
+#
+# Usage: scripts/bench.sh
+# Override any knob via the environment, e.g. MOS_THREADS=8 scripts/bench.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export MOS_BENCH_OUT="$PWD"
+
+# pinned knobs (override via env)
+export MOS_THREADS="${MOS_THREADS:-$(nproc 2>/dev/null || echo 4)}"
+export MOS_GEMM_MS="${MOS_GEMM_MS:-200}"
+export MOS_SERVE_REQS="${MOS_SERVE_REQS:-48}"
+export MOS_SERVE_TENANTS="${MOS_SERVE_TENANTS:-1,4,16}"
+export MOS_BENCH_BACKEND="${MOS_BENCH_BACKEND:-host}"
+
+# the crate may live at the root or under rust/
+MANIFEST_ARGS=""
+if [ ! -f Cargo.toml ] && [ -f rust/Cargo.toml ]; then
+    MANIFEST_ARGS="--manifest-path rust/Cargo.toml"
+fi
+
+echo "== bench_gemm (MOS_THREADS=$MOS_THREADS, MOS_GEMM_MS=$MOS_GEMM_MS) =="
+# shellcheck disable=SC2086
+cargo bench $MANIFEST_ARGS --bench bench_gemm
+
+echo "== bench_serving (reqs=$MOS_SERVE_REQS, tenants=$MOS_SERVE_TENANTS) =="
+# shellcheck disable=SC2086
+cargo bench $MANIFEST_ARGS --bench bench_serving
+
+echo "wrote $MOS_BENCH_OUT/BENCH_gemm.json and $MOS_BENCH_OUT/BENCH_serving.json"

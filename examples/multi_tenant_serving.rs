@@ -1,34 +1,26 @@
 //! Multi-tenant serving — the paper's motivating scenario, end to end:
 //! many customized models (tenants) share one frozen base; each tenant is
 //! a MoS adapter (pools + router indices). The coordinator batches per
-//! tenant, materializes factors once per tenant (precompute cache), and
-//! enforces a memory budget with LRU eviction.
+//! tenant with round-robin fairness, materializes factors once per tenant
+//! version (precompute cache), bounds its queues with admission control,
+//! and enforces a memory budget with LRU eviction.
 //!
 //! Also contrasts the capacity story: the same budget holds ~8x fewer
 //! LoRA-r8-quality tenants than MoS tenants (the intro's TB-scale claim
-//! scaled down).
+//! scaled down), and tours the typed request lifecycle: per-request
+//! GenOptions, response handles, cancellation, and queue-full shedding.
 //!
 //! Run: cargo run --release --example multi_tenant_serving
 
 use mos::adapter::params::{fmt_bytes, serving_bytes};
-use mos::adapter::{init_params, mos::router::build_router};
 use mos::config::{presets, MethodCfg};
-use mos::coordinator::server::HostEngine;
-use mos::coordinator::{Registry, Server, Tenant};
+use mos::coordinator::{
+    Admission, GenOptions, HostEngine, Registry, ServeError, Server,
+    ServerCfg, TenantSpec,
+};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-
-fn mk_tenant(cfg: &mos::config::ModelCfg, id: String, seed: u64) -> Tenant {
-    let mc = MethodCfg::mos(8, 2, 2, 1);
-    Tenant {
-        id,
-        mc: mc.clone(),
-        params: init_params(cfg, &mc, seed),
-        aux: build_router(cfg, &mc, seed).into_bank(),
-        router_seed: seed,
-    }
-}
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = presets::tiny();
@@ -56,41 +48,57 @@ fn main() -> anyhow::Result<()> {
         capacity / lora_bytes
     );
 
-    // ---- register tenants -------------------------------------------------
+    // ---- register tenants (one-line specs, no Bank ritual) ---------------
     let registry = Arc::new(Registry::new(cfg.clone(), capacity));
+    let mut server = Server::new(
+        Arc::clone(&registry),
+        ServerCfg {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_millis(5),
+            cache_capacity: n_tenants + 1,
+            admission: Admission { per_tenant: 64, global: 256 },
+        },
+    );
     for i in 0..n_tenants {
-        let evicted = registry
-            .register(mk_tenant(&cfg, format!("user-{i:02}"), i as u64))?;
+        let evicted = server.register(
+            &format!("user-{i:02}"),
+            TenantSpec::mos(8, 2, 2, 1).seed(i as u64),
+        )?;
         assert!(evicted.is_empty());
     }
     println!(
-        "registered {n_tenants} tenants; ledger used {}",
+        "registered {} tenants; ledger used {}",
+        server.tenant_ids().len(),
         fmt_bytes(registry.ledger.lock().unwrap().used())
     );
 
     // ---- serve traffic ---------------------------------------------------
-    let mut server = Server::new(
-        Arc::clone(&registry),
-        cfg.batch,
-        Duration::from_millis(5),
-        n_tenants,
-    );
     let cfg2 = cfg.clone();
     server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
 
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
+    let handles: Vec<_> = (0..n_requests)
         .map(|i| {
+            // even requests decode greedily; odd ones sample with a
+            // per-request seed (reproducible under batching)
+            let opts = if i % 2 == 0 {
+                GenOptions::greedy()
+            } else {
+                GenOptions::sample(0.8, 8, i as u64).max_new_tokens(24)
+            };
             server.submit(
                 &format!("user-{:02}", i % n_tenants),
                 &format!("q:{:02}", i % 24),
+                opts,
             )
         })
-        .collect();
+        .collect::<Result<_, ServeError>>()?;
     let mut ok = 0;
-    for rx in rxs {
-        if rx.recv_timeout(Duration::from_secs(300))?.ok {
-            ok += 1;
+    for h in handles {
+        match h.wait_timeout(Duration::from_secs(300)) {
+            Some(Ok(_)) => ok += 1,
+            Some(Err(e)) => println!("request failed: {e}"),
+            None => anyhow::bail!("request timed out"),
         }
     }
     let dt = t0.elapsed().as_secs_f64();
@@ -104,13 +112,27 @@ fn main() -> anyhow::Result<()> {
     let (hits, misses) = server.cache.stats();
     println!(
         "materialization cache: {misses} builds + {hits} hits \
-         (precompute once per tenant — paper Limitations §C)"
+         (precompute once per tenant version — paper Limitations §C)"
     );
+
+    // ---- request lifecycle: cancellation ---------------------------------
+    let doomed = server.submit(
+        "user-00",
+        "q:never-mind",
+        GenOptions::greedy().deadline(Duration::from_secs(5)),
+    )?;
+    doomed.cancel();
+    match doomed.wait() {
+        Err(ServeError::Cancelled) => {
+            println!("\ncancelled request {} dropped before any engine ran it", doomed.id())
+        }
+        other => println!("\nunexpected cancel outcome: {other:?}"),
+    }
 
     // ---- eviction under pressure -----------------------------------------
     println!("\nregistering one more tenant than the budget allows...");
-    let evicted = registry
-        .register(mk_tenant(&cfg, "user-overflow".into(), 99))?;
+    let evicted =
+        server.register("user-overflow", TenantSpec::mos(8, 2, 2, 1).seed(99))?;
     println!(
         "evicted (LRU): {evicted:?}; resident tenants now {}",
         registry.len()

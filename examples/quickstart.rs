@@ -4,17 +4,22 @@
 //! 2. Build a MoS adapter: pools + index router, inspect its structure.
 //! 3. Train it on a synthetic task (PJRT artifacts if present, else host).
 //! 4. Evaluate and print the paper-style metric.
+//! 5. Serve a tenant through the coordinator's typed request lifecycle.
 //!
 //! Run: cargo run --release --example quickstart
 
 use mos::adapter::params::{fmt_params, trainable_params};
 use mos::adapter::{init_params, mos::router::build_router};
 use mos::config::{presets, MethodCfg};
+use mos::coordinator::{
+    GenOptions, HostEngine, Registry, Server, ServerCfg, TenantSpec,
+};
 use mos::data::tasks::{Task, TaskKind};
 use mos::runtime::{Manifest, Runtime};
 use mos::train::host::HostBackend;
 use mos::train::pjrt::PjrtBackend;
 use mos::train::{final_loss, run};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     // ---- 1. parameter accounting ------------------------------------
@@ -77,6 +82,26 @@ fn main() -> anyhow::Result<()> {
         task.name(),
         result.train_seconds,
     );
+    // ---- 5. serve --------------------------------------------------------
+    // one-line tenant lifecycle: spec -> register -> submit with options
+    let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+    let mut server = Server::new(Arc::clone(&registry), ServerCfg::default());
+    server.register("quickstart", TenantSpec::mos(8, 2, 2, 1).seed(0))?;
+    let cfg2 = cfg.clone();
+    server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+    let handle = server.submit(
+        "quickstart",
+        "hello",
+        GenOptions::sample(0.8, 8, 42).max_new_tokens(16),
+    )?;
+    let resp = handle.wait()?;
+    println!(
+        "\nserved one sampled request (id {}, seed 42): {:?} \
+         ({} tokens in {:?})",
+        resp.id, resp.text, resp.tokens, resp.latency
+    );
+    server.shutdown();
+
     println!(
         "\nnext: examples/multi_tenant_serving.rs (the serving coordinator) \
          and examples/train_e2e.rs (the full-stack driver)."

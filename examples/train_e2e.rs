@@ -124,5 +124,10 @@ fn main() -> anyhow::Result<()> {
     }
     .save(std::path::Path::new(&ckpt_dir))?;
     println!("servable checkpoint saved to {ckpt_dir}/");
+    println!(
+        "serve it: Checkpoint::load(..) -> \
+         server.register(id, TenantSpec::from_checkpoint(ck)) \
+         (see examples/multi_tenant_serving.rs and DESIGN.md §Serving API)"
+    );
     Ok(())
 }

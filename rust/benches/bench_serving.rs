@@ -7,11 +7,11 @@
 //! Knobs: MOS_SERVE_REQS (default 48), MOS_SERVE_TENANTS (default "1,4,16"),
 //! MOS_BENCH_OUT (dir for BENCH_serving.json, default .)
 
-use mos::adapter::{self, mos::router::build_router};
 use mos::bench::Table;
-use mos::config::{presets, MethodCfg};
-use mos::coordinator::server::HostEngine;
-use mos::coordinator::{Registry, Server, Tenant};
+use mos::config::presets;
+use mos::coordinator::{
+    GenOptions, HostEngine, Registry, Server, ServerCfg, TenantSpec,
+};
 use mos::util::json::Json;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -25,35 +25,41 @@ fn run_scenario(
     let mut cfg = presets::tiny();
     cfg.batch = max_batch.max(1);
     let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
-    for i in 0..n_tenants {
-        let mc = MethodCfg::mos(8, 2, 2, 1);
-        registry
-            .register(Tenant {
-                id: format!("t{i}"),
-                mc: mc.clone(),
-                params: adapter::init_params(&cfg, &mc, i as u64),
-                aux: build_router(&cfg, &mc, i as u64).into_bank(),
-                router_seed: i as u64,
-            })
-            .unwrap();
-    }
     let mut server = Server::new(
         Arc::clone(&registry),
-        max_batch,
-        Duration::from_millis(4),
-        n_tenants.max(4),
+        ServerCfg {
+            max_batch,
+            max_wait: Duration::from_millis(4),
+            cache_capacity: n_tenants.max(4),
+            ..ServerCfg::default()
+        },
     );
+    for i in 0..n_tenants {
+        server
+            .register(
+                &format!("t{i}"),
+                TenantSpec::mos(8, 2, 2, 1).seed(i as u64),
+            )
+            .unwrap();
+    }
     let cfg2 = cfg.clone();
     server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
+    let handles: Vec<_> = (0..n_requests)
         .map(|i| {
-            server.submit(&format!("t{}", i % n_tenants), &format!("q:{:02}", i % 24))
+            server
+                .submit(
+                    &format!("t{}", i % n_tenants),
+                    &format!("q:{:02}", i % 24),
+                    GenOptions::greedy(),
+                )
+                .expect("submit")
         })
         .collect();
-    for rx in rxs {
-        let r = rx.recv_timeout(Duration::from_secs(300)).expect("response");
-        assert!(r.ok);
+    for h in handles {
+        h.wait_timeout(Duration::from_secs(300))
+            .expect("response")
+            .expect("request failed");
     }
     let dt = t0.elapsed().as_secs_f64();
     let rps = n_requests as f64 / dt;

@@ -1,126 +1,276 @@
-//! Dynamic batcher: requests are queued per tenant; a batch is released
-//! when it reaches `max_batch` or the oldest request exceeds `max_wait`.
-//! Per-tenant batching is what makes multi-LoRA serving efficient — one
-//! forward pass per tenant per batch window (S-LoRA/Punica-style).
+//! Dynamic batcher with admission control: requests are queued per tenant;
+//! a batch is released when it reaches `max_batch` or the oldest request
+//! exceeds `max_wait`. Per-tenant batching is what makes multi-LoRA serving
+//! efficient — one forward pass per tenant per batch window
+//! (S-LoRA/Punica-style).
+//!
+//! The queue is bounded ([`Admission`]): past the per-tenant or global
+//! depth limit, `push` rejects with [`ServeError::QueueFull`] instead of
+//! buffering forever. `pop_batch` rotates tenants round-robin so one hot
+//! tenant cannot starve the ready queue, and drops cancelled or
+//! deadline-expired requests before they ever reach an engine.
 
+use super::metrics::Metrics;
+use crate::eval::GenOptions;
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One generation request.
+/// Monotonically increasing request identifier, unique per server.
+pub type RequestId = u64;
+
+/// Typed failure for the request lifecycle, surfaced through `Result` both
+/// at submit time (admission) and in the response channel (execution).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// No tenant with this id is registered.
+    UnknownTenant(String),
+    /// Admission control: the per-tenant or global queue depth is at its
+    /// bound; retry later or shed load upstream.
+    QueueFull { tenant: String },
+    /// The request's deadline budget lapsed before an engine ran it.
+    Deadline,
+    /// The client cancelled the request via its [`super::server::ResponseHandle`].
+    Cancelled,
+    /// The server is shutting down (or shut down before responding).
+    ShuttingDown,
+    /// The engine's forward pass failed.
+    Engine(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownTenant(id) => write!(f, "unknown tenant '{id}'"),
+            ServeError::QueueFull { tenant } => {
+                write!(f, "queue full for tenant '{tenant}'")
+            }
+            ServeError::Deadline => write!(f, "deadline exceeded"),
+            ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+            ServeError::Engine(msg) => write!(f, "engine error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a request resolves to: a typed response or a typed error.
+pub type ServeResult = Result<Response, ServeError>;
+
+/// One generation request in flight inside the coordinator.
 pub struct Request {
+    pub id: RequestId,
     pub tenant: String,
     pub prompt: String,
-    pub respond: mpsc::Sender<Response>,
+    pub opts: GenOptions,
+    /// Absolute deadline, computed from `opts.deadline` at submit time.
+    pub deadline: Option<Instant>,
+    pub respond: mpsc::Sender<ServeResult>,
+    /// Set by the client's handle; the batcher drops flagged requests at
+    /// the next pop, workers re-check before decoding.
+    pub cancelled: Arc<AtomicBool>,
     pub enqueued: Instant,
 }
 
-/// One generation response.
+impl Request {
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    pub fn is_expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
+    }
+}
+
+/// One successful generation.
 #[derive(Debug, Clone)]
 pub struct Response {
+    pub id: RequestId,
     pub tenant: String,
     pub prompt: String,
     pub text: String,
+    /// Number of generated tokens (before detokenization).
+    pub tokens: usize,
     pub latency: Duration,
-    pub ok: bool,
-    pub error: Option<String>,
+}
+
+/// Queue-depth bounds enforced at `push`.
+#[derive(Debug, Clone, Copy)]
+pub struct Admission {
+    pub per_tenant: usize,
+    pub global: usize,
+}
+
+impl Default for Admission {
+    fn default() -> Admission {
+        Admission { per_tenant: 256, global: 1024 }
+    }
 }
 
 struct Queues {
+    /// Invariant: a tenant has a map entry iff its queue is non-empty, and
+    /// appears in `ready` exactly once iff it has a map entry.
     by_tenant: HashMap<String, VecDeque<Request>>,
-    /// FIFO of tenants with pending work (may contain duplicates; filtered
-    /// on pop)
+    /// Round-robin rotation order: pop scans from the front and moves the
+    /// served tenant to the back.
     ready: VecDeque<String>,
+    total: usize,
     closed: bool,
 }
 
-/// Thread-safe dynamic batcher.
+/// Thread-safe dynamic batcher with bounded queues.
 pub struct Batcher {
     q: Mutex<Queues>,
     cv: Condvar,
     pub max_batch: usize,
     pub max_wait: Duration,
+    pub admission: Admission,
+    metrics: Arc<Metrics>,
+}
+
+/// Drop cancelled / deadline-expired requests from every queue, responding
+/// with the typed error, and restore the queue invariants.
+fn purge(q: &mut Queues, metrics: &Metrics) {
+    let now = Instant::now();
+    let mut dropped = 0usize;
+    for reqs in q.by_tenant.values_mut() {
+        if !reqs.iter().any(|r| r.is_cancelled() || r.is_expired(now)) {
+            continue;
+        }
+        let before = reqs.len();
+        let mut kept = VecDeque::with_capacity(before);
+        for req in reqs.drain(..) {
+            if req.is_cancelled() {
+                metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Err(ServeError::Cancelled));
+            } else if req.is_expired(now) {
+                metrics.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Err(ServeError::Deadline));
+            } else {
+                kept.push_back(req);
+            }
+        }
+        dropped += before - kept.len();
+        *reqs = kept;
+    }
+    if dropped == 0 {
+        return;
+    }
+    q.total -= dropped;
+    let Queues { by_tenant, ready, .. } = q;
+    ready.retain(|t| by_tenant.get(t).is_some_and(|r| !r.is_empty()));
+    by_tenant.retain(|_, r| !r.is_empty());
 }
 
 impl Batcher {
-    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+    pub fn new(
+        max_batch: usize,
+        max_wait: Duration,
+        admission: Admission,
+        metrics: Arc<Metrics>,
+    ) -> Batcher {
+        assert!(max_batch > 0);
         Batcher {
             q: Mutex::new(Queues {
                 by_tenant: HashMap::new(),
                 ready: VecDeque::new(),
+                total: 0,
                 closed: false,
             }),
             cv: Condvar::new(),
             max_batch,
             max_wait,
+            admission,
+            metrics,
         }
     }
 
-    pub fn push(&self, req: Request) {
-        let mut q = self.q.lock().unwrap();
+    /// Enqueue a request. Admission control rejects synchronously: the
+    /// request never enters a queue on `Err`, so the caller can surface the
+    /// error at submit time.
+    pub fn push(&self, req: Request) -> Result<(), ServeError> {
+        let mut guard = self.q.lock().unwrap();
+        let q = &mut *guard;
         if q.closed {
-            let _ = req.respond.send(Response {
-                tenant: req.tenant.clone(),
-                prompt: req.prompt.clone(),
-                text: String::new(),
-                latency: Duration::ZERO,
-                ok: false,
-                error: Some("server shutting down".into()),
-            });
-            return;
+            return Err(ServeError::ShuttingDown);
         }
-        q.ready.push_back(req.tenant.clone());
-        q.by_tenant.entry(req.tenant.clone()).or_default().push_back(req);
+        if q.total >= self.admission.global {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::QueueFull { tenant: req.tenant });
+        }
+        let depth = q.by_tenant.get(&req.tenant).map_or(0, |d| d.len());
+        if depth >= self.admission.per_tenant {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::QueueFull { tenant: req.tenant });
+        }
+        if depth == 0 {
+            q.ready.push_back(req.tenant.clone());
+        }
+        q.by_tenant
+            .entry(req.tenant.clone())
+            .or_default()
+            .push_back(req);
+        q.total += 1;
         self.cv.notify_one();
+        Ok(())
     }
 
     /// Pop the next per-tenant batch. Blocks until a batch is ready (full,
     /// or oldest request aged past `max_wait`), or returns None when closed
-    /// and drained.
+    /// and drained. The served tenant rotates to the back of the ready
+    /// order, so concurrently-releasable tenants are served round-robin.
     pub fn pop_batch(&self) -> Option<(String, Vec<Request>)> {
-        let mut q = self.q.lock().unwrap();
+        let mut guard = self.q.lock().unwrap();
         loop {
-            // find a tenant whose batch should be released
-            let mut candidate: Option<String> = None;
+            purge(&mut guard, &self.metrics);
+            let q = &mut *guard;
+            let mut candidate: Option<usize> = None;
             let mut sleep = self.max_wait;
-            for t in q.ready.iter() {
+            for (i, t) in q.ready.iter().enumerate() {
                 let Some(reqs) = q.by_tenant.get(t) else { continue };
-                if reqs.is_empty() {
-                    continue;
-                }
                 let age = reqs.front().unwrap().enqueued.elapsed();
-                if reqs.len() >= self.max_batch || age >= self.max_wait || q.closed {
-                    candidate = Some(t.clone());
+                if reqs.len() >= self.max_batch
+                    || age >= self.max_wait
+                    || q.closed
+                {
+                    candidate = Some(i);
                     break;
                 }
                 sleep = sleep.min(self.max_wait - age);
             }
-            if let Some(t) = candidate {
+            if let Some(i) = candidate {
+                let t = q.ready.remove(i).unwrap();
                 let reqs = q.by_tenant.get_mut(&t).unwrap();
                 let take = reqs.len().min(self.max_batch);
                 let batch: Vec<Request> = reqs.drain(..take).collect();
-                // drop stale ready markers for this tenant
-                q.ready.retain(|x| x != &t);
-                if !q.by_tenant.get(&t).map(|r| r.is_empty()).unwrap_or(true) {
+                q.total -= take;
+                if reqs.is_empty() {
+                    q.by_tenant.remove(&t);
+                } else {
                     q.ready.push_back(t.clone());
                 }
                 return Some((t, batch));
             }
-            let has_pending =
-                q.by_tenant.values().any(|r| !r.is_empty());
-            if q.closed && !has_pending {
+            if q.closed && q.total == 0 {
                 return None;
             }
-            let (q2, _timeout) = self
+            let (g, _timeout) = self
                 .cv
-                .wait_timeout(q, sleep.max(Duration::from_millis(1)))
+                .wait_timeout(guard, sleep.max(Duration::from_millis(1)))
                 .unwrap();
-            q = q2;
+            guard = g;
         }
     }
 
-    /// Signal shutdown: pending requests are still drained.
+    /// Current global queue depth.
+    pub fn depth(&self) -> usize {
+        self.q.lock().unwrap().total
+    }
+
+    /// Signal shutdown: pending requests are still drained by workers;
+    /// subsequent `push` calls fail with `ShuttingDown`.
     pub fn close(&self) {
         self.q.lock().unwrap().closed = true;
         self.cv.notify_all();
@@ -132,13 +282,26 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
-    fn req(tenant: &str, prompt: &str) -> (Request, mpsc::Receiver<Response>) {
+    fn batcher(max_batch: usize, max_wait: Duration) -> Batcher {
+        Batcher::new(
+            max_batch,
+            max_wait,
+            Admission::default(),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    fn req(tenant: &str, prompt: &str) -> (Request, mpsc::Receiver<ServeResult>) {
         let (tx, rx) = mpsc::channel();
         (
             Request {
+                id: 0,
                 tenant: tenant.into(),
                 prompt: prompt.into(),
+                opts: GenOptions::greedy(),
+                deadline: None,
                 respond: tx,
+                cancelled: Arc::new(AtomicBool::new(false)),
                 enqueued: Instant::now(),
             },
             rx,
@@ -147,21 +310,22 @@ mod tests {
 
     #[test]
     fn full_batch_released_immediately() {
-        let b = Batcher::new(2, Duration::from_secs(60));
+        let b = batcher(2, Duration::from_secs(60));
         let (r1, _rx1) = req("a", "p1");
         let (r2, _rx2) = req("a", "p2");
-        b.push(r1);
-        b.push(r2);
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
         let (tenant, batch) = b.pop_batch().unwrap();
         assert_eq!(tenant, "a");
         assert_eq!(batch.len(), 2);
+        assert_eq!(b.depth(), 0);
     }
 
     #[test]
     fn timeout_releases_partial_batch() {
-        let b = Batcher::new(8, Duration::from_millis(20));
+        let b = batcher(8, Duration::from_millis(20));
         let (r1, _rx) = req("a", "p1");
-        b.push(r1);
+        b.push(r1).unwrap();
         let t0 = Instant::now();
         let (_, batch) = b.pop_batch().unwrap();
         assert_eq!(batch.len(), 1);
@@ -170,13 +334,13 @@ mod tests {
 
     #[test]
     fn tenants_batched_separately() {
-        let b = Batcher::new(2, Duration::from_millis(10));
+        let b = batcher(2, Duration::from_millis(10));
         let (r1, _x1) = req("a", "p1");
         let (r2, _x2) = req("b", "p2");
         let (r3, _x3) = req("a", "p3");
-        b.push(r1);
-        b.push(r2);
-        b.push(r3);
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
         let (t1, batch1) = b.pop_batch().unwrap();
         let (t2, batch2) = b.pop_batch().unwrap();
         assert_ne!(t1, t2);
@@ -192,34 +356,32 @@ mod tests {
 
     #[test]
     fn close_drains_then_none() {
-        let b = Arc::new(Batcher::new(4, Duration::from_millis(5)));
+        let b = Arc::new(batcher(4, Duration::from_millis(5)));
         let (r1, _x1) = req("a", "p1");
-        b.push(r1);
+        b.push(r1).unwrap();
         b.close();
         assert!(b.pop_batch().is_some());
         assert!(b.pop_batch().is_none());
     }
 
     #[test]
-    fn push_after_close_errors_request() {
-        let b = Batcher::new(4, Duration::from_millis(5));
+    fn push_after_close_rejected() {
+        let b = batcher(4, Duration::from_millis(5));
         b.close();
-        let (r, rx) = req("a", "p");
-        b.push(r);
-        let resp = rx.recv().unwrap();
-        assert!(!resp.ok);
+        let (r, _rx) = req("a", "p");
+        assert_eq!(b.push(r), Err(ServeError::ShuttingDown));
     }
 
     #[test]
     fn concurrent_producers_consumer() {
-        let b = Arc::new(Batcher::new(4, Duration::from_millis(10)));
+        let b = Arc::new(batcher(4, Duration::from_millis(10)));
         let mut rxs = Vec::new();
         let mut handles = Vec::new();
         for i in 0..12 {
             let (r, rx) = req(&format!("t{}", i % 3), &format!("p{i}"));
             rxs.push(rx);
             let b2 = Arc::clone(&b);
-            handles.push(std::thread::spawn(move || b2.push(r)));
+            handles.push(std::thread::spawn(move || b2.push(r).unwrap()));
         }
         for h in handles {
             h.join().unwrap();
@@ -230,5 +392,106 @@ mod tests {
             total += batch.len();
         }
         assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn per_tenant_depth_limit_rejects() {
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::new(
+            8,
+            Duration::from_secs(60),
+            Admission { per_tenant: 2, global: 100 },
+            Arc::clone(&metrics),
+        );
+        let (r1, _x1) = req("a", "p1");
+        let (r2, _x2) = req("a", "p2");
+        let (r3, _x3) = req("a", "p3");
+        let (r4, _x4) = req("b", "p4");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        assert_eq!(
+            b.push(r3),
+            Err(ServeError::QueueFull { tenant: "a".into() })
+        );
+        // other tenants are unaffected by a's full queue
+        b.push(r4).unwrap();
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(b.depth(), 3);
+    }
+
+    #[test]
+    fn global_depth_limit_rejects() {
+        let b = Batcher::new(
+            8,
+            Duration::from_secs(60),
+            Admission { per_tenant: 100, global: 2 },
+            Arc::new(Metrics::new()),
+        );
+        let (r1, _x1) = req("a", "p1");
+        let (r2, _x2) = req("b", "p2");
+        let (r3, _x3) = req("c", "p3");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        assert!(matches!(b.push(r3), Err(ServeError::QueueFull { .. })));
+    }
+
+    #[test]
+    fn cancelled_request_never_batched() {
+        let b = batcher(2, Duration::from_secs(60));
+        let (r1, rx1) = req("a", "p1");
+        let cancel_flag = Arc::clone(&r1.cancelled);
+        let (r2, _x2) = req("a", "p2");
+        let (r3, _x3) = req("a", "p3");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
+        cancel_flag.store(true, Ordering::Relaxed);
+        let (_, batch) = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|r| r.prompt != "p1"));
+        assert_eq!(rx1.recv().unwrap(), Err(ServeError::Cancelled));
+    }
+
+    #[test]
+    fn expired_request_gets_deadline_error() {
+        let b = batcher(2, Duration::from_secs(60));
+        let (mut r1, rx1) = req("a", "p1");
+        r1.deadline = Some(Instant::now()); // already lapsed
+        let (r2, _x2) = req("a", "p2");
+        let (r3, _x3) = req("a", "p3");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
+        let (_, batch) = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|r| r.prompt != "p1"));
+        assert_eq!(rx1.recv().unwrap(), Err(ServeError::Deadline));
+    }
+
+    #[test]
+    fn round_robin_rotation_prevents_starvation() {
+        // hot tenant always has a full batch ready; the cold tenant's
+        // single request must still be served between hot batches once
+        // releasable, because the served tenant rotates to the back.
+        let b = batcher(2, Duration::from_millis(20));
+        let mut hot_rx = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req("hot", &format!("h{i}"));
+            hot_rx.push(rx);
+            b.push(r).unwrap();
+        }
+        let (rc, _xc) = req("cold", "c0");
+        b.push(rc).unwrap();
+        // hot is at the front and has a full batch: served first, rotated
+        let (t1, _) = b.pop_batch().unwrap();
+        assert_eq!(t1, "hot");
+        // age both past max_wait: now cold (front of rotation) wins even
+        // though hot still holds a full batch
+        std::thread::sleep(Duration::from_millis(25));
+        let (t2, _) = b.pop_batch().unwrap();
+        assert_eq!(t2, "cold", "cold tenant starved by hot tenant");
+        let (t3, batch3) = b.pop_batch().unwrap();
+        assert_eq!(t3, "hot");
+        assert_eq!(batch3.len(), 2);
     }
 }

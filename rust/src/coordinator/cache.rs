@@ -1,9 +1,12 @@
 //! Materialization cache: dense per-tenant low-rank factors, built once per
-//! tenant (index-based routing = pure precompute, paper Limitations §C) and
-//! LRU-evicted under a capacity bound.
+//! tenant version (index-based routing = pure precompute, paper Limitations
+//! §C) and LRU-evicted under a capacity bound.
 //!
 //! This is the serving hot path's key optimization: gather+concat happens
-//! once per tenant, not once per request.
+//! once per tenant, not once per request. Entries are keyed by
+//! `(tenant id, version)` — re-registering a tenant bumps its version in
+//! the [`super::registry::Registry`], so a lookup for the new version
+//! misses and rebuilds instead of serving the old dense factors.
 
 use crate::adapter::{self, Factors};
 use crate::config::{ModelCfg, LAYER_TYPES};
@@ -21,7 +24,8 @@ pub struct MaterializeCache {
 }
 
 struct Inner {
-    map: HashMap<String, TenantFactors>,
+    /// One slot per tenant id, tagged with the version it was built for.
+    map: HashMap<String, (u64, TenantFactors)>,
     order: VecDeque<String>,
     hits: u64,
     misses: u64,
@@ -41,11 +45,18 @@ impl MaterializeCache {
         }
     }
 
-    /// Fetch (or build) the dense factors for a tenant.
+    /// Fetch (or build) the dense factors for a tenant. A version mismatch
+    /// (tenant was re-registered since the entry was built) counts as a
+    /// miss and rebuilds.
     pub fn get(&self, cfg: &ModelCfg, tenant: &Tenant) -> TenantFactors {
         {
             let mut inner = self.inner.lock().unwrap();
-            if let Some(f) = inner.map.get(&tenant.id).cloned() {
+            let hit = inner
+                .map
+                .get(&tenant.id)
+                .filter(|(version, _)| *version == tenant.version)
+                .map(|(_, f)| Arc::clone(f));
+            if let Some(f) = hit {
                 inner.hits += 1;
                 let id = tenant.id.clone();
                 inner.order.retain(|x| x != &id);
@@ -73,21 +84,31 @@ impl MaterializeCache {
         let factors: TenantFactors =
             Arc::new(built.into_iter().collect::<BTreeMap<_, _>>());
         let mut inner = self.inner.lock().unwrap();
-        if !inner.map.contains_key(&tenant.id) {
-            while inner.map.len() >= self.capacity {
+        // never let a racing build of an older version clobber a newer one
+        let stale_winner = inner
+            .map
+            .get(&tenant.id)
+            .is_some_and(|(v, _)| *v > tenant.version);
+        if !stale_winner {
+            let replacing = inner.map.contains_key(&tenant.id);
+            while !replacing && inner.map.len() >= self.capacity {
                 if let Some(victim) = inner.order.pop_front() {
                     inner.map.remove(&victim);
                 } else {
                     break;
                 }
             }
-            inner.map.insert(tenant.id.clone(), Arc::clone(&factors));
-            inner.order.push_back(tenant.id.clone());
+            inner
+                .map
+                .insert(tenant.id.clone(), (tenant.version, Arc::clone(&factors)));
+            let id = tenant.id.clone();
+            inner.order.retain(|x| x != &id);
+            inner.order.push_back(id);
         }
         factors
     }
 
-    /// Drop a tenant (e.g. after re-training updated its params).
+    /// Drop a tenant's entry (any version) — e.g. after removal.
     pub fn invalidate(&self, tenant_id: &str) {
         let mut inner = self.inner.lock().unwrap();
         inner.map.remove(tenant_id);
@@ -112,17 +133,13 @@ impl MaterializeCache {
 mod tests {
     use super::*;
     use crate::config::presets;
-    use crate::config::MethodCfg;
+    use crate::coordinator::registry::{Registry, TenantSpec};
 
     fn tenant(cfg: &ModelCfg, id: &str, seed: u64) -> Tenant {
-        let mc = MethodCfg::mos(4, 2, 2, 0);
-        Tenant {
-            id: id.into(),
-            mc: mc.clone(),
-            params: adapter::init_params(cfg, &mc, seed),
-            aux: adapter::mos::router::build_router(cfg, &mc, seed).into_bank(),
-            router_seed: seed,
-        }
+        TenantSpec::mos(4, 2, 2, 0)
+            .seed(seed)
+            .build(cfg, id)
+            .unwrap()
     }
 
     #[test]
@@ -162,6 +179,44 @@ mod tests {
         cache.invalidate("a");
         let f2 = cache.get(&cfg, &t);
         assert!(!Arc::ptr_eq(&f1, &f2));
+    }
+
+    #[test]
+    fn version_bump_misses_and_replaces() {
+        let cfg = presets::tiny();
+        let cache = MaterializeCache::new(4);
+        let mut t = tenant(&cfg, "a", 1);
+        let f1 = cache.get(&cfg, &t);
+        t.version = 1; // as the registry would assign on re-register
+        let f2 = cache.get(&cfg, &t);
+        assert!(!Arc::ptr_eq(&f1, &f2), "stale factors served after re-register");
+        assert_eq!(cache.stats(), (0, 2));
+        assert_eq!(cache.len(), 1, "old version must not linger");
+        // the new version is now the cached one
+        let f3 = cache.get(&cfg, &t);
+        assert!(Arc::ptr_eq(&f2, &f3));
+    }
+
+    #[test]
+    fn reregistered_tenant_serves_fresh_factors() {
+        // regression: the cache doc promises (id, version) keying; before
+        // the redesign a re-registered tenant kept serving the old dense
+        // factors because the key was the id alone.
+        let cfg = presets::tiny();
+        let reg = Registry::new(cfg.clone(), 1 << 30);
+        let cache = MaterializeCache::new(4);
+        reg.register_spec("a", TenantSpec::mos(4, 2, 2, 0).seed(1))
+            .unwrap();
+        let f1 = cache.get(&cfg, &reg.get("a").unwrap());
+        // re-register with different init: params change, id stays
+        reg.register_spec("a", TenantSpec::mos(4, 2, 2, 0).seed(2))
+            .unwrap();
+        let f2 = cache.get(&cfg, &reg.get("a").unwrap());
+        assert!(!Arc::ptr_eq(&f1, &f2));
+        // the factors must actually differ numerically, not just be rebuilt
+        let (k, old) = f1.iter().next().unwrap();
+        let new = &f2[k];
+        assert_ne!(old.a, new.a, "fresh registration served stale factors");
     }
 
     #[test]

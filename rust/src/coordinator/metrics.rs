@@ -13,6 +13,12 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub errors: AtomicU64,
+    /// admission-control rejections (`ServeError::QueueFull`)
+    pub rejected: AtomicU64,
+    /// requests dropped by client cancellation before reaching an engine
+    pub cancelled: AtomicU64,
+    /// requests dropped because their deadline budget lapsed in queue
+    pub expired: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     pub generated_tokens: AtomicU64,
@@ -48,6 +54,9 @@ impl Metrics {
             requests: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
             generated_tokens: AtomicU64::new(0),
@@ -106,10 +115,13 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} completed={} errors={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms mean_batch={:.2} tokens={}",
+            "requests={} completed={} errors={} rejected={} cancelled={} expired={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms mean_batch={:.2} tokens={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.cancelled.load(Ordering::Relaxed),
+            self.expired.load(Ordering::Relaxed),
             self.mean_latency_us() / 1e3,
             self.percentile_us(50.0) / 1e3,
             self.percentile_us(95.0) / 1e3,

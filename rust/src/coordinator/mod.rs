@@ -3,13 +3,19 @@
 //! models served concurrently, where LoRA state alone would occupy TBs and
 //! MoS shrinks it ~8×).
 //!
-//! Pipeline: requests enter the [`batcher`] keyed by tenant; worker threads
-//! pull per-tenant batches, materialize the tenant's low-rank factors
-//! through the [`cache`] (index-based routing makes this a *precompute*,
-//! paper Limitations §C), run batched greedy decoding, and respond.
-//! The [`registry`] owns tenant state and the [`memory`] ledger enforces
-//! an accelerator-memory budget with LRU eviction; [`metrics`] records
-//! latency/throughput.
+//! Pipeline: requests enter through [`Server::submit`] with per-request
+//! [`GenOptions`], pass admission control into the [`batcher`] keyed by
+//! tenant; worker threads pull per-tenant batches round-robin, materialize
+//! the tenant's low-rank factors through the version-keyed [`cache`]
+//! (index-based routing makes this a *precompute*, paper Limitations §C),
+//! run batched decoding, and resolve each request's
+//! [`server::ResponseHandle`] with a typed `Result`. The [`registry`] owns
+//! versioned tenant state built from [`TenantSpec`]s, the [`memory`] ledger
+//! enforces an accelerator-memory budget with LRU eviction, and
+//! [`metrics`] records latency/throughput/rejections.
+//!
+//! See DESIGN.md §Serving API for the request lifecycle and the migration
+//! notes from the pre-redesign `submit(&str, &str) -> Receiver` surface.
 
 pub mod batcher;
 pub mod cache;
@@ -18,8 +24,14 @@ pub mod metrics;
 pub mod registry;
 pub mod server;
 
-pub use batcher::{Batcher, Request, Response};
+pub use batcher::{
+    Admission, Batcher, Request, RequestId, Response, ServeError, ServeResult,
+};
 pub use memory::MemoryLedger;
 pub use metrics::Metrics;
-pub use registry::{Registry, Tenant};
-pub use server::Server;
+pub use registry::{Registry, Tenant, TenantSpec};
+pub use server::{HostEngine, ResponseHandle, ServeEngine, Server, ServerCfg};
+
+// the per-request options live next to the decoder; re-export them here so
+// serving callers import everything from one place
+pub use crate::eval::GenOptions;

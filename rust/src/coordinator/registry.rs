@@ -3,9 +3,14 @@
 //!
 //! Low-cost switching (paper Sec. 3.6): swapping tenants swaps only the
 //! adapter tensors — the frozen base is shared by everyone.
+//!
+//! Tenants are built from a [`TenantSpec`] (fresh synthetic adapter or a
+//! trained checkpoint) and carry a registry-assigned `version` that bumps
+//! on every re-register, so downstream caches can key on `(id, version)`
+//! and never serve stale factors.
 
 use super::memory::MemoryLedger;
-use crate::adapter::params::serving_bytes;
+use crate::adapter::{self, params::serving_bytes};
 use crate::config::{MethodCfg, ModelCfg};
 use crate::train::checkpoint::Checkpoint;
 use crate::util::bank::Bank;
@@ -21,23 +26,104 @@ pub struct Tenant {
     pub params: Bank,
     pub aux: Bank,
     pub router_seed: u64,
+    /// Assigned by [`Registry::register`]; bumps on re-register. Factor
+    /// caches key on `(id, version)`.
+    pub version: u64,
 }
 
 impl Tenant {
-    pub fn from_checkpoint(id: &str, ck: Checkpoint) -> Tenant {
-        Tenant {
-            id: id.to_string(),
-            mc: ck.mc,
-            params: ck.params,
-            aux: ck.aux,
-            router_seed: ck.router_seed,
-        }
-    }
-
     /// Actual bytes of this tenant's serving state (f32 host copy).
     pub fn actual_bytes(&self) -> usize {
         self.params.values().map(|t| t.nbytes()).sum::<usize>()
             + self.aux.values().map(|t| t.nbytes()).sum::<usize>()
+    }
+}
+
+/// Declarative tenant recipe — replaces the hand-assembled `Bank` + router
+/// ritual every call site used to repeat. Build with one of the method
+/// constructors (or from a checkpoint), then register through
+/// [`super::Server::register`] or [`TenantSpec::build`].
+///
+/// ```ignore
+/// server.register("alice", TenantSpec::mos(8, 2, 2, 1).seed(42))?;
+/// server.register("bob", TenantSpec::lora(8))?;
+/// server.register("carol", TenantSpec::from_checkpoint(ckpt))?;
+/// ```
+#[derive(Debug, Clone)]
+pub enum TenantSpec {
+    /// Freshly initialized adapter of the given geometry and init seed.
+    Fresh { mc: MethodCfg, seed: u64 },
+    /// Trained adapter state loaded from a checkpoint.
+    Checkpoint(Box<Checkpoint>),
+}
+
+impl TenantSpec {
+    /// MoS adapter: rank `r`, `l` shards/vector, `e` budget factor,
+    /// `private_rank` privatized rank slots.
+    pub fn mos(r: usize, l: usize, e: usize, private_rank: usize) -> TenantSpec {
+        TenantSpec::method(MethodCfg::mos(r, l, e, private_rank))
+    }
+
+    /// Plain LoRA adapter of rank `r` (the capacity baseline).
+    pub fn lora(r: usize) -> TenantSpec {
+        TenantSpec::method(MethodCfg::lora(r))
+    }
+
+    /// Any other adapter geometry.
+    pub fn method(mc: MethodCfg) -> TenantSpec {
+        TenantSpec::Fresh { mc, seed: 0 }
+    }
+
+    /// A trained adapter (params + router state) from a checkpoint.
+    pub fn from_checkpoint(ck: Checkpoint) -> TenantSpec {
+        TenantSpec::Checkpoint(Box::new(ck))
+    }
+
+    /// Init seed for a fresh adapter (ignored for checkpoints, which carry
+    /// their own router seed).
+    pub fn seed(mut self, seed: u64) -> TenantSpec {
+        if let TenantSpec::Fresh { seed: s, .. } = &mut self {
+            *s = seed;
+        }
+        self
+    }
+
+    /// The adapter geometry this spec will register.
+    pub fn method_cfg(&self) -> &MethodCfg {
+        match self {
+            TenantSpec::Fresh { mc, .. } => mc,
+            TenantSpec::Checkpoint(ck) => &ck.mc,
+        }
+    }
+
+    /// Materialize the tenant state for `id` on the given base geometry.
+    /// Version starts at 0; the registry assigns the real one.
+    pub fn build(self, cfg: &ModelCfg, id: &str) -> Result<Tenant> {
+        match self {
+            TenantSpec::Fresh { mc, seed } => {
+                mc.validate(cfg)?;
+                Ok(Tenant {
+                    id: id.to_string(),
+                    params: adapter::init_params(cfg, &mc, seed),
+                    aux: adapter::mos::router::build_router(cfg, &mc, seed)
+                        .into_bank(),
+                    mc,
+                    router_seed: seed,
+                    version: 0,
+                })
+            }
+            TenantSpec::Checkpoint(ck) => {
+                ck.mc.validate(cfg)?;
+                Ok(Tenant {
+                    id: id.to_string(),
+                    mc: ck.mc,
+                    params: ck.params,
+                    aux: ck.aux,
+                    router_seed: ck.router_seed,
+                    version: 0,
+                })
+            }
+        }
     }
 }
 
@@ -46,6 +132,9 @@ pub struct Registry {
     pub cfg: ModelCfg,
     tenants: RwLock<HashMap<String, Arc<Tenant>>>,
     pub ledger: Mutex<MemoryLedger>,
+    /// Persistent per-id version counters (survive remove/evict, so a
+    /// re-registered tenant can never alias a stale cache entry).
+    versions: Mutex<HashMap<String, u64>>,
 }
 
 impl Registry {
@@ -54,12 +143,15 @@ impl Registry {
             cfg,
             tenants: RwLock::new(HashMap::new()),
             ledger: Mutex::new(MemoryLedger::new(capacity_bytes)),
+            versions: Mutex::new(HashMap::new()),
         }
     }
 
     /// Register (or replace) a tenant; may evict LRU tenants to fit.
-    /// Returns the evicted tenant ids.
-    pub fn register(&self, tenant: Tenant) -> Result<Vec<String>> {
+    /// Assigns the tenant's version (previous version + 1 on re-register,
+    /// even across an intervening remove/evict). Returns the evicted
+    /// tenant ids.
+    pub fn register(&self, mut tenant: Tenant) -> Result<Vec<String>> {
         tenant.mc.validate(&self.cfg)?;
         // the analytic model (what a GPU deployment would allocate, fp32)
         let bytes = serving_bytes(&self.cfg, &tenant.mc, 4);
@@ -76,8 +168,25 @@ impl Registry {
         for id in &evicted {
             map.remove(id);
         }
+        // assign the version under the same write lock as the insert, so
+        // concurrent re-registers of one id commit versions in map order
+        // (lock order is always tenants -> versions; no other path nests)
+        {
+            let mut versions = self.versions.lock().unwrap();
+            let v = versions
+                .entry(tenant.id.clone())
+                .and_modify(|v| *v += 1)
+                .or_insert(0);
+            tenant.version = *v;
+        }
         map.insert(tenant.id.clone(), Arc::new(tenant));
         Ok(evicted)
+    }
+
+    /// Build a tenant from a spec against this registry's geometry, then
+    /// register it.
+    pub fn register_spec(&self, id: &str, spec: TenantSpec) -> Result<Vec<String>> {
+        self.register(spec.build(&self.cfg, id)?)
     }
 
     pub fn get(&self, id: &str) -> Option<Arc<Tenant>> {
@@ -112,18 +221,13 @@ impl Registry {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::adapter;
     use crate::config::presets;
 
     fn mk_tenant(cfg: &ModelCfg, id: &str, seed: u64) -> Tenant {
-        let mc = MethodCfg::mos(8, 2, 2, 1);
-        Tenant {
-            id: id.into(),
-            mc: mc.clone(),
-            params: adapter::init_params(cfg, &mc, seed),
-            aux: adapter::mos::router::build_router(cfg, &mc, seed).into_bank(),
-            router_seed: seed,
-        }
+        TenantSpec::mos(8, 2, 2, 1)
+            .seed(seed)
+            .build(cfg, id)
+            .unwrap()
     }
 
     #[test]
@@ -137,6 +241,36 @@ mod tests {
         assert_eq!(reg.len(), 1);
         assert!(reg.remove("alice"));
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn versions_bump_on_reregister() {
+        let cfg = presets::tiny();
+        let reg = Registry::new(cfg.clone(), 1 << 30);
+        reg.register(mk_tenant(&cfg, "a", 1)).unwrap();
+        assert_eq!(reg.get("a").unwrap().version, 0);
+        reg.register(mk_tenant(&cfg, "a", 2)).unwrap();
+        assert_eq!(reg.get("a").unwrap().version, 1);
+        // version survives removal: a third registration must not reuse 0
+        reg.remove("a");
+        reg.register(mk_tenant(&cfg, "a", 3)).unwrap();
+        assert_eq!(reg.get("a").unwrap().version, 2);
+    }
+
+    #[test]
+    fn spec_builders_cover_methods() {
+        let cfg = presets::tiny();
+        let reg = Registry::new(cfg.clone(), 1 << 30);
+        reg.register_spec("m", TenantSpec::mos(4, 2, 2, 0).seed(7))
+            .unwrap();
+        reg.register_spec("l", TenantSpec::lora(4)).unwrap();
+        reg.register_spec("v", TenantSpec::method(MethodCfg::vera(4)))
+            .unwrap();
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.get("m").unwrap().router_seed, 7);
+        // fresh-spec determinism: same seed rebuilds identical router state
+        let again = TenantSpec::mos(4, 2, 2, 0).seed(7).build(&cfg, "m").unwrap();
+        assert_eq!(again.aux, reg.get("m").unwrap().aux);
     }
 
     #[test]
@@ -177,8 +311,8 @@ mod tests {
     fn rejects_invalid_method_for_geometry() {
         let cfg = presets::tiny();
         let reg = Registry::new(cfg.clone(), 1 << 30);
-        let mut t = mk_tenant(&cfg, "bad", 0);
-        t.mc.l = 7; // doesn't divide dims
-        assert!(reg.register(t).is_err());
+        let mut mc = MethodCfg::mos(8, 2, 2, 1);
+        mc.l = 7; // doesn't divide dims
+        assert!(reg.register_spec("bad", TenantSpec::method(mc)).is_err());
     }
 }

@@ -1,16 +1,25 @@
 //! The serving event loop: worker threads pull per-tenant batches from the
-//! batcher, materialize factors through the cache, run batched greedy
-//! decoding, and deliver responses. Engines are worker-owned (one PJRT
-//! executable or host model per worker), so no engine needs to be `Sync`.
+//! batcher, materialize factors through the cache, run batched decoding
+//! with each request's [`GenOptions`], and deliver typed responses.
+//! Engines are worker-owned (one PJRT executable or host model per
+//! worker), so no engine needs to be `Sync`.
+//!
+//! Request lifecycle (see DESIGN.md §Serving API):
+//! `submit(tenant, prompt, opts) -> Result<ResponseHandle, ServeError>`;
+//! the handle resolves exactly once to `Result<Response, ServeError>` via
+//! `wait` / `wait_timeout` / `try_wait`, and `cancel` drops the request
+//! from the queue before it reaches an engine.
 
-use super::batcher::{Batcher, Request, Response};
+use super::batcher::{
+    Admission, Batcher, Request, RequestId, Response, ServeError, ServeResult,
+};
 use super::cache::{MaterializeCache, TenantFactors};
 use super::metrics::Metrics;
-use super::registry::{Registry, Tenant};
+use super::registry::{Registry, Tenant, TenantSpec};
 use crate::data::tokenizer::Tokenizer;
-use crate::eval::greedy_decode;
+use crate::eval::{decode, GenOptions};
 use anyhow::Result;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -64,6 +73,82 @@ impl ServeEngine for HostEngine {
     }
 }
 
+/// Serving knobs, grouped so `Server::new` stays stable as knobs grow.
+#[derive(Debug, Clone)]
+pub struct ServerCfg {
+    /// Per-tenant batch released at this size.
+    pub max_batch: usize,
+    /// ... or when the oldest queued request reaches this age.
+    pub max_wait: Duration,
+    /// Materialization-cache capacity (tenants).
+    pub cache_capacity: usize,
+    /// Queue-depth bounds; past them `submit` returns `QueueFull`.
+    pub admission: Admission,
+}
+
+impl Default for ServerCfg {
+    fn default() -> ServerCfg {
+        ServerCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            cache_capacity: 64,
+            admission: Admission::default(),
+        }
+    }
+}
+
+/// Client-side handle for one submitted request. Resolves exactly once.
+pub struct ResponseHandle {
+    id: RequestId,
+    tenant: String,
+    rx: mpsc::Receiver<ServeResult>,
+    cancelled: Arc<AtomicBool>,
+}
+
+impl ResponseHandle {
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Ask the coordinator to drop this request. Queued requests never
+    /// reach an engine (they resolve to `Err(Cancelled)`); a request
+    /// already decoding completes normally.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the request resolves.
+    pub fn wait(&self) -> ServeResult {
+        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+    }
+
+    /// Block up to `timeout`; `None` means still in flight.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<ServeResult> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(ServeError::ShuttingDown))
+            }
+        }
+    }
+
+    /// Non-blocking poll; `None` means still in flight.
+    pub fn try_wait(&self) -> Option<ServeResult> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(ServeError::ShuttingDown))
+            }
+        }
+    }
+}
+
 /// The coordinator server.
 pub struct Server {
     pub registry: Arc<Registry>,
@@ -71,21 +156,24 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     pub cache: Arc<MaterializeCache>,
     workers: Vec<thread::JoinHandle<()>>,
+    next_id: AtomicU64,
 }
 
 impl Server {
-    pub fn new(
-        registry: Arc<Registry>,
-        max_batch: usize,
-        max_wait: Duration,
-        cache_capacity: usize,
-    ) -> Server {
+    pub fn new(registry: Arc<Registry>, cfg: ServerCfg) -> Server {
+        let metrics = Arc::new(Metrics::new());
         Server {
             registry,
-            batcher: Arc::new(Batcher::new(max_batch, max_wait)),
-            metrics: Arc::new(Metrics::new()),
-            cache: Arc::new(MaterializeCache::new(cache_capacity)),
+            batcher: Arc::new(Batcher::new(
+                cfg.max_batch,
+                cfg.max_wait,
+                cfg.admission,
+                Arc::clone(&metrics),
+            )),
+            metrics,
+            cache: Arc::new(MaterializeCache::new(cfg.cache_capacity)),
             workers: Vec::new(),
+            next_id: AtomicU64::new(0),
         }
     }
 
@@ -120,6 +208,33 @@ impl Server {
         }
     }
 
+    /// Build a tenant from a spec and register it (replacing any previous
+    /// registration under this id — the version bump makes the next
+    /// factor lookup rebuild). Returns LRU-evicted tenant ids.
+    pub fn register(&self, id: &str, spec: TenantSpec) -> Result<Vec<String>> {
+        let evicted = self.registry.register_spec(id, spec)?;
+        self.cache.invalidate(id);
+        for e in &evicted {
+            self.cache.invalidate(e);
+        }
+        Ok(evicted)
+    }
+
+    /// Drop a tenant and its cached factors. Queued requests for it
+    /// resolve to `Err(UnknownTenant)` when a worker picks them up.
+    pub fn remove(&self, id: &str) -> bool {
+        let removed = self.registry.remove(id);
+        if removed {
+            self.cache.invalidate(id);
+        }
+        removed
+    }
+
+    /// Ids of all registered tenants.
+    pub fn tenant_ids(&self) -> Vec<String> {
+        self.registry.ids()
+    }
+
     /// Materialize dense factors for every registered tenant ahead of
     /// traffic, fanning the per-tenant (and, inside, per-block) precompute
     /// out over the shared math pool. First requests then hit a warm
@@ -141,17 +256,40 @@ impl Server {
         n
     }
 
-    /// Enqueue a request; returns the response channel.
-    pub fn submit(&self, tenant: &str, prompt: &str) -> mpsc::Receiver<Response> {
-        let (tx, rx) = mpsc::channel();
+    /// Enqueue a request with per-request generation options. Fails fast
+    /// with a typed error (unknown tenant, full queue, shutdown); on
+    /// success the returned handle resolves exactly once.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        prompt: &str,
+        opts: GenOptions,
+    ) -> std::result::Result<ResponseHandle, ServeError> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if self.registry.get(tenant).is_none() {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::UnknownTenant(tenant.to_string()));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let deadline = opts.deadline.map(|budget| Instant::now() + budget);
         self.batcher.push(Request {
+            id,
             tenant: tenant.to_string(),
             prompt: prompt.to_string(),
+            opts,
+            deadline,
             respond: tx,
+            cancelled: Arc::clone(&cancelled),
             enqueued: Instant::now(),
-        });
-        rx
+        })?;
+        Ok(ResponseHandle {
+            id,
+            tenant: tenant.to_string(),
+            rx,
+            cancelled,
+        })
     }
 
     /// Drain and stop all workers.
@@ -169,6 +307,22 @@ impl Drop for Server {
     }
 }
 
+/// Can two requests share one decode call? Compares only the fields
+/// `decode` reads: the deadline budget is enforced per-request before
+/// decoding, and the sampling knobs (temperature/top_k/seed) only matter
+/// when sampling is on — so distinct deadlines (or seeds under greedy)
+/// must not fragment a tenant batch into per-request decodes.
+fn same_decode_opts(a: &GenOptions, b: &GenOptions) -> bool {
+    let sampling = |o: &GenOptions| o.temperature > 0.0;
+    a.max_new_tokens == b.max_new_tokens
+        && a.stop_tokens == b.stop_tokens
+        && sampling(a) == sampling(b)
+        && (!sampling(a)
+            || (a.temperature == b.temperature
+                && a.top_k == b.top_k
+                && a.seed == b.seed))
+}
+
 fn process_batch<E: ServeEngine>(
     registry: &Registry,
     metrics: &Metrics,
@@ -181,14 +335,9 @@ fn process_batch<E: ServeEngine>(
     let Some(tenant) = registry.get(tenant_id) else {
         for req in batch {
             metrics.errors.fetch_add(1, Ordering::Relaxed);
-            let _ = req.respond.send(Response {
-                tenant: tenant_id.to_string(),
-                prompt: req.prompt.clone(),
-                text: String::new(),
-                latency: req.enqueued.elapsed(),
-                ok: false,
-                error: Some(format!("unknown tenant '{tenant_id}'")),
-            });
+            let _ = req
+                .respond
+                .send(Err(ServeError::UnknownTenant(tenant_id.to_string())));
         }
         return;
     };
@@ -196,42 +345,78 @@ fn process_batch<E: ServeEngine>(
     let (bsz, seq, vocab) = engine.shape();
     let tk = Tokenizer::new();
 
-    // chunk requests into engine-sized sub-batches
-    for chunk in batch.chunks(bsz) {
-        let mut prompts: Vec<Vec<i32>> =
-            chunk.iter().map(|r| tk.prompt_tokens(&r.prompt)).collect();
-        while prompts.len() < bsz {
-            prompts.push(vec![crate::data::tokenizer::BOS]);
+    // a request may have been cancelled or expired between pop and now
+    let now = Instant::now();
+    let mut live: Vec<Request> = Vec::with_capacity(batch.len());
+    for req in batch {
+        if req.is_cancelled() {
+            metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+            let _ = req.respond.send(Err(ServeError::Cancelled));
+        } else if req.is_expired(now) {
+            metrics.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = req.respond.send(Err(ServeError::Deadline));
+        } else {
+            live.push(req);
         }
-        let mut err: Option<String> = None;
-        let mut fwd = |tokens: &[i32]| -> Vec<f32> {
-            match engine.forward(&tenant, &factors, tokens) {
-                Ok(l) => l,
-                Err(e) => {
-                    err = Some(e.to_string());
-                    vec![0.0; bsz * seq * vocab]
+    }
+
+    // sub-batch by decode-equivalent options so each decode call runs
+    // under one GenOptions (requests with distinct sampling knobs never
+    // mix, but decode-irrelevant fields don't fragment batches)
+    let mut groups: Vec<(GenOptions, Vec<Request>)> = Vec::new();
+    for req in live {
+        match groups
+            .iter_mut()
+            .find(|(o, _)| same_decode_opts(o, &req.opts))
+        {
+            Some((_, g)) => g.push(req),
+            None => groups.push((req.opts.clone(), vec![req])),
+        }
+    }
+
+    for (opts, reqs) in &groups {
+        for chunk in reqs.chunks(bsz) {
+            let mut prompts: Vec<Vec<i32>> = chunk
+                .iter()
+                .map(|r| tk.prompt_tokens(&r.prompt))
+                .collect();
+            while prompts.len() < bsz {
+                prompts.push(vec![crate::data::tokenizer::BOS]);
+            }
+            let mut err: Option<ServeError> = None;
+            let mut fwd = |tokens: &[i32]| -> Vec<f32> {
+                match engine.forward(&tenant, &factors, tokens) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        err = Some(ServeError::Engine(e.to_string()));
+                        vec![0.0; bsz * seq * vocab]
+                    }
+                }
+            };
+            let outs = decode(&mut fwd, &prompts, opts, seq, vocab);
+            for (req, out) in chunk.iter().zip(&outs) {
+                let latency = req.enqueued.elapsed();
+                match &err {
+                    None => {
+                        metrics.record_latency(latency);
+                        metrics
+                            .generated_tokens
+                            .fetch_add(out.len() as u64, Ordering::Relaxed);
+                        let _ = req.respond.send(Ok(Response {
+                            id: req.id,
+                            tenant: tenant_id.to_string(),
+                            prompt: req.prompt.clone(),
+                            text: tk.decode(out),
+                            tokens: out.len(),
+                            latency,
+                        }));
+                    }
+                    Some(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.respond.send(Err(e.clone()));
+                    }
                 }
             }
-        };
-        let outs = greedy_decode(&mut fwd, &prompts, seq, vocab);
-        for (req, out) in chunk.iter().zip(&outs) {
-            let latency = req.enqueued.elapsed();
-            if err.is_none() {
-                metrics.record_latency(latency);
-                metrics
-                    .generated_tokens
-                    .fetch_add(out.len() as u64, Ordering::Relaxed);
-            } else {
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-            }
-            let _ = req.respond.send(Response {
-                tenant: tenant_id.to_string(),
-                prompt: req.prompt.clone(),
-                text: tk.decode(out),
-                latency,
-                ok: err.is_none(),
-                error: err.clone(),
-            });
         }
     }
 }
@@ -239,75 +424,204 @@ fn process_batch<E: ServeEngine>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::adapter;
-    use crate::config::{presets, MethodCfg};
+    use crate::config::presets;
 
     fn make_server(capacity: usize) -> (Server, crate::config::ModelCfg) {
         let mut cfg = presets::tiny();
         cfg.batch = 4; // keep unit tests fast
-        let registry =
-            Arc::new(Registry::new(cfg.clone(), capacity));
+        let registry = Arc::new(Registry::new(cfg.clone(), capacity));
         let server = Server::new(
             registry,
-            4,
-            Duration::from_millis(10),
-            8,
+            ServerCfg {
+                max_batch: 4,
+                max_wait: Duration::from_millis(10),
+                cache_capacity: 8,
+                ..ServerCfg::default()
+            },
         );
         (server, cfg)
     }
 
-    fn add_tenant(server: &Server, cfg: &crate::config::ModelCfg, id: &str, seed: u64) {
-        let mc = MethodCfg::mos(4, 2, 2, 0);
-        server
-            .registry
-            .register(Tenant {
-                id: id.into(),
-                mc: mc.clone(),
-                params: adapter::init_params(cfg, &mc, seed),
-                aux: adapter::mos::router::build_router(cfg, &mc, seed)
-                    .into_bank(),
-                router_seed: seed,
-            })
-            .unwrap();
+    fn spec(seed: u64) -> TenantSpec {
+        TenantSpec::mos(4, 2, 2, 0).seed(seed)
     }
 
     #[test]
     fn serves_requests_end_to_end() {
         let (mut server, cfg) = make_server(1 << 30);
-        add_tenant(&server, &cfg, "alice", 1);
-        add_tenant(&server, &cfg, "bob", 2);
+        server.register("alice", spec(1)).unwrap();
+        server.register("bob", spec(2)).unwrap();
         let cfg2 = cfg.clone();
         server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
-        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
         for i in 0..6 {
             let tenant = if i % 2 == 0 { "alice" } else { "bob" };
-            rxs.push(server.submit(tenant, &format!("q:{i}")));
+            handles.push(
+                server
+                    .submit(tenant, &format!("q:{i}"), GenOptions::greedy())
+                    .unwrap(),
+            );
         }
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
-            assert!(resp.ok, "{:?}", resp.error);
+        for (i, h) in handles.into_iter().enumerate() {
+            let resp = h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+            assert_eq!(resp.prompt, format!("q:{i}"));
+            assert_eq!(resp.id, i as RequestId);
         }
         assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 6);
         server.shutdown();
     }
 
     #[test]
-    fn unknown_tenant_errors() {
+    fn unknown_tenant_fails_at_submit() {
+        let (server, _cfg) = make_server(1 << 30);
+        let err = server
+            .submit("ghost", "hello", GenOptions::greedy())
+            .unwrap_err();
+        assert_eq!(err, ServeError::UnknownTenant("ghost".into()));
+    }
+
+    #[test]
+    fn tenant_removed_after_submit_errors_in_response() {
         let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let h = server
+            .submit("alice", "q:x", GenOptions::greedy())
+            .unwrap();
+        assert!(server.remove("alice"));
         let cfg2 = cfg.clone();
         server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
-        let rx = server.submit("ghost", "hello");
-        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
-        assert!(!resp.ok);
-        assert!(resp.error.unwrap().contains("unknown tenant"));
+        assert_eq!(
+            h.wait(),
+            Err(ServeError::UnknownTenant("alice".into()))
+        );
         server.shutdown();
+    }
+
+    #[test]
+    fn queue_full_rejected_at_submit() {
+        let mut cfg = presets::tiny();
+        cfg.batch = 4;
+        let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+        let server = Server::new(
+            registry,
+            ServerCfg {
+                admission: Admission { per_tenant: 2, global: 100 },
+                ..ServerCfg::default()
+            },
+        );
+        server.register("alice", spec(1)).unwrap();
+        // no workers: the queue only fills
+        let _h1 = server.submit("alice", "q:0", GenOptions::greedy()).unwrap();
+        let _h2 = server.submit("alice", "q:1", GenOptions::greedy()).unwrap();
+        let err = server
+            .submit("alice", "q:2", GenOptions::greedy())
+            .unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { tenant: "alice".into() });
+        assert_eq!(server.metrics.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn cancelled_request_resolves_cancelled() {
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let h = server
+            .submit("alice", "q:cancel", GenOptions::greedy())
+            .unwrap();
+        h.cancel();
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        assert_eq!(h.wait(), Err(ServeError::Cancelled));
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_resolves_deadline() {
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let h = server
+            .submit(
+                "alice",
+                "q:late",
+                GenOptions::greedy().deadline(Duration::ZERO),
+            )
+            .unwrap();
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        assert_eq!(h.wait(), Err(ServeError::Deadline));
+        server.shutdown();
+    }
+
+    #[test]
+    fn sampling_deterministic_through_server() {
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let opts = GenOptions::sample(0.9, 8, 1234).max_new_tokens(12);
+        let run = |prompt: &str| {
+            server
+                .submit("alice", prompt, opts.clone())
+                .unwrap()
+                .wait_timeout(Duration::from_secs(30))
+                .unwrap()
+                .unwrap()
+        };
+        let a = run("q:sample");
+        let b = run("q:sample");
+        assert_eq!(a.text, b.text, "same per-request seed must reproduce");
+        server.shutdown();
+    }
+
+    #[test]
+    fn reregister_serves_fresh_factors() {
+        // regression for the stale-factors bug: re-registering a tenant
+        // with new params must not serve the old dense factors
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let first = server
+            .submit("alice", "q:00", GenOptions::greedy())
+            .unwrap()
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap()
+            .unwrap();
+        server.register("alice", spec(99)).unwrap();
+        let tenant = server.registry.get("alice").unwrap();
+        assert_eq!(tenant.version, 1);
+        let refreshed = server
+            .submit("alice", "q:00", GenOptions::greedy())
+            .unwrap()
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap()
+            .unwrap();
+        // the cache must have rebuilt for the new version (numeric factor
+        // freshness is asserted in cache::tests::reregistered_tenant_...)
+        let (_, misses) = server.cache.stats();
+        assert_eq!(misses, 2, "re-registered tenant served stale factors");
+        let _ = (first, refreshed);
+        server.shutdown();
+    }
+
+    #[test]
+    fn lifecycle_register_remove_ids() {
+        let (server, _cfg) = make_server(1 << 30);
+        server.register("a", spec(1)).unwrap();
+        server.register("b", spec(2)).unwrap();
+        let mut ids = server.tenant_ids();
+        ids.sort();
+        assert_eq!(ids, vec!["a".to_string(), "b".to_string()]);
+        assert!(server.remove("a"));
+        assert!(!server.remove("a"));
+        assert_eq!(server.tenant_ids(), vec!["b".to_string()]);
     }
 
     #[test]
     fn prewarm_materializes_every_tenant_once() {
         let (mut server, cfg) = make_server(1 << 30);
         for (i, id) in ["alice", "bob", "carol"].iter().enumerate() {
-            add_tenant(&server, &cfg, id, i as u64 + 1);
+            server.register(id, spec(i as u64 + 1)).unwrap();
         }
         assert_eq!(server.prewarm(), 3);
         assert_eq!(server.cache.stats(), (0, 3));
@@ -315,8 +629,8 @@ mod tests {
         let cfg2 = cfg.clone();
         server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
         for id in ["alice", "bob", "carol"] {
-            let rx = server.submit(id, "q:warm");
-            assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().ok);
+            let h = server.submit(id, "q:warm", GenOptions::greedy()).unwrap();
+            assert!(h.wait_timeout(Duration::from_secs(30)).unwrap().is_ok());
         }
         let (hits, misses) = server.cache.stats();
         assert_eq!(misses, 3, "prewarmed tenants must not re-materialize");
@@ -327,16 +641,40 @@ mod tests {
     #[test]
     fn cache_reused_across_requests() {
         let (mut server, cfg) = make_server(1 << 30);
-        add_tenant(&server, &cfg, "alice", 1);
+        server.register("alice", spec(1)).unwrap();
         let cfg2 = cfg.clone();
         server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
         for _ in 0..3 {
-            let rx = server.submit("alice", "q:aa");
-            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let h = server.submit("alice", "q:aa", GenOptions::greedy()).unwrap();
+            h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
         }
         let (hits, misses) = server.cache.stats();
         assert_eq!(misses, 1, "factors must be materialized exactly once");
         assert!(hits >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn mixed_options_in_one_tenant_batch() {
+        // greedy and sampled requests for the same tenant land in one
+        // batcher batch but must decode in separate option groups
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let h1 = server.submit("alice", "q:00", GenOptions::greedy()).unwrap();
+        let h2 = server
+            .submit(
+                "alice",
+                "q:00",
+                GenOptions::sample(1.0, 0, 5).max_new_tokens(8),
+            )
+            .unwrap();
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let r1 = h1.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        let r2 = h2.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert!(r2.tokens <= 8);
+        // both resolved; ids are distinct and stable
+        assert_ne!(r1.id, r2.id);
         server.shutdown();
     }
 }

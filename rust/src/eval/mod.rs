@@ -1,37 +1,141 @@
-//! Evaluation harness: batched greedy decoding through any forward function
-//! (host model or PJRT artifact) + per-task scoring, reporting the paper's
+//! Evaluation harness: batched decoding through any forward function (host
+//! model or PJRT artifact) + per-task scoring, reporting the paper's
 //! metrics (EM / final-number EM / F1 / pass@1).
+//!
+//! [`decode`] is the one decoder shared by eval, the serving workers, and
+//! the benches: greedy when `temperature == 0`, otherwise temperature /
+//! top-k sampling driven by the per-request seed in [`GenOptions`].
 
 use crate::data::tasks::{Metric, Task};
 use crate::data::tokenizer::{Tokenizer, EOS, PAD};
+use crate::util::rng::Rng;
+use std::time::Duration;
 
 /// Forward function: padded tokens (batch*seq) -> logits (batch*seq*vocab).
 pub type ForwardFn<'a> = dyn FnMut(&[i32]) -> Vec<f32> + 'a;
 
-/// Batched greedy decoding.
+/// RNG stream tag for generation sampling (distinct from router/task
+/// streams so a shared seed never aliases them).
+const GEN_STREAM: u64 = 0x6d6f735f67656e; // "mos_gen"
+
+/// Per-request generation options, flowing `submit -> Batcher -> Request ->
+/// ServeEngine/decode` (and used directly by [`evaluate`] with the greedy
+/// defaults).
+///
+/// Determinism contract: a row's sample stream is derived from `seed` only
+/// (not from its batch position), so the generated tokens for a given
+/// `(prompt, GenOptions)` pair are reproducible regardless of how the
+/// server batched the request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenOptions {
+    /// Cap on generated tokens per request (`usize::MAX` = until a stop
+    /// token or the sequence window fills).
+    pub max_new_tokens: usize,
+    /// Tokens that terminate generation without being emitted. Default
+    /// `[EOS]`; empty = run until `max_new_tokens`/window.
+    pub stop_tokens: Vec<i32>,
+    /// `0.0` = greedy argmax; `> 0` = softmax sampling at this temperature.
+    pub temperature: f32,
+    /// Restrict sampling to the `top_k` highest logits (`0` = full vocab).
+    pub top_k: usize,
+    /// Seed for the sampling stream (ignored when greedy).
+    pub seed: u64,
+    /// Serving deadline budget, measured from submit time. The decoder
+    /// ignores it; the coordinator rejects requests whose budget lapses
+    /// before they reach an engine (`ServeError::Deadline`).
+    pub deadline: Option<Duration>,
+}
+
+impl Default for GenOptions {
+    fn default() -> GenOptions {
+        GenOptions {
+            max_new_tokens: usize::MAX,
+            stop_tokens: vec![EOS],
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            deadline: None,
+        }
+    }
+}
+
+impl GenOptions {
+    /// Greedy decoding to EOS — the pre-redesign `greedy_decode` behavior.
+    pub fn greedy() -> GenOptions {
+        GenOptions::default()
+    }
+
+    /// Temperature/top-k sampling with a per-request seed.
+    pub fn sample(temperature: f32, top_k: usize, seed: u64) -> GenOptions {
+        GenOptions {
+            temperature,
+            top_k,
+            seed,
+            ..GenOptions::default()
+        }
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> GenOptions {
+        self.max_new_tokens = n;
+        self
+    }
+
+    pub fn stop_tokens(mut self, tokens: Vec<i32>) -> GenOptions {
+        self.stop_tokens = tokens;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> GenOptions {
+        self.seed = seed;
+        self
+    }
+
+    pub fn deadline(mut self, budget: Duration) -> GenOptions {
+        self.deadline = Some(budget);
+        self
+    }
+}
+
+/// Batched decoding.
 ///
 /// `prompts` are token prefixes (already `BOS .. SEP`). Each row decodes
-/// until EOS or `seq` is full; every decode step is one full forward pass
-/// (no KV cache — the presets are small; see DESIGN.md §Perf for the
-/// decode-step artifact discussion).
-pub fn greedy_decode(
+/// until a stop token, `max_new_tokens`, or `seq` is full; every decode
+/// step is one full forward pass (no KV cache — the presets are small; see
+/// DESIGN.md §Perf for the decode-step artifact discussion).
+///
+/// Degenerate rows are safe: an empty prompt or a prompt that already
+/// fills `seq` produces an empty generation instead of indexing out of
+/// the logits.
+pub fn decode(
     forward: &mut ForwardFn,
     prompts: &[Vec<i32>],
+    opts: &GenOptions,
     seq: usize,
     vocab: usize,
 ) -> Vec<Vec<i32>> {
     let bsz = prompts.len();
     let mut tokens = vec![PAD; bsz * seq];
     let mut lens: Vec<usize> = Vec::with_capacity(bsz);
+    let mut done = vec![false; bsz];
     for (row, p) in prompts.iter().enumerate() {
         let n = p.len().min(seq);
         tokens[row * seq..row * seq + n].copy_from_slice(&p[..n]);
         lens.push(n);
+        // an empty prompt has no position to read next-token logits from
+        if n == 0 {
+            done[row] = true;
+        }
     }
-    let mut done = vec![false; bsz];
     let mut out: Vec<Vec<i32>> = vec![Vec::new(); bsz];
+    if opts.max_new_tokens == 0 {
+        return out;
+    }
+    // one RNG per row, all derived from the request seed alone, so a row's
+    // samples do not depend on its batch position
+    let mut rngs: Vec<Rng> =
+        (0..bsz).map(|_| Rng::new(opts.seed, GEN_STREAM)).collect();
     loop {
-        if done.iter().all(|&d| d) || lens.iter().all(|&l| l >= seq) {
+        if (0..bsz).all(|r| done[r] || lens[r] >= seq) {
             break;
         }
         let logits = forward(&tokens);
@@ -42,16 +146,25 @@ pub fn greedy_decode(
                 continue;
             }
             let pos = lens[row] - 1;
-            let lrow = &logits[(row * seq + pos) * vocab..(row * seq + pos + 1) * vocab];
-            let next = (0..vocab)
-                .max_by(|&a, &b| lrow[a].total_cmp(&lrow[b]))
-                .unwrap() as i32;
-            if next == EOS {
+            let lrow =
+                &logits[(row * seq + pos) * vocab..(row * seq + pos + 1) * vocab];
+            let next = if opts.temperature > 0.0 {
+                sample_token(lrow, opts.temperature, opts.top_k, &mut rngs[row])
+                    as i32
+            } else {
+                (0..vocab)
+                    .max_by(|&a, &b| lrow[a].total_cmp(&lrow[b]))
+                    .unwrap() as i32
+            };
+            if opts.stop_tokens.contains(&next) {
                 done[row] = true;
             } else {
                 tokens[row * seq + lens[row]] = next;
                 out[row].push(next);
                 lens[row] += 1;
+                if out[row].len() >= opts.max_new_tokens {
+                    done[row] = true;
+                }
                 progressed = true;
             }
         }
@@ -60,6 +173,41 @@ pub fn greedy_decode(
         }
     }
     out
+}
+
+/// Sample from softmax(logits / temperature) over the top-k logits.
+/// Ties in the top-k cut are broken by ascending index so the candidate
+/// set is deterministic.
+fn sample_token(
+    lrow: &[f32],
+    temperature: f32,
+    top_k: usize,
+    rng: &mut Rng,
+) -> usize {
+    let k = if top_k == 0 {
+        lrow.len()
+    } else {
+        top_k.min(lrow.len())
+    };
+    let mut idx: Vec<usize> = (0..lrow.len()).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        lrow[b].total_cmp(&lrow[a]).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    let max = lrow[idx[0]];
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((lrow[i] - max) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (j, &i) in idx.iter().enumerate() {
+        u -= weights[j];
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    idx[k - 1]
 }
 
 /// Scores for one task evaluation.
@@ -75,7 +223,7 @@ pub struct EvalReport {
 }
 
 /// Evaluate a task: generate completions for `n` eval examples with the
-/// given forward function and aggregate the task metric.
+/// given forward function (greedy decoding) and aggregate the task metric.
 pub fn evaluate(
     task: &Task,
     forward: &mut ForwardFn,
@@ -85,6 +233,7 @@ pub fn evaluate(
     vocab: usize,
 ) -> EvalReport {
     let tk = Tokenizer::new();
+    let opts = GenOptions::greedy();
     let mut scores = Vec::with_capacity(n);
     let mut ems = Vec::with_capacity(n);
     let mut idx = 0;
@@ -101,7 +250,7 @@ pub fn evaluate(
         while prompts.len() < batch {
             prompts.push(vec![crate::data::tokenizer::BOS]);
         }
-        let generations = greedy_decode(forward, &prompts, seq, vocab);
+        let generations = decode(forward, &prompts, &opts, seq, vocab);
         let debug = std::env::var("MOS_EVAL_DEBUG").is_ok();
         for (ex, gen) in examples.iter().zip(&generations) {
             let text = tk.decode(gen);
@@ -155,15 +304,22 @@ mod tests {
         }
     }
 
+    /// Flat logits: every token equally likely — pure test of the sample
+    /// stream (greedy argmax would always pick token 0).
+    fn flat_forward(vocab: usize, seq: usize) -> impl FnMut(&[i32]) -> Vec<f32> {
+        move |tokens: &[i32]| vec![0.0f32; (tokens.len() / seq) * seq * vocab]
+    }
+
     #[test]
     fn greedy_decode_echo() {
+        // temperature 0 must reproduce the pre-GenOptions greedy outputs
         let tk = Tokenizer::new();
         let vocab = tk.vocab_size();
         let seq = 24;
         let mut fwd = echo_forward(vocab, seq);
         let prompts =
             vec![tk.prompt_tokens("abc"), tk.prompt_tokens("hello")];
-        let outs = greedy_decode(&mut fwd, &prompts, seq, vocab);
+        let outs = decode(&mut fwd, &prompts, &GenOptions::greedy(), seq, vocab);
         assert_eq!(tk.decode(&outs[0]), "abc");
         assert_eq!(tk.decode(&outs[1]), "hello");
     }
@@ -194,7 +350,121 @@ mod tests {
             }
             l
         };
-        let outs = greedy_decode(&mut fwd, &[vec![1, 4, 2]], seq, vocab);
+        let outs =
+            decode(&mut fwd, &[vec![1, 4, 2]], &GenOptions::greedy(), seq, vocab);
         assert_eq!(outs[0].len(), seq - 3);
+    }
+
+    #[test]
+    fn degenerate_prompts_are_safe() {
+        // empty prompt (tokenizes to zero tokens) and a prompt that already
+        // overfills seq must both yield empty generations, not a panic
+        let vocab = 8;
+        let seq = 4;
+        let mut fwd = echo_forward(vocab, seq);
+        let prompts = vec![
+            Vec::new(),            // empty
+            vec![1, 4, 5, 6, 7, 4], // longer than seq
+            vec![1, 4, 2],          // normal row still decodes
+        ];
+        let outs = decode(&mut fwd, &prompts, &GenOptions::greedy(), seq, vocab);
+        assert!(outs[0].is_empty());
+        assert!(outs[1].is_empty());
+        assert_eq!(outs[2].len(), 1); // seq 4 leaves one slot
+    }
+
+    #[test]
+    fn max_new_tokens_caps_generation() {
+        let vocab = 8;
+        let seq = 16;
+        let mut fwd = flat_forward(vocab, seq);
+        // flat logits + greedy always picks argmax 0 (= PAD, not a stop
+        // token by default), so generation runs to the cap
+        let opts = GenOptions::greedy().max_new_tokens(3);
+        let outs = decode(&mut fwd, &[vec![1, 4]], &opts, seq, vocab);
+        assert_eq!(outs[0].len(), 3);
+    }
+
+    #[test]
+    fn custom_stop_tokens_halt() {
+        let vocab = 8;
+        let seq = 16;
+        // model that always wants token 5
+        let mut fwd = |tokens: &[i32]| {
+            let bsz = tokens.len() / seq;
+            let mut l = vec![0.0f32; bsz * seq * vocab];
+            for i in 0..bsz * seq {
+                l[i * vocab + 5] = 1.0;
+            }
+            l
+        };
+        let opts = GenOptions::greedy().stop_tokens(vec![5]);
+        let outs = decode(&mut fwd, &[vec![1, 4]], &opts, seq, vocab);
+        assert!(outs[0].is_empty(), "stop token must not be emitted");
+    }
+
+    #[test]
+    fn sampling_deterministic_per_seed() {
+        let vocab = 8;
+        let seq = 16;
+        let opts = |seed| {
+            GenOptions::sample(1.0, 0, seed)
+                .stop_tokens(Vec::new())
+                .max_new_tokens(12)
+        };
+        let run = |o: &GenOptions| {
+            let mut fwd = flat_forward(vocab, seq);
+            decode(&mut fwd, &[vec![1, 4]], o, seq, vocab)
+        };
+        let a = run(&opts(7));
+        let b = run(&opts(7));
+        assert_eq!(a, b, "same seed must reproduce the same tokens");
+        let c = run(&opts(8));
+        assert_ne!(a, c, "different seeds should diverge on flat logits");
+        // sampled tokens actually vary (not argmax-collapsed)
+        assert!(a[0].iter().any(|&t| t != a[0][0]));
+    }
+
+    #[test]
+    fn sampling_independent_of_batch_position() {
+        // the per-request determinism contract: a request's output does not
+        // depend on where the batcher placed it in a batch
+        let vocab = 8;
+        let seq = 16;
+        let opts = GenOptions::sample(0.8, 4, 11)
+            .stop_tokens(Vec::new())
+            .max_new_tokens(10);
+        let mut fwd = flat_forward(vocab, seq);
+        let alone = decode(&mut fwd, &[vec![1, 4]], &opts, seq, vocab);
+        let mut fwd = flat_forward(vocab, seq);
+        let batched = decode(
+            &mut fwd,
+            &[vec![1, 6, 7], vec![1, 4]],
+            &opts,
+            seq,
+            vocab,
+        );
+        assert_eq!(alone[0], batched[1]);
+    }
+
+    #[test]
+    fn top_k_restricts_candidates() {
+        let vocab = 8;
+        let seq = 16;
+        // token 6 and 7 dominate; top_k=2 must never sample anything else
+        let mut fwd = |tokens: &[i32]| {
+            let bsz = tokens.len() / seq;
+            let mut l = vec![0.0f32; bsz * seq * vocab];
+            for i in 0..bsz * seq {
+                l[i * vocab + 6] = 5.0;
+                l[i * vocab + 7] = 5.0;
+            }
+            l
+        };
+        let opts = GenOptions::sample(1.0, 2, 3)
+            .stop_tokens(Vec::new())
+            .max_new_tokens(12);
+        let outs = decode(&mut fwd, &[vec![1, 4]], &opts, seq, vocab);
+        assert!(outs[0].iter().all(|&t| t == 6 || t == 7), "{:?}", outs[0]);
     }
 }

@@ -15,8 +15,10 @@
 use anyhow::{bail, Context, Result};
 use mos::adapter::params::{fmt_bytes, fmt_params, multi_tenant_bytes, trainable_params};
 use mos::config::{presets, Method, MethodCfg};
-use mos::coordinator::server::HostEngine;
-use mos::coordinator::{Registry, Server, Tenant};
+use mos::coordinator::{
+    Admission, GenOptions, HostEngine, Registry, ServeError, Server, ServerCfg,
+    TenantSpec,
+};
 use mos::data::tasks::{Task, TaskKind};
 use mos::runtime::{Manifest, Runtime};
 use mos::train::checkpoint::Checkpoint;
@@ -60,7 +62,10 @@ fn print_usage() {
          [--private-rank 1] --task recall --steps 300 --lr 0.02 \
          [--backend auto|host|pjrt] [--seed 0] [--out ckpt_dir]\n\
          serve:  --preset tiny --tenants 8 --requests 64 \
-         [--capacity-mb 64] [--workers 1]\n\
+         [--capacity-mb 64] [--workers 1] [--batch 8] [--max-wait-ms 5] \
+         [--queue-per-tenant 256] [--queue-global 1024] \
+         [--max-new-tokens N] [--temperature 0.0] [--top-k 0] \
+         [--sample-seed 0] [--deadline-ms 0]\n\
          eval:   --ckpt ckpt_dir --task recall [--n 32]\n\
          params: --geometry llama2-7b [--tenants 10000]\n\
          info:   [--artifacts DIR]"
@@ -183,18 +188,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let capacity = args.usize("capacity-mb", 64)? << 20;
     let workers = args.usize("workers", 1)?;
 
+    // per-request generation options
+    let temperature = args.f64("temperature", 0.0)? as f32;
+    let mut opts = GenOptions::sample(
+        temperature,
+        args.usize("top-k", 0)?,
+        args.u64("sample-seed", 0)?,
+    )
+    .max_new_tokens(args.usize("max-new-tokens", usize::MAX)?);
+    let deadline_ms = args.u64("deadline-ms", 0)?;
+    if deadline_ms > 0 {
+        opts = opts.deadline(Duration::from_millis(deadline_ms));
+    }
+
     let registry = Arc::new(Registry::new(cfg.clone(), capacity));
+    let mut server = Server::new(
+        Arc::clone(&registry),
+        ServerCfg {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_millis(args.u64("max-wait-ms", 5)?),
+            cache_capacity: n_tenants.max(4),
+            admission: Admission {
+                per_tenant: args.usize("queue-per-tenant", 256)?,
+                global: args.usize("queue-global", 1024)?,
+            },
+        },
+    );
     for i in 0..n_tenants {
-        let mc = MethodCfg::mos(8, 2, 2, 1);
-        let seed = i as u64;
-        registry.register(Tenant {
-            id: format!("tenant-{i}"),
-            mc: mc.clone(),
-            params: mos::adapter::init_params(&cfg, &mc, seed),
-            aux: mos::adapter::mos::router::build_router(&cfg, &mc, seed)
-                .into_bank(),
-            router_seed: seed,
-        })?;
+        server.register(
+            &format!("tenant-{i}"),
+            TenantSpec::mos(8, 2, 2, 1).seed(i as u64),
+        )?;
     }
     println!(
         "registered {n_tenants} MoS tenants; ledger used {} of {}",
@@ -202,31 +226,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_bytes(capacity)
     );
 
-    let mut server = Server::new(
-        Arc::clone(&registry),
-        cfg.batch,
-        Duration::from_millis(5),
-        n_tenants.max(4),
-    );
     let cfg2 = cfg.clone();
     server.start(workers, move |_| HostEngine::new(cfg2.clone(), 0));
 
     let t0 = std::time::Instant::now();
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
+    let mut rejected = 0usize;
     for i in 0..n_requests {
         let tenant = format!("tenant-{}", i % n_tenants);
-        rxs.push(server.submit(&tenant, &format!("q:{:02}", i % 24)));
+        match server.submit(&tenant, &format!("q:{:02}", i % 24), opts.clone()) {
+            Ok(h) => handles.push(h),
+            Err(e @ ServeError::QueueFull { .. }) => {
+                rejected += 1;
+                mos::debuglog!("shed: {e}");
+            }
+            Err(e) => return Err(e.into()),
+        }
     }
-    let mut ok = 0;
-    for rx in rxs {
-        if rx.recv_timeout(Duration::from_secs(120))?.ok {
-            ok += 1;
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for h in handles {
+        match h.wait_timeout(Duration::from_secs(120)) {
+            Some(Ok(_)) => ok += 1,
+            Some(Err(e)) => {
+                failed += 1;
+                mos::debuglog!("request failed: {e}");
+            }
+            None => anyhow::bail!("request timed out after 120s"),
         }
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok}/{n_requests} requests in {dt:.2}s ({:.1} req/s)",
-        n_requests as f64 / dt
+        "served {ok}/{n_requests} requests in {dt:.2}s ({:.1} req/s); \
+         {failed} failed, {rejected} shed by admission control",
+        ok as f64 / dt
     );
     println!("{}", server.metrics.summary());
     let (hits, misses) = server.cache.stats();

@@ -1,13 +1,16 @@
-//! Coordinator integration: train a real adapter, register it as a tenant,
-//! serve requests through the full batcher/cache/server pipeline, and check
-//! the answers match direct (non-served) evaluation.
+//! Coordinator integration: train a real adapter, register it as a tenant
+//! from a checkpoint spec, serve requests through the full
+//! batcher/cache/server pipeline, and check the answers match direct
+//! (non-served) evaluation.
 
 use mos::adapter::mos::router::build_router;
 use mos::config::{presets, MethodCfg};
-use mos::coordinator::server::HostEngine;
-use mos::coordinator::{Registry, Server, Tenant};
+use mos::coordinator::{
+    GenOptions, HostEngine, Registry, Server, ServerCfg, TenantSpec,
+};
 use mos::data::tasks::{Task, TaskKind};
 use mos::data::Tokenizer;
+use mos::train::checkpoint::Checkpoint;
 use mos::train::host::HostBackend;
 use mos::train::run;
 use std::sync::Arc;
@@ -39,26 +42,37 @@ fn trained_tenant_serves_correct_answers() {
         "training made no progress"
     );
 
-    // register the trained adapter as a tenant; serve the same eval
-    // prompts through the coordinator and compare with direct generation.
+    // register the trained adapter as a tenant (checkpoint spec — the same
+    // path a deployment uses); serve the same eval prompts through the
+    // coordinator and compare with direct generation.
     let base = be.model.base.clone();
     let params = be.model.params.clone();
     let aux = be.model.aux.clone();
-    let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
-    registry
-        .register(Tenant {
-            id: "user".into(),
-            mc: mc.clone(),
-            params,
-            aux: aux.clone(),
-            router_seed: seed,
-        })
-        .unwrap();
     // verify router determinism: rebuilding with the stored seed matches
     assert_eq!(build_router(&cfg, &mc, seed).into_bank(), aux);
 
-    let mut server =
-        Server::new(Arc::clone(&registry), cfg.batch, Duration::from_millis(5), 4);
+    let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+    let mut server = Server::new(
+        Arc::clone(&registry),
+        ServerCfg {
+            max_batch: cfg.batch,
+            max_wait: Duration::from_millis(5),
+            cache_capacity: 4,
+            ..ServerCfg::default()
+        },
+    );
+    server
+        .register(
+            "user",
+            TenantSpec::from_checkpoint(Checkpoint {
+                preset: "tiny".into(),
+                mc: mc.clone(),
+                router_seed: seed,
+                params,
+                aux,
+            }),
+        )
+        .unwrap();
     let base2 = base.clone();
     let cfg2 = cfg.clone();
     server.start(1, move |_| HostEngine {
@@ -70,23 +84,30 @@ fn trained_tenant_serves_correct_answers() {
     let tk = Tokenizer::new();
     let mut matched = 0;
     let n = 8;
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
     let mut examples = Vec::new();
     for i in 0..n {
         let ex = task.example("eval", i);
-        rxs.push(server.submit("user", &ex.prompt));
+        handles.push(
+            server
+                .submit("user", &ex.prompt, GenOptions::greedy())
+                .unwrap(),
+        );
         examples.push(ex);
     }
     let mut served_scores = 0.0;
-    for (rx, ex) in rxs.into_iter().zip(&examples) {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
-        assert!(resp.ok, "{:?}", resp.error);
+    for (h, ex) in handles.into_iter().zip(&examples) {
+        let resp = h
+            .wait_timeout(Duration::from_secs(120))
+            .expect("timed out")
+            .expect("request failed");
         served_scores += task.score(ex, &resp.text);
         // served output must equal direct greedy generation
         let mut fwd = |tokens: &[i32]| be.model.forward(tokens);
-        let direct = mos::eval::greedy_decode(
+        let direct = mos::eval::decode(
             &mut fwd,
             &[tk.prompt_tokens(&ex.prompt)],
+            &GenOptions::greedy(),
             cfg.seq,
             cfg.vocab,
         );
@@ -114,25 +135,66 @@ fn memory_pressure_evicts_and_recovers() {
     let one = mos::adapter::params::serving_bytes(&cfg, &mc, 4);
     let registry = Arc::new(Registry::new(cfg.clone(), one * 2 + 100));
     for i in 0..5 {
-        let t = Tenant {
-            id: format!("t{i}"),
-            mc: mc.clone(),
-            params: mos::adapter::init_params(&cfg, &mc, i),
-            aux: build_router(&cfg, &mc, i).into_bank(),
-            router_seed: i,
-        };
-        registry.register(t).unwrap();
+        registry
+            .register_spec(&format!("t{i}"), TenantSpec::mos(8, 2, 2, 1).seed(i))
+            .unwrap();
     }
     // only 2 fit
     assert_eq!(registry.len(), 2);
     // evicted tenants can re-register (recovery path)
-    let t = Tenant {
-        id: "t0".into(),
-        mc: mc.clone(),
-        params: mos::adapter::init_params(&cfg, &mc, 0),
-        aux: build_router(&cfg, &mc, 0).into_bank(),
-        router_seed: 0,
-    };
-    registry.register(t).unwrap();
+    registry
+        .register_spec("t0", TenantSpec::mos(8, 2, 2, 1).seed(0))
+        .unwrap();
     assert!(registry.get("t0").is_some());
+}
+
+#[test]
+fn serving_contract_under_churn() {
+    // end-to-end lifecycle: register -> serve -> re-register (version
+    // bump) -> serve fresh -> remove -> typed UnknownTenant at submit
+    let mut cfg = presets::tiny();
+    cfg.batch = 4;
+    let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+    let mut server = Server::new(
+        Arc::clone(&registry),
+        ServerCfg {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            cache_capacity: 4,
+            ..ServerCfg::default()
+        },
+    );
+    let cfg2 = cfg.clone();
+    server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+
+    server
+        .register("churn", TenantSpec::mos(4, 2, 2, 0).seed(1))
+        .unwrap();
+    let r1 = server
+        .submit("churn", "q:a", GenOptions::greedy())
+        .unwrap()
+        .wait_timeout(Duration::from_secs(60))
+        .unwrap()
+        .unwrap();
+    assert_eq!(r1.tenant, "churn");
+
+    server
+        .register("churn", TenantSpec::mos(4, 2, 2, 0).seed(2))
+        .unwrap();
+    assert_eq!(registry.get("churn").unwrap().version, 1);
+    server
+        .submit("churn", "q:a", GenOptions::greedy())
+        .unwrap()
+        .wait_timeout(Duration::from_secs(60))
+        .unwrap()
+        .unwrap();
+    let (_, misses) = server.cache.stats();
+    assert_eq!(misses, 2, "version bump must rebuild factors");
+
+    assert!(server.remove("churn"));
+    assert!(matches!(
+        server.submit("churn", "q:a", GenOptions::greedy()),
+        Err(mos::coordinator::ServeError::UnknownTenant(_))
+    ));
+    server.shutdown();
 }

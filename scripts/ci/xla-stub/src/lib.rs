@@ -1,0 +1,206 @@
+//! Build-only stub of the vendored `xla` crate.
+//!
+//! The offline build image vendors a real PJRT-backed `xla` crate; public
+//! CI has no access to it, so `scripts/ci_harness.sh` points the generated
+//! Cargo.toml here instead. The contract:
+//!
+//! * host-side `Literal` handling is functional (the `runtime::pjrt` unit
+//!   tests exercise shape/dtype binding round trips), and
+//! * everything that would touch a real PJRT client fails at *runtime*
+//!   with a clear error. The artifact-dependent integration tests skip
+//!   themselves when `make artifacts` hasn't run, so tier-1 still passes.
+//!
+//! Only the API surface `rust/src/runtime/pjrt.rs` consumes is provided.
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable in the xla build stub (CI harness); \
+         run inside the offline image with the real vendored xla crate"
+    )))
+}
+
+/// Element types a `Literal` can hold.
+pub trait NativeType: Copy {
+    fn make_literal(data: &[Self]) -> Literal;
+    fn read_literal(lit: &Literal) -> Option<&[Self]>;
+}
+
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn make_literal(data: &[f32]) -> Literal {
+        Literal::F32 { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+    fn read_literal(lit: &Literal) -> Option<&[f32]> {
+        match lit {
+            Literal::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn make_literal(data: &[i32]) -> Literal {
+        Literal::I32 { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+    fn read_literal(lit: &Literal) -> Option<&[i32]> {
+        match lit {
+            Literal::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::make_literal(data)
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match self {
+            Literal::F32 { data, .. } => data.len() as i64,
+            Literal::I32 { data, .. } => data.len() as i64,
+            Literal::Tuple(_) => {
+                return Err(Error("cannot reshape a tuple literal".into()))
+            }
+        };
+        if want != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elems) from {have} elems"
+            )));
+        }
+        let mut out = self.clone();
+        match &mut out {
+            Literal::F32 { dims: d, .. } | Literal::I32 { dims: d, .. } => {
+                *d = dims.to_vec()
+            }
+            Literal::Tuple(_) => unreachable!(),
+        }
+        Ok(out)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read_literal(self)
+            .map(|d| d.to_vec())
+            .ok_or_else(|| Error("literal dtype mismatch".into()))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            other => Ok(vec![other]),
+        }
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+
+    pub fn client(&self) -> PjRtClient {
+        PjRtClient
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_unpacks() {
+        let t = Literal::Tuple(vec![
+            Literal::vec1(&[1i32]),
+            Literal::vec1(&[2.0f32]),
+        ]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn pjrt_paths_fail_loud() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}

@@ -1,0 +1,39 @@
+#!/usr/bin/env python3
+"""Render a ROADMAP.md Perf-table row from BENCH_gemm.json.
+
+Usage: scripts/perf_row.py [BENCH_gemm.json] [--pr N]
+
+Prints the markdown row matching the ROADMAP Perf table columns:
+| PR | machine | threads | serving-scale GEMM speedup vs seed scalar (min) | geomean |
+
+CI appends this to the job summary and uploads the raw JSON as an
+artifact; the next PR pastes the row into ROADMAP.md.
+"""
+import json
+import platform
+import sys
+
+
+def main() -> int:
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    path = args[0] if args else "BENCH_gemm.json"
+    pr = "2 (GEMM engine)"
+    if "--pr" in sys.argv:
+        pr = sys.argv[sys.argv.index("--pr") + 1]
+    with open(path) as f:
+        bench = json.load(f)
+    head = bench.get("headline", {})
+    machine = f"{platform.system()}-{platform.machine()}"
+    row = "| {} | {} | {} | {:.1f}x | {:.1f}x |".format(
+        pr,
+        machine,
+        int(bench.get("threads", 0)),
+        float(head.get("min_speedup_serving_scale", float("nan"))),
+        float(head.get("geomean_speedup", float("nan"))),
+    )
+    print(row)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -115,6 +115,24 @@ fn main() -> anyhow::Result<()> {
          (precompute once per tenant version — paper Limitations §C)"
     );
 
+    // ---- streaming delivery ----------------------------------------------
+    // tokens arrive through the handle as the KV-cached decode loop emits
+    // them (one single-position step per token); `wait` semantics are
+    // unchanged and the final text always equals the streamed tokens
+    let h = server.submit(
+        "user-01",
+        "q:stream-me",
+        GenOptions::greedy().max_new_tokens(16),
+    )?;
+    let streamed: Vec<i32> = h.tokens().collect();
+    let resp = h.wait()?;
+    println!(
+        "\nstreamed {} tokens incrementally; final text {:?} (ttft p50 {:.1}ms)",
+        streamed.len(),
+        resp.text,
+        server.metrics.ttft_percentile_us(50.0) / 1e3,
+    );
+
     // ---- request lifecycle: cancellation ---------------------------------
     let doomed = server.submit(
         "user-00",

@@ -1,7 +1,10 @@
 //! Serving-system bench: coordinator throughput/latency under multi-tenant
-//! traffic — batching on vs off, tenant-count sweep, cache effectiveness.
-//! This quantifies the system claims around the paper (Sec. 3.6 low-cost
-//! switching; intro scenario of many concurrent customized models).
+//! traffic — KV-cached stepping vs full-window decoding, batching on vs
+//! off, tenant-count sweep, cache effectiveness. This quantifies the
+//! system claims around the paper (Sec. 3.6 low-cost switching; intro
+//! scenario of many concurrent customized models) plus the PR-4 decode
+//! rewrite: per-token cost O(step) instead of O(window · forward), and
+//! time-to-first-token under continuous batching.
 //!
 //! Run: cargo bench --bench bench_serving
 //! Knobs: MOS_SERVE_REQS (default 48), MOS_SERVE_TENANTS (default "1,4,16"),
@@ -10,7 +13,8 @@
 use mos::bench::Table;
 use mos::config::presets;
 use mos::coordinator::{
-    GenOptions, HostEngine, Registry, Server, ServerCfg, TenantSpec,
+    FullWindowEngine, GenOptions, HostEngine, Registry, Server, ServerCfg,
+    TenantSpec,
 };
 use mos::util::json::Json;
 use std::sync::atomic::Ordering;
@@ -21,7 +25,8 @@ fn run_scenario(
     n_tenants: usize,
     n_requests: usize,
     max_batch: usize,
-) -> (f64, f64, f64, f64) {
+    kv_steps: bool,
+) -> (f64, f64, f64, f64, f64) {
     let mut cfg = presets::tiny();
     cfg.batch = max_batch.max(1);
     let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
@@ -43,7 +48,11 @@ fn run_scenario(
             .unwrap();
     }
     let cfg2 = cfg.clone();
-    server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+    if kv_steps {
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+    } else {
+        server.start(1, move |_| FullWindowEngine(HostEngine::new(cfg2.clone(), 0)));
+    }
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_requests)
         .map(|i| {
@@ -65,9 +74,10 @@ fn run_scenario(
     let rps = n_requests as f64 / dt;
     let p50 = server.metrics.percentile_us(50.0) / 1e3;
     let p95 = server.metrics.percentile_us(95.0) / 1e3;
+    let ttft = server.metrics.ttft_percentile_us(50.0) / 1e3;
     let toks = server.metrics.generated_tokens.load(Ordering::Relaxed) as f64 / dt;
     server.shutdown();
-    (rps, p50, p95, toks)
+    (rps, p50, p95, toks, ttft)
 }
 
 fn main() {
@@ -83,36 +93,51 @@ fn main() {
 
     let mut table = Table::new(
         "Coordinator serving (tiny preset, host engine, 1 worker)",
-        &["tenants", "batching", "req/s", "p50 ms", "p95 ms", "tok/s"],
+        &[
+            "tenants", "decode", "batching", "req/s", "p50 ms", "p95 ms",
+            "ttft p50 ms", "tok/s",
+        ],
     );
     let mut json_cases = Vec::new();
     for &nt in &tenant_counts {
-        for (label, mb) in [("batched (8)", 8usize), ("unbatched (1)", 1)] {
-            let (rps, p50, p95, toks) = run_scenario(nt, n_requests, mb);
-            table.row(vec![
-                nt.to_string(),
-                label.into(),
-                format!("{rps:.2}"),
-                format!("{p50:.0}"),
-                format!("{p95:.0}"),
-                format!("{toks:.0}"),
-            ]);
-            eprintln!("[serving] tenants={nt} {label}: {rps:.2} req/s");
-            json_cases.push(Json::obj(vec![
-                ("tenants", Json::num(nt as f64)),
-                ("max_batch", Json::num(mb as f64)),
-                ("req_per_s", Json::num(rps)),
-                ("p50_ms", Json::num(p50)),
-                ("p95_ms", Json::num(p95)),
-                ("tok_per_s", Json::num(toks)),
-            ]));
+        for (decode, kv) in [("kv_step", true), ("full_fwd", false)] {
+            for (label, mb) in [("batched (8)", 8usize), ("unbatched (1)", 1)] {
+                let (rps, p50, p95, toks, ttft) =
+                    run_scenario(nt, n_requests, mb, kv);
+                table.row(vec![
+                    nt.to_string(),
+                    decode.into(),
+                    label.into(),
+                    format!("{rps:.2}"),
+                    format!("{p50:.0}"),
+                    format!("{p95:.0}"),
+                    format!("{ttft:.1}"),
+                    format!("{toks:.0}"),
+                ]);
+                eprintln!(
+                    "[serving] tenants={nt} {decode} {label}: {rps:.2} req/s \
+                     ttft_p50={ttft:.1}ms"
+                );
+                json_cases.push(Json::obj(vec![
+                    ("tenants", Json::num(nt as f64)),
+                    ("decode", Json::str(decode)),
+                    ("max_batch", Json::num(mb as f64)),
+                    ("req_per_s", Json::num(rps)),
+                    ("p50_ms", Json::num(p50)),
+                    ("p95_ms", Json::num(p95)),
+                    ("ttft_p50_ms", Json::num(ttft)),
+                    ("tok_per_s", Json::num(toks)),
+                ]));
+            }
         }
     }
     table.print();
     println!(
         "\nreproduction target: per-tenant batching sustains throughput as \
          tenant count grows (low-cost switching — only adapter tensors \
-         change per batch), and batched >> unbatched."
+         change per batch), batched >> unbatched, and the KV-cached step \
+         path (kv_step) beats re-running full-window forwards per token \
+         (full_fwd) on both tok/s and time-to-first-token."
     );
 
     let json = Json::obj(vec![

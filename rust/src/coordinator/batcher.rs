@@ -68,8 +68,14 @@ pub struct Request {
     /// Absolute deadline, computed from `opts.deadline` at submit time.
     pub deadline: Option<Instant>,
     pub respond: mpsc::Sender<ServeResult>,
+    /// Streaming channel: workers send each generated token id as it is
+    /// decoded; the sender drops (closing the stream) when the request
+    /// resolves. Send errors are ignored — a client that never reads
+    /// tokens costs nothing but the buffered ids.
+    pub stream: mpsc::Sender<i32>,
     /// Set by the client's handle; the batcher drops flagged requests at
-    /// the next pop, workers re-check before decoding.
+    /// the next pop (and on [`Batcher::notify`]), workers re-check between
+    /// decode steps.
     pub cancelled: Arc<AtomicBool>,
     pub enqueued: Instant,
 }
@@ -189,23 +195,28 @@ impl Batcher {
 
     /// Enqueue a request. Admission control rejects synchronously: the
     /// request never enters a queue on `Err`, so the caller can surface the
-    /// error at submit time.
+    /// error at submit time. A depth limit purges cancelled / expired
+    /// requests before rejecting — dead requests must not hold `QueueFull`
+    /// against live traffic until the next `pop_batch` happens by.
     pub fn push(&self, req: Request) -> Result<(), ServeError> {
         let mut guard = self.q.lock().unwrap();
-        let q = &mut *guard;
-        if q.closed {
+        if guard.closed {
             return Err(ServeError::ShuttingDown);
         }
-        if q.total >= self.admission.global {
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(ServeError::QueueFull { tenant: req.tenant });
+        let at_limit = |q: &Queues| {
+            q.total >= self.admission.global
+                || q.by_tenant.get(&req.tenant).map_or(0, |d| d.len())
+                    >= self.admission.per_tenant
+        };
+        if at_limit(&guard) {
+            purge(&mut guard, &self.metrics);
+            if at_limit(&guard) {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::QueueFull { tenant: req.tenant });
+            }
         }
-        let depth = q.by_tenant.get(&req.tenant).map_or(0, |d| d.len());
-        if depth >= self.admission.per_tenant {
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(ServeError::QueueFull { tenant: req.tenant });
-        }
-        if depth == 0 {
+        let q = &mut *guard;
+        if q.by_tenant.get(&req.tenant).map_or(0, |d| d.len()) == 0 {
             q.ready.push_back(req.tenant.clone());
         }
         q.by_tenant
@@ -215,6 +226,50 @@ impl Batcher {
         q.total += 1;
         self.cv.notify_one();
         Ok(())
+    }
+
+    /// Non-blocking continuous-batching refill: pop up to `max` queued
+    /// requests for `tenant` so a worker can admit them into its *running*
+    /// decode batch between steps (Orca/S-LoRA-style iteration-level
+    /// scheduling). Declines (returns empty) while any *other* tenant has
+    /// a releasable batch — mid-flight refills must not starve the
+    /// round-robin rotation that `pop_batch` provides.
+    pub fn try_fill(&self, tenant: &str, max: usize) -> Vec<Request> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut guard = self.q.lock().unwrap();
+        purge(&mut guard, &self.metrics);
+        let q = &mut *guard;
+        for t in q.ready.iter() {
+            if t == tenant {
+                continue;
+            }
+            let Some(reqs) = q.by_tenant.get(t) else { continue };
+            if reqs.len() >= self.max_batch
+                || reqs.front().unwrap().enqueued.elapsed() >= self.max_wait
+            {
+                return Vec::new();
+            }
+        }
+        let Some(reqs) = q.by_tenant.get_mut(tenant) else {
+            return Vec::new();
+        };
+        let take = reqs.len().min(max);
+        let out: Vec<Request> = reqs.drain(..take).collect();
+        q.total -= take;
+        if reqs.is_empty() {
+            q.by_tenant.remove(tenant);
+            q.ready.retain(|t| t != tenant);
+        }
+        out
+    }
+
+    /// Wake `pop_batch` sleepers so they re-run their purge pass. Called
+    /// by `ResponseHandle::cancel`: without it, a cancellation on an
+    /// otherwise idle queue sat unresolved until the `max_wait` timeout.
+    pub fn notify(&self) {
+        self.cv.notify_all();
     }
 
     /// Pop the next per-tenant batch. Blocks until a batch is ready (full,
@@ -293,6 +348,7 @@ mod tests {
 
     fn req(tenant: &str, prompt: &str) -> (Request, mpsc::Receiver<ServeResult>) {
         let (tx, rx) = mpsc::channel();
+        let (stream_tx, _stream_rx) = mpsc::channel();
         (
             Request {
                 id: 0,
@@ -301,6 +357,7 @@ mod tests {
                 opts: GenOptions::greedy(),
                 deadline: None,
                 respond: tx,
+                stream: stream_tx,
                 cancelled: Arc::new(AtomicBool::new(false)),
                 enqueued: Instant::now(),
             },
@@ -466,6 +523,130 @@ mod tests {
         assert_eq!(batch.len(), 2);
         assert!(batch.iter().all(|r| r.prompt != "p1"));
         assert_eq!(rx1.recv().unwrap(), Err(ServeError::Deadline));
+    }
+
+    #[test]
+    fn try_fill_pops_queued_requests_for_running_tenant() {
+        let b = batcher(4, Duration::from_secs(60));
+        let (r1, _x1) = req("a", "p1");
+        let (r2, _x2) = req("a", "p2");
+        let (r3, _x3) = req("a", "p3");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
+        let got = b.try_fill("a", 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(b.depth(), 1);
+        // draining the rest restores the empty-queue invariants
+        assert_eq!(b.try_fill("a", 8).len(), 1);
+        assert_eq!(b.depth(), 0);
+        assert!(b.try_fill("a", 8).is_empty());
+        // and a later push still works (ready-rotation entry restored)
+        let (r4, _x4) = req("a", "p4");
+        b.push(r4).unwrap();
+        b.close(); // make the partial batch releasable without max_wait
+        assert_eq!(b.pop_batch().unwrap().1.len(), 1);
+    }
+
+    #[test]
+    fn try_fill_declines_while_other_tenant_releasable() {
+        // tenant b has a full batch waiting: a's mid-flight refill must
+        // yield so the rotation can serve b first
+        let b = batcher(2, Duration::from_secs(60));
+        let (r1, _x1) = req("a", "p1");
+        let (r2, _x2) = req("b", "p2");
+        let (r3, _x3) = req("b", "p3");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
+        assert!(b.try_fill("a", 4).is_empty(), "starved tenant b's batch");
+        // once b is drained, a's refill proceeds
+        assert_eq!(b.pop_batch().unwrap().0, "b");
+        assert_eq!(b.try_fill("a", 4).len(), 1);
+    }
+
+    #[test]
+    fn try_fill_skips_cancelled_requests() {
+        let b = batcher(4, Duration::from_secs(60));
+        let (r1, rx1) = req("a", "p1");
+        let flag = Arc::clone(&r1.cancelled);
+        let (r2, _x2) = req("a", "p2");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        flag.store(true, Ordering::Relaxed);
+        let got = b.try_fill("a", 4);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].prompt, "p2");
+        assert_eq!(rx1.recv().unwrap(), Err(ServeError::Cancelled));
+    }
+
+    #[test]
+    fn admission_purges_dead_requests_before_rejecting() {
+        // regression: cancelled requests used to occupy Admission depth
+        // until the next pop_batch, rejecting live traffic as QueueFull
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::new(
+            8,
+            Duration::from_secs(60),
+            Admission { per_tenant: 2, global: 100 },
+            Arc::clone(&metrics),
+        );
+        let (r1, rx1) = req("a", "p1");
+        let f1 = Arc::clone(&r1.cancelled);
+        let (r2, rx2) = req("a", "p2");
+        let f2 = Arc::clone(&r2.cancelled);
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        f1.store(true, Ordering::Relaxed);
+        f2.store(true, Ordering::Relaxed);
+        // queue "full" of dead requests: the push must purge and accept
+        let (r3, _x3) = req("a", "p3");
+        b.push(r3).expect("dead requests rejected live traffic");
+        assert_eq!(rx1.recv().unwrap(), Err(ServeError::Cancelled));
+        assert_eq!(rx2.recv().unwrap(), Err(ServeError::Cancelled));
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(b.depth(), 1);
+        // the global bound purges too
+        let bg = Batcher::new(
+            8,
+            Duration::from_secs(60),
+            Admission { per_tenant: 100, global: 1 },
+            Arc::new(Metrics::new()),
+        );
+        let (r4, _x4) = req("a", "p4");
+        let f4 = Arc::clone(&r4.cancelled);
+        bg.push(r4).unwrap();
+        f4.store(true, Ordering::Relaxed);
+        let (r5, _x5) = req("b", "p5");
+        bg.push(r5).expect("global bound ignored the purge");
+    }
+
+    #[test]
+    fn notify_wakes_sleeping_pop_for_cancel_resolution() {
+        // regression: with an otherwise idle queue, a cancelled request's
+        // resolution used to wait out the full max_wait timeout
+        let b = Arc::new(batcher(8, Duration::from_secs(30)));
+        let (r1, rx1) = req("a", "p1");
+        let flag = Arc::clone(&r1.cancelled);
+        b.push(r1).unwrap();
+        let b2 = Arc::clone(&b);
+        let worker = std::thread::spawn(move || b2.pop_batch());
+        // let the worker reach its cv sleep (the batch is not releasable
+        // for 30s), then cancel + notify
+        std::thread::sleep(Duration::from_millis(50));
+        flag.store(true, Ordering::Relaxed);
+        b.notify();
+        let t0 = Instant::now();
+        assert_eq!(
+            rx1.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Err(ServeError::Cancelled)
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "cancel resolution waited for max_wait"
+        );
+        b.close();
+        assert!(worker.join().unwrap().is_none());
     }
 
     #[test]

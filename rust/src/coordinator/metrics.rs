@@ -1,88 +1,73 @@
-//! Serving metrics: latency histogram (log-spaced buckets), counters, and
-//! percentile snapshots for the serving benches.
+//! Serving metrics: latency + time-to-first-token histograms (log-spaced
+//! buckets), counters, and percentile snapshots for the serving benches.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 const BUCKETS: usize = 40;
+/// Lower bound of bucket 0, in microseconds.
+const BASE_US: f64 = 10.0;
+/// Log-spacing growth factor between bucket bounds.
+const GROWTH: f64 = 1.5;
 
-/// Log-spaced latency histogram from 10µs to ~100s plus counters.
-#[derive(Debug)]
-pub struct Metrics {
-    buckets: [AtomicU64; BUCKETS],
-    pub requests: AtomicU64,
-    pub completed: AtomicU64,
-    pub errors: AtomicU64,
-    /// admission-control rejections (`ServeError::QueueFull`)
-    pub rejected: AtomicU64,
-    /// requests dropped by client cancellation before reaching an engine
-    pub cancelled: AtomicU64,
-    /// requests dropped because their deadline budget lapsed in queue
-    pub expired: AtomicU64,
-    pub batches: AtomicU64,
-    pub batched_requests: AtomicU64,
-    pub generated_tokens: AtomicU64,
-    total_latency_us: AtomicU64,
+/// Lower bound of bucket `i`: `10 * 1.5^i` µs.
+fn bucket_lower(i: usize) -> f64 {
+    BASE_US * GROWTH.powi(i as i32)
 }
 
+/// Bucket index for a duration of `us` microseconds: the `i` with
+/// `10 * 1.5^i <= us < 10 * 1.5^(i+1)`. Durations below the 10µs base are
+/// clamped into bucket 0, anything past the last bound into the top
+/// bucket — the two clamps are explicit, not an accident of the scan.
 fn bucket_of(us: u64) -> usize {
-    // bucket i covers [10 * 1.5^i, 10 * 1.5^(i+1)) microseconds
-    let mut bound = 10.0f64;
-    for i in 0..BUCKETS {
-        bound *= 1.5;
-        if (us as f64) < bound {
+    let us = us as f64;
+    if us < BASE_US * GROWTH {
+        return 0;
+    }
+    let mut bound = BASE_US * GROWTH;
+    for i in 1..BUCKETS {
+        bound *= GROWTH;
+        if us < bound {
             return i;
         }
     }
     BUCKETS - 1
 }
 
-fn bucket_upper(i: usize) -> f64 {
-    10.0 * 1.5f64.powi(i as i32 + 1)
+/// Log-spaced duration histogram from 10µs to ~100s.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
 }
 
-impl Default for Metrics {
+impl Default for Histogram {
     fn default() -> Self {
-        Metrics::new()
+        Histogram::new()
     }
 }
 
-impl Metrics {
-    pub fn new() -> Metrics {
-        Metrics {
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            requests: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            cancelled: AtomicU64::new(0),
-            expired: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batched_requests: AtomicU64::new(0),
-            generated_tokens: AtomicU64::new(0),
-            total_latency_us: AtomicU64::new(0),
         }
     }
 
-    pub fn record_latency(&self, d: Duration) {
+    pub fn record(&self, d: Duration) {
         let us = d.as_micros() as u64;
         self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
-        self.total_latency_us.fetch_add(us, Ordering::Relaxed);
-        self.completed.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_batch(&self, size: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
-    /// Latency percentile estimate (upper bucket bound), in microseconds.
+    /// Percentile estimate in microseconds: the *geometric midpoint*
+    /// `sqrt(lower * upper)` of the bucket holding the p-th sample.
+    /// (Reporting the upper bound, as this used to, overstates every
+    /// percentile by up to the 1.5× bucket width.)
     pub fn percentile_us(&self, p: f64) -> f64 {
-        let total: u64 = self
-            .buckets
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .sum();
+        let total = self.count();
         if total == 0 {
             return 0.0;
         }
@@ -91,10 +76,80 @@ impl Metrics {
         for (i, b) in self.buckets.iter().enumerate() {
             cum += b.load(Ordering::Relaxed);
             if cum >= target {
-                return bucket_upper(i);
+                return (bucket_lower(i) * bucket_lower(i + 1)).sqrt();
             }
         }
-        bucket_upper(BUCKETS - 1)
+        (bucket_lower(BUCKETS - 1) * bucket_lower(BUCKETS)).sqrt()
+    }
+}
+
+/// Serving counters plus latency and time-to-first-token histograms.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// End-to-end request latency (submit -> resolution).
+    pub latency: Histogram,
+    /// Time to first streamed token (submit -> first token; requests that
+    /// resolve without generating record their resolution latency).
+    pub ttft: Histogram,
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    /// admission-control rejections (`ServeError::QueueFull`)
+    pub rejected: AtomicU64,
+    /// requests resolved `Cancelled` — purged from the queue before
+    /// reaching an engine, or stopped at a decode-step boundary
+    pub cancelled: AtomicU64,
+    /// requests resolved `Deadline` — budget lapsed in queue, or enforced
+    /// between decode steps mid-generation
+    pub expired: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    /// requests admitted into a *running* batch between decode steps
+    /// (continuous batching refills)
+    pub refilled: AtomicU64,
+    pub generated_tokens: AtomicU64,
+    total_latency_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latency.record(d);
+        self.total_latency_us
+            .fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_ttft(&self, d: Duration) {
+        self.ttft.record(d);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Continuous-batching refill: the requests joined an already-recorded
+    /// batch, so they count toward `refilled` *and* fold into the
+    /// batch-size accounting (otherwise `mean_batch_size` under-reports
+    /// exactly when mid-flight admission is doing the most work).
+    pub fn record_refill(&self, n: usize) {
+        self.refilled.fetch_add(n as u64, Ordering::Relaxed);
+        self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Latency percentile estimate (geometric bucket midpoint), in
+    /// microseconds.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        self.latency.percentile_us(p)
+    }
+
+    /// Time-to-first-token percentile estimate, in microseconds.
+    pub fn ttft_percentile_us(&self, p: f64) -> f64 {
+        self.ttft.percentile_us(p)
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -115,17 +170,19 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} completed={} errors={} rejected={} cancelled={} expired={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms mean_batch={:.2} tokens={}",
+            "requests={} completed={} errors={} rejected={} cancelled={} expired={} refilled={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms ttft_p50={:.1}ms mean_batch={:.2} tokens={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.cancelled.load(Ordering::Relaxed),
             self.expired.load(Ordering::Relaxed),
+            self.refilled.load(Ordering::Relaxed),
             self.mean_latency_us() / 1e3,
             self.percentile_us(50.0) / 1e3,
             self.percentile_us(95.0) / 1e3,
             self.percentile_us(99.0) / 1e3,
+            self.ttft_percentile_us(50.0) / 1e3,
             self.mean_batch_size(),
             self.generated_tokens.load(Ordering::Relaxed),
         )
@@ -137,10 +194,50 @@ mod tests {
     use super::*;
 
     #[test]
+    fn buckets_match_documented_bounds() {
+        // bucket i covers [10 * 1.5^i, 10 * 1.5^(i+1)); below-base clamps
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(9), 0);
+        assert_eq!(bucket_of(10), 0);
+        assert_eq!(bucket_of(14), 0);
+        assert_eq!(bucket_of(15), 1);
+        assert_eq!(bucket_of(22), 1); // [15, 22.5)
+        assert_eq!(bucket_of(23), 2);
+        // spot-check an interior bucket against the closed form
+        for i in [5usize, 11, 20] {
+            let lo = bucket_lower(i).ceil() as u64;
+            let hi = bucket_lower(i + 1).floor() as u64;
+            assert_eq!(bucket_of(lo), i, "lower bound of bucket {i}");
+            assert_eq!(bucket_of(hi), i, "upper interior of bucket {i}");
+        }
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
     fn buckets_monotone() {
         assert!(bucket_of(5) <= bucket_of(50));
         assert!(bucket_of(50) <= bucket_of(5000));
-        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentile_reports_bucket_midpoint_not_upper_bound() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        // 100µs lives in bucket 5 ([75.9, 113.9)); every percentile of a
+        // single-bucket histogram is its geometric midpoint ~93µs
+        let want = (bucket_lower(5) * bucket_lower(6)).sqrt();
+        for p in [1.0, 50.0, 99.0] {
+            let got = m.percentile_us(p);
+            assert!((got - want).abs() < 1e-9, "p{p}: {got} vs {want}");
+            assert!(
+                got > bucket_lower(5) && got < bucket_lower(6),
+                "p{p}={got} escaped the sample's bucket"
+            );
+        }
+        // the old upper-bound estimate (~114µs) overstated by up to 1.5x
+        assert!(m.percentile_us(50.0) < bucket_lower(6));
     }
 
     #[test]
@@ -153,14 +250,40 @@ mod tests {
         let p95 = m.percentile_us(95.0);
         let p99 = m.percentile_us(99.0);
         assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
-        // p50 of 100..10000us should land in the few-ms range
-        assert!((1_000.0..20_000.0).contains(&p50), "p50={p50}");
+        // p50 of 100..10000µs is the 5000µs sample; the estimate must stay
+        // inside that sample's own bucket (midpoint reporting), not just
+        // "in the few-ms range"
+        let b = bucket_of(5000);
+        assert!(
+            (bucket_lower(b)..bucket_lower(b + 1)).contains(&p50),
+            "p50={p50} outside bucket {b} of the true median"
+        );
+        let b99 = bucket_of(9900);
+        assert!(
+            (bucket_lower(b99)..bucket_lower(b99 + 1)).contains(&p99),
+            "p99={p99} outside bucket {b99}"
+        );
+    }
+
+    #[test]
+    fn ttft_histogram_independent_of_latency() {
+        let m = Metrics::new();
+        m.record_ttft(Duration::from_micros(200));
+        m.record_latency(Duration::from_micros(9000));
+        assert_eq!(m.ttft.count(), 1);
+        assert_eq!(m.latency.count(), 1);
+        let ttft = m.ttft_percentile_us(50.0);
+        let lat = m.percentile_us(50.0);
+        assert!(ttft < lat, "ttft {ttft} should sit well below latency {lat}");
+        let b = bucket_of(200);
+        assert!((bucket_lower(b)..bucket_lower(b + 1)).contains(&ttft));
     }
 
     #[test]
     fn empty_metrics_safe() {
         let m = Metrics::new();
         assert_eq!(m.percentile_us(99.0), 0.0);
+        assert_eq!(m.ttft_percentile_us(99.0), 0.0);
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
         let _ = m.summary();
@@ -172,5 +295,10 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert_eq!(m.mean_batch_size(), 6.0);
+        // mid-flight refills join existing batches: requests grow, the
+        // batch count does not
+        m.record_refill(4);
+        assert_eq!(m.refilled.load(Ordering::Relaxed), 4);
+        assert_eq!(m.mean_batch_size(), 8.0);
     }
 }

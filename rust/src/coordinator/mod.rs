@@ -8,11 +8,14 @@
 //! tenant; worker threads pull per-tenant batches round-robin, materialize
 //! the tenant's low-rank factors through the version-keyed [`cache`]
 //! (index-based routing makes this a *precompute*, paper Limitations §C),
-//! run batched decoding, and resolve each request's
-//! [`server::ResponseHandle`] with a typed `Result`. The [`registry`] owns
-//! versioned tenant state built from [`TenantSpec`]s, the [`memory`] ledger
-//! enforces an accelerator-memory budget with LRU eviction, and
-//! [`metrics`] records latency/throughput/rejections.
+//! and run a continuously batched, KV-cached decode loop: one
+//! single-position step per generated token, newly queued requests
+//! admitted into freed slots between steps ([`Batcher::try_fill`]), each
+//! token streamed through the request's [`server::ResponseHandle`] before
+//! it resolves with a typed `Result`. The [`registry`] owns versioned
+//! tenant state built from [`TenantSpec`]s, the [`memory`] ledger enforces
+//! an accelerator-memory budget with LRU eviction, and [`metrics`] records
+//! latency/TTFT/throughput/rejections.
 //!
 //! See DESIGN.md §Serving API for the request lifecycle and the migration
 //! notes from the pre-redesign `submit(&str, &str) -> Receiver` surface.
@@ -30,7 +33,10 @@ pub use batcher::{
 pub use memory::MemoryLedger;
 pub use metrics::Metrics;
 pub use registry::{Registry, Tenant, TenantSpec};
-pub use server::{HostEngine, ResponseHandle, ServeEngine, Server, ServerCfg};
+pub use server::{
+    FullWindowEngine, HostEngine, ResponseHandle, ServeEngine, Server,
+    ServerCfg,
+};
 
 // the per-request options live next to the decoder; re-export them here so
 // serving callers import everything from one place

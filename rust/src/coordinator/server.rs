@@ -1,14 +1,20 @@
 //! The serving event loop: worker threads pull per-tenant batches from the
-//! batcher, materialize factors through the cache, run batched decoding
-//! with each request's [`GenOptions`], and deliver typed responses.
-//! Engines are worker-owned (one PJRT executable or host model per
-//! worker), so no engine needs to be `Sync`.
+//! batcher and run a persistent slot-table decode loop — KV-cached
+//! single-position steps when the engine supports them, full-window
+//! forwards otherwise. Between steps the loop admits newly queued
+//! requests into freed slots (Orca/S-LoRA-style continuous batching via
+//! [`Batcher::try_fill`]), enforces per-request deadlines and
+//! cancellations, and streams each generated token through the request's
+//! [`ResponseHandle`]. Engines are worker-owned (one PJRT executable or
+//! host model per worker), so no engine needs to be `Sync`.
 //!
 //! Request lifecycle (see DESIGN.md §Serving API):
 //! `submit(tenant, prompt, opts) -> Result<ResponseHandle, ServeError>`;
-//! the handle resolves exactly once to `Result<Response, ServeError>` via
-//! `wait` / `wait_timeout` / `try_wait`, and `cancel` drops the request
-//! from the queue before it reaches an engine.
+//! tokens stream through `recv_token` / `tokens()` as they decode, and
+//! the handle still resolves exactly once to `Result<Response, ServeError>`
+//! via `wait` / `wait_timeout` / `try_wait` (unchanged one-shot
+//! semantics). `cancel` drops queued requests before they reach an engine
+//! and stops mid-decode requests at the next step boundary.
 
 use super::batcher::{
     Admission, Batcher, Request, RequestId, Response, ServeError, ServeResult,
@@ -17,14 +23,24 @@ use super::cache::{MaterializeCache, TenantFactors};
 use super::metrics::Metrics;
 use super::registry::{Registry, Tenant, TenantSpec};
 use crate::data::tokenizer::Tokenizer;
-use crate::eval::{decode, GenOptions};
+use crate::eval::{DecodeState, GenOptions};
+use crate::model::transformer::{decode_step, prefill, KvCache};
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
 /// A per-worker inference engine.
+///
+/// `forward` (full-window) is the baseline every engine provides. Engines
+/// that can decode incrementally also implement the KV-cached stepping
+/// trio (`supports_steps` / `prefill_rows` / `decode_rows`), which the
+/// worker decode loop prefers: one single-position step per generated
+/// token instead of re-running a full-window forward — O(step) instead of
+/// O(window · forward) per token. Fixed-graph PJRT artifact engines keep
+/// the default full-window path.
 pub trait ServeEngine {
     /// Batched forward for one tenant: padded tokens (batch*seq) -> logits
     /// (batch*seq*vocab).
@@ -36,18 +52,54 @@ pub trait ServeEngine {
     ) -> Result<Vec<f32>>;
     /// (batch, seq, vocab)
     fn shape(&self) -> (usize, usize, usize);
+    /// Does this engine implement the KV-cached stepping path?
+    fn supports_steps(&self) -> bool {
+        false
+    }
+    /// (Re)build the engine's KV cache rows `rows[i]` from the padded
+    /// window `tokens` (`rows.len() * seq`), returning full-window logits
+    /// (`rows.len() * seq * vocab`).
+    fn prefill_rows(
+        &mut self,
+        _tenant: &Tenant,
+        _factors: &TenantFactors,
+        _rows: &[usize],
+        _tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("engine does not support KV-cached stepping")
+    }
+    /// One decode position per entry `(row, pos, token)` -> next-token
+    /// logits (`entries.len() * vocab`).
+    fn decode_rows(
+        &mut self,
+        _tenant: &Tenant,
+        _factors: &TenantFactors,
+        _entries: &[(usize, usize, i32)],
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("engine does not support KV-cached stepping")
+    }
 }
 
-/// Host-model serving engine: shared frozen base + cached tenant factors.
+/// Host-model serving engine: shared frozen base + cached tenant factors
+/// + a lazily allocated KV cache for the stepping path.
 pub struct HostEngine {
     pub cfg: crate::config::ModelCfg,
     pub base: crate::util::bank::Bank,
+    kv: Option<KvCache>,
 }
 
 impl HostEngine {
     pub fn new(cfg: crate::config::ModelCfg, seed: u64) -> HostEngine {
         let base = crate::model::transformer::init_base(&cfg, seed);
-        HostEngine { cfg, base }
+        HostEngine { cfg, base, kv: None }
+    }
+
+    /// Wrap an existing base bank (e.g. a just-trained model's).
+    pub fn with_base(
+        cfg: crate::config::ModelCfg,
+        base: crate::util::bank::Bank,
+    ) -> HostEngine {
+        HostEngine { cfg, base, kv: None }
     }
 }
 
@@ -70,6 +122,57 @@ impl ServeEngine for HostEngine {
 
     fn shape(&self) -> (usize, usize, usize) {
         (self.cfg.batch, self.cfg.seq, self.cfg.vocab)
+    }
+
+    fn supports_steps(&self) -> bool {
+        true
+    }
+
+    fn prefill_rows(
+        &mut self,
+        tenant: &Tenant,
+        factors: &TenantFactors,
+        rows: &[usize],
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let kv = self
+            .kv
+            .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
+        Ok(prefill(&self.cfg, &tenant.mc, &self.base, factors, tokens, kv, rows))
+    }
+
+    fn decode_rows(
+        &mut self,
+        tenant: &Tenant,
+        factors: &TenantFactors,
+        entries: &[(usize, usize, i32)],
+    ) -> Result<Vec<f32>> {
+        let kv = self
+            .kv
+            .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
+        Ok(decode_step(&self.cfg, &tenant.mc, &self.base, factors, kv, entries))
+    }
+}
+
+/// Wraps an engine, masking its stepping support so the worker decode
+/// loop takes the full-window fallback (one whole-window forward per
+/// generated token) — what a fixed-graph PJRT artifact engine looks
+/// like. Used by `bench_serving` to measure the KV-step speedup against
+/// the pre-PR-4 cost model, and by tests to pin the fallback path.
+pub struct FullWindowEngine<E>(pub E);
+
+impl<E: ServeEngine> ServeEngine for FullWindowEngine<E> {
+    fn forward(
+        &mut self,
+        tenant: &Tenant,
+        factors: &TenantFactors,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        self.0.forward(tenant, factors, tokens)
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        self.0.shape()
     }
 }
 
@@ -97,12 +200,15 @@ impl Default for ServerCfg {
     }
 }
 
-/// Client-side handle for one submitted request. Resolves exactly once.
+/// Client-side handle for one submitted request: a token stream plus the
+/// one-shot final resolution.
 pub struct ResponseHandle {
     id: RequestId,
     tenant: String,
     rx: mpsc::Receiver<ServeResult>,
+    tokens_rx: mpsc::Receiver<i32>,
     cancelled: Arc<AtomicBool>,
+    batcher: Arc<Batcher>,
 }
 
 impl ResponseHandle {
@@ -114,11 +220,39 @@ impl ResponseHandle {
         &self.tenant
     }
 
-    /// Ask the coordinator to drop this request. Queued requests never
-    /// reach an engine (they resolve to `Err(Cancelled)`); a request
-    /// already decoding completes normally.
+    /// Ask the coordinator to drop this request, waking the queue so the
+    /// `Cancelled` resolution is immediate even on an idle server. Queued
+    /// requests never reach an engine; a request already decoding stops at
+    /// the next step boundary.
     pub fn cancel(&self) {
         self.cancelled.store(true, Ordering::Relaxed);
+        self.batcher.notify();
+    }
+
+    /// Blocking receive of the next streamed token id; `None` once
+    /// generation has finished and the stream is closed (the final result
+    /// is then available through [`wait`](ResponseHandle::wait)).
+    pub fn recv_token(&self) -> Option<i32> {
+        self.tokens_rx.recv().ok()
+    }
+
+    /// [`recv_token`](ResponseHandle::recv_token) bounded by `timeout`;
+    /// `None` on timeout or a closed stream.
+    pub fn recv_token_timeout(&self, timeout: Duration) -> Option<i32> {
+        self.tokens_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Non-blocking poll of the token stream; `None` when nothing is
+    /// buffered (or the stream has closed — use `try_wait` to tell apart).
+    pub fn try_recv_token(&self) -> Option<i32> {
+        self.tokens_rx.try_recv().ok()
+    }
+
+    /// Blocking iterator over the token stream, ending when generation
+    /// finishes. `handle.tokens().collect::<Vec<_>>()` detokenizes to
+    /// exactly the final `Response::text`.
+    pub fn tokens(&self) -> mpsc::Iter<'_, i32> {
+        self.tokens_rx.iter()
     }
 
     /// Block until the request resolves.
@@ -197,9 +331,9 @@ impl Server {
                         let mut engine = factory(wid);
                         while let Some((tenant_id, batch)) = batcher.pop_batch()
                         {
-                            process_batch(
-                                &registry, &metrics, &cache, &mut engine,
-                                &tenant_id, batch,
+                            serve_batch(
+                                &registry, &metrics, &cache, &batcher,
+                                &mut engine, &tenant_id, batch,
                             );
                         }
                     })
@@ -258,7 +392,8 @@ impl Server {
 
     /// Enqueue a request with per-request generation options. Fails fast
     /// with a typed error (unknown tenant, full queue, shutdown); on
-    /// success the returned handle resolves exactly once.
+    /// success the returned handle streams tokens as they decode and
+    /// resolves exactly once.
     pub fn submit(
         &self,
         tenant: &str,
@@ -272,6 +407,7 @@ impl Server {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        let (stream_tx, tokens_rx) = mpsc::channel();
         let cancelled = Arc::new(AtomicBool::new(false));
         let deadline = opts.deadline.map(|budget| Instant::now() + budget);
         self.batcher.push(Request {
@@ -281,6 +417,7 @@ impl Server {
             opts,
             deadline,
             respond: tx,
+            stream: stream_tx,
             cancelled: Arc::clone(&cancelled),
             enqueued: Instant::now(),
         })?;
@@ -288,7 +425,9 @@ impl Server {
             id,
             tenant: tenant.to_string(),
             rx,
+            tokens_rx,
             cancelled,
+            batcher: Arc::clone(&self.batcher),
         })
     }
 
@@ -307,26 +446,83 @@ impl Drop for Server {
     }
 }
 
-/// Can two requests share one decode call? Compares only the fields
-/// `decode` reads: the deadline budget is enforced per-request before
-/// decoding, and the sampling knobs (temperature/top_k/seed) only matter
-/// when sampling is on — so distinct deadlines (or seeds under greedy)
-/// must not fragment a tenant batch into per-request decodes.
-fn same_decode_opts(a: &GenOptions, b: &GenOptions) -> bool {
-    let sampling = |o: &GenOptions| o.temperature > 0.0;
-    a.max_new_tokens == b.max_new_tokens
-        && a.stop_tokens == b.stop_tokens
-        && sampling(a) == sampling(b)
-        && (!sampling(a)
-            || (a.temperature == b.temperature
-                && a.top_k == b.top_k
-                && a.seed == b.seed))
+/// One occupied decode slot: the request plus stream bookkeeping.
+struct Slot {
+    req: Request,
+    ttft_recorded: bool,
 }
 
-fn process_batch<E: ServeEngine>(
+/// Stream a freshly decoded token to its client, recording time-to-first-
+/// token on the first one.
+fn stream_token(metrics: &Metrics, slots: &mut [Option<Slot>], row: usize, tok: i32) {
+    if let Some(slot) = slots[row].as_mut() {
+        if !slot.ttft_recorded {
+            slot.ttft_recorded = true;
+            metrics.record_ttft(slot.req.enqueued.elapsed());
+        }
+        let _ = slot.req.stream.send(tok);
+    }
+}
+
+/// Resolve every finished row: take its output, free the slot, and send
+/// the typed result (Ok, Deadline, or Cancelled).
+fn sweep_finished(
+    st: &mut DecodeState,
+    slots: &mut [Option<Slot>],
+    metrics: &Metrics,
+    tk: &Tokenizer,
+    tenant_id: &str,
+) {
+    for row in 0..slots.len() {
+        if slots[row].is_none() || !st.row_done(row) {
+            continue;
+        }
+        let expired = st.row_expired(row);
+        let slot = slots[row].take().unwrap();
+        let cancelled = slot.req.is_cancelled();
+        let out = st.release(row);
+        if expired {
+            metrics.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = slot.req.respond.send(Err(ServeError::Deadline));
+        } else if cancelled {
+            metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+            let _ = slot.req.respond.send(Err(ServeError::Cancelled));
+        } else {
+            let latency = slot.req.enqueued.elapsed();
+            metrics.record_latency(latency);
+            if !slot.ttft_recorded {
+                // zero-token generations: first (only) signal is resolution
+                metrics.record_ttft(latency);
+            }
+            metrics
+                .generated_tokens
+                .fetch_add(out.len() as u64, Ordering::Relaxed);
+            let _ = slot.req.respond.send(Ok(Response {
+                id: slot.req.id,
+                tenant: tenant_id.to_string(),
+                prompt: slot.req.prompt.clone(),
+                text: tk.decode(&out),
+                tokens: out.len(),
+                latency,
+            }));
+        }
+    }
+}
+
+/// The worker decode loop for one tenant batch: a slot table over the
+/// engine's batch rows. KV-cached stepping when the engine supports it
+/// (prefill per admission, then one single-position step per token);
+/// full-window forwards otherwise. Between steps the loop admits newly
+/// queued requests into freed slots (continuous batching via
+/// [`Batcher::try_fill`]), enforces deadlines and cancellations, and
+/// streams tokens. An engine error short-circuits: every in-flight
+/// request resolves `Err(Engine)` immediately instead of burning the
+/// remaining window of forwards on garbage logits.
+fn serve_batch<E: ServeEngine>(
     registry: &Registry,
     metrics: &Metrics,
     cache: &MaterializeCache,
+    batcher: &Batcher,
     engine: &mut E,
     tenant_id: &str,
     batch: Vec<Request>,
@@ -344,79 +540,159 @@ fn process_batch<E: ServeEngine>(
     let factors = cache.get(&registry.cfg, &tenant);
     let (bsz, seq, vocab) = engine.shape();
     let tk = Tokenizer::new();
+    let stepping = engine.supports_steps();
 
-    // a request may have been cancelled or expired between pop and now
-    let now = Instant::now();
-    let mut live: Vec<Request> = Vec::with_capacity(batch.len());
-    for req in batch {
-        if req.is_cancelled() {
-            metrics.cancelled.fetch_add(1, Ordering::Relaxed);
-            let _ = req.respond.send(Err(ServeError::Cancelled));
-        } else if req.is_expired(now) {
-            metrics.expired.fetch_add(1, Ordering::Relaxed);
-            let _ = req.respond.send(Err(ServeError::Deadline));
-        } else {
-            live.push(req);
-        }
-    }
+    let mut st = DecodeState::vacant(bsz, seq, vocab);
+    let mut slots: Vec<Option<Slot>> = (0..bsz).map(|_| None).collect();
+    let mut pending: VecDeque<Request> = batch.into();
+    let mut engine_err: Option<ServeError> = None;
 
-    // sub-batch by decode-equivalent options so each decode call runs
-    // under one GenOptions (requests with distinct sampling knobs never
-    // mix, but decode-irrelevant fields don't fragment batches)
-    let mut groups: Vec<(GenOptions, Vec<Request>)> = Vec::new();
-    for req in live {
-        match groups
-            .iter_mut()
-            .find(|(o, _)| same_decode_opts(o, &req.opts))
-        {
-            Some((_, g)) => g.push(req),
-            None => groups.push((req.opts.clone(), vec![req])),
-        }
-    }
-
-    for (opts, reqs) in &groups {
-        for chunk in reqs.chunks(bsz) {
-            let mut prompts: Vec<Vec<i32>> = chunk
-                .iter()
-                .map(|r| tk.prompt_tokens(&r.prompt))
-                .collect();
-            while prompts.len() < bsz {
-                prompts.push(vec![crate::data::tokenizer::BOS]);
+    loop {
+        // ---- between-step enforcement: deadlines + cancellations ----
+        let now = Instant::now();
+        st.expire_overdue(now);
+        for (row, slot) in slots.iter().enumerate() {
+            if let Some(s) = slot {
+                if !st.row_done(row) && s.req.is_cancelled() {
+                    st.finish_row(row);
+                }
             }
-            let mut err: Option<ServeError> = None;
-            let mut fwd = |tokens: &[i32]| -> Vec<f32> {
-                match engine.forward(&tenant, &factors, tokens) {
-                    Ok(l) => l,
+        }
+        // requests parked in the local overflow (popped batch larger than
+        // the slot table) resolve cancel/deadline now, not once a slot
+        // happens to free for them
+        if !pending.is_empty() {
+            let mut kept = VecDeque::with_capacity(pending.len());
+            for req in pending.drain(..) {
+                if req.is_cancelled() {
+                    metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Err(ServeError::Cancelled));
+                } else if req.is_expired(now) {
+                    metrics.expired.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Err(ServeError::Deadline));
+                } else {
+                    kept.push_back(req);
+                }
+            }
+            pending = kept;
+        }
+        sweep_finished(&mut st, &mut slots, metrics, &tk, tenant_id);
+
+        // ---- drained? ----
+        if slots.iter().all(|s| s.is_none()) && pending.is_empty() {
+            return;
+        }
+
+        // ---- admit new work into free slots (continuous batching) ----
+        let free: Vec<usize> =
+            (0..bsz).filter(|&r| slots[r].is_none()).collect();
+        if !free.is_empty() {
+            let mut incoming: Vec<Request> = Vec::new();
+            while incoming.len() < free.len() {
+                match pending.pop_front() {
+                    Some(r) => incoming.push(r),
+                    None => break,
+                }
+            }
+            // top up from the queue only while a batch is running here —
+            // an empty table means this worker should return to pop_batch
+            // (and its round-robin fairness) instead
+            let running =
+                slots.iter().any(|s| s.is_some()) || !incoming.is_empty();
+            if running && incoming.len() < free.len() {
+                let refill =
+                    batcher.try_fill(tenant_id, free.len() - incoming.len());
+                metrics.record_refill(refill.len());
+                incoming.extend(refill);
+            }
+            let now = Instant::now();
+            let mut free_iter = free.into_iter();
+            let mut newly: Vec<usize> = Vec::new();
+            for req in incoming {
+                if req.is_cancelled() {
+                    metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Err(ServeError::Cancelled));
+                    continue;
+                }
+                if req.is_expired(now) {
+                    metrics.expired.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Err(ServeError::Deadline));
+                    continue;
+                }
+                let row = free_iter.next().expect("incoming exceeds free slots");
+                let prompt = tk.prompt_tokens(&req.prompt);
+                st.admit(row, &prompt, req.opts.clone(), req.deadline);
+                slots[row] = Some(Slot { req, ttft_recorded: false });
+                newly.push(row);
+            }
+
+            // KV path: prefill freshly admitted rows, emit first tokens
+            let live_new: Vec<usize> =
+                newly.into_iter().filter(|&r| !st.row_done(r)).collect();
+            if stepping && !live_new.is_empty() {
+                let mut toks = Vec::with_capacity(live_new.len() * seq);
+                for &r in &live_new {
+                    toks.extend_from_slice(&st.tokens()[r * seq..(r + 1) * seq]);
+                }
+                match engine.prefill_rows(&tenant, &factors, &live_new, &toks) {
+                    Ok(logits) => {
+                        for (row, tok) in st.step_prefill(&live_new, &logits) {
+                            stream_token(metrics, &mut slots, row, tok);
+                        }
+                    }
                     Err(e) => {
-                        err = Some(ServeError::Engine(e.to_string()));
-                        vec![0.0; bsz * seq * vocab]
-                    }
-                }
-            };
-            let outs = decode(&mut fwd, &prompts, opts, seq, vocab);
-            for (req, out) in chunk.iter().zip(&outs) {
-                let latency = req.enqueued.elapsed();
-                match &err {
-                    None => {
-                        metrics.record_latency(latency);
-                        metrics
-                            .generated_tokens
-                            .fetch_add(out.len() as u64, Ordering::Relaxed);
-                        let _ = req.respond.send(Ok(Response {
-                            id: req.id,
-                            tenant: tenant_id.to_string(),
-                            prompt: req.prompt.clone(),
-                            text: tk.decode(out),
-                            tokens: out.len(),
-                            latency,
-                        }));
-                    }
-                    Some(e) => {
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        let _ = req.respond.send(Err(e.clone()));
+                        engine_err = Some(ServeError::Engine(e.to_string()));
                     }
                 }
             }
+            sweep_finished(&mut st, &mut slots, metrics, &tk, tenant_id);
+        }
+
+        // ---- engine-error short-circuit ----
+        if engine_err.is_none() {
+            // ---- one decode step for every live row ----
+            let live = st.live_rows();
+            if !live.is_empty() {
+                if stepping {
+                    let entries = st.step_entries();
+                    match engine.decode_rows(&tenant, &factors, &entries) {
+                        Ok(logits) => {
+                            for (row, tok) in st.step_rows(&entries, &logits) {
+                                stream_token(metrics, &mut slots, row, tok);
+                            }
+                        }
+                        Err(e) => {
+                            engine_err =
+                                Some(ServeError::Engine(e.to_string()));
+                        }
+                    }
+                } else {
+                    match engine.forward(&tenant, &factors, st.tokens()) {
+                        Ok(logits) => {
+                            for (row, tok) in st.step_full(&logits) {
+                                stream_token(metrics, &mut slots, row, tok);
+                            }
+                        }
+                        Err(e) => {
+                            engine_err =
+                                Some(ServeError::Engine(e.to_string()));
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(e) = engine_err.take() {
+            // stop immediately: zeroed-logit decoding used to argmax PAD
+            // and burn the whole remaining window before reporting
+            for slot in slots.iter_mut().filter_map(Option::take) {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = slot.req.respond.send(Err(e.clone()));
+            }
+            for req in pending.drain(..) {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Err(e.clone()));
+            }
+            return;
         }
     }
 }
@@ -425,6 +701,7 @@ fn process_batch<E: ServeEngine>(
 mod tests {
     use super::*;
     use crate::config::presets;
+    use std::sync::atomic::AtomicUsize;
 
     fn make_server(capacity: usize) -> (Server, crate::config::ModelCfg) {
         let mut cfg = presets::tiny();
@@ -444,6 +721,31 @@ mod tests {
 
     fn spec(seed: u64) -> TenantSpec {
         TenantSpec::mos(4, 2, 2, 0).seed(seed)
+    }
+
+    /// Counts forwards; optionally fails every call.
+    struct CountingEngine {
+        inner: HostEngine,
+        calls: Arc<AtomicUsize>,
+        fail: bool,
+    }
+
+    impl ServeEngine for CountingEngine {
+        fn forward(
+            &mut self,
+            tenant: &Tenant,
+            factors: &TenantFactors,
+            tokens: &[i32],
+        ) -> Result<Vec<f32>> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            if self.fail {
+                anyhow::bail!("injected engine failure");
+            }
+            self.inner.forward(tenant, factors, tokens)
+        }
+        fn shape(&self) -> (usize, usize, usize) {
+            self.inner.shape()
+        }
     }
 
     #[test]
@@ -469,6 +771,198 @@ mod tests {
         }
         assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 6);
         server.shutdown();
+    }
+
+    #[test]
+    fn kv_and_full_window_paths_agree() {
+        // the KV-cached stepping path must serve exactly the text the
+        // full-window fallback serves (bitwise logits => same tokens)
+        let serve_with = |full_window: bool| -> Vec<String> {
+            let (mut server, cfg) = make_server(1 << 30);
+            server.register("alice", spec(7)).unwrap();
+            let cfg2 = cfg.clone();
+            if full_window {
+                server.start(1, move |_| {
+                    FullWindowEngine(HostEngine::new(cfg2.clone(), 0))
+                });
+            } else {
+                server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+            }
+            let handles: Vec<_> = (0..3)
+                .map(|i| {
+                    server
+                        .submit(
+                            "alice",
+                            &format!("q:{i}"),
+                            GenOptions::greedy().max_new_tokens(12),
+                        )
+                        .unwrap()
+                })
+                .collect();
+            let texts = handles
+                .into_iter()
+                .map(|h| {
+                    h.wait_timeout(Duration::from_secs(30))
+                        .unwrap()
+                        .unwrap()
+                        .text
+                })
+                .collect();
+            server.shutdown();
+            texts
+        };
+        assert_eq!(serve_with(false), serve_with(true));
+    }
+
+    #[test]
+    fn streamed_tokens_match_final_text() {
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let h = server
+            .submit(
+                "alice",
+                "q:stream",
+                GenOptions::greedy().max_new_tokens(8),
+            )
+            .unwrap();
+        let streamed: Vec<i32> = h.tokens().collect();
+        let resp = h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.tokens, streamed.len());
+        assert_eq!(resp.text, Tokenizer::new().decode(&streamed));
+        server.shutdown();
+    }
+
+    #[test]
+    fn engine_error_short_circuits_decode() {
+        // regression: zeroed logits after an engine error used to decode
+        // PAD tokens to the full window (O(seq) wasted forwards) before
+        // the error surfaced
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = Arc::clone(&calls);
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| CountingEngine {
+            inner: HostEngine::new(cfg2.clone(), 0),
+            calls: Arc::clone(&calls2),
+            fail: true,
+        });
+        let h1 = server.submit("alice", "q:a", GenOptions::greedy()).unwrap();
+        let h2 = server.submit("alice", "q:b", GenOptions::greedy()).unwrap();
+        for h in [h1, h2] {
+            match h.wait_timeout(Duration::from_secs(30)).unwrap() {
+                Err(ServeError::Engine(msg)) => {
+                    assert!(msg.contains("injected"), "{msg}")
+                }
+                other => panic!("expected engine error, got {other:?}"),
+            }
+        }
+        assert!(
+            calls.load(Ordering::Relaxed) <= 2,
+            "engine error did not short-circuit: {} forwards",
+            calls.load(Ordering::Relaxed)
+        );
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn filler_rows_consume_no_decode_steps() {
+        // regression: a 1-request batch on a batch-4 engine used to pad
+        // with [BOS] rows that decoded garbage to the full window
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = Arc::clone(&calls);
+        let cfg2 = cfg.clone();
+        // full-window fallback: each decode step is one counted forward
+        server.start(1, move |_| {
+            FullWindowEngine(CountingEngine {
+                inner: HostEngine::new(cfg2.clone(), 0),
+                calls: Arc::clone(&calls2),
+                fail: false,
+            })
+        });
+        let h = server
+            .submit(
+                "alice",
+                "q:solo",
+                GenOptions::greedy().max_new_tokens(2),
+            )
+            .unwrap();
+        let resp = h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert!(resp.tokens <= 2);
+        // the live row needs at most max_new_tokens + 1 forwards; filler
+        // rows decoding to the window would need ~seq
+        let n = calls.load(Ordering::Relaxed);
+        assert!(n <= 3, "filler rows consumed decode steps: {n} forwards");
+        server.shutdown();
+    }
+
+    #[test]
+    fn cancel_wakes_idle_queue_immediately() {
+        // regression: cancel used to flip the flag without waking the
+        // batcher, delaying resolution by up to max_wait on an idle queue
+        let mut cfg = presets::tiny();
+        cfg.batch = 4;
+        let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+        let mut server = Server::new(
+            registry,
+            ServerCfg {
+                max_batch: 4,
+                max_wait: Duration::from_secs(30),
+                ..ServerCfg::default()
+            },
+        );
+        server.register("alice", spec(1)).unwrap();
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        // give the worker a moment to go idle in pop_batch
+        thread::sleep(Duration::from_millis(30));
+        let h = server
+            .submit("alice", "q:cancel", GenOptions::greedy())
+            .unwrap();
+        h.cancel();
+        let t0 = Instant::now();
+        assert_eq!(
+            h.wait_timeout(Duration::from_secs(5)),
+            Some(Err(ServeError::Cancelled)),
+            "cancel resolution stalled behind max_wait"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn dead_requests_do_not_hold_admission_depth() {
+        // regression: cancelled requests used to occupy Admission depth
+        // until the next pop_batch, rejecting live submits as QueueFull
+        let mut cfg = presets::tiny();
+        cfg.batch = 4;
+        let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+        let server = Server::new(
+            registry,
+            ServerCfg {
+                admission: Admission { per_tenant: 2, global: 100 },
+                ..ServerCfg::default()
+            },
+        );
+        server.register("alice", spec(1)).unwrap();
+        // no workers: the queue only fills
+        let h1 = server.submit("alice", "q:0", GenOptions::greedy()).unwrap();
+        let h2 = server.submit("alice", "q:1", GenOptions::greedy()).unwrap();
+        h1.cancel();
+        h2.cancel();
+        let h3 = server
+            .submit("alice", "q:2", GenOptions::greedy())
+            .expect("dead requests held QueueFull against a live submit");
+        assert_eq!(h1.wait(), Err(ServeError::Cancelled));
+        assert_eq!(h2.wait(), Err(ServeError::Cancelled));
+        assert_eq!(server.metrics.rejected.load(Ordering::Relaxed), 0);
+        drop(h3);
     }
 
     #[test]
@@ -656,8 +1150,8 @@ mod tests {
 
     #[test]
     fn mixed_options_in_one_tenant_batch() {
-        // greedy and sampled requests for the same tenant land in one
-        // batcher batch but must decode in separate option groups
+        // greedy and sampled requests for the same tenant share one slot
+        // table; per-row options decode correctly side by side
         let (mut server, cfg) = make_server(1 << 30);
         server.register("alice", spec(1)).unwrap();
         let h1 = server.submit("alice", "q:00", GenOptions::greedy()).unwrap();

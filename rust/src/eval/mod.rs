@@ -2,14 +2,19 @@
 //! model or PJRT artifact) + per-task scoring, reporting the paper's
 //! metrics (EM / final-number EM / F1 / pass@1).
 //!
-//! [`decode`] is the one decoder shared by eval, the serving workers, and
-//! the benches: greedy when `temperature == 0`, otherwise temperature /
-//! top-k sampling driven by the per-request seed in [`GenOptions`].
+//! [`DecodeState`] is the one decode loop shared by eval, the serving
+//! workers, and the benches: a resumable per-row state machine (admit a
+//! prompt into a row, consume one logit row per step) that supports both
+//! full-window forwards and KV-cached single-position steps, per-row
+//! [`GenOptions`] (greedy when `temperature == 0`, otherwise temperature /
+//! top-k sampling from the per-request seed), and per-row deadlines
+//! enforced *between* steps. The batch [`decode`] runs it to completion
+//! over a shared options struct — the pre-PR-4 surface, unchanged.
 
 use crate::data::tasks::{Metric, Task};
 use crate::data::tokenizer::{Tokenizer, EOS, PAD};
 use crate::util::rng::Rng;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Forward function: padded tokens (batch*seq) -> logits (batch*seq*vocab).
 pub type ForwardFn<'a> = dyn FnMut(&[i32]) -> Vec<f32> + 'a;
@@ -40,9 +45,10 @@ pub struct GenOptions {
     pub top_k: usize,
     /// Seed for the sampling stream (ignored when greedy).
     pub seed: u64,
-    /// Serving deadline budget, measured from submit time. The decoder
-    /// ignores it; the coordinator rejects requests whose budget lapses
-    /// before they reach an engine (`ServeError::Deadline`).
+    /// Serving deadline budget, measured from submit time. The batch
+    /// [`decode`] ignores it; the coordinator rejects requests whose
+    /// budget lapses in queue *and* enforces it between decode steps
+    /// through [`DecodeState::expire_overdue`] (`ServeError::Deadline`).
     pub deadline: Option<Duration>,
 }
 
@@ -96,16 +102,294 @@ impl GenOptions {
     }
 }
 
-/// Batched decoding.
+/// Per-row decode bookkeeping inside a [`DecodeState`].
+struct RowState {
+    opts: GenOptions,
+    rng: Rng,
+    /// Window positions filled (prompt + generated).
+    len: usize,
+    prompt_len: usize,
+    done: bool,
+    expired: bool,
+    deadline: Option<Instant>,
+    out: Vec<i32>,
+}
+
+impl RowState {
+    fn vacant() -> RowState {
+        RowState {
+            opts: GenOptions::greedy(),
+            rng: Rng::new(0, GEN_STREAM),
+            len: 0,
+            prompt_len: 0,
+            done: true,
+            expired: false,
+            deadline: None,
+            out: Vec::new(),
+        }
+    }
+}
+
+/// Resumable decoding over a fixed `(batch, seq)` window.
+///
+/// Prompts are admitted into rows (slots); each step consumes next-token
+/// logits and advances every live row by at most one token. The serving
+/// workers drive it one step at a time — KV-cached ([`step_entries`] /
+/// [`step_rows`][DecodeState::step_rows]) or full-window
+/// ([`step_full`][DecodeState::step_full]) — admit new requests into
+/// released rows between steps (continuous batching), and enforce per-row
+/// deadlines *between* steps via [`expire_overdue`][DecodeState::expire_overdue]
+/// instead of only at admission. Vacant rows stay `PAD`-filled and done,
+/// so batch-shape filler never consumes a decode step.
+///
+/// [`step_entries`]: DecodeState::step_entries
+pub struct DecodeState {
+    seq: usize,
+    vocab: usize,
+    tokens: Vec<i32>,
+    rows: Vec<RowState>,
+}
+
+impl DecodeState {
+    /// A state with `bsz` vacant rows (all done until admitted into).
+    pub fn vacant(bsz: usize, seq: usize, vocab: usize) -> DecodeState {
+        DecodeState {
+            seq,
+            vocab,
+            tokens: vec![PAD; bsz * seq],
+            rows: (0..bsz).map(|_| RowState::vacant()).collect(),
+        }
+    }
+
+    /// One row per prompt, all sharing `opts` — the batch [`decode`] shape.
+    pub fn new(
+        prompts: &[Vec<i32>],
+        opts: &GenOptions,
+        seq: usize,
+        vocab: usize,
+    ) -> DecodeState {
+        let mut st = DecodeState::vacant(prompts.len(), seq, vocab);
+        for (row, p) in prompts.iter().enumerate() {
+            st.admit(row, p, opts.clone(), None);
+        }
+        st
+    }
+
+    pub fn batch(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// (Re)occupy `row` with a fresh prompt and its own options/deadline.
+    /// Degenerate prompts (empty, already filling the window) and
+    /// `max_new_tokens == 0` are done immediately — there is no position
+    /// to read next-token logits from (or no room to append), so such
+    /// rows never consume a decode step.
+    pub fn admit(
+        &mut self,
+        row: usize,
+        prompt: &[i32],
+        opts: GenOptions,
+        deadline: Option<Instant>,
+    ) {
+        let n = prompt.len().min(self.seq);
+        let w = &mut self.tokens[row * self.seq..(row + 1) * self.seq];
+        w.fill(PAD);
+        w[..n].copy_from_slice(&prompt[..n]);
+        let done = n == 0 || n >= self.seq || opts.max_new_tokens == 0;
+        self.rows[row] = RowState {
+            // the sample stream derives from the request seed alone, so a
+            // row's tokens do not depend on its batch position
+            rng: Rng::new(opts.seed, GEN_STREAM),
+            opts,
+            len: n,
+            prompt_len: n,
+            done,
+            expired: false,
+            deadline,
+            out: Vec::new(),
+        };
+    }
+
+    /// The padded `(batch * seq)` token window a full-window forward
+    /// consumes.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// All rows done (vacant rows count as done)?
+    pub fn is_done(&self) -> bool {
+        self.rows.iter().all(|r| r.done)
+    }
+
+    pub fn row_done(&self, row: usize) -> bool {
+        self.rows[row].done
+    }
+
+    /// Did `row` stop because its deadline lapsed mid-generation?
+    pub fn row_expired(&self, row: usize) -> bool {
+        self.rows[row].expired
+    }
+
+    /// Tokens generated so far for `row`.
+    pub fn generated(&self, row: usize) -> &[i32] {
+        &self.rows[row].out
+    }
+
+    /// Prompt length (clamped to the window) admitted into `row`.
+    pub fn prompt_len(&self, row: usize) -> usize {
+        self.rows[row].prompt_len
+    }
+
+    /// Take `row`'s output and mark the row vacant for reuse.
+    pub fn release(&mut self, row: usize) -> Vec<i32> {
+        let out = std::mem::take(&mut self.rows[row].out);
+        self.rows[row] = RowState::vacant();
+        self.tokens[row * self.seq..(row + 1) * self.seq].fill(PAD);
+        out
+    }
+
+    /// Indices of rows still decoding.
+    pub fn live_rows(&self) -> Vec<usize> {
+        (0..self.rows.len()).filter(|&r| !self.rows[r].done).collect()
+    }
+
+    /// Mark live rows whose deadline has passed as done (`expired`) —
+    /// deadline enforcement *between* decode steps. Returns the newly
+    /// expired rows.
+    pub fn expire_overdue(&mut self, now: Instant) -> Vec<usize> {
+        let mut hit = Vec::new();
+        for (r, row) in self.rows.iter_mut().enumerate() {
+            if !row.done && row.deadline.is_some_and(|d| now >= d) {
+                row.done = true;
+                row.expired = true;
+                hit.push(r);
+            }
+        }
+        hit
+    }
+
+    /// Force `row` to stop decoding (client cancellation mid-generation).
+    pub fn finish_row(&mut self, row: usize) {
+        self.rows[row].done = true;
+    }
+
+    /// KV-path step inputs for every live row: `(row, position, token)` of
+    /// the newest window token, whose position the next decode step runs.
+    /// Only valid once the row's first token came from prefill logits
+    /// (`step_prefill`), so a prompt position is never re-decoded.
+    pub fn step_entries(&self) -> Vec<(usize, usize, i32)> {
+        self.live_rows()
+            .into_iter()
+            .map(|r| {
+                debug_assert!(
+                    self.rows[r].len > self.rows[r].prompt_len,
+                    "step_entries before prefill emitted row {r}'s first token"
+                );
+                let pos = self.rows[r].len - 1;
+                (r, pos, self.tokens[r * self.seq + pos])
+            })
+            .collect()
+    }
+
+    /// Apply prefill logits (`rows.len() * seq * vocab`, full-window
+    /// layout) to freshly admitted rows: samples each row's first token.
+    /// Returns the `(row, token)` pairs actually emitted.
+    pub fn step_prefill(
+        &mut self,
+        rows: &[usize],
+        logits: &[f32],
+    ) -> Vec<(usize, i32)> {
+        debug_assert_eq!(logits.len(), rows.len() * self.seq * self.vocab);
+        let mut emitted = Vec::new();
+        for (i, &row) in rows.iter().enumerate() {
+            if self.rows[row].done {
+                continue;
+            }
+            let pos = self.rows[row].len - 1;
+            let off = (i * self.seq + pos) * self.vocab;
+            if let Some(tok) = self.apply(row, &logits[off..off + self.vocab]) {
+                emitted.push((row, tok));
+            }
+        }
+        emitted
+    }
+
+    /// Consume full-window logits (`batch * seq * vocab`): advance every
+    /// live row one position. Returns the `(row, token)` pairs emitted.
+    pub fn step_full(&mut self, logits: &[f32]) -> Vec<(usize, i32)> {
+        debug_assert_eq!(logits.len(), self.rows.len() * self.seq * self.vocab);
+        let mut emitted = Vec::new();
+        for row in 0..self.rows.len() {
+            if self.rows[row].done {
+                continue;
+            }
+            let pos = self.rows[row].len - 1;
+            let off = (row * self.seq + pos) * self.vocab;
+            if let Some(tok) = self.apply(row, &logits[off..off + self.vocab]) {
+                emitted.push((row, tok));
+            }
+        }
+        emitted
+    }
+
+    /// Consume KV-step logits (`entries.len() * vocab`, aligned with the
+    /// [`step_entries`][DecodeState::step_entries] that produced the step).
+    /// Returns the `(row, token)` pairs emitted.
+    pub fn step_rows(
+        &mut self,
+        entries: &[(usize, usize, i32)],
+        logits: &[f32],
+    ) -> Vec<(usize, i32)> {
+        debug_assert_eq!(logits.len(), entries.len() * self.vocab);
+        let mut emitted = Vec::new();
+        for (i, &(row, _, _)) in entries.iter().enumerate() {
+            if self.rows[row].done {
+                continue;
+            }
+            let off = i * self.vocab;
+            if let Some(tok) = self.apply(row, &logits[off..off + self.vocab]) {
+                emitted.push((row, tok));
+            }
+        }
+        emitted
+    }
+
+    /// Consume one next-token logit row for `row`: sample (or argmax),
+    /// honor stop tokens, the generation cap, and the window bound.
+    fn apply(&mut self, row: usize, lrow: &[f32]) -> Option<i32> {
+        let seq = self.seq;
+        let st = &mut self.rows[row];
+        let next = if st.opts.temperature > 0.0 {
+            sample_token(lrow, st.opts.temperature, st.opts.top_k, &mut st.rng)
+                as i32
+        } else {
+            (0..lrow.len())
+                .max_by(|&a, &b| lrow[a].total_cmp(&lrow[b]))
+                .unwrap() as i32
+        };
+        if st.opts.stop_tokens.contains(&next) {
+            st.done = true;
+            return None;
+        }
+        self.tokens[row * seq + st.len] = next;
+        st.out.push(next);
+        st.len += 1;
+        if st.out.len() >= st.opts.max_new_tokens || st.len >= seq {
+            st.done = true;
+        }
+        Some(next)
+    }
+}
+
+/// Batched decoding to completion — a thin wrapper over [`DecodeState`]
+/// driving full-window forwards (one per generated token; serving uses
+/// the KV-cached step path instead, see `coordinator::server`).
 ///
 /// `prompts` are token prefixes (already `BOS .. SEP`). Each row decodes
-/// until a stop token, `max_new_tokens`, or `seq` is full; every decode
-/// step is one full forward pass (no KV cache — the presets are small; see
-/// DESIGN.md §Perf for the decode-step artifact discussion).
-///
-/// Degenerate rows are safe: an empty prompt or a prompt that already
-/// fills `seq` produces an empty generation instead of indexing out of
-/// the logits.
+/// until a stop token, `max_new_tokens`, or `seq` is full. Degenerate
+/// rows are safe: an empty prompt or a prompt that already fills `seq`
+/// produces an empty generation instead of indexing out of the logits.
+/// `opts.deadline` stays coordinator-enforced (ignored here).
 pub fn decode(
     forward: &mut ForwardFn,
     prompts: &[Vec<i32>],
@@ -113,66 +397,16 @@ pub fn decode(
     seq: usize,
     vocab: usize,
 ) -> Vec<Vec<i32>> {
-    let bsz = prompts.len();
-    let mut tokens = vec![PAD; bsz * seq];
-    let mut lens: Vec<usize> = Vec::with_capacity(bsz);
-    let mut done = vec![false; bsz];
-    for (row, p) in prompts.iter().enumerate() {
-        let n = p.len().min(seq);
-        tokens[row * seq..row * seq + n].copy_from_slice(&p[..n]);
-        lens.push(n);
-        // an empty prompt has no position to read next-token logits from
-        if n == 0 {
-            done[row] = true;
-        }
-    }
-    let mut out: Vec<Vec<i32>> = vec![Vec::new(); bsz];
-    if opts.max_new_tokens == 0 {
-        return out;
-    }
-    // one RNG per row, all derived from the request seed alone, so a row's
-    // samples do not depend on its batch position
-    let mut rngs: Vec<Rng> =
-        (0..bsz).map(|_| Rng::new(opts.seed, GEN_STREAM)).collect();
-    loop {
-        if (0..bsz).all(|r| done[r] || lens[r] >= seq) {
-            break;
-        }
-        let logits = forward(&tokens);
-        debug_assert_eq!(logits.len(), bsz * seq * vocab);
-        let mut progressed = false;
-        for row in 0..bsz {
-            if done[row] || lens[row] >= seq {
-                continue;
-            }
-            let pos = lens[row] - 1;
-            let lrow =
-                &logits[(row * seq + pos) * vocab..(row * seq + pos + 1) * vocab];
-            let next = if opts.temperature > 0.0 {
-                sample_token(lrow, opts.temperature, opts.top_k, &mut rngs[row])
-                    as i32
-            } else {
-                (0..vocab)
-                    .max_by(|&a, &b| lrow[a].total_cmp(&lrow[b]))
-                    .unwrap() as i32
-            };
-            if opts.stop_tokens.contains(&next) {
-                done[row] = true;
-            } else {
-                tokens[row * seq + lens[row]] = next;
-                out[row].push(next);
-                lens[row] += 1;
-                if out[row].len() >= opts.max_new_tokens {
-                    done[row] = true;
-                }
-                progressed = true;
-            }
-        }
-        if !progressed {
+    let mut st = DecodeState::new(prompts, opts, seq, vocab);
+    while !st.is_done() {
+        let logits = forward(st.tokens());
+        if st.step_full(&logits).is_empty() {
+            // nothing emitted: every live row just stopped (defensive —
+            // equivalent to the pre-step-API `progressed` guard)
             break;
         }
     }
-    out
+    (0..prompts.len()).map(|r| st.release(r)).collect()
 }
 
 /// Sample from softmax(logits / temperature) over the top-k logits.
@@ -246,9 +480,12 @@ pub fn evaluate(
             prompts.push(tk.prompt_tokens(&ex.prompt));
             examples.push(ex);
         }
-        // pad the batch up to the artifact's fixed batch size
+        // pad the batch up to the artifact's fixed batch size with empty
+        // prompts: they are marked done at admission, so filler rows never
+        // consume decode steps (a `[BOS]` filler used to decode garbage to
+        // the full window, multiplying the eval's forward count)
         while prompts.len() < batch {
-            prompts.push(vec![crate::data::tokenizer::BOS]);
+            prompts.push(Vec::new());
         }
         let generations = decode(forward, &prompts, &opts, seq, vocab);
         let debug = std::env::var("MOS_EVAL_DEBUG").is_ok();
@@ -445,6 +682,124 @@ mod tests {
             vocab,
         );
         assert_eq!(alone[0], batched[1]);
+    }
+
+    #[test]
+    fn step_api_matches_batch_decode() {
+        // driving DecodeState by hand must reproduce decode() exactly
+        let tk = Tokenizer::new();
+        let vocab = tk.vocab_size();
+        let seq = 24;
+        let prompts = vec![tk.prompt_tokens("abc"), tk.prompt_tokens("hello")];
+        let opts = GenOptions::greedy();
+        let mut fwd = echo_forward(vocab, seq);
+        let want = decode(&mut fwd, &prompts, &opts, seq, vocab);
+
+        let mut fwd = echo_forward(vocab, seq);
+        let mut st = DecodeState::new(&prompts, &opts, seq, vocab);
+        let mut streamed: Vec<Vec<i32>> = vec![Vec::new(); 2];
+        while !st.is_done() {
+            let logits = fwd(st.tokens());
+            for (row, tok) in st.step_full(&logits) {
+                streamed[row].push(tok);
+            }
+        }
+        let got: Vec<Vec<i32>> = (0..2).map(|r| st.release(r)).collect();
+        assert_eq!(got, want);
+        assert_eq!(streamed, want, "streamed tokens diverge from outputs");
+    }
+
+    #[test]
+    fn deadline_enforced_between_steps() {
+        let vocab = 8;
+        let seq = 16;
+        let mut fwd = flat_forward(vocab, seq);
+        let mut st = DecodeState::new(
+            &[vec![1, 4], vec![1, 5]],
+            &GenOptions::greedy().max_new_tokens(8),
+            seq,
+            vocab,
+        );
+        // row 1 gets a deadline in the past; row 0 none
+        st.admit(
+            1,
+            &[1, 5],
+            GenOptions::greedy().max_new_tokens(8),
+            Some(Instant::now() - Duration::from_millis(1)),
+        );
+        let logits = fwd(st.tokens());
+        st.step_full(&logits);
+        assert_eq!(st.expire_overdue(Instant::now()), vec![1]);
+        assert!(st.row_done(1) && st.row_expired(1));
+        assert!(!st.row_done(0) && !st.row_expired(0));
+        // row 1 stops exactly where it was; row 0 keeps decoding
+        let gen1 = st.generated(1).len();
+        while !st.is_done() {
+            let logits = fwd(st.tokens());
+            st.step_full(&logits);
+        }
+        assert_eq!(st.generated(1).len(), gen1);
+        assert_eq!(st.generated(0).len(), 8);
+    }
+
+    #[test]
+    fn released_row_can_be_readmitted_mid_flight() {
+        // continuous-batching slot reuse: a finished row accepts a new
+        // prompt while another row keeps decoding, and the relay produces
+        // the same tokens as a standalone decode
+        let vocab = 8;
+        let seq = 16;
+        let mut fwd = flat_forward(vocab, seq);
+        let long = GenOptions::greedy().max_new_tokens(9);
+        let short = GenOptions::greedy().max_new_tokens(2);
+        let mut st = DecodeState::vacant(2, seq, vocab);
+        st.admit(0, &[1, 4], long.clone(), None);
+        st.admit(1, &[1, 5], short.clone(), None);
+        let mut steps = 0;
+        let mut readmitted = false;
+        while !st.is_done() {
+            let logits = fwd(st.tokens());
+            st.step_full(&logits);
+            steps += 1;
+            if st.row_done(1) && !readmitted {
+                assert_eq!(st.release(1).len(), 2);
+                st.admit(1, &[1, 6], short.clone(), None);
+                readmitted = true;
+            }
+        }
+        assert!(readmitted);
+        assert_eq!(st.generated(0).len(), 9);
+        assert_eq!(st.release(1).len(), 2);
+        assert_eq!(steps, 9, "slot reuse must not stall the batch");
+    }
+
+    #[test]
+    fn evaluate_fillers_cost_no_extra_forwards() {
+        // regression for the `[BOS]` filler-row bug: padding a 1-example
+        // eval to a batch-4 engine must not add decode steps (fillers used
+        // to generate to the full window)
+        let task = Task::new(TaskKind::CipherQa, 0);
+        let tk = Tokenizer::new();
+        let vocab = tk.vocab_size();
+        let seq = 32;
+        let count_calls = |batch: usize| {
+            let mut calls = 0usize;
+            let mut inner = echo_forward(vocab, seq);
+            let mut fwd = |tokens: &[i32]| {
+                calls += 1;
+                inner(tokens)
+            };
+            let rep = evaluate(&task, &mut fwd, 1, batch, seq, vocab);
+            assert_eq!(rep.n, 1);
+            calls
+        };
+        let alone = count_calls(1);
+        let padded = count_calls(4);
+        assert_eq!(
+            padded, alone,
+            "filler rows consumed decode steps (batch-4 padding took \
+             {padded} forwards vs {alone} unpadded)"
+        );
     }
 
     #[test]

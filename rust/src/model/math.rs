@@ -225,6 +225,98 @@ pub fn gemm_with(
     gemm_blocked(pool, m, n, k, alpha, a, ta, b, tb, c)
 }
 
+/// Canonical-order GEMM: `c (m,n) += alpha * op(a) @ op(b)` with a
+/// per-element operation sequence that does **not** depend on the shape.
+///
+/// Every C element is accumulated in ascending-k order (mul, then add),
+/// with `alpha` applied once per `KC` block at writeback — exactly the
+/// per-element order of the blocked/tiled path. Shapes that the tiled
+/// path already serves (`m >= MR` and above the small-flops threshold)
+/// are forwarded to it unchanged; everything else runs a scalar kernel
+/// that replicates the same order instead of the multi-accumulator `dot`
+/// used by the throughput-first small/`m = 1` paths.
+///
+/// Why it exists: the transformer's *inference* path must produce
+/// bitwise-identical activations regardless of how many rows were
+/// batched together. The KV-cached decode step computes one position
+/// (`m = live rows`, as small as 1) and must bit-match the full-window
+/// forward (`m = batch * seq`, always on the tiled path at preset
+/// sizes), and continuous batching means a request's logits must not
+/// depend on how many neighbours shared its decode step. The backward
+/// pass has no such contract and stays on the faster [`gemm`] dispatch.
+pub fn gemm_canon(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(n)
+        .saturating_mul(k);
+    if m >= MR && flops >= SMALL_FLOPS {
+        let pool = auto_pool().filter(|_| flops >= PAR_FLOPS);
+        return gemm_blocked(pool, m, n, k, alpha, a, ta, b, tb, c);
+    }
+    gemm_canon_small(m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// Scalar kernel replicating the tiled path's per-element order: for each
+/// KC block, accumulate `sum_p a[i,p] * b[p,j]` sequentially from zero,
+/// then write back `c += partial` (or `c += alpha * partial`) — the same
+/// mul/add sequence `run_chunk` + `micro_tile` perform per element.
+#[allow(clippy::too_many_arguments)]
+fn gemm_canon_small(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    let at = |i: usize, p: usize| match ta {
+        Trans::N => a[i * k + p],
+        Trans::T => a[p * m + i],
+    };
+    let bt = |p: usize, j: usize| match tb {
+        Trans::N => b[p * n + j],
+        Trans::T => b[j * k + p],
+    };
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for p in pc..pc + kc {
+                    acc += at(i, p) * bt(p, j);
+                }
+                if alpha == 1.0 {
+                    *cv += acc;
+                } else {
+                    *cv += alpha * acc;
+                }
+            }
+        }
+        pc += kc;
+    }
+}
+
 /// Scalar fallback for small problems — the seed's loop-ordered kernels,
 /// kept as the low-overhead path (and mirrored by the naive test oracle).
 #[allow(clippy::too_many_arguments)]
@@ -861,6 +953,89 @@ mod tests {
             let want = naive_matmul(&a, &b, m, k, n, ta == Trans::T, false);
             prop::assert_allclose(&c, &want, 1e-3, 1e-3).unwrap();
         }
+    }
+
+    #[test]
+    fn canon_matches_naive_all_layouts() {
+        prop::check("canon-vs-naive", 40, |rng| {
+            let (m, k, n) = awkward_dims(rng);
+            let an: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let at: Vec<f32> = (0..k * m).map(|_| rng.normal()).collect();
+            let bn: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            for (a, ta, b, tb, at_flag, bt_flag) in [
+                (&an, Trans::N, &bt, Trans::T, false, true),
+                (&an, Trans::N, &bn, Trans::N, false, false),
+                (&at, Trans::T, &bn, Trans::N, true, false),
+                (&at, Trans::T, &bt, Trans::T, true, true),
+            ] {
+                let mut c = vec![0.0f32; m * n];
+                gemm_canon(m, n, k, 1.0, a, ta, b, tb, &mut c);
+                let want = naive_matmul(a, b, m, k, n, at_flag, bt_flag);
+                prop::assert_allclose(&c, &want, 1e-3, 1e-3)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn canon_rows_bitwise_independent_of_batching() {
+        // THE decode-path contract: computing a row alone (m = 1, scalar
+        // canonical kernel) must bit-match the same row computed inside a
+        // larger batch (m >= MR, blocked/tiled kernel). Shapes cross the
+        // SMALL_FLOPS boundary and k > KC exercises per-block alpha.
+        let mut rng = Rng::new(23, 5);
+        for (m, k, n, alpha, tb) in [
+            (6, 300, 40, 1.0f32, Trans::T), // multi KC block, blocked path
+            (6, 300, 40, 1.7, Trans::T),    // alpha != 1 per-block writeback
+            (8, 64, 64, 1.0, Trans::T),     // the projection shape family
+            (5, 48, 16, 1.0, Trans::N),     // attention ctx shape family
+            (4, 64, 8, 0.25, Trans::T),     // low-rank adapter apply
+        ] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut c = c0.clone();
+            gemm_canon(m, n, k, alpha, &a, Trans::N, &b, tb, &mut c);
+            for i in 0..m {
+                let mut crow = c0[i * n..(i + 1) * n].to_vec();
+                gemm_canon(
+                    1,
+                    n,
+                    k,
+                    alpha,
+                    &a[i * k..(i + 1) * k],
+                    Trans::N,
+                    &b,
+                    tb,
+                    &mut crow,
+                );
+                let batched: Vec<u32> =
+                    c[i * n..(i + 1) * n].iter().map(|v| v.to_bits()).collect();
+                let alone: Vec<u32> = crow.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    batched, alone,
+                    "row {i} of ({m},{k},{n}) alpha={alpha} depends on batching"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn canon_agrees_with_engine_on_tiled_shapes() {
+        // above the small-flops threshold with m >= MR, gemm_canon forwards
+        // to the very same blocked path as gemm — bitwise equal
+        let mut rng = Rng::new(29, 2);
+        let (m, k, n) = (48, 64, 64);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm(m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c1);
+        gemm_canon(m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c2);
+        let b1: Vec<u32> = c1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = c2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2);
     }
 
     #[test]

@@ -4,6 +4,14 @@
 //!
 //! Gradients flow only into the dense adapter factors (base is frozen),
 //! matching the AOT train-step semantics.
+//!
+//! The inference path ([`forward`], [`prefill`], [`decode_step`]) runs
+//! every matmul in canonical GEMM order ([`gemm_canon`]): per-element
+//! results are bitwise independent of how many rows share a call, which
+//! makes (a) full forwards batch-size invariant and (b) the KV-cached
+//! single-position [`decode_step`] bit-identical to the full-forward
+//! oracle. The backward pass keeps the throughput-first [`gemm`] dispatch
+//! (no such contract).
 
 use super::math::*;
 use crate::adapter::Factors;
@@ -137,6 +145,10 @@ fn rmsnorm_bwd(
 
 /// Adapted linear forward: y = x@W^T + scale * (x@A^T)@B^T.
 /// Returns (y, t) where t = x@A^T is cached for backward.
+///
+/// Runs in canonical GEMM order ([`gemm_canon`]) so the result for a row
+/// does not depend on how many rows were batched with it — the contract
+/// the KV-cached [`decode_step`] relies on to bit-match full forwards.
 fn adapted_fwd(
     x: &[f32],
     w: &[f32],
@@ -146,10 +158,12 @@ fn adapted_fwd(
     rows: usize,
 ) -> (Vec<f32>, Vec<f32>) {
     let (i, o, r) = (f.in_dim, f.out_dim, f.r);
-    let mut y = matmul_nt(x, w, rows, i, o);
-    let t = matmul_nt(x, &f.a[block], rows, i, r);
+    let mut y = vec![0.0f32; rows * o];
+    gemm_canon(rows, o, i, 1.0, x, Trans::N, w, Trans::T, &mut y);
+    let mut t = vec![0.0f32; rows * r];
+    gemm_canon(rows, r, i, 1.0, x, Trans::N, &f.a[block], Trans::T, &mut t);
     // y += scale * t @ B^T  (B is (o,r)); scale folds into the GEMM
-    gemm(rows, o, r, scale, &t, Trans::N, &f.b[block], Trans::T, &mut y);
+    gemm_canon(rows, o, r, scale, &t, Trans::N, &f.b[block], Trans::T, &mut y);
     (y, t)
 }
 
@@ -250,7 +264,10 @@ pub fn forward(
                         .copy_from_slice(&v[row * c + h * hd..row * c + (h + 1) * hd]);
                 }
                 att.fill(0.0);
-                matmul_nt_acc(&qh, &kh, &mut att, t_len, hd, t_len);
+                gemm_canon(
+                    t_len, t_len, hd, 1.0, &qh, Trans::N, &kh, Trans::T,
+                    &mut att,
+                );
                 for i in 0..t_len {
                     for j in 0..t_len {
                         att[i * t_len + j] = if j <= i {
@@ -262,7 +279,10 @@ pub fn forward(
                 }
                 softmax_rows(&mut att, t_len, t_len);
                 ch.fill(0.0);
-                matmul_nn_acc(&att, &vh, &mut ch, t_len, t_len, hd);
+                gemm_canon(
+                    t_len, hd, t_len, 1.0, &att, Trans::N, &vh, Trans::N,
+                    &mut ch,
+                );
                 let off = (b * heads + h) * t_len * t_len;
                 probs[off..off + t_len * t_len].copy_from_slice(&att);
                 for tt in 0..t_len {
@@ -327,12 +347,218 @@ pub fn forward(
     let nf = base["norm_final"].f32s().unwrap();
     let x_final_in = x.clone();
     let (xf, rstd_f) = rmsnorm_fwd(&x, nf, c);
-    let logits = matmul_nt(&xf, embed, rows, c, cfg.vocab);
+    let mut logits = vec![0.0f32; rows * cfg.vocab];
+    gemm_canon(
+        rows, cfg.vocab, c, 1.0, &xf, Trans::N, embed, Trans::T, &mut logits,
+    );
 
     (
         ForwardCache { blocks, x_final_in, rstd_f, xf, logits },
         0.0,
     )
+}
+
+/// Per-layer K/V buffers for incremental (KV-cached) decoding.
+///
+/// Row `r`'s position `p` lives at offset `(r * seq + p) * dim` of each
+/// block's buffer. [`prefill`] fills a row's full window (positions past
+/// the prompt hold pad garbage), and [`decode_step`] overwrites position
+/// `p` *before* attending over `0..=p`, so stale tails are never read.
+pub struct KvCache {
+    pub bsz: usize,
+    pub seq: usize,
+    /// Hidden width of the cached projections. The host model runs MHA
+    /// (`kv_heads == heads`), so K/V rows are (hidden,) like Q.
+    pub dim: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Sinusoidal position table (seq, hidden), computed once — the same
+    /// values [`forward`] derives per call.
+    pos: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelCfg, bsz: usize) -> KvCache {
+        assert_eq!(
+            cfg.kv_heads, cfg.heads,
+            "host KV cache assumes MHA (kv_heads == heads)"
+        );
+        let sz = bsz * cfg.seq * cfg.hidden;
+        KvCache {
+            bsz,
+            seq: cfg.seq,
+            dim: cfg.hidden,
+            k: vec![vec![0.0; sz]; cfg.blocks],
+            v: vec![vec![0.0; sz]; cfg.blocks],
+            pos: sinusoid(cfg.seq, cfg.hidden),
+        }
+    }
+}
+
+/// Prefill: one full-window forward for `rows.len()` requests, capturing
+/// every block's K/V into `cache` rows `rows[i]`.
+///
+/// `tokens` is the padded `(rows.len() * seq)` window. Returns the full
+/// logits `(rows.len() * seq * vocab)` — these *are* [`forward`]'s
+/// logits, so the first token sampled from position `len - 1` matches the
+/// full-forward oracle trivially; subsequent tokens come from
+/// [`decode_step`] at O(position) cost instead of O(window · forward).
+pub fn prefill(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    base: &Bank,
+    factors: &BTreeMap<String, Factors>,
+    tokens: &[i32],
+    cache: &mut KvCache,
+    rows: &[usize],
+) -> Vec<f32> {
+    debug_assert_eq!(tokens.len(), rows.len() * cfg.seq);
+    let (fc, _) = forward(cfg, mc, base, factors, tokens);
+    let stride = cfg.seq * cfg.hidden;
+    for (kb, bc) in fc.blocks.iter().enumerate() {
+        for (i, &r) in rows.iter().enumerate() {
+            debug_assert!(r < cache.bsz);
+            cache.k[kb][r * stride..(r + 1) * stride]
+                .copy_from_slice(&bc.k[i * stride..(i + 1) * stride]);
+            cache.v[kb][r * stride..(r + 1) * stride]
+                .copy_from_slice(&bc.v[i * stride..(i + 1) * stride]);
+        }
+    }
+    fc.logits
+}
+
+/// One KV-cached decode position per entry `(cache row, position, token)`:
+/// embeds the token at `position`, runs every block at that single
+/// position attending over the cached `0..=position`, appends the new K/V,
+/// and returns next-token logits `(entries.len() * vocab)`.
+///
+/// Every matmul runs in canonical order ([`gemm_canon`]) and the
+/// attention tail of a full window contributes exactly zero through the
+/// softmax, so these logits are bitwise identical to a full-window
+/// [`forward`] over the same prefix — and independent of which other rows
+/// shared the step (the continuous-batching determinism contract).
+pub fn decode_step(
+    cfg: &ModelCfg,
+    mc: &MethodCfg,
+    base: &Bank,
+    factors: &BTreeMap<String, Factors>,
+    cache: &mut KvCache,
+    entries: &[(usize, usize, i32)],
+) -> Vec<f32> {
+    let m = entries.len();
+    if m == 0 {
+        return Vec::new();
+    }
+    let (t_len, c) = (cfg.seq, cfg.hidden);
+    let (heads, hd, ff) = (cfg.heads, cfg.head_dim(), cfg.ff);
+    let scale = (mc.alpha / mc.r as f64) as f32;
+    let embed = base["embed"].f32s().unwrap();
+    let att_scale = (hd as f32).powf(-0.5);
+
+    let mut x = vec![0.0f32; m * c];
+    for (i, &(row, pos, tok)) in entries.iter().enumerate() {
+        debug_assert!(row < cache.bsz && pos < t_len);
+        let e = &embed[tok as usize * c..(tok as usize + 1) * c];
+        let p = &cache.pos[pos * c..(pos + 1) * c];
+        for j in 0..c {
+            // 0.1-scaled positions, the same expression forward evaluates
+            x[i * c + j] = e[j] + 0.1 * p[j];
+        }
+    }
+
+    let mut qh = scratch_take(hd);
+    let mut kh = scratch_take(t_len * hd);
+    let mut vh = scratch_take(t_len * hd);
+    let mut ch = scratch_take(hd);
+    let mut att = scratch_take(t_len);
+    // per-block buffers reused across the sweep (fully overwritten each
+    // block) — this is the per-token hot path, keep it allocation-light
+    let mut ctx = scratch_take(m * c);
+    let mut f_val = scratch_take(m * ff);
+    for kb in 0..cfg.blocks {
+        let na = &base["norm_attn"].f32s().unwrap()[kb * c..(kb + 1) * c];
+        let nm = &base["norm_mlp"].f32s().unwrap()[kb * c..(kb + 1) * c];
+        let w = |t: &str| {
+            let (o, i) = cfg.dims(t);
+            &base[&format!("w.{t}")].f32s().unwrap()[kb * o * i..(kb + 1) * o * i]
+        };
+
+        let (hn1, _) = rmsnorm_fwd(&x, na, c);
+        let (q, _) = adapted_fwd(&hn1, w("q"), &factors["q"], kb, scale, m);
+        let (k_new, _) = adapted_fwd(&hn1, w("k"), &factors["k"], kb, scale, m);
+        let (v_new, _) = adapted_fwd(&hn1, w("v"), &factors["v"], kb, scale, m);
+        for (i, &(row, pos, _)) in entries.iter().enumerate() {
+            let dst = (row * t_len + pos) * c;
+            cache.k[kb][dst..dst + c]
+                .copy_from_slice(&k_new[i * c..(i + 1) * c]);
+            cache.v[kb][dst..dst + c]
+                .copy_from_slice(&v_new[i * c..(i + 1) * c]);
+        }
+
+        // attention: the new position attends over cached 0..=pos per head
+        for (i, &(row, pos, _)) in entries.iter().enumerate() {
+            let span = pos + 1;
+            for h in 0..heads {
+                qh.copy_from_slice(&q[i * c + h * hd..i * c + (h + 1) * hd]);
+                for tt in 0..span {
+                    let src = (row * t_len + tt) * c + h * hd;
+                    kh[tt * hd..(tt + 1) * hd]
+                        .copy_from_slice(&cache.k[kb][src..src + hd]);
+                    vh[tt * hd..(tt + 1) * hd]
+                        .copy_from_slice(&cache.v[kb][src..src + hd]);
+                }
+                att[..span].fill(0.0);
+                gemm_canon(
+                    1, span, hd, 1.0, &qh, Trans::N, &kh[..span * hd],
+                    Trans::T, &mut att[..span],
+                );
+                for a in att[..span].iter_mut() {
+                    *a *= att_scale;
+                }
+                softmax_rows(&mut att, 1, span);
+                ch.fill(0.0);
+                gemm_canon(
+                    1, hd, span, 1.0, &att[..span], Trans::N,
+                    &vh[..span * hd], Trans::N, &mut ch,
+                );
+                ctx[i * c + h * hd..i * c + (h + 1) * hd]
+                    .copy_from_slice(&ch);
+            }
+        }
+
+        let (attn_out, _) = adapted_fwd(&ctx, w("o"), &factors["o"], kb, scale, m);
+        for (xv, av) in x.iter_mut().zip(&attn_out) {
+            *xv += av;
+        }
+
+        let (hn2, _) = rmsnorm_fwd(&x, nm, c);
+        let (g_pre, _) =
+            adapted_fwd(&hn2, w("gate"), &factors["gate"], kb, scale, m);
+        let (u_val, _) = adapted_fwd(&hn2, w("up"), &factors["up"], kb, scale, m);
+        for idx in 0..m * ff {
+            f_val[idx] = silu(g_pre[idx]) * u_val[idx];
+        }
+        let (down_out, _) =
+            adapted_fwd(&f_val, w("down"), &factors["down"], kb, scale, m);
+        for (xv, dv) in x.iter_mut().zip(&down_out) {
+            *xv += dv;
+        }
+    }
+    scratch_put(qh);
+    scratch_put(kh);
+    scratch_put(vh);
+    scratch_put(ch);
+    scratch_put(att);
+    scratch_put(ctx);
+    scratch_put(f_val);
+
+    let nf = base["norm_final"].f32s().unwrap();
+    let (xf, _) = rmsnorm_fwd(&x, nf, c);
+    let mut logits = vec![0.0f32; m * cfg.vocab];
+    gemm_canon(
+        m, cfg.vocab, c, 1.0, &xf, Trans::N, embed, Trans::T, &mut logits,
+    );
+    logits
 }
 
 /// Masked next-token cross-entropy loss over cached logits.
@@ -745,6 +971,121 @@ mod tests {
         assert_ne!(l_all, l_half);
         let l_none = loss(&cache, &targets, &vec![0.0; n], cfg.vocab);
         assert_eq!(l_none, 0.0);
+    }
+
+    /// Greedy argmax over one logit row.
+    fn argmax(lrow: &[f32]) -> i32 {
+        (0..lrow.len())
+            .max_by(|&a, &b| lrow[a].total_cmp(&lrow[b]))
+            .unwrap() as i32
+    }
+
+    #[test]
+    fn kv_decode_bitwise_matches_full_forward_oracle() {
+        // The acceptance contract: prefill + decode_step greedy generations
+        // (and the logits behind them) must be bit-identical to re-running
+        // a full forward over the growing window every step.
+        let mut cfg = presets::tiny();
+        cfg.batch = 2;
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let (base, f) = setup(&cfg, &mc, 3);
+        let (t_len, vocab) = (cfg.seq, cfg.vocab);
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 9, 4, 2], vec![1, 5, 6, 7, 8, 2]];
+        let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let steps = 8;
+
+        let window_of = |gens: &[Vec<i32>]| {
+            let mut w = vec![0i32; 2 * t_len];
+            for r in 0..2 {
+                w[r * t_len..r * t_len + lens[r]].copy_from_slice(&prompts[r]);
+                w[r * t_len + lens[r]..r * t_len + lens[r] + gens[r].len()]
+                    .copy_from_slice(&gens[r]);
+            }
+            w
+        };
+
+        // KV path: prefill once, then one decode_step per token
+        let mut cache = KvCache::new(&cfg, 2);
+        let pre_logits = prefill(
+            &cfg, &mc, &base, &f,
+            &window_of(&[Vec::new(), Vec::new()]),
+            &mut cache, &[0, 1],
+        );
+        let mut kv_logits: Vec<Vec<f32>> = Vec::new(); // per step, rows concat
+        let mut kv_tokens: Vec<Vec<i32>> = vec![Vec::new(); 2];
+        let mut next: Vec<i32> = (0..2)
+            .map(|r| {
+                let pos = lens[r] - 1;
+                argmax(&pre_logits[(r * t_len + pos) * vocab..(r * t_len + pos + 1) * vocab])
+            })
+            .collect();
+        for _ in 0..steps {
+            let entries: Vec<(usize, usize, i32)> = (0..2)
+                .map(|r| (r, lens[r] + kv_tokens[r].len(), next[r]))
+                .collect();
+            for (r, &(_, _, tok)) in entries.iter().enumerate() {
+                kv_tokens[r].push(tok);
+            }
+            let logits = decode_step(&cfg, &mc, &base, &f, &mut cache, &entries);
+            next = (0..2).map(|r| argmax(&logits[r * vocab..(r + 1) * vocab])).collect();
+            kv_logits.push(logits);
+        }
+
+        // oracle: a fresh full forward over the growing window every step
+        let mut oracle_tokens: Vec<Vec<i32>> = vec![Vec::new(); 2];
+        for step in 0..=steps {
+            let (fc, _) =
+                forward(&cfg, &mc, &base, &f, &window_of(&oracle_tokens));
+            for r in 0..2 {
+                let read = lens[r] + oracle_tokens[r].len() - 1;
+                let lrow = &fc.logits
+                    [(r * t_len + read) * vocab..(r * t_len + read + 1) * vocab];
+                // the decode-step logits for this position must be
+                // bit-identical to the full forward's
+                if step > 0 {
+                    let kv = &kv_logits[step - 1][r * vocab..(r + 1) * vocab];
+                    let kvb: Vec<u32> = kv.iter().map(|v| v.to_bits()).collect();
+                    let orb: Vec<u32> = lrow.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(kvb, orb, "row {r} step {step}: logits diverge");
+                }
+                if step < steps {
+                    oracle_tokens[r].push(argmax(lrow));
+                }
+            }
+        }
+        assert_eq!(kv_tokens, oracle_tokens, "greedy generations diverge");
+    }
+
+    #[test]
+    fn decode_step_independent_of_cobatched_rows() {
+        // continuous-batching contract: a row's decode logits don't depend
+        // on which other rows shared the step
+        let mut cfg = presets::tiny();
+        cfg.batch = 2;
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let (base, f) = setup(&cfg, &mc, 5);
+        let t_len = cfg.seq;
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 7, 3, 2], vec![1, 2]];
+        let mut window = vec![0i32; 2 * t_len];
+        for (r, p) in prompts.iter().enumerate() {
+            window[r * t_len..r * t_len + p.len()].copy_from_slice(p);
+        }
+        let mut cache = KvCache::new(&cfg, 2);
+        prefill(&cfg, &mc, &base, &f, &window, &mut cache, &[0, 1]);
+        // step row 0 together with row 1...
+        let both = decode_step(
+            &cfg, &mc, &base, &f, &mut cache,
+            &[(0, 4, 9), (1, 2, 5)],
+        );
+        // ...and alone, on a fresh prefill of the same prompt
+        let mut cache2 = KvCache::new(&cfg, 2);
+        prefill(
+            &cfg, &mc, &base, &f, &window[..t_len], &mut cache2, &[0],
+        );
+        let alone = decode_step(&cfg, &mc, &base, &f, &mut cache2, &[(0, 4, 9)]);
+        let a: Vec<u32> = both[..cfg.vocab].iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = alone.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "row 0 logits depend on co-batched rows");
     }
 
     #[test]

@@ -6,15 +6,183 @@
 use mos::adapter::mos::router::build_router;
 use mos::config::{presets, MethodCfg};
 use mos::coordinator::{
-    GenOptions, HostEngine, Registry, Server, ServerCfg, TenantSpec,
+    GenOptions, HostEngine, Registry, ServeEngine, Server, ServerCfg,
+    TenantSpec,
 };
 use mos::data::tasks::{Task, TaskKind};
 use mos::data::Tokenizer;
 use mos::train::checkpoint::Checkpoint;
 use mos::train::host::HostBackend;
 use mos::train::run;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// A host engine whose decode steps are artificially slowed, so tests can
+/// observe a generation mid-flight without racing the real decode speed.
+struct SlowStepEngine {
+    inner: HostEngine,
+    step_delay: Duration,
+}
+
+impl ServeEngine for SlowStepEngine {
+    fn forward(
+        &mut self,
+        tenant: &mos::coordinator::Tenant,
+        factors: &mos::coordinator::cache::TenantFactors,
+        tokens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.inner.forward(tenant, factors, tokens)
+    }
+    fn shape(&self) -> (usize, usize, usize) {
+        self.inner.shape()
+    }
+    fn supports_steps(&self) -> bool {
+        true
+    }
+    fn prefill_rows(
+        &mut self,
+        tenant: &mos::coordinator::Tenant,
+        factors: &mos::coordinator::cache::TenantFactors,
+        rows: &[usize],
+        tokens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.inner.prefill_rows(tenant, factors, rows, tokens)
+    }
+    fn decode_rows(
+        &mut self,
+        tenant: &mos::coordinator::Tenant,
+        factors: &mos::coordinator::cache::TenantFactors,
+        entries: &[(usize, usize, i32)],
+    ) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.step_delay);
+        self.inner.decode_rows(tenant, factors, entries)
+    }
+}
+
+#[test]
+fn continuous_batching_admits_late_request_mid_decode() {
+    // A request submitted while a long generation is mid-flight must be
+    // admitted into the running batch between decode steps and start
+    // streaming tokens before the long request completes.
+    let mut cfg = presets::tiny();
+    cfg.batch = 4;
+    let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+    let mut server = Server::new(
+        Arc::clone(&registry),
+        ServerCfg {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            cache_capacity: 4,
+            ..ServerCfg::default()
+        },
+    );
+    server
+        .register("tenant", TenantSpec::mos(4, 2, 2, 0).seed(1))
+        .unwrap();
+    let cfg2 = cfg.clone();
+    server.start(1, move |_| SlowStepEngine {
+        inner: HostEngine::new(cfg2.clone(), 0),
+        step_delay: Duration::from_millis(5),
+    });
+
+    // ~40 decode steps at >= 5ms each: a wide admission window
+    let long = server
+        .submit(
+            "tenant",
+            "q:long",
+            GenOptions::greedy().stop_tokens(Vec::new()),
+        )
+        .unwrap();
+    long.recv_token_timeout(Duration::from_secs(30))
+        .expect("long request never streamed");
+
+    // the long generation is now mid-flight; submit a short request
+    let late = server
+        .submit(
+            "tenant",
+            "q:late",
+            GenOptions::greedy().max_new_tokens(2).stop_tokens(Vec::new()),
+        )
+        .unwrap();
+    late.recv_token_timeout(Duration::from_secs(30))
+        .expect("late request never streamed");
+    let late_first_at = Instant::now();
+
+    // first-token timestamp check: the long request must still be
+    // unresolved at the instant the late request's first token arrived
+    assert!(
+        long.try_wait().is_none(),
+        "late first token at {late_first_at:?} but the long request \
+         already resolved — continuous batching did not interleave"
+    );
+    let late_resp = late.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    assert_eq!(late_resp.tokens, 2);
+    let long_resp = long.wait_timeout(Duration::from_secs(60)).unwrap().unwrap();
+    assert!(
+        long_resp.tokens > late_resp.tokens,
+        "long generation should outlast the late one"
+    );
+    assert!(
+        server.metrics.refilled.load(Ordering::Relaxed) >= 1,
+        "late request was not admitted through the refill path"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn streaming_tokens_arrive_incrementally_and_match_wait() {
+    let mut cfg = presets::tiny();
+    cfg.batch = 4;
+    let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+    let mut server = Server::new(
+        Arc::clone(&registry),
+        ServerCfg {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            cache_capacity: 4,
+            ..ServerCfg::default()
+        },
+    );
+    server
+        .register("tenant", TenantSpec::mos(4, 2, 2, 0).seed(2))
+        .unwrap();
+    let cfg2 = cfg.clone();
+    server.start(1, move |_| SlowStepEngine {
+        inner: HostEngine::new(cfg2.clone(), 0),
+        step_delay: Duration::from_millis(5),
+    });
+
+    let h = server
+        .submit(
+            "tenant",
+            "q:stream",
+            GenOptions::greedy().max_new_tokens(10).stop_tokens(Vec::new()),
+        )
+        .unwrap();
+    let mut streamed = Vec::new();
+    let first = h
+        .recv_token_timeout(Duration::from_secs(30))
+        .expect("no first token");
+    streamed.push(first);
+    // incremental delivery: the request is still unresolved after the
+    // first token arrives (more slow steps remain)
+    assert!(
+        h.try_wait().is_none(),
+        "request resolved before the stream finished"
+    );
+    while let Some(tok) = h.recv_token_timeout(Duration::from_secs(30)) {
+        streamed.push(tok);
+    }
+    let resp = h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    assert_eq!(resp.tokens, streamed.len());
+    assert_eq!(
+        resp.text,
+        Tokenizer::new().decode(&streamed),
+        "streamed tokens must decode to the one-shot wait text"
+    );
+    server.shutdown();
+}
 
 #[test]
 fn trained_tenant_serves_correct_answers() {
@@ -75,10 +243,7 @@ fn trained_tenant_serves_correct_answers() {
         .unwrap();
     let base2 = base.clone();
     let cfg2 = cfg.clone();
-    server.start(1, move |_| HostEngine {
-        cfg: cfg2.clone(),
-        base: base2.clone(),
-    });
+    server.start(1, move |_| HostEngine::with_base(cfg2.clone(), base2.clone()));
 
     let task = Task::new(TaskKind::Recall, seed);
     let tk = Tokenizer::new();

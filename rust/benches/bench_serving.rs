@@ -1,10 +1,12 @@
 //! Serving-system bench: coordinator throughput/latency under multi-tenant
-//! traffic — KV-cached stepping vs full-window decoding, batching on vs
-//! off, tenant-count sweep, cache effectiveness. This quantifies the
-//! system claims around the paper (Sec. 3.6 low-cost switching; intro
-//! scenario of many concurrent customized models) plus the PR-4 decode
-//! rewrite: per-token cost O(step) instead of O(window · forward), and
-//! time-to-first-token under continuous batching.
+//! traffic — KV-cached stepping vs full-window decoding, lean vs
+//! full-forward prefill, batching on vs off, tenant-count sweep. This
+//! quantifies the system claims around the paper (Sec. 3.6 low-cost
+//! switching; intro scenario of many concurrent customized models), the
+//! PR-4 decode rewrite (per-token cost O(step) instead of O(window ·
+//! forward)), and the PR-5 lean prefill (inference-only forward:
+//! no backward cache, last-position-only logits, arena-only hot path —
+//! `prefill_p50_ms` and the `alloc_mb` counting-probe field track both).
 //!
 //! Run: cargo bench --bench bench_serving
 //! Knobs: MOS_SERVE_REQS (default 48), MOS_SERVE_TENANTS (default "1,4,16"),
@@ -16,17 +18,63 @@ use mos::coordinator::{
     FullWindowEngine, GenOptions, HostEngine, Registry, Server, ServerCfg,
     TenantSpec,
 };
+use mos::util::alloc;
 use mos::util::json::Json;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+// every allocation in the scenario (all threads) flows through the
+// counting probe — `alloc_mb` below is cumulative allocation churn, a
+// peak-RSS proxy that makes "the lean path stopped allocating" visible
+// in BENCH_serving.json
+#[global_allocator]
+static ALLOC_PROBE: alloc::CountingAlloc = alloc::CountingAlloc;
+
+/// How a scenario builds its engine.
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    /// KV stepping + lean inference-only prefill (the serving default).
+    KvLean,
+    /// KV stepping + legacy full-forward prefill (comparison arm).
+    KvFullPrefill,
+    /// Full-window forward per generated token (fixed-graph engines).
+    FullFwd,
+}
+
+impl Mode {
+    fn decode(self) -> &'static str {
+        match self {
+            Mode::KvLean | Mode::KvFullPrefill => "kv_step",
+            Mode::FullFwd => "full_fwd",
+        }
+    }
+
+    fn prefill(self) -> &'static str {
+        match self {
+            Mode::KvLean => "lean",
+            Mode::KvFullPrefill => "full_fwd_prefill",
+            Mode::FullFwd => "n/a",
+        }
+    }
+}
+
+struct ScenarioResult {
+    rps: f64,
+    p50: f64,
+    p95: f64,
+    toks: f64,
+    ttft: f64,
+    prefill_ms: f64,
+    alloc_mb: f64,
+}
+
 fn run_scenario(
     n_tenants: usize,
     n_requests: usize,
     max_batch: usize,
-    kv_steps: bool,
-) -> (f64, f64, f64, f64, f64) {
+    mode: Mode,
+) -> ScenarioResult {
     let mut cfg = presets::tiny();
     cfg.batch = max_batch.max(1);
     let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
@@ -48,11 +96,18 @@ fn run_scenario(
             .unwrap();
     }
     let cfg2 = cfg.clone();
-    if kv_steps {
-        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
-    } else {
-        server.start(1, move |_| FullWindowEngine(HostEngine::new(cfg2.clone(), 0)));
+    match mode {
+        Mode::KvLean => {
+            server.start(1, move |_| HostEngine::new(cfg2.clone(), 0))
+        }
+        Mode::KvFullPrefill => server.start(1, move |_| {
+            HostEngine::new(cfg2.clone(), 0).full_prefill()
+        }),
+        Mode::FullFwd => server.start(1, move |_| {
+            FullWindowEngine(HostEngine::new(cfg2.clone(), 0))
+        }),
     }
+    let bytes0 = alloc::total_bytes();
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_requests)
         .map(|i| {
@@ -71,13 +126,19 @@ fn run_scenario(
             .expect("request failed");
     }
     let dt = t0.elapsed().as_secs_f64();
-    let rps = n_requests as f64 / dt;
-    let p50 = server.metrics.percentile_us(50.0) / 1e3;
-    let p95 = server.metrics.percentile_us(95.0) / 1e3;
-    let ttft = server.metrics.ttft_percentile_us(50.0) / 1e3;
-    let toks = server.metrics.generated_tokens.load(Ordering::Relaxed) as f64 / dt;
+    let alloc_mb = (alloc::total_bytes() - bytes0) as f64 / 1e6;
+    let res = ScenarioResult {
+        rps: n_requests as f64 / dt,
+        p50: server.metrics.percentile_us(50.0) / 1e3,
+        p95: server.metrics.percentile_us(95.0) / 1e3,
+        toks: server.metrics.generated_tokens.load(Ordering::Relaxed) as f64
+            / dt,
+        ttft: server.metrics.ttft_percentile_us(50.0) / 1e3,
+        prefill_ms: server.metrics.prefill_percentile_us(50.0) / 1e3,
+        alloc_mb,
+    };
     server.shutdown();
-    (rps, p50, p95, toks, ttft)
+    res
 }
 
 fn main() {
@@ -94,50 +155,69 @@ fn main() {
     let mut table = Table::new(
         "Coordinator serving (tiny preset, host engine, 1 worker)",
         &[
-            "tenants", "decode", "batching", "req/s", "p50 ms", "p95 ms",
-            "ttft p50 ms", "tok/s",
+            "tenants", "decode", "prefill", "batching", "req/s", "p50 ms",
+            "p95 ms", "ttft p50 ms", "prefill p50 ms", "tok/s", "alloc MB",
         ],
     );
     let mut json_cases = Vec::new();
     for &nt in &tenant_counts {
-        for (decode, kv) in [("kv_step", true), ("full_fwd", false)] {
-            for (label, mb) in [("batched (8)", 8usize), ("unbatched (1)", 1)] {
-                let (rps, p50, p95, toks, ttft) =
-                    run_scenario(nt, n_requests, mb, kv);
-                table.row(vec![
-                    nt.to_string(),
-                    decode.into(),
-                    label.into(),
-                    format!("{rps:.2}"),
-                    format!("{p50:.0}"),
-                    format!("{p95:.0}"),
-                    format!("{ttft:.1}"),
-                    format!("{toks:.0}"),
-                ]);
-                eprintln!(
-                    "[serving] tenants={nt} {decode} {label}: {rps:.2} req/s \
-                     ttft_p50={ttft:.1}ms"
-                );
-                json_cases.push(Json::obj(vec![
-                    ("tenants", Json::num(nt as f64)),
-                    ("decode", Json::str(decode)),
-                    ("max_batch", Json::num(mb as f64)),
-                    ("req_per_s", Json::num(rps)),
-                    ("p50_ms", Json::num(p50)),
-                    ("p95_ms", Json::num(p95)),
-                    ("ttft_p50_ms", Json::num(ttft)),
-                    ("tok_per_s", Json::num(toks)),
-                ]));
-            }
+        let cases = [
+            (Mode::KvLean, 8usize),
+            (Mode::KvLean, 1),
+            (Mode::KvFullPrefill, 8),
+            (Mode::FullFwd, 8),
+            (Mode::FullFwd, 1),
+        ];
+        for (mode, mb) in cases {
+            let label = if mb > 1 { "batched (8)" } else { "unbatched (1)" };
+            let r = run_scenario(nt, n_requests, mb, mode);
+            table.row(vec![
+                nt.to_string(),
+                mode.decode().into(),
+                mode.prefill().into(),
+                label.into(),
+                format!("{:.2}", r.rps),
+                format!("{:.0}", r.p50),
+                format!("{:.0}", r.p95),
+                format!("{:.1}", r.ttft),
+                format!("{:.2}", r.prefill_ms),
+                format!("{:.0}", r.toks),
+                format!("{:.1}", r.alloc_mb),
+            ]);
+            eprintln!(
+                "[serving] tenants={nt} {} prefill={} {label}: {:.2} req/s \
+                 ttft_p50={:.1}ms prefill_p50={:.2}ms alloc={:.1}MB",
+                mode.decode(),
+                mode.prefill(),
+                r.rps,
+                r.ttft,
+                r.prefill_ms,
+                r.alloc_mb,
+            );
+            json_cases.push(Json::obj(vec![
+                ("tenants", Json::num(nt as f64)),
+                ("decode", Json::str(mode.decode())),
+                ("prefill", Json::str(mode.prefill())),
+                ("max_batch", Json::num(mb as f64)),
+                ("req_per_s", Json::num(r.rps)),
+                ("p50_ms", Json::num(r.p50)),
+                ("p95_ms", Json::num(r.p95)),
+                ("ttft_p50_ms", Json::num(r.ttft)),
+                ("prefill_p50_ms", Json::num(r.prefill_ms)),
+                ("tok_per_s", Json::num(r.toks)),
+                ("alloc_mb", Json::num(r.alloc_mb)),
+            ]));
         }
     }
     table.print();
     println!(
         "\nreproduction target: per-tenant batching sustains throughput as \
          tenant count grows (low-cost switching — only adapter tensors \
-         change per batch), batched >> unbatched, and the KV-cached step \
-         path (kv_step) beats re-running full-window forwards per token \
-         (full_fwd) on both tok/s and time-to-first-token."
+         change per batch), batched >> unbatched, the KV-cached step path \
+         (kv_step) beats re-running full-window forwards per token \
+         (full_fwd) on tok/s and time-to-first-token, and the lean \
+         inference-only prefill beats the legacy full-forward prefill on \
+         prefill_p50_ms and allocation churn (alloc_mb)."
     );
 
     let json = Json::obj(vec![

@@ -91,6 +91,11 @@ pub struct Metrics {
     /// Time to first streamed token (submit -> first token; requests that
     /// resolve without generating record their resolution latency).
     pub ttft: Histogram,
+    /// Engine prefill latency (one `prefill_rows` call per admission
+    /// round on the KV-stepping path; the full-window fallback records
+    /// nothing here). Dominates TTFT — `bench_serving` reports its p50
+    /// per case as `prefill_p50_ms`.
+    pub prefill: Histogram,
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub errors: AtomicU64,
@@ -127,6 +132,10 @@ impl Metrics {
         self.ttft.record(d);
     }
 
+    pub fn record_prefill(&self, d: Duration) {
+        self.prefill.record(d);
+    }
+
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
@@ -152,6 +161,12 @@ impl Metrics {
         self.ttft.percentile_us(p)
     }
 
+    /// Engine-prefill percentile estimate, in microseconds (0 when the
+    /// serving path never stepped, e.g. the full-window fallback).
+    pub fn prefill_percentile_us(&self, p: f64) -> f64 {
+        self.prefill.percentile_us(p)
+    }
+
     pub fn mean_latency_us(&self) -> f64 {
         let n = self.completed.load(Ordering::Relaxed);
         if n == 0 {
@@ -170,7 +185,7 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} completed={} errors={} rejected={} cancelled={} expired={} refilled={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms ttft_p50={:.1}ms mean_batch={:.2} tokens={}",
+            "requests={} completed={} errors={} rejected={} cancelled={} expired={} refilled={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms ttft_p50={:.1}ms prefill_p50={:.1}ms mean_batch={:.2} tokens={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -183,6 +198,7 @@ impl Metrics {
             self.percentile_us(95.0) / 1e3,
             self.percentile_us(99.0) / 1e3,
             self.ttft_percentile_us(50.0) / 1e3,
+            self.prefill_percentile_us(50.0) / 1e3,
             self.mean_batch_size(),
             self.generated_tokens.load(Ordering::Relaxed),
         )
@@ -284,9 +300,23 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.percentile_us(99.0), 0.0);
         assert_eq!(m.ttft_percentile_us(99.0), 0.0);
+        assert_eq!(m.prefill_percentile_us(99.0), 0.0);
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
         let _ = m.summary();
+    }
+
+    #[test]
+    fn prefill_histogram_independent_of_ttft() {
+        let m = Metrics::new();
+        m.record_prefill(Duration::from_micros(300));
+        m.record_ttft(Duration::from_micros(4000));
+        assert_eq!(m.prefill.count(), 1);
+        assert_eq!(m.ttft.count(), 1);
+        let p = m.prefill_percentile_us(50.0);
+        let b = bucket_of(300);
+        assert!((bucket_lower(b)..bucket_lower(b + 1)).contains(&p));
+        assert!(p < m.ttft_percentile_us(50.0));
     }
 
     #[test]

@@ -24,7 +24,8 @@ use super::metrics::Metrics;
 use super::registry::{Registry, Tenant, TenantSpec};
 use crate::data::tokenizer::Tokenizer;
 use crate::eval::{DecodeState, GenOptions};
-use crate::model::transformer::{decode_step, prefill, KvCache};
+use crate::model::math::scratch_put;
+use crate::model::transformer::{decode_step, infer_prefill, KvCache};
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -57,14 +58,17 @@ pub trait ServeEngine {
         false
     }
     /// (Re)build the engine's KV cache rows `rows[i]` from the padded
-    /// window `tokens` (`rows.len() * seq`), returning full-window logits
-    /// (`rows.len() * seq * vocab`).
+    /// window `tokens` (`rows.len() * seq`), returning **lean**
+    /// next-token logits (`rows.len() * vocab`), one row per request
+    /// projected at its `last[i]` window position (PR 5: the full-window
+    /// `(rows·seq·vocab)` return is gone — see DESIGN.md migration table).
     fn prefill_rows(
         &mut self,
         _tenant: &Tenant,
         _factors: &TenantFactors,
         _rows: &[usize],
         _tokens: &[i32],
+        _last: &[usize],
     ) -> Result<Vec<f32>> {
         anyhow::bail!("engine does not support KV-cached stepping")
     }
@@ -82,16 +86,26 @@ pub trait ServeEngine {
 
 /// Host-model serving engine: shared frozen base + cached tenant factors
 /// + a lazily allocated KV cache for the stepping path.
+///
+/// Prefill runs the lean inference-only forward
+/// (`transformer::infer_prefill`: K/V straight into the cache, arena-only
+/// intermediates, last-position-only logits). [`full_prefill`]
+/// [`HostEngine::full_prefill`] re-enables the pre-PR-5 training-forward
+/// prefill (full `ForwardCache` + full-window vocab projection, K/V
+/// copied out) behind the *same* lean return contract — it exists so
+/// `bench_serving` can measure the lean path's win and tests can pin
+/// their equivalence; the logits are bitwise identical either way.
 pub struct HostEngine {
     pub cfg: crate::config::ModelCfg,
     pub base: crate::util::bank::Bank,
     kv: Option<KvCache>,
+    full_prefill: bool,
 }
 
 impl HostEngine {
     pub fn new(cfg: crate::config::ModelCfg, seed: u64) -> HostEngine {
         let base = crate::model::transformer::init_base(&cfg, seed);
-        HostEngine { cfg, base, kv: None }
+        HostEngine { cfg, base, kv: None, full_prefill: false }
     }
 
     /// Wrap an existing base bank (e.g. a just-trained model's).
@@ -99,7 +113,13 @@ impl HostEngine {
         cfg: crate::config::ModelCfg,
         base: crate::util::bank::Bank,
     ) -> HostEngine {
-        HostEngine { cfg, base, kv: None }
+        HostEngine { cfg, base, kv: None, full_prefill: false }
+    }
+
+    /// Use the legacy full-forward prefill (bench/test comparison arm).
+    pub fn full_prefill(mut self) -> HostEngine {
+        self.full_prefill = true;
+        self
     }
 }
 
@@ -134,11 +154,31 @@ impl ServeEngine for HostEngine {
         factors: &TenantFactors,
         rows: &[usize],
         tokens: &[i32],
+        last: &[usize],
     ) -> Result<Vec<f32>> {
         let kv = self
             .kv
             .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
-        Ok(prefill(&self.cfg, &tenant.mc, &self.base, factors, tokens, kv, rows))
+        if self.full_prefill {
+            // legacy arm: the training forward (ForwardCache + full-window
+            // vocab projection), K/V copied out, logits re-sliced to the
+            // lean shape — bitwise identical rows, ~seq-fold more work
+            let (seq, vocab) = (self.cfg.seq, self.cfg.vocab);
+            let (fc, _) = crate::model::transformer::forward(
+                &self.cfg, &tenant.mc, &self.base, factors, tokens,
+            );
+            kv.copy_from_forward(&fc, rows);
+            let mut lean = vec![0.0f32; rows.len() * vocab];
+            for (i, &p) in last.iter().enumerate() {
+                let src = (i * seq + p) * vocab;
+                lean[i * vocab..(i + 1) * vocab]
+                    .copy_from_slice(&fc.logits[src..src + vocab]);
+            }
+            return Ok(lean);
+        }
+        Ok(infer_prefill(
+            &self.cfg, &tenant.mc, &self.base, factors, tokens, last, kv, rows,
+        ))
     }
 
     fn decode_rows(
@@ -634,11 +674,20 @@ fn serve_batch<E: ServeEngine>(
                 for &r in &live_new {
                     toks.extend_from_slice(&st.tokens()[r * seq..(r + 1) * seq]);
                 }
-                match engine.prefill_rows(&tenant, &factors, &live_new, &toks) {
+                let last: Vec<usize> =
+                    live_new.iter().map(|&r| st.last_pos(r)).collect();
+                let t0 = Instant::now();
+                match engine
+                    .prefill_rows(&tenant, &factors, &live_new, &toks, &last)
+                {
                     Ok(logits) => {
+                        metrics.record_prefill(t0.elapsed());
                         for (row, tok) in st.step_prefill(&live_new, &logits) {
                             stream_token(metrics, &mut slots, row, tok);
                         }
+                        // lean logits are arena-backed: recycle them so the
+                        // admission path stays allocation-free steady-state
+                        scratch_put(logits);
                     }
                     Err(e) => {
                         engine_err = Some(ServeError::Engine(e.to_string()));
@@ -660,6 +709,8 @@ fn serve_batch<E: ServeEngine>(
                             for (row, tok) in st.step_rows(&entries, &logits) {
                                 stream_token(metrics, &mut slots, row, tok);
                             }
+                            // arena-backed (see decode_step): recycle
+                            scratch_put(logits);
                         }
                         Err(e) => {
                             engine_err =
@@ -672,6 +723,10 @@ fn serve_batch<E: ServeEngine>(
                             for (row, tok) in st.step_full(&logits) {
                                 stream_token(metrics, &mut slots, row, tok);
                             }
+                            // engine-allocated (not arena-origin): Arena::put
+                            // is capacity-capped, so parking these cannot
+                            // grow the worker's free list without bound
+                            scratch_put(logits);
                         }
                         Err(e) => {
                             engine_err =
@@ -795,6 +850,50 @@ mod tests {
                             "alice",
                             &format!("q:{i}"),
                             GenOptions::greedy().max_new_tokens(12),
+                        )
+                        .unwrap()
+                })
+                .collect();
+            let texts = handles
+                .into_iter()
+                .map(|h| {
+                    h.wait_timeout(Duration::from_secs(30))
+                        .unwrap()
+                        .unwrap()
+                        .text
+                })
+                .collect();
+            server.shutdown();
+            texts
+        };
+        assert_eq!(serve_with(false), serve_with(true));
+    }
+
+    #[test]
+    fn lean_and_full_forward_prefill_serve_identical_text() {
+        // PR-5 contract: the lean inference-only prefill must serve
+        // exactly what the legacy training-forward prefill serves
+        // (bitwise logits => identical tokens), including mixed lengths
+        let serve_with = |full_prefill: bool| -> Vec<String> {
+            let (mut server, cfg) = make_server(1 << 30);
+            server.register("alice", spec(13)).unwrap();
+            let cfg2 = cfg.clone();
+            server.start(1, move |_| {
+                let e = HostEngine::new(cfg2.clone(), 0);
+                if full_prefill {
+                    e.full_prefill()
+                } else {
+                    e
+                }
+            });
+            let handles: Vec<_> = ["q:a", "q:longer prompt", "q:b"]
+                .iter()
+                .map(|&p| {
+                    server
+                        .submit(
+                            "alice",
+                            p,
+                            GenOptions::greedy().max_new_tokens(10),
                         )
                         .unwrap()
                 })

@@ -291,22 +291,36 @@ impl DecodeState {
             .collect()
     }
 
-    /// Apply prefill logits (`rows.len() * seq * vocab`, full-window
-    /// layout) to freshly admitted rows: samples each row's first token.
-    /// Returns the `(row, token)` pairs actually emitted.
+    /// Window position of the newest filled token for `row` — the
+    /// position whose next-token logits a lean prefill must return
+    /// (`ServeEngine::prefill_rows`'s `last` argument).
+    pub fn last_pos(&self, row: usize) -> usize {
+        debug_assert!(self.rows[row].len > 0, "last_pos of an empty row");
+        self.rows[row].len - 1
+    }
+
+    /// Apply lean prefill logits (`rows.len() * vocab`: one next-token
+    /// row per prefilled request, already projected at each row's last
+    /// prompt position — see `transformer::infer_prefill`) to freshly
+    /// admitted rows: samples each row's first token. Returns the
+    /// `(row, token)` pairs actually emitted.
+    ///
+    /// Migration note (PR 5): this used to take full-window
+    /// `(rows·seq·vocab)` logits and index each row's last position
+    /// itself; the position selection now lives engine-side
+    /// ([`last_pos`][DecodeState::last_pos] feeds it).
     pub fn step_prefill(
         &mut self,
         rows: &[usize],
         logits: &[f32],
     ) -> Vec<(usize, i32)> {
-        debug_assert_eq!(logits.len(), rows.len() * self.seq * self.vocab);
+        debug_assert_eq!(logits.len(), rows.len() * self.vocab);
         let mut emitted = Vec::new();
         for (i, &row) in rows.iter().enumerate() {
             if self.rows[row].done {
                 continue;
             }
-            let pos = self.rows[row].len - 1;
-            let off = (i * self.seq + pos) * self.vocab;
+            let off = i * self.vocab;
             if let Some(tok) = self.apply(row, &logits[off..off + self.vocab]) {
                 emitted.push((row, tok));
             }
@@ -707,6 +721,26 @@ mod tests {
         let got: Vec<Vec<i32>> = (0..2).map(|r| st.release(r)).collect();
         assert_eq!(got, want);
         assert_eq!(streamed, want, "streamed tokens diverge from outputs");
+    }
+
+    #[test]
+    fn step_prefill_consumes_lean_logit_rows() {
+        // lean prefill layout: one (vocab,) next-token row per prefilled
+        // request, already projected at last_pos — no full-window indexing
+        let vocab = 8;
+        let seq = 6;
+        let mut st = DecodeState::vacant(3, seq, vocab);
+        st.admit(0, &[1, 4], GenOptions::greedy(), None);
+        st.admit(2, &[1, 5, 6], GenOptions::greedy(), None);
+        assert_eq!(st.last_pos(0), 1);
+        assert_eq!(st.last_pos(2), 2);
+        let mut logits = vec![0.0f32; 2 * vocab];
+        logits[3] = 5.0; // row 0's lean row favors token 3
+        logits[vocab + 5] = 5.0; // row 2's favors token 5
+        let emitted = st.step_prefill(&[0, 2], &logits);
+        assert_eq!(emitted, vec![(0, 3), (2, 5)]);
+        assert_eq!(st.generated(0), &[3]);
+        assert_eq!(st.generated(2), &[5]);
     }
 
     #[test]

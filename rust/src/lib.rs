@@ -13,6 +13,13 @@
 //! See `DESIGN.md` for the system inventory and the experiment index mapping
 //! every paper table/figure to a bench target.
 
+// Unit tests run under the counting allocation probe so perf tests can
+// assert the lean serving hot path is arena-only (see util::alloc;
+// bench_serving registers its own instance for the RSS proxy).
+#[cfg(test)]
+#[global_allocator]
+static ALLOC_PROBE: util::alloc::CountingAlloc = util::alloc::CountingAlloc;
+
 pub mod adapter;
 pub mod bench;
 pub mod config;

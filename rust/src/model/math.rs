@@ -77,14 +77,33 @@ fn auto_pool() -> Option<&'static ThreadPool> {
 /// A recycling pool of `Vec<f32>` scratch buffers: `take` hands out a
 /// zero-filled buffer (reusing the allocation of a previously `put` one
 /// when large enough), so hot loops stop allocating fresh vectors.
-#[derive(Default)]
 pub struct Arena {
     free: Vec<Vec<f32>>,
+    /// Total capacity (floats) parked in `free`.
+    free_floats: usize,
+    /// Park limit, [`MAX_FREE_FLOATS`] outside tests.
+    cap: usize,
 }
+
+impl Default for Arena {
+    fn default() -> Arena {
+        Arena { free: Vec::new(), free_floats: 0, cap: MAX_FREE_FLOATS }
+    }
+}
+
+/// Cap on the floats a thread's free list may park ([`Arena::put`] past
+/// it drops the buffer instead of keeping it). The steady-state working
+/// sets (GEMM packing, inference buffers, the backward sweep) sit orders
+/// of magnitude below this, so the cap never binds on the arena-balanced
+/// hot paths — it exists to bound worker memory when callers recycle
+/// buffers the arena never handed out (e.g. the serving loop putting an
+/// engine's freshly allocated full-window logits every step: without a
+/// cap the free list grows by one window-sized buffer per token).
+const MAX_FREE_FLOATS: usize = 1 << 26; // 64 M floats = 256 MB
 
 impl Arena {
     pub fn new() -> Arena {
-        Arena { free: Vec::new() }
+        Arena::default()
     }
 
     /// A zero-filled buffer of exactly `len` elements.
@@ -93,16 +112,25 @@ impl Arena {
             Some(i) => self.free.swap_remove(i),
             None => self.free.pop().unwrap_or_default(),
         };
+        self.free_floats -= v.capacity().min(self.free_floats);
         v.clear();
         v.resize(len, 0.0);
         v
     }
 
-    /// Return a buffer for reuse by a later `take`.
+    /// Return a buffer for reuse by a later `take` (dropped instead once
+    /// the free list holds [`MAX_FREE_FLOATS`]).
     pub fn put(&mut self, v: Vec<f32>) {
-        if v.capacity() > 0 {
-            self.free.push(v);
+        if v.capacity() == 0 || self.free_floats + v.capacity() > self.cap {
+            return;
         }
+        self.free_floats += v.capacity();
+        self.free.push(v);
+    }
+
+    #[cfg(test)]
+    fn with_cap(cap: usize) -> Arena {
+        Arena { cap, ..Arena::default() }
     }
 }
 
@@ -141,6 +169,13 @@ const NR: usize = 8;
 const KC: usize = 256;
 /// Row-blocking: A rows packed per inner block (multiple of MR).
 const MC: usize = 64;
+/// Column-blocking: packed-B columns walked per group (multiple of NR).
+/// Bounds the packed-B working set of the inner loops to `KC * NC` floats
+/// (~512 KB) — without it a row-block streams the *entire* packed B per
+/// k-block, which falls out of cache at llama-scale n. Per-element k-order
+/// is untouched (the group loop sits outside the k loop), so results stay
+/// bitwise identical to the ungrouped walk.
+const NC: usize = 512;
 /// Below this many flops the scalar kernels win (packing overhead).
 const SMALL_FLOPS: usize = 1 << 16;
 /// Below this many flops a single core is faster than fan-out.
@@ -258,6 +293,44 @@ pub fn gemm_canon(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    gemm_canon_dispatch(true, m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// Single-threaded [`gemm_canon`] (`parallel = false` pins the pool off):
+/// bitwise identical — the blocked path's per-element order does not
+/// depend on the worker count. [`gemm_canon_batch`] runs its sub-problems
+/// through this so a sub-GEMM inside a pool worker never nests fan-out.
+#[allow(clippy::too_many_arguments)]
+fn gemm_canon_serial(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    gemm_canon_dispatch(false, m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// The one canonical-order shape dispatch [`gemm_canon`] and
+/// [`gemm_canon_serial`] share — a single copy so the bitwise contract
+/// cannot drift between the pooled and serial entries.
+#[allow(clippy::too_many_arguments)]
+fn gemm_canon_dispatch(
+    parallel: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
@@ -266,10 +339,95 @@ pub fn gemm_canon(
         .saturating_mul(n)
         .saturating_mul(k);
     if m >= MR && flops >= SMALL_FLOPS {
-        let pool = auto_pool().filter(|_| flops >= PAR_FLOPS);
+        let pool = if parallel {
+            auto_pool().filter(|_| flops >= PAR_FLOPS)
+        } else {
+            None
+        };
         return gemm_blocked(pool, m, n, k, alpha, a, ta, b, tb, c);
     }
     gemm_canon_small(m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// `nb` independent canonical-order GEMMs in one call:
+/// `c_i (m,n) += alpha * op(a_i) @ op(b_i)` for `i in 0..nb`, with the
+/// operands packed contiguously (`a` is `nb * m * k`, `b` is `nb * k * n`,
+/// `c` is `nb * m * n`).
+///
+/// This exists for per-head attention: a single head's score/context GEMM
+/// is far below [`PAR_FLOPS`], so dispatching heads one by one leaves the
+/// pool idle. Batching every `(batch, head)` sub-problem into one call
+/// lets the *batch* dimension feed the pool whole sub-GEMMs, while each
+/// sub-problem still runs the exact [`gemm_canon`] per-element order —
+/// results are bitwise identical to `nb` individual [`gemm_canon`] calls,
+/// for any worker count (each `c_i` is written by exactly one worker).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_canon_batch(
+    nb: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), nb * m * k);
+    debug_assert_eq!(b.len(), nb * k * n);
+    debug_assert_eq!(c.len(), nb * m * n);
+    if nb == 0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let (asz, bsz, csz) = (m * k, k * n, m * n);
+    let sub = |i: usize, ci: &mut [f32]| {
+        gemm_canon_serial(
+            m,
+            n,
+            k,
+            alpha,
+            &a[i * asz..(i + 1) * asz],
+            ta,
+            &b[i * bsz..(i + 1) * bsz],
+            tb,
+            ci,
+        )
+    };
+    let total_flops = 2usize
+        .saturating_mul(nb)
+        .saturating_mul(m)
+        .saturating_mul(n)
+        .saturating_mul(k);
+    // don't even build the pool below the parallel threshold
+    let pool = if nb > 1 && total_flops >= PAR_FLOPS {
+        auto_pool()
+    } else {
+        None
+    };
+    let nth = pool.map(|p| p.workers()).unwrap_or(1);
+    if nth <= 1 {
+        for (i, ci) in c.chunks_exact_mut(csz).enumerate() {
+            sub(i, ci);
+        }
+        return;
+    }
+    let per = div_up(nb, nth);
+    let mut tasks: Vec<(usize, &mut [f32])> = Vec::new();
+    let mut rest: &mut [f32] = c;
+    let mut i0 = 0usize;
+    while i0 < nb {
+        let take = per.min(nb - i0);
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * csz);
+        tasks.push((i0, head));
+        rest = tail;
+        i0 += take;
+    }
+    pool.unwrap().scoped_map(tasks, |(i0, chunk)| {
+        for (j, ci) in chunk.chunks_exact_mut(csz).enumerate() {
+            sub(i0 + j, ci);
+        }
+    });
 }
 
 /// Scalar kernel replicating the tiled path's per-element order: for each
@@ -581,9 +739,14 @@ fn micro_tile(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
 }
 
 /// One worker's share: C rows `[i0, i0+rows)` (given as the matching
-/// `cchunk` slice), all k-blocks, all column panels. k-blocks accumulate
-/// in ascending order per element, so the result is independent of how
-/// rows were chunked across workers.
+/// `cchunk` slice), all k-blocks, all column panels. Column panels are
+/// walked in `NC`-wide groups (outermost loop) so the packed-B working
+/// set of the k/row loops stays `KC * NC`-bounded instead of streaming
+/// the full packed B per row-block; A is re-packed per group, which
+/// amortizes against the `m * k * NC` flops each group performs.
+/// k-blocks accumulate in ascending order per element (the group loop is
+/// outside the k loop and never revisits a column), so the result is
+/// bitwise independent of both the worker count and the grouping.
 #[allow(clippy::too_many_arguments)]
 fn run_chunk(
     a: &[f32],
@@ -600,45 +763,51 @@ fn run_chunk(
 ) {
     debug_assert_eq!(cchunk.len(), rows * n);
     let npanels = n_round / NR;
+    let gpanels = NC / NR; // panels per column group
     let mut ap = scratch_take(MC * KC);
-    let mut pc = 0;
-    while pc < k {
-        let kc = KC.min(k - pc);
-        let bblock = &bp[pc * n_round..pc * n_round + kc * n_round];
-        let mut ic = 0;
-        while ic < rows {
-            let mc = MC.min(rows - ic);
-            pack_a(&mut ap, a, ta, m, k, i0 + ic, mc, pc, kc);
-            let rpanels = div_up(mc, MR);
-            for rp in 0..rpanels {
-                let appanel = &ap[rp * kc * MR..(rp + 1) * kc * MR];
-                let r0 = ic + rp * MR; // chunk-local row of this tile
-                let h = MR.min(mc - rp * MR);
-                for jp in 0..npanels {
-                    let bpanel = &bblock[jp * kc * NR..(jp + 1) * kc * NR];
-                    let mut acc = [[0.0f32; NR]; MR];
-                    micro_tile(kc, appanel, bpanel, &mut acc);
-                    let j0 = jp * NR;
-                    let w = NR.min(n - j0);
-                    for r in 0..h {
-                        let coff = (r0 + r) * n + j0;
-                        let crow = &mut cchunk[coff..coff + w];
-                        let accr = &acc[r];
-                        if alpha == 1.0 {
-                            for (cv, av) in crow.iter_mut().zip(accr) {
-                                *cv += av;
-                            }
-                        } else {
-                            for (cv, av) in crow.iter_mut().zip(accr) {
-                                *cv += alpha * av;
+    let mut jc = 0;
+    while jc < npanels {
+        let jend = (jc + gpanels).min(npanels);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let bblock = &bp[pc * n_round..pc * n_round + kc * n_round];
+            let mut ic = 0;
+            while ic < rows {
+                let mc = MC.min(rows - ic);
+                pack_a(&mut ap, a, ta, m, k, i0 + ic, mc, pc, kc);
+                let rpanels = div_up(mc, MR);
+                for rp in 0..rpanels {
+                    let appanel = &ap[rp * kc * MR..(rp + 1) * kc * MR];
+                    let r0 = ic + rp * MR; // chunk-local row of this tile
+                    let h = MR.min(mc - rp * MR);
+                    for jp in jc..jend {
+                        let bpanel = &bblock[jp * kc * NR..(jp + 1) * kc * NR];
+                        let mut acc = [[0.0f32; NR]; MR];
+                        micro_tile(kc, appanel, bpanel, &mut acc);
+                        let j0 = jp * NR;
+                        let w = NR.min(n - j0);
+                        for r in 0..h {
+                            let coff = (r0 + r) * n + j0;
+                            let crow = &mut cchunk[coff..coff + w];
+                            let accr = &acc[r];
+                            if alpha == 1.0 {
+                                for (cv, av) in crow.iter_mut().zip(accr) {
+                                    *cv += av;
+                                }
+                            } else {
+                                for (cv, av) in crow.iter_mut().zip(accr) {
+                                    *cv += alpha * av;
+                                }
                             }
                         }
                     }
                 }
+                ic += mc;
             }
-            ic += mc;
+            pc += kc;
         }
-        pc += kc;
+        jc = jend;
     }
     scratch_put(ap);
 }
@@ -1022,6 +1191,85 @@ mod tests {
     }
 
     #[test]
+    fn canon_batch_matches_individual_calls_bitwise() {
+        // the batched-head attention contract: one gemm_canon_batch call
+        // must be bit-identical to nb individual gemm_canon calls, for
+        // shapes covering the decode (m=1) and prefill (T x T) attention
+        // sub-problems, nb large enough to engage the pool, and alpha != 1
+        let mut rng = Rng::new(31, 7);
+        for (nb, m, n, k, alpha, tb) in [
+            (8usize, 48, 48, 16, 1.0f32, Trans::T), // prefill scores family
+            (8, 48, 16, 48, 1.0, Trans::N),         // prefill ctx family
+            (12, 1, 33, 16, 1.0, Trans::T),         // decode scores family
+            (12, 1, 16, 33, 1.0, Trans::N),         // decode ctx family
+            (5, 7, 9, 11, 0.5, Trans::T),           // awkward + alpha
+            (1, 20, 20, 20, 1.0, Trans::N),         // nb = 1 degenerate
+            (64, 48, 48, 64, 1.0, Trans::T),        // above PAR_FLOPS: pooled
+        ] {
+            let a: Vec<f32> = (0..nb * m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..nb * k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..nb * m * n).map(|_| rng.normal()).collect();
+            let mut batched = c0.clone();
+            gemm_canon_batch(nb, m, n, k, alpha, &a, Trans::N, &b, tb, &mut batched);
+            let mut alone = c0.clone();
+            for i in 0..nb {
+                gemm_canon(
+                    m,
+                    n,
+                    k,
+                    alpha,
+                    &a[i * m * k..(i + 1) * m * k],
+                    Trans::N,
+                    &b[i * k * n..(i + 1) * k * n],
+                    tb,
+                    &mut alone[i * m * n..(i + 1) * m * n],
+                );
+            }
+            let bb: Vec<u32> = batched.iter().map(|v| v.to_bits()).collect();
+            let ab: Vec<u32> = alone.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bb, ab, "batch ({nb},{m},{n},{k}) alpha={alpha} diverges");
+        }
+    }
+
+    #[test]
+    fn nc_grouped_walk_matches_naive_and_ungrouped_order() {
+        // n > NC crosses the column-group boundary; the grouped walk must
+        // agree with the naive oracle and stay bitwise thread-invariant
+        let pool4 = ThreadPool::new(4);
+        let mut rng = Rng::new(37, 4);
+        for (m, k, n) in [(9, 40, NC + 130), (33, 300, 2 * NC + 7)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            let mut serial = vec![0.0f32; m * n];
+            gemm_blocked(None, m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut serial);
+            let want = naive_matmul(&a, &b, m, k, n, false, true);
+            prop::assert_allclose(&serial, &want, 1e-3, 1e-3).unwrap();
+            let mut par = vec![0.0f32; m * n];
+            gemm_blocked(
+                Some(&pool4), m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut par,
+            );
+            let sb: Vec<u32> = serial.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = par.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, pb, "({m},{k},{n}) grouped walk thread-variant");
+            // canonical row-batching independence must also hold across
+            // the NC boundary (the inference-path contract)
+            for i in [0usize, m - 1] {
+                let mut crow = vec![0.0f32; n];
+                gemm_canon(
+                    1, n, k, 1.0, &a[i * k..(i + 1) * k], Trans::N, &b,
+                    Trans::T, &mut crow,
+                );
+                let alone: Vec<u32> = crow.iter().map(|v| v.to_bits()).collect();
+                let batched: Vec<u32> = serial[i * n..(i + 1) * n]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(alone, batched, "row {i} of ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
     fn canon_agrees_with_engine_on_tiled_shapes() {
         // above the small-flops threshold with m >= MR, gemm_canon forwards
         // to the very same blocked path as gemm — bitwise equal
@@ -1057,6 +1305,25 @@ mod tests {
         let v3 = ar.take(4096);
         assert_eq!(v3.len(), 4096);
         assert!(v3.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn arena_free_list_is_bounded() {
+        // regression for the serving-fallback growth: recycling buffers
+        // the arena never handed out (engine logits) must not grow the
+        // free list without bound — puts past the cap drop the buffer
+        let mut ar = Arena::with_cap(1000);
+        for _ in 0..10 {
+            ar.put(vec![0.0f32; 400]);
+        }
+        let parked: usize = ar.free.iter().map(|b| b.capacity()).sum();
+        assert!(parked <= 1000, "free list exceeded its cap: {parked}");
+        assert_eq!(ar.free.len(), 2);
+        // takes still work, and the accounting frees room for new puts
+        let v = ar.take(400);
+        assert_eq!(v.len(), 400);
+        ar.put(v);
+        assert_eq!(ar.free.len(), 2);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! The offline build image vendors only `xla` + `anyhow`, so these are
 //! hand-rolled rather than pulled from crates.io (see DESIGN.md §1).
 
+pub mod alloc;
 pub mod bank;
 pub mod cli;
 pub mod json;

@@ -46,8 +46,9 @@ impl ServeEngine for SlowStepEngine {
         factors: &mos::coordinator::cache::TenantFactors,
         rows: &[usize],
         tokens: &[i32],
+        last: &[usize],
     ) -> anyhow::Result<Vec<f32>> {
-        self.inner.prefill_rows(tenant, factors, rows, tokens)
+        self.inner.prefill_rows(tenant, factors, rows, tokens, last)
     }
     fn decode_rows(
         &mut self,

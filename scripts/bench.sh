@@ -31,4 +31,10 @@ echo "== bench_serving (reqs=$MOS_SERVE_REQS, tenants=$MOS_SERVE_TENANTS) =="
 # shellcheck disable=SC2086
 cargo bench $MANIFEST_ARGS --bench bench_serving
 
+# same schema gate CI enforces: fail loud on a silently empty artifact
+if command -v python3 >/dev/null 2>&1; then
+    python3 scripts/check_bench.py \
+        "$MOS_BENCH_OUT/BENCH_gemm.json" "$MOS_BENCH_OUT/BENCH_serving.json"
+fi
+
 echo "wrote $MOS_BENCH_OUT/BENCH_gemm.json and $MOS_BENCH_OUT/BENCH_serving.json"

@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Fail the bench job when BENCH_*.json is missing expected keys.
+
+Usage: scripts/check_bench.py [BENCH_gemm.json] [BENCH_serving.json]
+
+Before this gate a silently empty/truncated JSON (bench crashed after
+creating the file, schema drifted, env knob emptied the sweep) still
+passed CI and the perf row rendered blank. Any missing file, empty case
+list, or absent key is now a hard failure with a named culprit.
+"""
+import json
+import sys
+
+GEMM_TOP = ["bench", "threads", "cases", "headline"]
+GEMM_HEADLINE = ["min_speedup_serving_scale", "geomean_speedup"]
+GEMM_CASE = [
+    "name",
+    "m",
+    "k",
+    "n",
+    "serving_scale",
+    "seed_scalar_gflops",
+    "blocked_1t_gflops",
+    "blocked_mt_gflops",
+    "speedup_mt_vs_seed",
+]
+
+SERVING_TOP = ["bench", "requests", "cases"]
+SERVING_CASE = [
+    "tenants",
+    "decode",
+    "prefill",
+    "max_batch",
+    "req_per_s",
+    "p50_ms",
+    "p95_ms",
+    "ttft_p50_ms",
+    "prefill_p50_ms",
+    "tok_per_s",
+    "alloc_mb",
+]
+# the sweep must actually contain the arms the ROADMAP row compares
+SERVING_ARMS = [
+    {"decode": "kv_step", "prefill": "lean"},
+    {"decode": "kv_step", "prefill": "full_fwd_prefill"},
+    {"decode": "full_fwd"},
+]
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def require(obj: dict, keys: list, where: str) -> None:
+    for k in keys:
+        if k not in obj:
+            fail(f"{where}: missing key '{k}' (has: {sorted(obj)})")
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path}: file not found (did the bench run?)")
+    except json.JSONDecodeError as e:
+        fail(f"{path}: invalid JSON ({e})")
+    if not isinstance(data, dict):
+        fail(f"{path}: top level is not an object")
+    return data
+
+
+def check_cases(path: str, data: dict, case_keys: list) -> list:
+    cases = data.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail(f"{path}: 'cases' is empty or not a list")
+    for i, case in enumerate(cases):
+        if not isinstance(case, dict):
+            fail(f"{path}: cases[{i}] is not an object")
+        require(case, case_keys, f"{path}: cases[{i}]")
+    return cases
+
+
+def check_gemm(path: str, data: dict) -> None:
+    require(data, GEMM_TOP, path)
+    require(data["headline"], GEMM_HEADLINE, f"{path}: headline")
+    check_cases(path, data, GEMM_CASE)
+    print(f"check_bench: {path} ok ({len(data['cases'])} cases)")
+
+
+def check_serving(path: str, data: dict) -> None:
+    require(data, SERVING_TOP, path)
+    cases = check_cases(path, data, SERVING_CASE)
+    for arm in SERVING_ARMS:
+        if not any(all(c.get(k) == v for k, v in arm.items()) for c in cases):
+            fail(f"{path}: sweep is missing the {arm} arm")
+    print(f"check_bench: {path} ok ({len(cases)} cases)")
+
+
+def main() -> int:
+    args = sys.argv[1:] or ["BENCH_gemm.json", "BENCH_serving.json"]
+    for path in args:
+        data = load(path)
+        # route on the artifact's own self-description, not the filename
+        kind = data.get("bench")
+        if kind == "serving":
+            check_serving(path, data)
+        elif kind == "gemm":
+            check_gemm(path, data)
+        else:
+            fail(f"{path}: unknown or missing 'bench' kind ({kind!r})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

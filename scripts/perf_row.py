@@ -1,37 +1,93 @@
 #!/usr/bin/env python3
-"""Render a ROADMAP.md Perf-table row from BENCH_gemm.json.
+"""Render ROADMAP.md Perf-table rows from the bench JSON artifacts.
 
-Usage: scripts/perf_row.py [BENCH_gemm.json] [--pr N]
+Usage:
+  scripts/perf_row.py [BENCH_gemm.json] [--pr N]
+  scripts/perf_row.py --serving [BENCH_serving.json] [--pr N]
 
-Prints the markdown row matching the ROADMAP Perf table columns:
+Default mode prints the GEMM row matching the ROADMAP Perf table columns:
 | PR | machine | threads | serving-scale GEMM speedup vs seed scalar (min) | geomean |
 
-CI appends this to the job summary and uploads the raw JSON as an
-artifact; the next PR pastes the row into ROADMAP.md.
+--serving prints the serving-trajectory row (prefill ratio is
+full_fwd_prefill p50 / lean p50 — the lean speedup, expect >> 1):
+| PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full |
+
+CI appends both to the job summary and uploads the raw JSON as an
+artifact; the next PR pastes the rows into ROADMAP.md.
 """
 import json
 import platform
 import sys
 
 
-def main() -> int:
-    args = [a for a in sys.argv[1:] if not a.startswith("--")]
-    path = args[0] if args else "BENCH_gemm.json"
-    pr = "2 (GEMM engine)"
+def machine() -> str:
+    return f"{platform.system()}-{platform.machine()}"
+
+
+def pr_arg(default: str) -> str:
     if "--pr" in sys.argv:
-        pr = sys.argv[sys.argv.index("--pr") + 1]
+        return sys.argv[sys.argv.index("--pr") + 1]
+    return default
+
+
+def gemm_row(path: str) -> str:
     with open(path) as f:
         bench = json.load(f)
     head = bench.get("headline", {})
-    machine = f"{platform.system()}-{platform.machine()}"
-    row = "| {} | {} | {} | {:.1f}x | {:.1f}x |".format(
-        pr,
-        machine,
+    return "| {} | {} | {} | {:.1f}x | {:.1f}x |".format(
+        pr_arg("2 (GEMM engine)"),
+        machine(),
         int(bench.get("threads", 0)),
         float(head.get("min_speedup_serving_scale", float("nan"))),
         float(head.get("geomean_speedup", float("nan"))),
     )
-    print(row)
+
+
+def serving_row(path: str) -> str:
+    with open(path) as f:
+        bench = json.load(f)
+    cases = bench.get("cases", [])
+
+    def pick(**want):
+        rows = [c for c in cases if all(c.get(k) == v for k, v in want.items())]
+        # largest tenant count = the most serving-like point of the sweep
+        return max(rows, key=lambda c: c.get("tenants", 0)) if rows else None
+
+    lean = pick(decode="kv_step", prefill="lean", max_batch=8)
+    full_pre = pick(decode="kv_step", prefill="full_fwd_prefill", max_batch=8)
+    full_fwd = pick(decode="full_fwd", max_batch=8)
+
+    def ratio(a, b, key):
+        if not a or not b or not b.get(key):
+            return float("nan")
+        return a[key] / b[key]
+
+    return (
+        "| {} | {} | {:.2f}x | {:.2f}x | {:.1f} | {:.0f} vs {:.0f} |".format(
+            pr_arg("5 (lean prefill)"),
+            machine(),
+            ratio(lean, full_fwd, "tok_per_s"),
+            ratio(full_pre, lean, "prefill_p50_ms"),
+            float(lean.get("ttft_p50_ms", float("nan"))) if lean else float("nan"),
+            float(lean.get("alloc_mb", float("nan"))) if lean else float("nan"),
+            float(full_pre.get("alloc_mb", float("nan")))
+            if full_pre
+            else float("nan"),
+        )
+    )
+
+
+def main() -> int:
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    # --pr consumes its value; drop it from the positional list
+    if "--pr" in sys.argv:
+        val = sys.argv[sys.argv.index("--pr") + 1]
+        if val in args:
+            args.remove(val)
+    if "--serving" in sys.argv:
+        print(serving_row(args[0] if args else "BENCH_serving.json"))
+    else:
+        print(gemm_row(args[0] if args else "BENCH_gemm.json"))
     return 0
 
 

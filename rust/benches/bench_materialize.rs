@@ -1,18 +1,24 @@
-//! Hot-path microbench: shard-gather materialization and the fused routed
-//! apply (the serving-side cost MoS adds over vanilla LoRA), on host and —
-//! when artifacts exist — through the AOT pallas `materialize` program and
-//! the pallas-gather forward artifact.
+//! Hot-path microbench: shard-gather materialization, the fused routed
+//! apply, and the pooled shard-gather GEMM (the serving-side cost MoS adds
+//! over vanilla LoRA), on host and — when artifacts exist — through the
+//! AOT pallas `materialize` program and the pallas-gather forward
+//! artifact. The pooled arm is the PR-6 serving path: the adapter GEMM
+//! reads shard slices straight off the pool, so the dense tier's one-time
+//! materialization is pure overhead — the crossover row reports how many
+//! tokens dense would need to amortize it.
 //!
 //! Run: cargo bench --bench bench_materialize
 
 use mos::adapter::mos::router::build_router;
 use mos::adapter::mos::materialize::{apply_fused, factors};
-use mos::adapter::{init_params, materialize};
+use mos::adapter::{init_params, materialize, PooledAdapter};
 use mos::bench::Table;
 use mos::config::{presets, MethodCfg, LAYER_TYPES};
+use mos::model::math::{gemm_gather_canon, Trans};
 use mos::runtime::{Manifest, Runtime};
 use mos::util::bank::Tensor;
 use mos::util::rng::Rng;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
@@ -101,6 +107,61 @@ fn main() -> anyhow::Result<()> {
             "{:.1}x slower than fused",
             dt_dense / dt_fused
         ),
+    ]);
+
+    // 2b) pooled shard-gather apply — the serving path: the adapter GEMM
+    // reads shard slices straight off the pool (block 0 here), no
+    // per-tenant factors anywhere
+    let pooled = PooledAdapter::new(
+        mc.clone(),
+        Arc::new(params.clone()),
+        Arc::new(aux.clone()),
+    )?;
+    let v = pooled.view("q");
+    let scale = (mc.alpha / mc.r as f64) as f32;
+    let (r, l) = (mc.r, mc.l);
+    let per = r * l;
+    let mut t = vec![0.0f32; m * r];
+    let dt_pooled = time_n(50, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        t.iter_mut().for_each(|v| *v = 0.0);
+        gemm_gather_canon(
+            m, r, i, 1.0, &x, v.pool_a, v.shard_w_a, &v.idx_a[..per], l,
+            Some(&v.rank_scale[..r]), Trans::T, &mut t,
+        );
+        gemm_gather_canon(
+            m, o, r, scale, &t, v.pool_b, v.shard_w_b, &v.idx_b[..per], l,
+            None, Trans::N, &mut y,
+        );
+        std::hint::black_box(&y);
+    });
+    table.row(vec![
+        "pooled shard-gather apply (x->t->y)".into(),
+        format!("small q-proj, m={m}"),
+        format!("{:.3} ms", dt_pooled * 1e3),
+        format!("{:.2} GFLOP/s", flops / dt_pooled / 1e9),
+    ]);
+    // crossover: the dense tier pays a one-time per-layer materialization
+    // and then serves from factors; the pooled tier starts serving at
+    // token zero. Tokens until dense breaks even (never, if the gather
+    // costs nothing extra per token):
+    let dt_mat_q = time_n(20, || {
+        let f = factors(&cfg, &mc, &params, &aux, "q");
+        std::hint::black_box(&f);
+    });
+    let crossover = if dt_pooled > dt_fused {
+        format!(
+            "{:.0} tokens",
+            dt_mat_q / (dt_pooled - dt_fused) * m as f64
+        )
+    } else {
+        "never (pooled is not slower per token)".into()
+    };
+    table.row(vec![
+        "dense-vs-pooled break-even".into(),
+        "small q-proj".into(),
+        format!("{:.3} ms materialize", dt_mat_q * 1e3),
+        crossover,
     ]);
 
     // 3) AOT pallas materialize artifact (if built)

@@ -1,12 +1,15 @@
 //! Serving-system bench: coordinator throughput/latency under multi-tenant
 //! traffic — KV-cached stepping vs full-window decoding, lean vs
-//! full-forward prefill, batching on vs off, tenant-count sweep. This
-//! quantifies the system claims around the paper (Sec. 3.6 low-cost
-//! switching; intro scenario of many concurrent customized models), the
-//! PR-4 decode rewrite (per-token cost O(step) instead of O(window ·
-//! forward)), and the PR-5 lean prefill (inference-only forward:
-//! no backward cache, last-position-only logits, arena-only hot path —
-//! `prefill_p50_ms` and the `alloc_mb` counting-probe field track both).
+//! full-forward prefill, batching on vs off, pooled vs dense-materialized
+//! adapters, tenant-count sweep. This quantifies the system claims around
+//! the paper (Sec. 3.6 low-cost switching; intro scenario of many
+//! concurrent customized models), the PR-4 decode rewrite (per-token cost
+//! O(step) instead of O(window · forward)), the PR-5 lean prefill
+//! (inference-only forward: no backward cache, last-position-only logits,
+//! arena-only hot path — `prefill_p50_ms` and the `alloc_mb`
+//! counting-probe field track both), and the PR-6 pooled serving path
+//! (shard-gather GEMM straight off the registry's pools — `adapter_mb`
+//! reports measured resident adapter bytes, pooled vs dense).
 //!
 //! Run: cargo bench --bench bench_serving
 //! Knobs: MOS_SERVE_REQS (default 48), MOS_SERVE_TENANTS (default "1,4,16"),
@@ -67,6 +70,8 @@ struct ScenarioResult {
     ttft: f64,
     prefill_ms: f64,
     alloc_mb: f64,
+    /// Measured resident adapter bytes across all cached tenants (MB).
+    adapter_mb: f64,
 }
 
 fn run_scenario(
@@ -74,10 +79,15 @@ fn run_scenario(
     n_requests: usize,
     max_batch: usize,
     mode: Mode,
+    serve_dense: bool,
 ) -> ScenarioResult {
     let mut cfg = presets::tiny();
     cfg.batch = max_batch.max(1);
-    let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+    let registry = Arc::new(Registry::with_serve_mode(
+        cfg.clone(),
+        1 << 30,
+        serve_dense,
+    ));
     let mut server = Server::new(
         Arc::clone(&registry),
         ServerCfg {
@@ -127,6 +137,9 @@ fn run_scenario(
     }
     let dt = t0.elapsed().as_secs_f64();
     let alloc_mb = (alloc::total_bytes() - bytes0) as f64 / 1e6;
+    // measured, not analytic: what the adapter cache actually holds after
+    // serving the whole workload (every tenant warm)
+    let adapter_mb = server.cache.resident_bytes() as f64 / 1e6;
     let res = ScenarioResult {
         rps: n_requests as f64 / dt,
         p50: server.metrics.percentile_us(50.0) / 1e3,
@@ -136,6 +149,7 @@ fn run_scenario(
         ttft: server.metrics.ttft_percentile_us(50.0) / 1e3,
         prefill_ms: server.metrics.prefill_percentile_us(50.0) / 1e3,
         alloc_mb,
+        adapter_mb,
     };
     server.shutdown();
     res
@@ -155,26 +169,33 @@ fn main() {
     let mut table = Table::new(
         "Coordinator serving (tiny preset, host engine, 1 worker)",
         &[
-            "tenants", "decode", "prefill", "batching", "req/s", "p50 ms",
-            "p95 ms", "ttft p50 ms", "prefill p50 ms", "tok/s", "alloc MB",
+            "tenants", "decode", "prefill", "adapter", "batching", "req/s",
+            "p50 ms", "p95 ms", "ttft p50 ms", "prefill p50 ms", "tok/s",
+            "alloc MB", "adapter MB",
         ],
     );
     let mut json_cases = Vec::new();
     for &nt in &tenant_counts {
+        // (mode, max_batch, serve_dense): the pooled tier is the default;
+        // one dense-materialized comparison arm per tenant count pins the
+        // memory gap (adapter_mb) and the switching cost side by side
         let cases = [
-            (Mode::KvLean, 8usize),
-            (Mode::KvLean, 1),
-            (Mode::KvFullPrefill, 8),
-            (Mode::FullFwd, 8),
-            (Mode::FullFwd, 1),
+            (Mode::KvLean, 8usize, false),
+            (Mode::KvLean, 8, true),
+            (Mode::KvLean, 1, false),
+            (Mode::KvFullPrefill, 8, false),
+            (Mode::FullFwd, 8, false),
+            (Mode::FullFwd, 1, false),
         ];
-        for (mode, mb) in cases {
+        for (mode, mb, dense) in cases {
             let label = if mb > 1 { "batched (8)" } else { "unbatched (1)" };
-            let r = run_scenario(nt, n_requests, mb, mode);
+            let adapter = if dense { "dense" } else { "pooled" };
+            let r = run_scenario(nt, n_requests, mb, mode, dense);
             table.row(vec![
                 nt.to_string(),
                 mode.decode().into(),
                 mode.prefill().into(),
+                adapter.into(),
                 label.into(),
                 format!("{:.2}", r.rps),
                 format!("{:.0}", r.p50),
@@ -183,21 +204,25 @@ fn main() {
                 format!("{:.2}", r.prefill_ms),
                 format!("{:.0}", r.toks),
                 format!("{:.1}", r.alloc_mb),
+                format!("{:.3}", r.adapter_mb),
             ]);
             eprintln!(
-                "[serving] tenants={nt} {} prefill={} {label}: {:.2} req/s \
-                 ttft_p50={:.1}ms prefill_p50={:.2}ms alloc={:.1}MB",
+                "[serving] tenants={nt} {} prefill={} adapter={adapter} \
+                 {label}: {:.2} req/s ttft_p50={:.1}ms prefill_p50={:.2}ms \
+                 alloc={:.1}MB adapter={:.3}MB",
                 mode.decode(),
                 mode.prefill(),
                 r.rps,
                 r.ttft,
                 r.prefill_ms,
                 r.alloc_mb,
+                r.adapter_mb,
             );
             json_cases.push(Json::obj(vec![
                 ("tenants", Json::num(nt as f64)),
                 ("decode", Json::str(mode.decode())),
                 ("prefill", Json::str(mode.prefill())),
+                ("adapter", Json::str(adapter)),
                 ("max_batch", Json::num(mb as f64)),
                 ("req_per_s", Json::num(r.rps)),
                 ("p50_ms", Json::num(r.p50)),
@@ -206,6 +231,7 @@ fn main() {
                 ("prefill_p50_ms", Json::num(r.prefill_ms)),
                 ("tok_per_s", Json::num(r.toks)),
                 ("alloc_mb", Json::num(r.alloc_mb)),
+                ("adapter_mb", Json::num(r.adapter_mb)),
             ]));
         }
     }
@@ -215,9 +241,12 @@ fn main() {
          tenant count grows (low-cost switching — only adapter tensors \
          change per batch), batched >> unbatched, the KV-cached step path \
          (kv_step) beats re-running full-window forwards per token \
-         (full_fwd) on tok/s and time-to-first-token, and the lean \
+         (full_fwd) on tok/s and time-to-first-token, the lean \
          inference-only prefill beats the legacy full-forward prefill on \
-         prefill_p50_ms and allocation churn (alloc_mb)."
+         prefill_p50_ms and allocation churn (alloc_mb), and the pooled \
+         adapter tier keeps measured resident adapter bytes (adapter_mb) \
+         several-fold below the dense-materialized tier at matched \
+         throughput."
     );
 
     let json = Json::obj(vec![

@@ -22,6 +22,9 @@ pub mod vera;
 use crate::config::{Method, MethodCfg, ModelCfg, LAYER_TYPES};
 use crate::util::bank::{Bank, Tensor};
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Dense per-block low-rank factors for one layer type:
 /// `a[k]` is (r, in) row-major, `b[k]` is (out, r) row-major.
@@ -150,6 +153,168 @@ pub fn materialize(
     }
 }
 
+// ---------------------------------------------------------------------------
+// serving representations
+// ---------------------------------------------------------------------------
+
+/// Per-layer-type tensor names of the pooled representation, precomputed
+/// at build time so the serving hot path never formats a key string.
+#[derive(Debug)]
+struct PooledKeys {
+    pool_a: String,
+    pool_b: String,
+    idx_a: String,
+    idx_b: String,
+    rank_scale: String,
+}
+
+/// Borrowed per-layer-type view into a [`PooledAdapter`]: the raw pool /
+/// index / scale slices `gemm_gather_canon` consumes. Per-block slicing
+/// (`idx_*[k*r*l..]`, `rank_scale[k*r..]`) is the caller's.
+#[derive(Debug, Clone, Copy)]
+pub struct PooledView<'a> {
+    /// A-side shard pool, `(n, in/l)` row-major.
+    pub pool_a: &'a [f32],
+    /// B-side shard pool, `(n, out/l)` row-major.
+    pub pool_b: &'a [f32],
+    /// `(blocks, r, l)` shard indices into `pool_a`.
+    pub idx_a: &'a [i32],
+    /// `(blocks, r, l)` shard indices into `pool_b`.
+    pub idx_b: &'a [i32],
+    /// `(blocks, r)` per-rank scale, folded into the A side.
+    pub rank_scale: &'a [f32],
+    /// A-shard width `in/l`.
+    pub shard_w_a: usize,
+    /// B-shard width `out/l`.
+    pub shard_w_b: usize,
+}
+
+/// The pooled serving representation of one MoS tenant: `Arc`s into the
+/// registry's own param/aux banks (zero copy — adapter residency stays
+/// O(pool + index tables), never the materialized dense size).
+#[derive(Debug)]
+pub struct PooledAdapter {
+    pub mc: MethodCfg,
+    params: Arc<Bank>,
+    aux: Arc<Bank>,
+    /// Parallel to [`LAYER_TYPES`].
+    keys: Vec<PooledKeys>,
+}
+
+impl PooledAdapter {
+    /// Wrap a tenant's banks; validates the geometry is MoS and every
+    /// layer type's pool/index/scale tensors are present up front, so
+    /// [`PooledAdapter::view`] can index infallibly on the hot path.
+    pub fn new(mc: MethodCfg, params: Arc<Bank>, aux: Arc<Bank>) -> Result<PooledAdapter> {
+        if mc.method != Method::MoS {
+            bail!("pooled serving representation requires MoS, got {:?}", mc.method);
+        }
+        let keys: Vec<PooledKeys> = LAYER_TYPES
+            .iter()
+            .map(|t| PooledKeys {
+                pool_a: format!("{t}.pool_a"),
+                pool_b: format!("{t}.pool_b"),
+                idx_a: format!("{t}.idx_a"),
+                idx_b: format!("{t}.idx_b"),
+                rank_scale: format!("{t}.rank_scale"),
+            })
+            .collect();
+        for k in &keys {
+            for (bank, name, which) in [
+                (&params, &k.pool_a, "params"),
+                (&params, &k.pool_b, "params"),
+            ] {
+                if bank.get(name).and_then(|t| t.f32s()).is_none() {
+                    bail!("pooled adapter: missing f32 tensor '{name}' in {which}");
+                }
+            }
+            for name in [&k.idx_a, &k.idx_b] {
+                if aux.get(name).and_then(|t| t.i32s()).is_none() {
+                    bail!("pooled adapter: missing i32 tensor '{name}' in aux");
+                }
+            }
+            if aux.get(&k.rank_scale).and_then(|t| t.f32s()).is_none() {
+                bail!("pooled adapter: missing f32 tensor '{}' in aux", k.rank_scale);
+            }
+        }
+        Ok(PooledAdapter { mc, params, aux, keys })
+    }
+
+    /// The raw pooled slices for one layer type (`"q"`, `"gate"`, ...).
+    pub fn view(&self, layer_type: &str) -> PooledView<'_> {
+        let ti = LAYER_TYPES
+            .iter()
+            .position(|t| *t == layer_type)
+            .unwrap_or_else(|| panic!("unknown layer type '{layer_type}'"));
+        let k = &self.keys[ti];
+        let pool_a = &self.params[&k.pool_a];
+        let pool_b = &self.params[&k.pool_b];
+        PooledView {
+            shard_w_a: pool_a.shape()[1],
+            shard_w_b: pool_b.shape()[1],
+            pool_a: pool_a.f32s().unwrap(),
+            pool_b: pool_b.f32s().unwrap(),
+            idx_a: self.aux[&k.idx_a].i32s().unwrap(),
+            idx_b: self.aux[&k.idx_b].i32s().unwrap(),
+            rank_scale: self.aux[&k.rank_scale].f32s().unwrap(),
+        }
+    }
+
+    /// Bytes actually resident for this representation: the shared-pool
+    /// params plus the index/scale tables — exactly what
+    /// [`params::serving_bytes`]`(cfg, mc, 4)` models analytically.
+    pub fn resident_bytes(&self) -> usize {
+        self.params.values().map(|t| t.nbytes()).sum::<usize>()
+            + self.aux.values().map(|t| t.nbytes()).sum::<usize>()
+    }
+}
+
+/// What the serving stack hands the model per tenant: either the legacy
+/// dense per-block factors (training parity / non-MoS methods /
+/// `MOS_SERVE_DENSE=1`), or the pooled zero-copy representation the
+/// shard-gather GEMM path consumes directly. Cheap to clone (both arms
+/// are `Arc`s).
+#[derive(Debug, Clone)]
+pub enum ServingAdapter {
+    /// Dense per-block factors for every layer type (materialized size).
+    Dense(Arc<BTreeMap<String, Factors>>),
+    /// Shard pools + index tables, shared with the registry (pool size).
+    Pooled(Arc<PooledAdapter>),
+}
+
+impl ServingAdapter {
+    /// Bytes of adapter state this representation keeps resident.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            ServingAdapter::Dense(f) => f
+                .values()
+                .map(|f| {
+                    let floats: usize = f.a.iter().map(Vec::len).sum::<usize>()
+                        + f.b.iter().map(Vec::len).sum::<usize>();
+                    floats * 4
+                })
+                .sum(),
+            ServingAdapter::Pooled(p) => p.resident_bytes(),
+        }
+    }
+
+    /// The dense factors, when this is the dense representation.
+    pub fn dense(&self) -> Option<&BTreeMap<String, Factors>> {
+        match self {
+            ServingAdapter::Dense(f) => Some(f),
+            ServingAdapter::Pooled(_) => None,
+        }
+    }
+
+    /// The pooled adapter, when this is the pooled representation.
+    pub fn pooled(&self) -> Option<&PooledAdapter> {
+        match self {
+            ServingAdapter::Dense(_) => None,
+            ServingAdapter::Pooled(p) => Some(p),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +368,68 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pooled_resident_bytes_equal_serving_bytes() {
+        // the acceptance contract: what the pooled representation keeps
+        // resident per tenant is exactly the analytic serving_bytes model
+        // (pool + index tables), not the materialized dense size
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let params = Arc::new(init_params(&cfg, &mc, 0));
+        let aux = Arc::new(mos::router::build_router(&cfg, &mc, 0).into_bank());
+        let pooled =
+            PooledAdapter::new(mc.clone(), params.clone(), aux.clone()).unwrap();
+        assert_eq!(
+            pooled.resident_bytes(),
+            params::serving_bytes(&cfg, &mc, 4),
+            "pooled residency drifted from the analytic model"
+        );
+        // the dense representation of the same tenant is several times
+        // bigger (the whole point of serving from the pool)
+        let dense: BTreeMap<String, Factors> = LAYER_TYPES
+            .iter()
+            .map(|t| {
+                (t.to_string(), materialize(&cfg, &mc, &params, &aux, t))
+            })
+            .collect();
+        let dense = ServingAdapter::Dense(Arc::new(dense));
+        let pooled = ServingAdapter::Pooled(Arc::new(pooled));
+        // r/e = 4 here; the index tables eat a little of the gap
+        assert!(
+            dense.resident_bytes() > 3 * pooled.resident_bytes(),
+            "dense {} B vs pooled {} B: expected a large gap",
+            dense.resident_bytes(),
+            pooled.resident_bytes()
+        );
+    }
+
+    #[test]
+    fn pooled_view_shapes_match_geometry() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(4, 2, 2, 0);
+        let params = Arc::new(init_params(&cfg, &mc, 3));
+        let aux = Arc::new(mos::router::build_router(&cfg, &mc, 3).into_bank());
+        let p = PooledAdapter::new(mc.clone(), params, aux).unwrap();
+        for t in LAYER_TYPES {
+            let (o, i) = cfg.dims(t);
+            let v = p.view(t);
+            assert_eq!(v.shard_w_a, i / mc.l, "{t} A shard width");
+            assert_eq!(v.shard_w_b, o / mc.l, "{t} B shard width");
+            assert_eq!(v.idx_a.len(), cfg.blocks * mc.r * mc.l, "{t} idx_a");
+            assert_eq!(v.idx_b.len(), cfg.blocks * mc.r * mc.l, "{t} idx_b");
+            assert_eq!(v.rank_scale.len(), cfg.blocks * mc.r, "{t} scale");
+        }
+    }
+
+    #[test]
+    fn pooled_rejects_non_mos_geometry() {
+        let cfg = presets::tiny();
+        let mc = MethodCfg::lora(4);
+        let params = Arc::new(init_params(&cfg, &mc, 0));
+        let aux = Arc::new(Bank::new());
+        assert!(PooledAdapter::new(mc, params, aux).is_err());
     }
 
     #[test]

@@ -1,89 +1,112 @@
-//! Materialization cache: dense per-tenant low-rank factors, built once per
-//! tenant version (index-based routing = pure precompute, paper Limitations
-//! §C) and LRU-evicted under a capacity bound.
+//! Adapter cache: per-tenant serving representations, built once per
+//! tenant version and LRU-evicted under a capacity bound. Two tiers:
 //!
-//! This is the serving hot path's key optimization: gather+concat happens
-//! once per tenant, not once per request. Entries are keyed by
-//! `(tenant id, version)` — re-registering a tenant bumps its version in
-//! the [`super::registry::Registry`], so a lookup for the new version
-//! misses and rebuilds instead of serving the old dense factors.
+//! * **Pooled** (default, MoS tenants): the [`ServingAdapter::Pooled`]
+//!   representation `Arc`-aliases the registry's own shard pools and index
+//!   tables — building an entry copies nothing, and the tenant's resident
+//!   adapter bytes stay O(pool), which is the paper's whole serving claim.
+//! * **Dense** (non-MoS methods, or `MOS_SERVE_DENSE=1`): the legacy
+//!   gather+concat materialization into per-block [`Factors`], built once
+//!   per tenant version (index-based routing = pure precompute, paper
+//!   Limitations §C).
+//!
+//! Entries are keyed by `(tenant id, version)` — re-registering a tenant
+//! bumps its version in the [`super::registry::Registry`], so a lookup for
+//! the new version misses and rebuilds instead of serving the old adapter.
+//! Concurrent misses for one id are single-flighted: the first caller
+//! builds, the rest wait on a condvar and then hit — `misses` counts
+//! builds exactly.
 
-use crate::adapter::{self, Factors};
-use crate::config::{ModelCfg, LAYER_TYPES};
+use crate::adapter::{self, Factors, PooledAdapter, ServingAdapter};
+use crate::config::{Method, ModelCfg, LAYER_TYPES};
 use crate::coordinator::registry::Tenant;
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// All dense factors for one tenant.
 pub type TenantFactors = Arc<BTreeMap<String, Factors>>;
 
-/// LRU cache of materialized factors, keyed by (tenant id, version).
-pub struct MaterializeCache {
+/// LRU cache of per-tenant serving adapters, keyed by (tenant id, version).
+pub struct AdapterCache {
     capacity: usize,
+    /// Build dense materialized entries for everyone (legacy tier).
+    dense: bool,
     inner: Mutex<Inner>,
+    /// Signalled after every finished build (single-flight waiters).
+    built: Condvar,
 }
 
 struct Inner {
     /// One slot per tenant id, tagged with the version it was built for.
-    map: HashMap<String, (u64, TenantFactors)>,
+    map: HashMap<String, (u64, ServingAdapter)>,
     order: VecDeque<String>,
+    /// Ids with a build in flight (the single-flight guard), mapped to the
+    /// version being built.
+    building: HashMap<String, u64>,
     hits: u64,
     misses: u64,
 }
 
-impl MaterializeCache {
-    pub fn new(capacity: usize) -> MaterializeCache {
+impl AdapterCache {
+    /// `dense` selects the legacy materialized tier for every tenant
+    /// (normally driven by `Registry::serve_dense`, i.e. `MOS_SERVE_DENSE`).
+    pub fn new(capacity: usize, dense: bool) -> AdapterCache {
         assert!(capacity > 0);
-        MaterializeCache {
+        AdapterCache {
             capacity,
+            dense,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 order: VecDeque::new(),
+                building: HashMap::new(),
                 hits: 0,
                 misses: 0,
             }),
+            built: Condvar::new(),
         }
     }
 
-    /// Fetch (or build) the dense factors for a tenant. A version mismatch
-    /// (tenant was re-registered since the entry was built) counts as a
-    /// miss and rebuilds.
-    pub fn get(&self, cfg: &ModelCfg, tenant: &Tenant) -> TenantFactors {
-        {
-            let mut inner = self.inner.lock().unwrap();
+    /// Is this cache serving the dense materialized tier?
+    pub fn serves_dense(&self) -> bool {
+        self.dense
+    }
+
+    /// Fetch (or build) the serving adapter for a tenant. A version
+    /// mismatch (tenant was re-registered since the entry was built)
+    /// counts as a miss and rebuilds. Two concurrent misses for one id
+    /// run one build: the loser waits on the condvar and hits the entry
+    /// the winner installed.
+    pub fn get(&self, cfg: &ModelCfg, tenant: &Tenant) -> ServingAdapter {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
             let hit = inner
                 .map
                 .get(&tenant.id)
                 .filter(|(version, _)| *version == tenant.version)
-                .map(|(_, f)| Arc::clone(f));
-            if let Some(f) = hit {
+                .map(|(_, a)| a.clone());
+            if let Some(a) = hit {
                 inner.hits += 1;
                 let id = tenant.id.clone();
                 inner.order.retain(|x| x != &id);
                 inner.order.push_back(id);
-                return f;
+                return a;
+            }
+            if inner.building.contains_key(&tenant.id) {
+                // single-flight: a build for this id is already running —
+                // wait for it instead of duplicating the materialization
+                // (thundering herd on cold start / re-register)
+                inner = self.built.wait(inner).unwrap();
+                continue;
             }
             inner.misses += 1;
+            inner.building.insert(tenant.id.clone(), tenant.version);
+            break;
         }
-        // build outside the lock (materialization can be slow); the seven
-        // layer types are independent, so fan them out on the shared math
-        // pool (nested calls inside a pool worker run inline)
-        let built: Vec<(String, Factors)> = crate::model::math::pool()
-            .scoped_map(LAYER_TYPES.to_vec(), |t| {
-                (
-                    t.to_string(),
-                    adapter::materialize(
-                        cfg,
-                        &tenant.mc,
-                        &tenant.params,
-                        &tenant.aux,
-                        t,
-                    ),
-                )
-            });
-        let factors: TenantFactors =
-            Arc::new(built.into_iter().collect::<BTreeMap<_, _>>());
+        drop(inner);
+        // build outside the lock (dense materialization can be slow)
+        let built = self.build(cfg, tenant);
         let mut inner = self.inner.lock().unwrap();
+        inner.building.remove(&tenant.id);
         // never let a racing build of an older version clobber a newer one
         let stale_winner = inner
             .map
@@ -100,15 +123,49 @@ impl MaterializeCache {
             }
             inner
                 .map
-                .insert(tenant.id.clone(), (tenant.version, Arc::clone(&factors)));
+                .insert(tenant.id.clone(), (tenant.version, built.clone()));
             let id = tenant.id.clone();
             inner.order.retain(|x| x != &id);
             inner.order.push_back(id);
         }
-        factors
+        drop(inner);
+        self.built.notify_all();
+        built
     }
 
-    /// Drop a tenant's entry (any version) — e.g. after removal.
+    /// Construct the representation for the active tier.
+    fn build(&self, cfg: &ModelCfg, tenant: &Tenant) -> ServingAdapter {
+        if !self.dense && tenant.mc.method == Method::MoS {
+            // pooled tier: no copies — alias the registry's tensors
+            let pooled = PooledAdapter::new(
+                tenant.mc.clone(),
+                Arc::clone(&tenant.params),
+                Arc::clone(&tenant.aux),
+            )
+            .expect("registered MoS tenant must have pooled geometry");
+            return ServingAdapter::Pooled(Arc::new(pooled));
+        }
+        // dense tier: the seven layer types are independent, so fan the
+        // materialization out on the shared math pool (nested calls inside
+        // a pool worker run inline)
+        let built: Vec<(String, Factors)> = crate::model::math::pool()
+            .scoped_map(LAYER_TYPES.to_vec(), |t| {
+                (
+                    t.to_string(),
+                    adapter::materialize(
+                        cfg,
+                        &tenant.mc,
+                        &tenant.params,
+                        &tenant.aux,
+                        t,
+                    ),
+                )
+            });
+        ServingAdapter::Dense(Arc::new(built.into_iter().collect()))
+    }
+
+    /// Drop a tenant's entry (any version) — e.g. after removal or ledger
+    /// eviction (wired through `Registry::set_evict_hook`).
     pub fn invalidate(&self, tenant_id: &str) {
         let mut inner = self.inner.lock().unwrap();
         inner.map.remove(tenant_id);
@@ -127,6 +184,13 @@ impl MaterializeCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Total resident adapter bytes across cached entries (what the
+    /// `adapter_mb` bench column reports).
+    pub fn resident_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.map.values().map(|(_, a)| a.resident_bytes()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -142,21 +206,69 @@ mod tests {
             .unwrap()
     }
 
+    /// Identity of a cached adapter (both tiers hand out `Arc` clones).
+    fn ident(a: &ServingAdapter) -> usize {
+        match a {
+            ServingAdapter::Dense(f) => Arc::as_ptr(f) as usize,
+            ServingAdapter::Pooled(p) => Arc::as_ptr(p) as usize,
+        }
+    }
+
     #[test]
     fn hit_after_miss() {
         let cfg = presets::tiny();
-        let cache = MaterializeCache::new(4);
+        let cache = AdapterCache::new(4, false);
         let t = tenant(&cfg, "a", 1);
         let f1 = cache.get(&cfg, &t);
         let f2 = cache.get(&cfg, &t);
-        assert!(Arc::ptr_eq(&f1, &f2));
+        assert_eq!(ident(&f1), ident(&f2));
         assert_eq!(cache.stats(), (1, 1));
+    }
+
+    #[test]
+    fn pooled_tier_aliases_registry_tensors() {
+        // the pooled entry must share the tenant's tensors, not copy them:
+        // its resident bytes equal the tenant's own (pool-sized), and the
+        // params Arc gains a reference instead of a clone
+        let cfg = presets::tiny();
+        let cache = AdapterCache::new(4, false);
+        let t = tenant(&cfg, "a", 1);
+        let rc0 = Arc::strong_count(&t.params);
+        let a = cache.get(&cfg, &t);
+        let p = a.pooled().expect("MoS tenant must get the pooled tier");
+        assert_eq!(p.resident_bytes(), t.actual_bytes());
+        assert!(Arc::strong_count(&t.params) > rc0, "pool was copied");
+    }
+
+    #[test]
+    fn dense_mode_materializes_for_mos() {
+        let cfg = presets::tiny();
+        let cache = AdapterCache::new(4, true);
+        assert!(cache.serves_dense());
+        // paper settings (r=8, e=2): materialized factors ~4x the pool
+        let t = TenantSpec::mos(8, 2, 2, 1).seed(1).build(&cfg, "a").unwrap();
+        let a = cache.get(&cfg, &t);
+        let f = a.dense().expect("dense mode must materialize");
+        for lt in LAYER_TYPES {
+            assert!(f.contains_key(lt));
+        }
+        // dense residency is the materialized size: well above the pool
+        assert!(a.resident_bytes() > 3 * t.actual_bytes());
+    }
+
+    #[test]
+    fn non_mos_tenants_fall_back_to_dense() {
+        let cfg = presets::tiny();
+        let cache = AdapterCache::new(4, false);
+        let t = TenantSpec::lora(4).seed(1).build(&cfg, "l").unwrap();
+        let a = cache.get(&cfg, &t);
+        assert!(a.dense().is_some(), "LoRA tenant cannot serve pooled");
     }
 
     #[test]
     fn capacity_evicts_lru() {
         let cfg = presets::tiny();
-        let cache = MaterializeCache::new(2);
+        let cache = AdapterCache::new(2, false);
         let (ta, tb, tc) = (tenant(&cfg, "a", 1), tenant(&cfg, "b", 2), tenant(&cfg, "c", 3));
         cache.get(&cfg, &ta);
         cache.get(&cfg, &tb);
@@ -173,57 +285,91 @@ mod tests {
     #[test]
     fn invalidate_forces_rebuild() {
         let cfg = presets::tiny();
-        let cache = MaterializeCache::new(4);
+        let cache = AdapterCache::new(4, false);
         let t = tenant(&cfg, "a", 1);
         let f1 = cache.get(&cfg, &t);
         cache.invalidate("a");
         let f2 = cache.get(&cfg, &t);
-        assert!(!Arc::ptr_eq(&f1, &f2));
+        assert_ne!(ident(&f1), ident(&f2));
     }
 
     #[test]
     fn version_bump_misses_and_replaces() {
         let cfg = presets::tiny();
-        let cache = MaterializeCache::new(4);
+        let cache = AdapterCache::new(4, false);
         let mut t = tenant(&cfg, "a", 1);
         let f1 = cache.get(&cfg, &t);
         t.version = 1; // as the registry would assign on re-register
         let f2 = cache.get(&cfg, &t);
-        assert!(!Arc::ptr_eq(&f1, &f2), "stale factors served after re-register");
+        assert_ne!(ident(&f1), ident(&f2), "stale adapter served after re-register");
         assert_eq!(cache.stats(), (0, 2));
         assert_eq!(cache.len(), 1, "old version must not linger");
         // the new version is now the cached one
         let f3 = cache.get(&cfg, &t);
-        assert!(Arc::ptr_eq(&f2, &f3));
+        assert_eq!(ident(&f2), ident(&f3));
     }
 
     #[test]
     fn reregistered_tenant_serves_fresh_factors() {
         // regression: the cache doc promises (id, version) keying; before
         // the redesign a re-registered tenant kept serving the old dense
-        // factors because the key was the id alone.
+        // factors because the key was the id alone. Dense tier so the
+        // numeric-freshness assertion has factors to compare.
         let cfg = presets::tiny();
-        let reg = Registry::new(cfg.clone(), 1 << 30);
-        let cache = MaterializeCache::new(4);
+        let reg = Registry::with_serve_mode(cfg.clone(), 1 << 30, true);
+        let cache = AdapterCache::new(4, true);
         reg.register_spec("a", TenantSpec::mos(4, 2, 2, 0).seed(1))
             .unwrap();
-        let f1 = cache.get(&cfg, &reg.get("a").unwrap());
+        let a1 = cache.get(&cfg, &reg.get("a").unwrap());
         // re-register with different init: params change, id stays
         reg.register_spec("a", TenantSpec::mos(4, 2, 2, 0).seed(2))
             .unwrap();
-        let f2 = cache.get(&cfg, &reg.get("a").unwrap());
-        assert!(!Arc::ptr_eq(&f1, &f2));
+        let a2 = cache.get(&cfg, &reg.get("a").unwrap());
+        assert_ne!(ident(&a1), ident(&a2));
         // the factors must actually differ numerically, not just be rebuilt
+        let (f1, f2) = (a1.dense().unwrap(), a2.dense().unwrap());
         let (k, old) = f1.iter().next().unwrap();
         let new = &f2[k];
         assert_ne!(old.a, new.a, "fresh registration served stale factors");
     }
 
     #[test]
+    fn concurrent_misses_build_once() {
+        // single-flight regression: two concurrent misses for one
+        // (id, version) used to both run the full materialization outside
+        // the lock. With the in-flight guard, exactly one thread builds
+        // and every other waits then hits — deterministically (1 miss,
+        // n-1 hits), not just usually.
+        let cfg = presets::tiny();
+        let cache = Arc::new(AdapterCache::new(4, true));
+        let t = Arc::new(tenant(&cfg, "a", 1));
+        let n = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let ids: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    let (cache, t, cfg, barrier) =
+                        (Arc::clone(&cache), Arc::clone(&t), cfg.clone(), Arc::clone(&barrier));
+                    s.spawn(move || {
+                        barrier.wait();
+                        ident(&cache.get(&cfg, &t))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(ids.windows(2).all(|w| w[0] == w[1]), "threads saw different builds");
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 1, "concurrent misses were not single-flighted");
+        assert_eq!(hits, n as u64 - 1);
+    }
+
+    #[test]
     fn factors_cover_all_layer_types() {
         let cfg = presets::tiny();
-        let cache = MaterializeCache::new(1);
-        let f = cache.get(&cfg, &tenant(&cfg, "a", 1));
+        let cache = AdapterCache::new(1, true);
+        let a = cache.get(&cfg, &tenant(&cfg, "a", 1));
+        let f = a.dense().unwrap();
         for t in LAYER_TYPES {
             assert!(f.contains_key(t));
         }

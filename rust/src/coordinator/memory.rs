@@ -9,7 +9,8 @@ use std::collections::HashMap;
 pub enum AdmitResult {
     /// fits without eviction
     Admitted,
-    /// fits after evicting these tenants (in eviction order)
+    /// fits only after evicting one or more LRU tenants — [`MemoryLedger::admit`]
+    /// picks the victims and returns their ids
     NeedsEviction,
     /// larger than the whole budget
     TooLarge,

@@ -5,16 +5,20 @@
 //!
 //! Pipeline: requests enter through [`Server::submit`] with per-request
 //! [`GenOptions`], pass admission control into the [`batcher`] keyed by
-//! tenant; worker threads pull per-tenant batches round-robin, materialize
-//! the tenant's low-rank factors through the version-keyed [`cache`]
-//! (index-based routing makes this a *precompute*, paper Limitations §C),
-//! and run a continuously batched, KV-cached decode loop: one
-//! single-position step per generated token, newly queued requests
-//! admitted into freed slots between steps ([`Batcher::try_fill`]), each
-//! token streamed through the request's [`server::ResponseHandle`] before
-//! it resolves with a typed `Result`. The [`registry`] owns versioned
-//! tenant state built from [`TenantSpec`]s, the [`memory`] ledger enforces
-//! an accelerator-memory budget with LRU eviction, and [`metrics`] records
+//! tenant; worker threads pull per-tenant batches round-robin, fetch the
+//! tenant's serving adapter through the version-keyed two-tier [`cache`]
+//! (pooled zero-copy shard views by default; dense materialized factors
+//! behind `MOS_SERVE_DENSE=1` — index-based routing makes even that a
+//! *precompute*, paper Limitations §C), and run a continuously batched,
+//! KV-cached decode loop: one single-position step per generated token,
+//! newly queued requests admitted into freed slots between steps
+//! ([`Batcher::try_fill`]), each token streamed through the request's
+//! [`server::ResponseHandle`] before it resolves with a typed `Result`.
+//! The [`registry`] owns versioned tenant state built from
+//! [`TenantSpec`]s, the [`memory`] ledger enforces an accelerator-memory
+//! budget with LRU eviction charging the bytes each serve mode actually
+//! keeps resident (eviction invalidates the adapter cache through
+//! [`Registry::set_evict_hook`]), and [`metrics`] records
 //! latency/TTFT/throughput/rejections.
 //!
 //! See DESIGN.md §Serving API for the request lifecycle and the migration
@@ -30,6 +34,7 @@ pub mod server;
 pub use batcher::{
     Admission, Batcher, Request, RequestId, Response, ServeError, ServeResult,
 };
+pub use cache::{AdapterCache, TenantFactors};
 pub use memory::MemoryLedger;
 pub use metrics::Metrics;
 pub use registry::{Registry, Tenant, TenantSpec};

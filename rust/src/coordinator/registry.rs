@@ -10,7 +10,7 @@
 //! and never serve stale factors.
 
 use super::memory::MemoryLedger;
-use crate::adapter::{self, params::serving_bytes};
+use crate::adapter;
 use crate::config::{MethodCfg, ModelCfg};
 use crate::train::checkpoint::Checkpoint;
 use crate::util::bank::Bank;
@@ -18,13 +18,15 @@ use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
-/// One customized model.
+/// One customized model. Params and aux live behind `Arc`s so the pooled
+/// serving representation ([`crate::adapter::PooledAdapter`]) can alias the
+/// registry's tensors zero-copy instead of materializing its own.
 #[derive(Debug, Clone)]
 pub struct Tenant {
     pub id: String,
     pub mc: MethodCfg,
-    pub params: Bank,
-    pub aux: Bank,
+    pub params: Arc<Bank>,
+    pub aux: Arc<Bank>,
     pub router_seed: u64,
     /// Assigned by [`Registry::register`]; bumps on re-register. Factor
     /// caches key on `(id, version)`.
@@ -104,9 +106,11 @@ impl TenantSpec {
                 mc.validate(cfg)?;
                 Ok(Tenant {
                     id: id.to_string(),
-                    params: adapter::init_params(cfg, &mc, seed),
-                    aux: adapter::mos::router::build_router(cfg, &mc, seed)
-                        .into_bank(),
+                    params: Arc::new(adapter::init_params(cfg, &mc, seed)),
+                    aux: Arc::new(
+                        adapter::mos::router::build_router(cfg, &mc, seed)
+                            .into_bank(),
+                    ),
                     mc,
                     router_seed: seed,
                     version: 0,
@@ -117,8 +121,8 @@ impl TenantSpec {
                 Ok(Tenant {
                     id: id.to_string(),
                     mc: ck.mc,
-                    params: ck.params,
-                    aux: ck.aux,
+                    params: Arc::new(ck.params),
+                    aux: Arc::new(ck.aux),
                     router_seed: ck.router_seed,
                     version: 0,
                 })
@@ -135,15 +139,72 @@ pub struct Registry {
     /// Persistent per-id version counters (survive remove/evict, so a
     /// re-registered tenant can never alias a stale cache entry).
     versions: Mutex<HashMap<String, u64>>,
+    /// `true` = serve dense materialized factors (legacy path, forced by
+    /// `MOS_SERVE_DENSE=1`); the ledger then charges materialized size.
+    serve_dense: bool,
+    /// Called with each ledger-evicted tenant id while it is being dropped
+    /// — the server wires this to `AdapterCache::invalidate` so "evicted"
+    /// tenants cannot keep serving from the cache.
+    evict_hook: Mutex<Option<Box<dyn Fn(&str) + Send + Sync>>>,
 }
 
 impl Registry {
     pub fn new(cfg: ModelCfg, capacity_bytes: usize) -> Registry {
+        let dense = std::env::var("MOS_SERVE_DENSE")
+            .map(|v| v == "1")
+            .unwrap_or(false);
+        Registry::with_serve_mode(cfg, capacity_bytes, dense)
+    }
+
+    /// Like [`Registry::new`] with the serving representation pinned
+    /// explicitly (tests/benches; `new` reads `MOS_SERVE_DENSE`).
+    pub fn with_serve_mode(
+        cfg: ModelCfg,
+        capacity_bytes: usize,
+        serve_dense: bool,
+    ) -> Registry {
         Registry {
             cfg,
             tenants: RwLock::new(HashMap::new()),
             ledger: Mutex::new(MemoryLedger::new(capacity_bytes)),
             versions: Mutex::new(HashMap::new()),
+            serve_dense,
+            evict_hook: Mutex::new(None),
+        }
+    }
+
+    /// Should tenants be served from dense materialized factors instead of
+    /// the pooled zero-copy representation?
+    pub fn serve_dense(&self) -> bool {
+        self.serve_dense
+    }
+
+    /// Install the eviction callback (replacing any previous one).
+    pub fn set_evict_hook(&self, hook: impl Fn(&str) + Send + Sync + 'static) {
+        *self.evict_hook.lock().unwrap() = Some(Box::new(hook));
+    }
+
+    /// Bytes the serving stack will actually keep resident for `tenant`
+    /// under the current serve mode: the tenant's own tensors (pools +
+    /// index tables — equal to `serving_bytes` for MoS) on the pooled
+    /// path, the dense materialized factors when `serve_dense`.
+    pub fn resident_bytes_for(&self, tenant: &Tenant) -> usize {
+        use crate::config::LAYER_TYPES;
+        use crate::config::Method;
+        if self.serve_dense || tenant.mc.method != Method::MoS {
+            // dense per-block factors: r x (i + o) f32 per block per type.
+            // For non-MoS methods this equals the tenant's own tensors
+            // except VeRA/Tied, whose dense expansion is what serving
+            // holds — charge what will actually sit in memory.
+            LAYER_TYPES
+                .iter()
+                .map(|t| {
+                    let (o, i) = self.cfg.dims(t);
+                    self.cfg.blocks * tenant.mc.r * (i + o) * 4
+                })
+                .sum()
+        } else {
+            tenant.actual_bytes()
         }
     }
 
@@ -153,8 +214,8 @@ impl Registry {
     /// tenant ids.
     pub fn register(&self, mut tenant: Tenant) -> Result<Vec<String>> {
         tenant.mc.validate(&self.cfg)?;
-        // the analytic model (what a GPU deployment would allocate, fp32)
-        let bytes = serving_bytes(&self.cfg, &tenant.mc, 4);
+        // measured, not analytic: what this serve mode keeps resident
+        let bytes = self.resident_bytes_for(&tenant);
         let mut ledger = self.ledger.lock().unwrap();
         let Some(evicted) = ledger.admit(&tenant.id, bytes) else {
             bail!(
@@ -167,6 +228,14 @@ impl Registry {
         let mut map = self.tenants.write().unwrap();
         for id in &evicted {
             map.remove(id);
+        }
+        if !evicted.is_empty() {
+            let hook = self.evict_hook.lock().unwrap();
+            if let Some(hook) = hook.as_ref() {
+                for id in &evicted {
+                    hook(id);
+                }
+            }
         }
         // assign the version under the same write lock as the insert, so
         // concurrent re-registers of one id commit versions in map order
@@ -221,6 +290,7 @@ impl Registry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adapter::params::serving_bytes;
     use crate::config::presets;
 
     fn mk_tenant(cfg: &ModelCfg, id: &str, seed: u64) -> Tenant {
@@ -305,6 +375,48 @@ mod tests {
             }
         }
         assert!(admitted >= 60, "only {admitted} MoS tenants fit");
+    }
+
+    #[test]
+    fn ledger_charges_measured_resident_bytes() {
+        // acceptance criterion: on the pooled path each tenant is charged
+        // exactly the bytes its tensors keep resident (pools + index
+        // tables), which for MoS equals the analytic `serving_bytes` —
+        // the ledger's "8x more tenants" claim is measured, not asserted
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let reg = Registry::with_serve_mode(cfg.clone(), 1 << 30, false);
+        reg.register(mk_tenant(&cfg, "a", 1)).unwrap();
+        let t = reg.get("a").unwrap();
+        assert_eq!(reg.ledger.lock().unwrap().used(), t.actual_bytes());
+        assert_eq!(t.actual_bytes(), serving_bytes(&cfg, &mc, 4));
+
+        // dense mode charges the materialized factors instead — ~8x more
+        let dense = Registry::with_serve_mode(cfg.clone(), 1 << 30, true);
+        assert!(dense.serve_dense());
+        dense.register(mk_tenant(&cfg, "a", 1)).unwrap();
+        let db = dense.ledger.lock().unwrap().used();
+        let ratio = db as f64 / t.actual_bytes() as f64;
+        assert!(ratio > 3.0, "dense/pooled byte ratio only {ratio:.1}");
+    }
+
+    #[test]
+    fn evict_hook_fires_for_each_victim() {
+        // ledger eviction must reach downstream caches; the hook is the
+        // wire (see Server::new)
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let one = serving_bytes(&cfg, &mc, 4);
+        let reg = Registry::with_serve_mode(cfg.clone(), 2 * one + one / 2, false);
+        let seen = std::sync::Arc::new(Mutex::new(Vec::<String>::new()));
+        let seen2 = std::sync::Arc::clone(&seen);
+        reg.set_evict_hook(move |id| seen2.lock().unwrap().push(id.to_string()));
+        reg.register(mk_tenant(&cfg, "a", 1)).unwrap();
+        reg.register(mk_tenant(&cfg, "b", 2)).unwrap();
+        let _ = reg.get("a"); // touch a; b is LRU
+        let evicted = reg.register(mk_tenant(&cfg, "c", 3)).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert_eq!(*seen.lock().unwrap(), vec!["b".to_string()]);
     }
 
     #[test]

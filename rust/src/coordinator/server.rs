@@ -19,13 +19,17 @@
 use super::batcher::{
     Admission, Batcher, Request, RequestId, Response, ServeError, ServeResult,
 };
-use super::cache::{MaterializeCache, TenantFactors};
+use super::cache::{AdapterCache, TenantFactors};
 use super::metrics::Metrics;
 use super::registry::{Registry, Tenant, TenantSpec};
+use crate::adapter::{Factors, ServingAdapter};
 use crate::data::tokenizer::Tokenizer;
 use crate::eval::{DecodeState, GenOptions};
 use crate::model::math::scratch_put;
-use crate::model::transformer::{decode_step, infer_prefill, KvCache};
+use crate::model::transformer::{
+    decode_step, decode_step_runs, infer_prefill, infer_prefill_runs,
+    AdapterBinding, AdapterRef, KvCache,
+};
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -48,7 +52,7 @@ pub trait ServeEngine {
     fn forward(
         &mut self,
         tenant: &Tenant,
-        factors: &TenantFactors,
+        adapter: &ServingAdapter,
         tokens: &[i32],
     ) -> Result<Vec<f32>>;
     /// (batch, seq, vocab)
@@ -65,7 +69,7 @@ pub trait ServeEngine {
     fn prefill_rows(
         &mut self,
         _tenant: &Tenant,
-        _factors: &TenantFactors,
+        _adapter: &ServingAdapter,
         _rows: &[usize],
         _tokens: &[i32],
         _last: &[usize],
@@ -77,7 +81,7 @@ pub trait ServeEngine {
     fn decode_rows(
         &mut self,
         _tenant: &Tenant,
-        _factors: &TenantFactors,
+        _adapter: &ServingAdapter,
         _entries: &[(usize, usize, i32)],
     ) -> Result<Vec<f32>> {
         anyhow::bail!("engine does not support KV-cached stepping")
@@ -100,12 +104,17 @@ pub struct HostEngine {
     pub base: crate::util::bank::Bank,
     kv: Option<KvCache>,
     full_prefill: bool,
+    /// One-entry materialization memo for the full-forward arms, which
+    /// still need dense factors even when the tenant is served pooled:
+    /// `(id, version, factors)` — the worker-owned engine's scratch, not
+    /// a second cache tier.
+    dense_memo: Option<(String, u64, TenantFactors)>,
 }
 
 impl HostEngine {
     pub fn new(cfg: crate::config::ModelCfg, seed: u64) -> HostEngine {
         let base = crate::model::transformer::init_base(&cfg, seed);
-        HostEngine { cfg, base, kv: None, full_prefill: false }
+        HostEngine { cfg, base, kv: None, full_prefill: false, dense_memo: None }
     }
 
     /// Wrap an existing base bank (e.g. a just-trained model's).
@@ -113,7 +122,7 @@ impl HostEngine {
         cfg: crate::config::ModelCfg,
         base: crate::util::bank::Bank,
     ) -> HostEngine {
-        HostEngine { cfg, base, kv: None, full_prefill: false }
+        HostEngine { cfg, base, kv: None, full_prefill: false, dense_memo: None }
     }
 
     /// Use the legacy full-forward prefill (bench/test comparison arm).
@@ -121,20 +130,56 @@ impl HostEngine {
         self.full_prefill = true;
         self
     }
+
+    /// Dense factors for the paths that need them (full-window forward,
+    /// legacy prefill): Dense adapters pass straight through; a Pooled
+    /// adapter is materialized once per (id, version) and memoized.
+    fn dense_factors(
+        &mut self,
+        tenant: &Tenant,
+        adapter: &ServingAdapter,
+    ) -> TenantFactors {
+        if let ServingAdapter::Dense(f) = adapter {
+            return Arc::clone(f);
+        }
+        if let Some((id, v, f)) = &self.dense_memo {
+            if *id == tenant.id && *v == tenant.version {
+                return Arc::clone(f);
+            }
+        }
+        let built: Vec<(String, Factors)> = crate::model::math::pool()
+            .scoped_map(crate::config::LAYER_TYPES.to_vec(), |t| {
+                (
+                    t.to_string(),
+                    crate::adapter::materialize(
+                        &self.cfg,
+                        &tenant.mc,
+                        &tenant.params,
+                        &tenant.aux,
+                        t,
+                    ),
+                )
+            });
+        let f: TenantFactors = Arc::new(built.into_iter().collect());
+        self.dense_memo =
+            Some((tenant.id.clone(), tenant.version, Arc::clone(&f)));
+        f
+    }
 }
 
 impl ServeEngine for HostEngine {
     fn forward(
         &mut self,
         tenant: &Tenant,
-        factors: &TenantFactors,
+        adapter: &ServingAdapter,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
+        let factors = self.dense_factors(tenant, adapter);
         let (cache, _) = crate::model::transformer::forward(
             &self.cfg,
             &tenant.mc,
             &self.base,
-            factors,
+            &factors,
             tokens,
         );
         Ok(cache.logits)
@@ -151,21 +196,22 @@ impl ServeEngine for HostEngine {
     fn prefill_rows(
         &mut self,
         tenant: &Tenant,
-        factors: &TenantFactors,
+        adapter: &ServingAdapter,
         rows: &[usize],
         tokens: &[i32],
         last: &[usize],
     ) -> Result<Vec<f32>> {
-        let kv = self
-            .kv
-            .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
         if self.full_prefill {
             // legacy arm: the training forward (ForwardCache + full-window
             // vocab projection), K/V copied out, logits re-sliced to the
             // lean shape — bitwise identical rows, ~seq-fold more work
+            let factors = self.dense_factors(tenant, adapter);
+            let kv = self
+                .kv
+                .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
             let (seq, vocab) = (self.cfg.seq, self.cfg.vocab);
             let (fc, _) = crate::model::transformer::forward(
-                &self.cfg, &tenant.mc, &self.base, factors, tokens,
+                &self.cfg, &tenant.mc, &self.base, &factors, tokens,
             );
             kv.copy_from_forward(&fc, rows);
             let mut lean = vec![0.0f32; rows.len() * vocab];
@@ -176,21 +222,49 @@ impl ServeEngine for HostEngine {
             }
             return Ok(lean);
         }
-        Ok(infer_prefill(
-            &self.cfg, &tenant.mc, &self.base, factors, tokens, last, kv, rows,
-        ))
+        let kv = self
+            .kv
+            .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
+        Ok(match adapter {
+            ServingAdapter::Dense(f) => infer_prefill(
+                &self.cfg, &tenant.mc, &self.base, f, tokens, last, kv, rows,
+            ),
+            ServingAdapter::Pooled(p) => {
+                // straight off the shard pool — no materialization anywhere
+                let runs = [AdapterBinding::new(
+                    rows.len(),
+                    &tenant.mc,
+                    AdapterRef::Pooled(p.as_ref()),
+                )];
+                infer_prefill_runs(
+                    &self.cfg, &self.base, &runs, tokens, last, kv, rows,
+                )
+            }
+        })
     }
 
     fn decode_rows(
         &mut self,
         tenant: &Tenant,
-        factors: &TenantFactors,
+        adapter: &ServingAdapter,
         entries: &[(usize, usize, i32)],
     ) -> Result<Vec<f32>> {
         let kv = self
             .kv
             .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
-        Ok(decode_step(&self.cfg, &tenant.mc, &self.base, factors, kv, entries))
+        Ok(match adapter {
+            ServingAdapter::Dense(f) => decode_step(
+                &self.cfg, &tenant.mc, &self.base, f, kv, entries,
+            ),
+            ServingAdapter::Pooled(p) => {
+                let runs = [AdapterBinding::new(
+                    entries.len(),
+                    &tenant.mc,
+                    AdapterRef::Pooled(p.as_ref()),
+                )];
+                decode_step_runs(&self.cfg, &self.base, &runs, kv, entries)
+            }
+        })
     }
 }
 
@@ -205,10 +279,10 @@ impl<E: ServeEngine> ServeEngine for FullWindowEngine<E> {
     fn forward(
         &mut self,
         tenant: &Tenant,
-        factors: &TenantFactors,
+        adapter: &ServingAdapter,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
-        self.0.forward(tenant, factors, tokens)
+        self.0.forward(tenant, adapter, tokens)
     }
 
     fn shape(&self) -> (usize, usize, usize) {
@@ -328,7 +402,7 @@ pub struct Server {
     pub registry: Arc<Registry>,
     pub batcher: Arc<Batcher>,
     pub metrics: Arc<Metrics>,
-    pub cache: Arc<MaterializeCache>,
+    pub cache: Arc<AdapterCache>,
     workers: Vec<thread::JoinHandle<()>>,
     next_id: AtomicU64,
 }
@@ -336,6 +410,14 @@ pub struct Server {
 impl Server {
     pub fn new(registry: Arc<Registry>, cfg: ServerCfg) -> Server {
         let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(AdapterCache::new(
+            cfg.cache_capacity,
+            registry.serve_dense(),
+        ));
+        // ledger eviction must invalidate the cache, or "evicted" tenants
+        // keep serving from it (ledger<->cache coherence)
+        let cache2 = Arc::clone(&cache);
+        registry.set_evict_hook(move |id| cache2.invalidate(id));
         Server {
             registry,
             batcher: Arc::new(Batcher::new(
@@ -345,7 +427,7 @@ impl Server {
                 Arc::clone(&metrics),
             )),
             metrics,
-            cache: Arc::new(MaterializeCache::new(cfg.cache_capacity)),
+            cache,
             workers: Vec::new(),
             next_id: AtomicU64::new(0),
         }
@@ -386,11 +468,9 @@ impl Server {
     /// registration under this id — the version bump makes the next
     /// factor lookup rebuild). Returns LRU-evicted tenant ids.
     pub fn register(&self, id: &str, spec: TenantSpec) -> Result<Vec<String>> {
+        // eviction victims are invalidated by the registry's evict hook
         let evicted = self.registry.register_spec(id, spec)?;
         self.cache.invalidate(id);
-        for e in &evicted {
-            self.cache.invalidate(e);
-        }
         Ok(evicted)
     }
 
@@ -409,10 +489,10 @@ impl Server {
         self.registry.ids()
     }
 
-    /// Materialize dense factors for every registered tenant ahead of
-    /// traffic, fanning the per-tenant (and, inside, per-block) precompute
-    /// out over the shared math pool. First requests then hit a warm
-    /// cache instead of paying materialization latency. Returns the
+    /// Build the serving adapter for every registered tenant ahead of
+    /// traffic (a zero-copy wrap on the pooled tier; the full dense
+    /// materialization fan-out on the legacy tier). First requests then
+    /// hit a warm cache instead of paying build latency. Returns the
     /// number of tenants warmed.
     pub fn prewarm(&self) -> usize {
         let tenants: Vec<Arc<Tenant>> = self
@@ -561,7 +641,7 @@ fn sweep_finished(
 fn serve_batch<E: ServeEngine>(
     registry: &Registry,
     metrics: &Metrics,
-    cache: &MaterializeCache,
+    cache: &AdapterCache,
     batcher: &Batcher,
     engine: &mut E,
     tenant_id: &str,
@@ -577,7 +657,7 @@ fn serve_batch<E: ServeEngine>(
         }
         return;
     };
-    let factors = cache.get(&registry.cfg, &tenant);
+    let adapter = cache.get(&registry.cfg, &tenant);
     let (bsz, seq, vocab) = engine.shape();
     let tk = Tokenizer::new();
     let stepping = engine.supports_steps();
@@ -678,7 +758,7 @@ fn serve_batch<E: ServeEngine>(
                     live_new.iter().map(|&r| st.last_pos(r)).collect();
                 let t0 = Instant::now();
                 match engine
-                    .prefill_rows(&tenant, &factors, &live_new, &toks, &last)
+                    .prefill_rows(&tenant, &adapter, &live_new, &toks, &last)
                 {
                     Ok(logits) => {
                         metrics.record_prefill(t0.elapsed());
@@ -704,7 +784,7 @@ fn serve_batch<E: ServeEngine>(
             if !live.is_empty() {
                 if stepping {
                     let entries = st.step_entries();
-                    match engine.decode_rows(&tenant, &factors, &entries) {
+                    match engine.decode_rows(&tenant, &adapter, &entries) {
                         Ok(logits) => {
                             for (row, tok) in st.step_rows(&entries, &logits) {
                                 stream_token(metrics, &mut slots, row, tok);
@@ -718,7 +798,7 @@ fn serve_batch<E: ServeEngine>(
                         }
                     }
                 } else {
-                    match engine.forward(&tenant, &factors, st.tokens()) {
+                    match engine.forward(&tenant, &adapter, st.tokens()) {
                         Ok(logits) => {
                             for (row, tok) in st.step_full(&logits) {
                                 stream_token(metrics, &mut slots, row, tok);
@@ -789,14 +869,14 @@ mod tests {
         fn forward(
             &mut self,
             tenant: &Tenant,
-            factors: &TenantFactors,
+            adapter: &ServingAdapter,
             tokens: &[i32],
         ) -> Result<Vec<f32>> {
             self.calls.fetch_add(1, Ordering::Relaxed);
             if self.fail {
                 anyhow::bail!("injected engine failure");
             }
-            self.inner.forward(tenant, factors, tokens)
+            self.inner.forward(tenant, adapter, tokens)
         }
         fn shape(&self) -> (usize, usize, usize) {
             self.inner.shape()
@@ -1245,6 +1325,45 @@ mod tests {
         assert_eq!(misses, 1, "factors must be materialized exactly once");
         assert!(hits >= 1);
         server.shutdown();
+    }
+
+    #[test]
+    fn ledger_eviction_invalidates_cache_entry() {
+        // ledger<->cache coherence: when registering "c" LRU-evicts "a"
+        // from the registry, the server's adapter cache must drop a's
+        // entry too (via the evict hook) — otherwise the "evicted" tenant
+        // keeps its adapter resident and the ledger's byte accounting lies
+        let mut cfg = presets::tiny();
+        cfg.batch = 4;
+        let one = crate::adapter::params::serving_bytes(
+            &cfg,
+            spec(1).method_cfg(),
+            4,
+        );
+        let registry = Arc::new(Registry::with_serve_mode(
+            cfg.clone(),
+            2 * one + one / 2,
+            false,
+        ));
+        let server = Server::new(registry, ServerCfg::default());
+        server.register("a", spec(1)).unwrap();
+        server.register("b", spec(2)).unwrap();
+        assert_eq!(server.prewarm(), 2);
+        assert_eq!(server.cache.len(), 2);
+        let _ = server.registry.get("b"); // touch b; a is LRU
+        let evicted = server.register("c", spec(3)).unwrap();
+        assert_eq!(evicted, vec!["a".to_string()]);
+        assert_eq!(
+            server.cache.len(),
+            1,
+            "evicted tenant's cache entry lingered"
+        );
+        // the survivor still hits its warm entry
+        let (_, m0) = server.cache.stats();
+        let b = server.registry.get("b").unwrap();
+        server.cache.get(&server.registry.cfg, &b);
+        let (_, m1) = server.cache.stats();
+        assert_eq!(m1, m0, "survivor was needlessly rebuilt");
     }
 
     #[test]

@@ -430,6 +430,183 @@ pub fn gemm_canon_batch(
     });
 }
 
+// ---------------------------------------------------------------------------
+// shard-gather GEMM (pooled serving path)
+// ---------------------------------------------------------------------------
+
+/// Gather `idx` shard slices out of a shard pool into a dense row-major
+/// matrix, replicating `adapter/mos/materialize.rs::gather_rows` order
+/// exactly: gathered row `row` is the concatenation of the `l` shards
+/// `idx[row*l..row*l+l]`, each `shard_w` floats wide, and an optional
+/// per-row scale is folded in afterwards with the same `s != 1.0` guard
+/// as the materialized path (so `1.0`-scaled rows stay bit-untouched).
+fn gather_pooled(
+    g: &mut [f32],
+    pool: &[f32],
+    shard_w: usize,
+    idx: &[i32],
+    l: usize,
+    row_scale: Option<&[f32]>,
+) {
+    let g_rows = idx.len() / l;
+    let width = l * shard_w;
+    debug_assert_eq!(idx.len(), g_rows * l);
+    debug_assert_eq!(g.len(), g_rows * width);
+    for row in 0..g_rows {
+        for j in 0..l {
+            let shard = idx[row * l + j] as usize;
+            g[row * width + j * shard_w..row * width + (j + 1) * shard_w]
+                .copy_from_slice(&pool[shard * shard_w..(shard + 1) * shard_w]);
+        }
+    }
+    if let Some(scale) = row_scale {
+        debug_assert_eq!(scale.len(), g_rows);
+        for row in 0..g_rows {
+            let s = scale[row];
+            if s != 1.0 {
+                for v in &mut g[row * width..(row + 1) * width] {
+                    *v *= s;
+                }
+            }
+        }
+    }
+}
+
+/// Canonical-order GEMM against a *gathered* operand: computes
+/// `c (m,n) += alpha * a @ op(G)` where `G` is the dense matrix the
+/// materialized path would build from `(pool, idx, row_scale)` — without
+/// the caller ever holding a per-tenant dense copy.
+///
+/// `G` has `idx.len() / l` rows of `l * shard_w` floats (gathered row
+/// `row` = shards `idx[row*l..(row+1)*l]`, scaled by `row_scale[row]`).
+/// `tg` gives `G`'s storage role exactly like [`gemm_canon`]'s `tb`:
+/// * `Trans::T` — `G` is `(n, k)`; the A-factor apply `x @ A_g^T`
+///   (`n = r`, `k = l * shard_w`).
+/// * `Trans::N` — `G` is `(k, n)`; the B-factor apply `t @ B_g`
+///   (`k = r`, `n = l * shard_w`). The dense oracle stores `B` as
+///   `(out, r)` and reads it through `Trans::T`; reading the ungathered
+///   `(r, out)` layout through `Trans::N` addresses the very same values,
+///   so the per-element mul/add sequence is unchanged.
+///
+/// The gather itself writes into per-thread scratch ([`scratch_take`]),
+/// then runs the ordinary [`gemm_canon`]: pooled results are **bitwise
+/// identical** to materializing first, for any thread count, because the
+/// kernel that touches the floats is literally the same one. Per-tenant
+/// residency stays O(pool); the gather's O(rows · l · shard_w) copy is
+/// the price, measured against dense apply in `bench_materialize`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_gather_canon(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    pool: &[f32],
+    shard_w: usize,
+    idx: &[i32],
+    l: usize,
+    row_scale: Option<&[f32]>,
+    tg: Trans,
+    c: &mut [f32],
+) {
+    let g_rows = idx.len() / l;
+    let width = l * shard_w;
+    match tg {
+        Trans::T => debug_assert_eq!((n, k), (g_rows, width)),
+        Trans::N => debug_assert_eq!((k, n), (g_rows, width)),
+    }
+    let mut g = scratch_take(g_rows * width);
+    gather_pooled(&mut g, pool, shard_w, idx, l, row_scale);
+    gemm_canon(m, n, k, alpha, a, Trans::N, &g, tg, c);
+    scratch_put(g);
+}
+
+/// `nb` independent [`gemm_gather_canon`] problems in one call, sharing a
+/// single shard pool: sub-problem `i` gathers `idx[i*gsz..(i+1)*gsz]`
+/// (and `row_scale[i*g_rows..]` when given) and accumulates into
+/// `c[i*m*n..]` from `a[i*m*k..]`. This is the per-run projection batch
+/// for mixed-tenant serving — whole sub-GEMMs fan out over the pool
+/// ([`gemm_canon_batch`] discipline), each gathering into its own
+/// worker-local scratch, so results are bitwise identical to `nb`
+/// individual calls for any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_gather_canon_batch(
+    nb: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    pool: &[f32],
+    shard_w: usize,
+    idx: &[i32],
+    l: usize,
+    row_scale: Option<&[f32]>,
+    tg: Trans,
+    c: &mut [f32],
+) {
+    if nb == 0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let g_rows = idx.len() / (nb * l);
+    let gsz = g_rows * l;
+    let width = l * shard_w;
+    debug_assert_eq!(idx.len(), nb * gsz);
+    debug_assert_eq!(a.len(), nb * m * k);
+    debug_assert_eq!(c.len(), nb * m * n);
+    match tg {
+        Trans::T => debug_assert_eq!((n, k), (g_rows, width)),
+        Trans::N => debug_assert_eq!((k, n), (g_rows, width)),
+    }
+    let (asz, csz) = (m * k, m * n);
+    let sub = |i: usize, ci: &mut [f32]| {
+        let mut g = scratch_take(g_rows * width);
+        gather_pooled(
+            &mut g,
+            pool,
+            shard_w,
+            &idx[i * gsz..(i + 1) * gsz],
+            l,
+            row_scale.map(|s| &s[i * g_rows..(i + 1) * g_rows]),
+        );
+        gemm_canon_serial(m, n, k, alpha, &a[i * asz..(i + 1) * asz], Trans::N, &g, tg, ci);
+        scratch_put(g);
+    };
+    let total_flops = 2usize
+        .saturating_mul(nb)
+        .saturating_mul(m)
+        .saturating_mul(n)
+        .saturating_mul(k);
+    let pool_ref = if nb > 1 && total_flops >= PAR_FLOPS {
+        auto_pool()
+    } else {
+        None
+    };
+    let nth = pool_ref.map(|p| p.workers()).unwrap_or(1);
+    if nth <= 1 {
+        for (i, ci) in c.chunks_exact_mut(csz).enumerate() {
+            sub(i, ci);
+        }
+        return;
+    }
+    let per = div_up(nb, nth);
+    let mut tasks: Vec<(usize, &mut [f32])> = Vec::new();
+    let mut rest: &mut [f32] = c;
+    let mut i0 = 0usize;
+    while i0 < nb {
+        let take = per.min(nb - i0);
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * csz);
+        tasks.push((i0, head));
+        rest = tail;
+        i0 += take;
+    }
+    pool_ref.unwrap().scoped_map(tasks, |(i0, chunk)| {
+        for (j, ci) in chunk.chunks_exact_mut(csz).enumerate() {
+            sub(i0 + j, ci);
+        }
+    });
+}
+
 /// Scalar kernel replicating the tiled path's per-element order: for each
 /// KC block, accumulate `sum_p a[i,p] * b[p,j]` sequentially from zero,
 /// then write back `c += partial` (or `c += alpha * partial`) — the same
@@ -1228,6 +1405,118 @@ mod tests {
             let bb: Vec<u32> = batched.iter().map(|v| v.to_bits()).collect();
             let ab: Vec<u32> = alone.iter().map(|v| v.to_bits()).collect();
             assert_eq!(bb, ab, "batch ({nb},{m},{n},{k}) alpha={alpha} diverges");
+        }
+    }
+
+    /// Materialize the gathered matrix the way `gather_pooled` defines it
+    /// — the dense oracle the pooled kernels must bit-match.
+    fn materialize_gather(
+        pool: &[f32],
+        shard_w: usize,
+        idx: &[i32],
+        l: usize,
+        scale: Option<&[f32]>,
+    ) -> Vec<f32> {
+        let g_rows = idx.len() / l;
+        let mut g = vec![0.0f32; g_rows * l * shard_w];
+        gather_pooled(&mut g, pool, shard_w, idx, l, scale);
+        g
+    }
+
+    #[test]
+    fn gather_gemm_matches_dense_materialized_bitwise() {
+        // both operand roles (A-side Trans::T, B-side Trans::N), scale
+        // folding with values != 1, and shapes on either side of the
+        // SMALL_FLOPS boundary — the pooled path must bit-match running
+        // gemm_canon against the pre-materialized gathered matrix
+        let mut rng = Rng::new(41, 9);
+        for (m, g_rows, l, shard_w, alpha, tg, scaled) in [
+            (6usize, 8usize, 2usize, 32usize, 1.0f32, Trans::T, true),
+            (6, 8, 2, 32, 0.25, Trans::N, true),
+            (1, 4, 3, 8, 1.0, Trans::T, false), // decode row, small kernel
+            (48, 16, 2, 64, 1.0, Trans::T, true), // above SMALL_FLOPS: tiled
+            (48, 16, 2, 64, 0.25, Trans::N, true),
+            (5, 6, 1, 16, 1.0, Trans::T, true), // l = 1 ablation shape
+        ] {
+            let n_shards = 24usize;
+            let pool: Vec<f32> =
+                (0..n_shards * shard_w).map(|_| rng.normal()).collect();
+            let idx: Vec<i32> = (0..g_rows * l)
+                .map(|_| rng.range(0, n_shards) as i32)
+                .collect();
+            let scale: Option<Vec<f32>> = scaled.then(|| {
+                (0..g_rows)
+                    .map(|i| if i % 3 == 0 { 1.0 } else { rng.normal().abs() + 0.5 })
+                    .collect()
+            });
+            let width = l * shard_w;
+            let (n, k) = match tg {
+                Trans::T => (g_rows, width),
+                Trans::N => (width, g_rows),
+            };
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let g = materialize_gather(&pool, shard_w, &idx, l, scale.as_deref());
+            let mut dense = c0.clone();
+            gemm_canon(m, n, k, alpha, &a, Trans::N, &g, tg, &mut dense);
+            let mut pooled = c0.clone();
+            gemm_gather_canon(
+                m, n, k, alpha, &a, &pool, shard_w, &idx, l,
+                scale.as_deref(), tg, &mut pooled,
+            );
+            let db: Vec<u32> = dense.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = pooled.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(db, pb, "({m},{g_rows},{l},{shard_w}) tg={tg:?} diverges");
+        }
+    }
+
+    #[test]
+    fn gather_gemm_batch_matches_individual_calls_bitwise() {
+        // the mixed-tenant projection batch: one gemm_gather_canon_batch
+        // call must bit-match nb individual calls, including nb large
+        // enough to engage the pool and per-sub idx/scale slices
+        let mut rng = Rng::new(43, 2);
+        for (nb, m, g_rows, l, shard_w, alpha, tg) in [
+            (4usize, 6usize, 8usize, 2usize, 16usize, 1.0f32, Trans::T),
+            (4, 6, 8, 2, 16, 0.25, Trans::N),
+            (1, 3, 4, 2, 8, 1.0, Trans::T), // nb = 1 degenerate
+            (32, 16, 8, 2, 64, 1.0, Trans::T), // above PAR_FLOPS: pooled
+        ] {
+            let n_shards = 24usize;
+            let pool: Vec<f32> =
+                (0..n_shards * shard_w).map(|_| rng.normal()).collect();
+            let idx: Vec<i32> = (0..nb * g_rows * l)
+                .map(|_| rng.range(0, n_shards) as i32)
+                .collect();
+            let scale: Vec<f32> = (0..nb * g_rows)
+                .map(|i| if i % 4 == 0 { 1.0 } else { rng.normal().abs() + 0.5 })
+                .collect();
+            let width = l * shard_w;
+            let (n, k) = match tg {
+                Trans::T => (g_rows, width),
+                Trans::N => (width, g_rows),
+            };
+            let a: Vec<f32> = (0..nb * m * k).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..nb * m * n).map(|_| rng.normal()).collect();
+            let mut batched = c0.clone();
+            gemm_gather_canon_batch(
+                nb, m, n, k, alpha, &a, &pool, shard_w, &idx, l,
+                Some(&scale), tg, &mut batched,
+            );
+            let mut alone = c0.clone();
+            for i in 0..nb {
+                gemm_gather_canon(
+                    m, n, k, alpha,
+                    &a[i * m * k..(i + 1) * m * k],
+                    &pool, shard_w,
+                    &idx[i * g_rows * l..(i + 1) * g_rows * l], l,
+                    Some(&scale[i * g_rows..(i + 1) * g_rows]), tg,
+                    &mut alone[i * m * n..(i + 1) * m * n],
+                );
+            }
+            let bb: Vec<u32> = batched.iter().map(|v| v.to_bits()).collect();
+            let ab: Vec<u32> = alone.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bb, ab, "batch ({nb},{m},{g_rows},{l}) diverges");
         }
     }
 

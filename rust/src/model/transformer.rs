@@ -22,7 +22,7 @@
 //! full-window vocab projection.
 
 use super::math::*;
-use crate::adapter::Factors;
+use crate::adapter::{Factors, PooledAdapter};
 use crate::config::{MethodCfg, ModelCfg, LAYER_TYPES};
 use crate::util::bank::{Bank, Tensor};
 use crate::util::rng::Rng;
@@ -212,6 +212,116 @@ fn adapted_fwd_into(
     gemm_canon(rows, r, i, 1.0, x, Trans::N, &f.a[block], Trans::T, t);
     // y += scale * t @ B^T  (B is (o,r)); scale folds into the GEMM
     gemm_canon(rows, o, r, scale, t, Trans::N, &f.b[block], Trans::T, y);
+}
+
+/// One tenant's adapter state as the inference paths consume it: the
+/// legacy dense per-block factors, or the pooled shard representation the
+/// shard-gather GEMMs read directly (no per-tenant dense copy).
+#[derive(Clone, Copy)]
+pub enum AdapterRef<'a> {
+    Dense(&'a BTreeMap<String, Factors>),
+    Pooled(&'a PooledAdapter),
+}
+
+/// A contiguous run of batch rows served by one tenant: `rows` request
+/// rows ([`infer_prefill_runs`]) or decode entries ([`decode_step_runs`])
+/// share this adapter. A batch is a slice of bindings whose `rows` sum to
+/// the batch size — one binding per tenant, rows grouped by tenant, so
+/// every adapter sub-GEMM covers a whole run. Canonical GEMM order makes
+/// each row's result bitwise independent of the grouping.
+#[derive(Clone, Copy)]
+pub struct AdapterBinding<'a> {
+    pub rows: usize,
+    pub mc: &'a MethodCfg,
+    pub adapter: AdapterRef<'a>,
+}
+
+impl<'a> AdapterBinding<'a> {
+    pub fn new(rows: usize, mc: &'a MethodCfg, adapter: AdapterRef<'a>) -> Self {
+        AdapterBinding { rows, mc, adapter }
+    }
+}
+
+/// [`adapted_fwd_into`] for one binding: dispatches on the representation.
+/// The pooled arm gathers shard slices straight into the canonical GEMM
+/// ([`gemm_gather_canon`]) — bitwise identical to materializing the dense
+/// factors first, because the kernel consuming the floats is the same one
+/// (A-side reads the gathered `(r, in)` through `Trans::T` exactly like
+/// the dense path; B-side reads the *ungathered* `(r, out)` layout through
+/// `Trans::N`, which addresses the very same values the dense path reads
+/// from its transposed `(out, r)` copy through `Trans::T`).
+#[allow(clippy::too_many_arguments)]
+fn adapted_fwd_binding(
+    x: &[f32],
+    w: &[f32],
+    b: &AdapterBinding,
+    ti: usize,
+    kb: usize,
+    rows: usize,
+    y: &mut [f32],
+    t: &mut [f32],
+) {
+    let scale = (b.mc.alpha / b.mc.r as f64) as f32;
+    match b.adapter {
+        AdapterRef::Dense(f) => {
+            adapted_fwd_into(x, w, &f[LAYER_TYPES[ti]], kb, scale, rows, y, t)
+        }
+        AdapterRef::Pooled(p) => {
+            let v = p.view(LAYER_TYPES[ti]);
+            let (r, l) = (b.mc.r, b.mc.l);
+            let (i, o) = (l * v.shard_w_a, l * v.shard_w_b);
+            debug_assert_eq!(y.len(), rows * o);
+            debug_assert_eq!(t.len(), rows * r);
+            y.fill(0.0);
+            gemm_canon(rows, o, i, 1.0, x, Trans::N, w, Trans::T, y);
+            t.fill(0.0);
+            let per = r * l;
+            gemm_gather_canon(
+                rows, r, i, 1.0, x, v.pool_a, v.shard_w_a,
+                &v.idx_a[kb * per..(kb + 1) * per], l,
+                Some(&v.rank_scale[kb * r..(kb + 1) * r]), Trans::T, t,
+            );
+            gemm_gather_canon(
+                rows, o, r, scale, t, v.pool_b, v.shard_w_b,
+                &v.idx_b[kb * per..(kb + 1) * per], l, None, Trans::N, y,
+            );
+        }
+    }
+}
+
+/// One projection over a whole mixed-tenant batch: walk the bindings in
+/// order, applying each run's adapter to its contiguous row range. `unit`
+/// is batch rows per binding row (`seq` for prefill windows, 1 for decode
+/// entries); `x`/`y` are the full `(batch_rows * unit, dim)` buffers.
+#[allow(clippy::too_many_arguments)]
+fn adapted_fwd_bindings(
+    runs: &[AdapterBinding],
+    ti: usize,
+    kb: usize,
+    w: &[f32],
+    unit: usize,
+    i_dim: usize,
+    o_dim: usize,
+    x: &[f32],
+    y: &mut [f32],
+    t_buf: &mut [f32],
+) {
+    let mut r0 = 0usize;
+    for b in runs {
+        let rows = b.rows * unit;
+        adapted_fwd_binding(
+            &x[r0 * i_dim..(r0 + rows) * i_dim],
+            w,
+            b,
+            ti,
+            kb,
+            rows,
+            &mut y[r0 * o_dim..(r0 + rows) * o_dim],
+            &mut t_buf[..rows * b.mc.r],
+        );
+        r0 += rows;
+    }
+    debug_assert_eq!(r0 * i_dim, x.len());
 }
 
 /// Adapted linear backward. Accumulates dx, dA, dB.
@@ -474,10 +584,12 @@ const WGATE: usize = 4;
 const WUP: usize = 5;
 const WDOWN: usize = 6;
 
-/// Hoisted per-call views of the frozen base and factors for the lean
-/// inference paths: one Bank probe per tensor per call. (The old
-/// per-block closure formatted a fresh `"w.{t}"` key string — a heap
-/// allocation — for every (block, projection) lookup.)
+/// Hoisted per-call views of the frozen base for the lean inference
+/// paths: one Bank probe per tensor per call. (The old per-block closure
+/// formatted a fresh `"w.{t}"` key string — a heap allocation — for every
+/// (block, projection) lookup.) Adapter state travels separately as
+/// [`AdapterBinding`]s since PR 6 (one batch can mix tenants and
+/// representations).
 struct InferRefs<'a> {
     embed: &'a [f32],
     norm_attn: &'a [f32],
@@ -485,16 +597,10 @@ struct InferRefs<'a> {
     norm_final: &'a [f32],
     w: [&'a [f32]; 7],
     wsz: [usize; 7],
-    f: [&'a Factors; 7],
-    r_max: usize,
 }
 
 impl<'a> InferRefs<'a> {
-    fn new(
-        cfg: &ModelCfg,
-        base: &'a Bank,
-        factors: &'a BTreeMap<String, Factors>,
-    ) -> InferRefs<'a> {
+    fn new(cfg: &ModelCfg, base: &'a Bank) -> InferRefs<'a> {
         let w = [
             base["w.q"].f32s().unwrap(),
             base["w.k"].f32s().unwrap(),
@@ -505,13 +611,10 @@ impl<'a> InferRefs<'a> {
             base["w.down"].f32s().unwrap(),
         ];
         let mut wsz = [0usize; 7];
-        let mut f: [&Factors; 7] = [&factors["q"]; 7];
         for (ti, &t) in LAYER_TYPES.iter().enumerate() {
             let (o, i) = cfg.dims(t);
             wsz[ti] = o * i;
-            f[ti] = &factors[t];
         }
-        let r_max = f.iter().map(|f| f.r).max().unwrap();
         InferRefs {
             embed: base["embed"].f32s().unwrap(),
             norm_attn: base["norm_attn"].f32s().unwrap(),
@@ -519,8 +622,6 @@ impl<'a> InferRefs<'a> {
             norm_final: base["norm_final"].f32s().unwrap(),
             w,
             wsz,
-            f,
-            r_max,
         }
     }
 
@@ -564,19 +665,40 @@ pub fn infer_prefill(
     cache: &mut KvCache,
     rows: &[usize],
 ) -> Vec<f32> {
+    let runs = [AdapterBinding::new(rows.len(), mc, AdapterRef::Dense(factors))];
+    infer_prefill_runs(cfg, base, &runs, tokens, last, cache, rows)
+}
+
+/// [`infer_prefill`] over a mixed-tenant batch: `runs` holds one
+/// [`AdapterBinding`] per tenant, covering `rows`/`tokens`/`last` in
+/// order (`runs[i].rows` request rows each, summing to `rows.len()`).
+/// Each adapter sub-GEMM spans a whole run; the pooled representation is
+/// consumed in place by the shard-gather GEMMs. Canonical order keeps a
+/// row's logits bitwise independent of which tenants share the batch.
+#[allow(clippy::too_many_arguments)]
+pub fn infer_prefill_runs(
+    cfg: &ModelCfg,
+    base: &Bank,
+    runs: &[AdapterBinding],
+    tokens: &[i32],
+    last: &[usize],
+    cache: &mut KvCache,
+    rows: &[usize],
+) -> Vec<f32> {
     let nr = rows.len();
     debug_assert_eq!(tokens.len(), nr * cfg.seq);
     debug_assert_eq!(last.len(), nr);
+    debug_assert_eq!(runs.iter().map(|b| b.rows).sum::<usize>(), nr);
     if nr == 0 {
         return Vec::new();
     }
     let (t_len, c) = (cfg.seq, cfg.hidden);
     let (heads, hd, ff) = (cfg.heads, cfg.head_dim(), cfg.ff);
     let nrows = nr * t_len;
-    let scale = (mc.alpha / mc.r as f64) as f32;
+    let r_max = runs.iter().map(|b| b.mc.r).max().unwrap();
     let att_scale = (hd as f32).powf(-0.5);
     let stride = t_len * c;
-    let rf = InferRefs::new(cfg, base, factors);
+    let rf = InferRefs::new(cfg, base);
 
     let mut x = scratch_take(nrows * c);
     for (row, &tok) in tokens.iter().enumerate() {
@@ -596,8 +718,8 @@ pub fn infer_prefill(
     let mut g_pre = scratch_take(nrows * ff);
     let mut u_val = scratch_take(nrows * ff);
     let mut f_val = scratch_take(nrows * ff);
-    let mut t_buf = scratch_take(nrows * rf.r_max);
-    let mut t_kv = scratch_take(t_len * rf.r_max);
+    let mut t_buf = scratch_take(nrows * r_max);
+    let mut t_kv = scratch_take(t_len * r_max);
     // pooled head-major attention buffers: (nr * heads, t_len, ·)
     let mut qh = scratch_take(nr * heads * t_len * hd);
     let mut kh = scratch_take(nr * heads * t_len * hd);
@@ -610,27 +732,33 @@ pub fn infer_prefill(
         let nm = &rf.norm_mlp[kb * c..(kb + 1) * c];
 
         rmsnorm_rows_into(&x, na, c, &mut hn);
-        adapted_fwd_into(
-            &hn, rf.w(WQ, kb), rf.f[WQ], kb, scale, nrows, &mut q_buf,
-            &mut t_buf[..nrows * rf.f[WQ].r],
+        adapted_fwd_bindings(
+            runs, WQ, kb, rf.w(WQ, kb), t_len, c, c, &hn, &mut q_buf,
+            &mut t_buf,
         );
         // K/V: projected straight into this block's cache rows, one
         // canonical GEMM triple per request row — row-batch independence
         // makes each bit-identical to the full-batch projection forward
-        // runs, so no staging buffer or copy-out loop is needed
-        for (i, &r) in rows.iter().enumerate() {
-            debug_assert!(r < cache.bsz);
-            let hn_row = &hn[i * stride..(i + 1) * stride];
-            adapted_fwd_into(
-                hn_row, rf.w(WK, kb), rf.f[WK], kb, scale, t_len,
-                &mut cache.k[kb][r * stride..(r + 1) * stride],
-                &mut t_kv[..t_len * rf.f[WK].r],
-            );
-            adapted_fwd_into(
-                hn_row, rf.w(WV, kb), rf.f[WV], kb, scale, t_len,
-                &mut cache.v[kb][r * stride..(r + 1) * stride],
-                &mut t_kv[..t_len * rf.f[WV].r],
-            );
+        // runs, so no staging buffer or copy-out loop is needed. Requests
+        // walk in run order so each row uses its own tenant's adapter.
+        let mut req0 = 0usize;
+        for b in runs {
+            for i in req0..req0 + b.rows {
+                let r = rows[i];
+                debug_assert!(r < cache.bsz);
+                let hn_row = &hn[i * stride..(i + 1) * stride];
+                adapted_fwd_binding(
+                    hn_row, rf.w(WK, kb), b, WK, kb, t_len,
+                    &mut cache.k[kb][r * stride..(r + 1) * stride],
+                    &mut t_kv[..t_len * b.mc.r],
+                );
+                adapted_fwd_binding(
+                    hn_row, rf.w(WV, kb), b, WV, kb, t_len,
+                    &mut cache.v[kb][r * stride..(r + 1) * stride],
+                    &mut t_kv[..t_len * b.mc.r],
+                );
+            }
+            req0 += b.rows;
         }
 
         // batched-head attention: gather Q from the projection and K/V
@@ -683,29 +811,29 @@ pub fn infer_prefill(
             }
         }
 
-        adapted_fwd_into(
-            &ctx, rf.w(WO, kb), rf.f[WO], kb, scale, nrows, &mut proj,
-            &mut t_buf[..nrows * rf.f[WO].r],
+        adapted_fwd_bindings(
+            runs, WO, kb, rf.w(WO, kb), t_len, c, c, &ctx, &mut proj,
+            &mut t_buf,
         );
         for (xv, av) in x.iter_mut().zip(&proj) {
             *xv += av;
         }
 
         rmsnorm_rows_into(&x, nm, c, &mut hn);
-        adapted_fwd_into(
-            &hn, rf.w(WGATE, kb), rf.f[WGATE], kb, scale, nrows, &mut g_pre,
-            &mut t_buf[..nrows * rf.f[WGATE].r],
+        adapted_fwd_bindings(
+            runs, WGATE, kb, rf.w(WGATE, kb), t_len, c, ff, &hn, &mut g_pre,
+            &mut t_buf,
         );
-        adapted_fwd_into(
-            &hn, rf.w(WUP, kb), rf.f[WUP], kb, scale, nrows, &mut u_val,
-            &mut t_buf[..nrows * rf.f[WUP].r],
+        adapted_fwd_bindings(
+            runs, WUP, kb, rf.w(WUP, kb), t_len, c, ff, &hn, &mut u_val,
+            &mut t_buf,
         );
         for idx in 0..nrows * ff {
             f_val[idx] = silu(g_pre[idx]) * u_val[idx];
         }
-        adapted_fwd_into(
-            &f_val, rf.w(WDOWN, kb), rf.f[WDOWN], kb, scale, nrows, &mut proj,
-            &mut t_buf[..nrows * rf.f[WDOWN].r],
+        adapted_fwd_bindings(
+            runs, WDOWN, kb, rf.w(WDOWN, kb), t_len, ff, c, &f_val, &mut proj,
+            &mut t_buf,
         );
         for (xv, dv) in x.iter_mut().zip(&proj) {
             *xv += dv;
@@ -784,15 +912,33 @@ pub fn decode_step(
     cache: &mut KvCache,
     entries: &[(usize, usize, i32)],
 ) -> Vec<f32> {
+    let runs = [AdapterBinding::new(entries.len(), mc, AdapterRef::Dense(factors))];
+    decode_step_runs(cfg, base, &runs, cache, entries)
+}
+
+/// [`decode_step`] over a mixed-tenant batch: `runs` holds one
+/// [`AdapterBinding`] per tenant covering `entries` in order
+/// (`runs[i].rows` decode entries each, summing to `entries.len()`).
+/// Adapter sub-GEMMs span whole runs; pooled tenants decode straight off
+/// their shard pools. Canonical order keeps each entry's logits bitwise
+/// independent of which tenants share the step.
+pub fn decode_step_runs(
+    cfg: &ModelCfg,
+    base: &Bank,
+    runs: &[AdapterBinding],
+    cache: &mut KvCache,
+    entries: &[(usize, usize, i32)],
+) -> Vec<f32> {
     let m = entries.len();
+    debug_assert_eq!(runs.iter().map(|b| b.rows).sum::<usize>(), m);
     if m == 0 {
         return Vec::new();
     }
     let (t_len, c) = (cfg.seq, cfg.hidden);
     let (heads, hd, ff) = (cfg.heads, cfg.head_dim(), cfg.ff);
-    let scale = (mc.alpha / mc.r as f64) as f32;
+    let r_max = runs.iter().map(|b| b.mc.r).max().unwrap();
     let att_scale = (hd as f32).powf(-0.5);
-    let rf = InferRefs::new(cfg, base, factors);
+    let rf = InferRefs::new(cfg, base);
     // shared padded attention span for the pooled batch
     let t_pad = entries.iter().map(|&(_, pos, _)| pos + 1).max().unwrap();
 
@@ -816,7 +962,7 @@ pub fn decode_step(
     let mut g_pre = scratch_take(m * ff);
     let mut u_val = scratch_take(m * ff);
     let mut f_val = scratch_take(m * ff);
-    let mut t_buf = scratch_take(m * rf.r_max);
+    let mut t_buf = scratch_take(m * r_max);
     // pooled head-major K/V over the padded span; positions past a
     // sub-problem's own span stay zero from the arena's zero-fill
     let mut kh = scratch_take(m * heads * t_pad * hd);
@@ -828,17 +974,14 @@ pub fn decode_step(
         let nm = &rf.norm_mlp[kb * c..(kb + 1) * c];
 
         rmsnorm_rows_into(&x, na, c, &mut hn);
-        adapted_fwd_into(
-            &hn, rf.w(WQ, kb), rf.f[WQ], kb, scale, m, &mut q_buf,
-            &mut t_buf[..m * rf.f[WQ].r],
+        adapted_fwd_bindings(
+            runs, WQ, kb, rf.w(WQ, kb), 1, c, c, &hn, &mut q_buf, &mut t_buf,
         );
-        adapted_fwd_into(
-            &hn, rf.w(WK, kb), rf.f[WK], kb, scale, m, &mut k_new,
-            &mut t_buf[..m * rf.f[WK].r],
+        adapted_fwd_bindings(
+            runs, WK, kb, rf.w(WK, kb), 1, c, c, &hn, &mut k_new, &mut t_buf,
         );
-        adapted_fwd_into(
-            &hn, rf.w(WV, kb), rf.f[WV], kb, scale, m, &mut v_new,
-            &mut t_buf[..m * rf.f[WV].r],
+        adapted_fwd_bindings(
+            runs, WV, kb, rf.w(WV, kb), 1, c, c, &hn, &mut v_new, &mut t_buf,
         );
         for (i, &(row, pos, _)) in entries.iter().enumerate() {
             let dst = (row * t_len + pos) * c;
@@ -889,29 +1032,28 @@ pub fn decode_step(
             &mut ctx,
         );
 
-        adapted_fwd_into(
-            &ctx, rf.w(WO, kb), rf.f[WO], kb, scale, m, &mut proj,
-            &mut t_buf[..m * rf.f[WO].r],
+        adapted_fwd_bindings(
+            runs, WO, kb, rf.w(WO, kb), 1, c, c, &ctx, &mut proj, &mut t_buf,
         );
         for (xv, av) in x.iter_mut().zip(&proj) {
             *xv += av;
         }
 
         rmsnorm_rows_into(&x, nm, c, &mut hn);
-        adapted_fwd_into(
-            &hn, rf.w(WGATE, kb), rf.f[WGATE], kb, scale, m, &mut g_pre,
-            &mut t_buf[..m * rf.f[WGATE].r],
+        adapted_fwd_bindings(
+            runs, WGATE, kb, rf.w(WGATE, kb), 1, c, ff, &hn, &mut g_pre,
+            &mut t_buf,
         );
-        adapted_fwd_into(
-            &hn, rf.w(WUP, kb), rf.f[WUP], kb, scale, m, &mut u_val,
-            &mut t_buf[..m * rf.f[WUP].r],
+        adapted_fwd_bindings(
+            runs, WUP, kb, rf.w(WUP, kb), 1, c, ff, &hn, &mut u_val,
+            &mut t_buf,
         );
         for idx in 0..m * ff {
             f_val[idx] = silu(g_pre[idx]) * u_val[idx];
         }
-        adapted_fwd_into(
-            &f_val, rf.w(WDOWN, kb), rf.f[WDOWN], kb, scale, m, &mut proj,
-            &mut t_buf[..m * rf.f[WDOWN].r],
+        adapted_fwd_bindings(
+            runs, WDOWN, kb, rf.w(WDOWN, kb), 1, ff, c, &f_val, &mut proj,
+            &mut t_buf,
         );
         for (xv, dv) in x.iter_mut().zip(&proj) {
             *xv += dv;
@@ -1279,6 +1421,42 @@ mod tests {
         (base, f)
     }
 
+    /// Like [`setup`] but MoS-only, also returning the zero-copy pooled
+    /// representation built from the *same* params/aux the dense factors
+    /// were materialized from — so dense and pooled describe one adapter.
+    fn setup_pooled(
+        cfg: &ModelCfg,
+        mc: &MethodCfg,
+        seed: u64,
+    ) -> (Bank, BTreeMap<String, Factors>, PooledAdapter) {
+        let base = init_base(cfg, seed);
+        let mut rng = Rng::new(seed + 9, 0);
+        let mut params = adapter::init_params(cfg, mc, seed);
+        let keys: Vec<String> = params.keys().cloned().collect();
+        for kname in keys {
+            let t = params[&kname].clone();
+            params.insert(
+                kname,
+                Tensor::from_f32(t.shape(), rng.normal_vec(t.len(), 0.05)),
+            );
+        }
+        let aux = adapter::mos::router::build_router(cfg, mc, seed).into_bank();
+        let mut f = BTreeMap::new();
+        for t in LAYER_TYPES {
+            f.insert(
+                t.to_string(),
+                adapter::materialize(cfg, mc, &params, &aux, t),
+            );
+        }
+        let pooled = PooledAdapter::new(
+            mc.clone(),
+            std::sync::Arc::new(params),
+            std::sync::Arc::new(aux),
+        )
+        .unwrap();
+        (base, f, pooled)
+    }
+
     #[test]
     fn sinusoid_matches_python_formula() {
         let enc = sinusoid(3, 4);
@@ -1600,6 +1778,216 @@ mod tests {
         assert_eq!(
             allocs, 0,
             "steady-state prefill/decode hit the heap {allocs} times"
+        );
+    }
+
+    #[test]
+    fn pooled_path_bitwise_matches_dense_oracle_across_ablations() {
+        // acceptance criterion: serving straight off the shard pool must be
+        // bit-identical to the materialized dense oracle — prefill logits,
+        // the K/V written into the cache, and the following decode step —
+        // across the MoS ablation space (paper default with a private rank
+        // slot, l=1 whole-matrix shards, deeper private segment, pair
+        // dissociation off).
+        let mut cfg = presets::tiny();
+        cfg.batch = 2;
+        let mut no_pd = MethodCfg::mos(8, 2, 2, 0);
+        no_pd.pair_dissociation = false;
+        let variants = [
+            MethodCfg::mos(8, 2, 2, 1),
+            MethodCfg::mos(8, 1, 2, 0),
+            MethodCfg::mos(8, 2, 2, 3),
+            no_pd,
+        ];
+        let (t_len, c, vocab) = (cfg.seq, cfg.hidden, cfg.vocab);
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 9, 4, 2], vec![1, 5, 6]];
+        let mut window = vec![0i32; 2 * t_len];
+        for (r, p) in prompts.iter().enumerate() {
+            window[r * t_len..r * t_len + p.len()].copy_from_slice(p);
+        }
+        let last: Vec<usize> = prompts.iter().map(|p| p.len() - 1).collect();
+        for (vi, mc) in variants.iter().enumerate() {
+            mc.validate(&cfg).unwrap();
+            let (base, f, pooled) = setup_pooled(&cfg, mc, 21 + vi as u64);
+            let runs =
+                [AdapterBinding::new(2, mc, AdapterRef::Pooled(&pooled))];
+
+            let mut cd = KvCache::new(&cfg, 2);
+            let dense = infer_prefill(
+                &cfg, mc, &base, &f, &window, &last, &mut cd, &[0, 1],
+            );
+            let mut cp = KvCache::new(&cfg, 2);
+            let pool = infer_prefill_runs(
+                &cfg, &base, &runs, &window, &last, &mut cp, &[0, 1],
+            );
+            let db: Vec<u32> = dense.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = pool.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pb, db, "variant {vi}: prefill logits diverge");
+            let stride = t_len * c;
+            for kb in 0..cfg.blocks {
+                let dk: Vec<u32> = cd.k[kb][..2 * stride]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                let pk: Vec<u32> = cp.k[kb][..2 * stride]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(pk, dk, "variant {vi} block {kb}: K diverges");
+                let dv: Vec<u32> = cd.v[kb][..2 * stride]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                let pv: Vec<u32> = cp.v[kb][..2 * stride]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(pv, dv, "variant {vi} block {kb}: V diverges");
+            }
+
+            let entries = [(0usize, 4usize, 9i32), (1usize, 3usize, 5i32)];
+            let d_dec = decode_step(&cfg, mc, &base, &f, &mut cd, &entries);
+            let p_dec = decode_step_runs(&cfg, &base, &runs, &mut cp, &entries);
+            let db: Vec<u32> = d_dec.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = p_dec.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pb, db, "variant {vi}: decode logits diverge");
+            assert_eq!(d_dec.len(), 2 * vocab);
+        }
+    }
+
+    #[test]
+    fn mixed_tenant_batch_rows_bitwise_independent() {
+        // pooled serving contract: a row's logits depend only on its own
+        // tenant's adapter, bit-for-bit — never on which other tenants
+        // share the batch (prefill and decode, even with different ranks
+        // per tenant in one step)
+        let mut cfg = presets::tiny();
+        cfg.batch = 3;
+        let mc_a = MethodCfg::mos(8, 2, 2, 1);
+        let mc_b = MethodCfg::mos(4, 2, 2, 0);
+        let (base, _fa, pa) = setup_pooled(&cfg, &mc_a, 31);
+        // tenant B serves from the same base with its own adapter
+        let (_unused, _fb, pb) = setup_pooled(&cfg, &mc_b, 77);
+        let (t_len, vocab) = (cfg.seq, cfg.vocab);
+        let prompts: Vec<Vec<i32>> =
+            vec![vec![1, 9, 4, 2], vec![1, 5, 6], vec![1, 7, 3, 2, 8]];
+        let mut window = vec![0i32; 3 * t_len];
+        for (r, p) in prompts.iter().enumerate() {
+            window[r * t_len..r * t_len + p.len()].copy_from_slice(p);
+        }
+        let last: Vec<usize> = prompts.iter().map(|p| p.len() - 1).collect();
+
+        // mixed batch: row 0 is tenant A, rows 1-2 are tenant B
+        let runs = [
+            AdapterBinding::new(1, &mc_a, AdapterRef::Pooled(&pa)),
+            AdapterBinding::new(2, &mc_b, AdapterRef::Pooled(&pb)),
+        ];
+        let mut cache = KvCache::new(&cfg, 3);
+        let mixed = infer_prefill_runs(
+            &cfg, &base, &runs, &window, &last, &mut cache, &[0, 1, 2],
+        );
+
+        // tenant A's row prefilled alone
+        let runs_a = [AdapterBinding::new(1, &mc_a, AdapterRef::Pooled(&pa))];
+        let mut cache_a = KvCache::new(&cfg, 1);
+        let solo_a = infer_prefill_runs(
+            &cfg, &base, &runs_a, &window[..t_len], &last[..1], &mut cache_a,
+            &[0],
+        );
+        let ma: Vec<u32> =
+            mixed[..vocab].iter().map(|v| v.to_bits()).collect();
+        let sa: Vec<u32> = solo_a.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ma, sa, "tenant A prefill depends on co-batched tenant B");
+
+        // tenant B's rows prefilled without tenant A in the batch
+        let runs_b = [AdapterBinding::new(2, &mc_b, AdapterRef::Pooled(&pb))];
+        let mut cache_b = KvCache::new(&cfg, 2);
+        let solo_b = infer_prefill_runs(
+            &cfg, &base, &runs_b, &window[t_len..], &last[1..], &mut cache_b,
+            &[0, 1],
+        );
+        let mb: Vec<u32> =
+            mixed[vocab..].iter().map(|v| v.to_bits()).collect();
+        let sb: Vec<u32> = solo_b.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(mb, sb, "tenant B prefill depends on co-batched tenant A");
+
+        // one mixed decode step vs each tenant stepping alone
+        let entries =
+            [(0usize, 4usize, 9i32), (1usize, 3usize, 5i32), (2usize, 5usize, 2i32)];
+        let mixed_dec =
+            decode_step_runs(&cfg, &base, &runs, &mut cache, &entries);
+        let solo_a_dec = decode_step_runs(
+            &cfg, &base, &runs_a, &mut cache_a, &entries[..1],
+        );
+        let solo_b_dec = decode_step_runs(
+            &cfg, &base, &runs_b, &mut cache_b,
+            &[(0, 3, 5), (1, 5, 2)],
+        );
+        let ma: Vec<u32> =
+            mixed_dec[..vocab].iter().map(|v| v.to_bits()).collect();
+        let sa: Vec<u32> = solo_a_dec.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ma, sa, "tenant A decode depends on co-batched tenant B");
+        let mb: Vec<u32> =
+            mixed_dec[vocab..].iter().map(|v| v.to_bits()).collect();
+        let sb: Vec<u32> = solo_b_dec.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(mb, sb, "tenant B decode depends on co-batched tenant A");
+    }
+
+    #[test]
+    fn steady_state_pooled_prefill_and_decode_allocate_nothing() {
+        // the pooled path must hold the same zero-alloc discipline the
+        // dense path proves above: once the arena is warm, serving straight
+        // off the shard pool never touches the heap
+        let cfg = micro();
+        let mc = MethodCfg::mos(3, 2, 2, 0);
+        let (base, _f, pooled) = setup_pooled(&cfg, &mc, 7);
+        let mut cache = KvCache::new(&cfg, 2);
+        let prompts: [&[i32]; 2] = [&[1, 4, 2], &[1, 5, 6, 2]];
+        let mut window = vec![0i32; 2 * cfg.seq];
+        for (r, p) in prompts.iter().enumerate() {
+            window[r * cfg.seq..r * cfg.seq + p.len()].copy_from_slice(p);
+        }
+        let last = [2usize, 3];
+        let entries = [(0usize, 3usize, 5i32), (1usize, 4usize, 6i32)];
+        let run = |cache: &mut KvCache| {
+            let runs =
+                [AdapterBinding::new(2, &mc, AdapterRef::Pooled(&pooled))];
+            let l1 = infer_prefill_runs(
+                &cfg, &base, &runs, &window, &last, cache, &[0, 1],
+            );
+            scratch_put(l1);
+            let l2 = decode_step_runs(&cfg, &base, &runs, cache, &entries);
+            scratch_put(l2);
+        };
+        let t0 = crate::util::alloc::thread_allocs();
+        let v = vec![0u8; 4096];
+        std::hint::black_box(&v);
+        drop(v);
+        assert!(
+            crate::util::alloc::thread_allocs() > t0,
+            "allocation probe inactive"
+        );
+        let mut warmups = 0;
+        loop {
+            let b = crate::util::alloc::thread_allocs();
+            run(&mut cache);
+            if crate::util::alloc::thread_allocs() == b {
+                break;
+            }
+            warmups += 1;
+            assert!(
+                warmups < 64,
+                "scratch arena never reached a zero-alloc fixed point"
+            );
+        }
+        let before = crate::util::alloc::thread_allocs();
+        for _ in 0..4 {
+            run(&mut cache);
+        }
+        let allocs = crate::util::alloc::thread_allocs() - before;
+        assert_eq!(
+            allocs, 0,
+            "steady-state pooled prefill/decode hit the heap {allocs} times"
         );
     }
 

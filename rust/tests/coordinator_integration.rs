@@ -29,10 +29,10 @@ impl ServeEngine for SlowStepEngine {
     fn forward(
         &mut self,
         tenant: &mos::coordinator::Tenant,
-        factors: &mos::coordinator::cache::TenantFactors,
+        adapter: &mos::adapter::ServingAdapter,
         tokens: &[i32],
     ) -> anyhow::Result<Vec<f32>> {
-        self.inner.forward(tenant, factors, tokens)
+        self.inner.forward(tenant, adapter, tokens)
     }
     fn shape(&self) -> (usize, usize, usize) {
         self.inner.shape()
@@ -43,21 +43,21 @@ impl ServeEngine for SlowStepEngine {
     fn prefill_rows(
         &mut self,
         tenant: &mos::coordinator::Tenant,
-        factors: &mos::coordinator::cache::TenantFactors,
+        adapter: &mos::adapter::ServingAdapter,
         rows: &[usize],
         tokens: &[i32],
         last: &[usize],
     ) -> anyhow::Result<Vec<f32>> {
-        self.inner.prefill_rows(tenant, factors, rows, tokens, last)
+        self.inner.prefill_rows(tenant, adapter, rows, tokens, last)
     }
     fn decode_rows(
         &mut self,
         tenant: &mos::coordinator::Tenant,
-        factors: &mos::coordinator::cache::TenantFactors,
+        adapter: &mos::adapter::ServingAdapter,
         entries: &[(usize, usize, i32)],
     ) -> anyhow::Result<Vec<f32>> {
         std::thread::sleep(self.step_delay);
-        self.inner.decode_rows(tenant, factors, entries)
+        self.inner.decode_rows(tenant, adapter, entries)
     }
 }
 

@@ -30,6 +30,7 @@ SERVING_CASE = [
     "tenants",
     "decode",
     "prefill",
+    "adapter",
     "max_batch",
     "req_per_s",
     "p50_ms",
@@ -38,10 +39,12 @@ SERVING_CASE = [
     "prefill_p50_ms",
     "tok_per_s",
     "alloc_mb",
+    "adapter_mb",
 ]
 # the sweep must actually contain the arms the ROADMAP row compares
 SERVING_ARMS = [
-    {"decode": "kv_step", "prefill": "lean"},
+    {"decode": "kv_step", "prefill": "lean", "adapter": "pooled"},
+    {"decode": "kv_step", "prefill": "lean", "adapter": "dense"},
     {"decode": "kv_step", "prefill": "full_fwd_prefill"},
     {"decode": "full_fwd"},
 ]

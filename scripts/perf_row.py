@@ -9,8 +9,10 @@ Default mode prints the GEMM row matching the ROADMAP Perf table columns:
 | PR | machine | threads | serving-scale GEMM speedup vs seed scalar (min) | geomean |
 
 --serving prints the serving-trajectory row (prefill ratio is
-full_fwd_prefill p50 / lean p50 — the lean speedup, expect >> 1):
-| PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full |
+full_fwd_prefill p50 / lean p50 — the lean speedup, expect >> 1; the
+adapter column is measured resident adapter MB at the largest tenant
+count, pooled vs dense-materialized — the PR-6 memory claim):
+| PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full | adapter MB pooled vs dense |
 
 CI appends both to the job summary and uploads the raw JSON as an
 artifact; the next PR pastes the rows into ROADMAP.md.
@@ -53,26 +55,31 @@ def serving_row(path: str) -> str:
         # largest tenant count = the most serving-like point of the sweep
         return max(rows, key=lambda c: c.get("tenants", 0)) if rows else None
 
-    lean = pick(decode="kv_step", prefill="lean", max_batch=8)
+    lean = pick(decode="kv_step", prefill="lean", max_batch=8, adapter="pooled")
     full_pre = pick(decode="kv_step", prefill="full_fwd_prefill", max_batch=8)
     full_fwd = pick(decode="full_fwd", max_batch=8)
+    dense_ad = pick(decode="kv_step", prefill="lean", max_batch=8, adapter="dense")
 
     def ratio(a, b, key):
         if not a or not b or not b.get(key):
             return float("nan")
         return a[key] / b[key]
 
+    def val(c, key):
+        return float(c.get(key, float("nan"))) if c else float("nan")
+
     return (
-        "| {} | {} | {:.2f}x | {:.2f}x | {:.1f} | {:.0f} vs {:.0f} |".format(
-            pr_arg("5 (lean prefill)"),
+        "| {} | {} | {:.2f}x | {:.2f}x | {:.1f} | {:.0f} vs {:.0f} "
+        "| {:.2f} vs {:.2f} |".format(
+            pr_arg("6 (pooled serving)"),
             machine(),
             ratio(lean, full_fwd, "tok_per_s"),
             ratio(full_pre, lean, "prefill_p50_ms"),
-            float(lean.get("ttft_p50_ms", float("nan"))) if lean else float("nan"),
-            float(lean.get("alloc_mb", float("nan"))) if lean else float("nan"),
-            float(full_pre.get("alloc_mb", float("nan")))
-            if full_pre
-            else float("nan"),
+            val(lean, "ttft_p50_ms"),
+            val(lean, "alloc_mb"),
+            val(full_pre, "alloc_mb"),
+            val(lean, "adapter_mb"),
+            val(dense_ad, "adapter_mb"),
         )
     )
 

@@ -7,9 +7,13 @@
 //! O(step) instead of O(window · forward)), the PR-5 lean prefill
 //! (inference-only forward: no backward cache, last-position-only logits,
 //! arena-only hot path — `prefill_p50_ms` and the `alloc_mb`
-//! counting-probe field track both), and the PR-6 pooled serving path
+//! counting-probe field track both), the PR-6 pooled serving path
 //! (shard-gather GEMM straight off the registry's pools — `adapter_mb`
-//! reports measured resident adapter bytes, pooled vs dense).
+//! reports measured resident adapter bytes, pooled vs dense), and the
+//! PR-7 paged KV pool (`kv` paged-vs-fixed arms: `kv_mb` reports peak
+//! resident KV bytes, measured for the pool and analytic for the fixed
+//! window; the `prefix=warm` arm repeats a shared system prefix so
+//! copy-on-write page reuse shows up in `prefill_p50_ms`).
 //!
 //! Run: cargo bench --bench bench_serving
 //! Knobs: MOS_SERVE_REQS (default 48), MOS_SERVE_TENANTS (default "1,4,16"),
@@ -18,8 +22,8 @@
 use mos::bench::Table;
 use mos::config::presets;
 use mos::coordinator::{
-    FullWindowEngine, GenOptions, HostEngine, Registry, Server, ServerCfg,
-    TenantSpec,
+    FullWindowEngine, GenOptions, HostEngine, KvStats, Registry, Server,
+    ServerCfg, TenantSpec,
 };
 use mos::util::alloc;
 use mos::util::json::Json;
@@ -34,12 +38,20 @@ use std::time::{Duration, Instant};
 #[global_allocator]
 static ALLOC_PROBE: alloc::CountingAlloc = alloc::CountingAlloc;
 
-/// How a scenario builds its engine.
+/// How a scenario builds its engine and shapes its prompts.
 #[derive(Clone, Copy, PartialEq)]
 enum Mode {
-    /// KV stepping + lean inference-only prefill (the serving default).
+    /// Paged KV pool + lean prefill, distinct prompts (the default).
     KvLean,
-    /// KV stepping + legacy full-forward prefill (comparison arm).
+    /// Paged KV pool, every request repeats a shared system prefix —
+    /// copy-on-write page reuse makes repeat prefills warm.
+    KvWarm,
+    /// The warm arm's cold control: identical shared-prefix prompts but
+    /// sharing disabled, so every prefill recomputes the prefix.
+    KvCold,
+    /// PR-4/5 fixed-window KV cache (paged-vs-fixed comparison arm).
+    KvFixed,
+    /// Fixed window + legacy full-forward prefill (comparison arm).
     KvFullPrefill,
     /// Full-window forward per generated token (fixed-graph engines).
     FullFwd,
@@ -48,16 +60,42 @@ enum Mode {
 impl Mode {
     fn decode(self) -> &'static str {
         match self {
-            Mode::KvLean | Mode::KvFullPrefill => "kv_step",
             Mode::FullFwd => "full_fwd",
+            _ => "kv_step",
         }
     }
 
     fn prefill(self) -> &'static str {
         match self {
-            Mode::KvLean => "lean",
             Mode::KvFullPrefill => "full_fwd_prefill",
             Mode::FullFwd => "n/a",
+            _ => "lean",
+        }
+    }
+
+    fn kv(self) -> &'static str {
+        match self {
+            Mode::KvLean | Mode::KvWarm | Mode::KvCold => "paged",
+            Mode::KvFixed | Mode::KvFullPrefill => "fixed",
+            Mode::FullFwd => "n/a",
+        }
+    }
+
+    fn prefix(self) -> &'static str {
+        match self {
+            Mode::KvWarm => "warm",
+            Mode::FullFwd => "n/a",
+            _ => "cold",
+        }
+    }
+
+    /// Whether requests repeat the shared system prefix ("shared") or use
+    /// short distinct prompts ("uniq") — the warm/cold prefill ratio only
+    /// compares like-for-like prompt shapes.
+    fn prompts(self) -> &'static str {
+        match self {
+            Mode::KvWarm | Mode::KvCold => "shared",
+            _ => "uniq",
         }
     }
 }
@@ -72,6 +110,10 @@ struct ScenarioResult {
     alloc_mb: f64,
     /// Measured resident adapter bytes across all cached tenants (MB).
     adapter_mb: f64,
+    /// Peak resident KV bytes (MB): measured from the pool's stats probe
+    /// for the paged arms, analytic `bsz·seq·hidden·2·blocks·4` for the
+    /// fixed window, 0 for full-forward decoding (no KV state).
+    kv_mb: f64,
 }
 
 fn run_scenario(
@@ -106,10 +148,19 @@ fn run_scenario(
             .unwrap();
     }
     let cfg2 = cfg.clone();
+    let probe = Arc::new(KvStats::default());
+    let probe2 = Arc::clone(&probe);
     match mode {
-        Mode::KvLean => {
-            server.start(1, move |_| HostEngine::new(cfg2.clone(), 0))
-        }
+        Mode::KvLean | Mode::KvWarm => server.start(1, move |_| {
+            HostEngine::new(cfg2.clone(), 0).kv_stats(Arc::clone(&probe2))
+        }),
+        Mode::KvCold => server.start(1, move |_| {
+            HostEngine::new(cfg2.clone(), 0)
+                .no_prefix_share()
+                .kv_stats(Arc::clone(&probe2))
+        }),
+        Mode::KvFixed => server
+            .start(1, move |_| HostEngine::new(cfg2.clone(), 0).fixed_kv()),
         Mode::KvFullPrefill => server.start(1, move |_| {
             HostEngine::new(cfg2.clone(), 0).full_prefill()
         }),
@@ -121,10 +172,18 @@ fn run_scenario(
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_requests)
         .map(|i| {
+            // warm arm: a shared system prefix spanning whole KV pages —
+            // every repeat prefill within a tenant maps it copy-on-write
+            let prompt = match mode {
+                Mode::KvWarm | Mode::KvCold => {
+                    format!("sys:{:024} q:{:02}", 7, i % 24)
+                }
+                _ => format!("q:{:02}", i % 24),
+            };
             server
                 .submit(
                     &format!("t{}", i % n_tenants),
-                    &format!("q:{:02}", i % 24),
+                    &prompt,
                     GenOptions::greedy(),
                 )
                 .expect("submit")
@@ -140,6 +199,18 @@ fn run_scenario(
     // measured, not analytic: what the adapter cache actually holds after
     // serving the whole workload (every tenant warm)
     let adapter_mb = server.cache.resident_bytes() as f64 / 1e6;
+    let kv_mb = match mode {
+        Mode::KvLean | Mode::KvWarm | Mode::KvCold => {
+            probe.peak_resident_bytes() as f64 / 1e6
+        }
+        Mode::KvFixed | Mode::KvFullPrefill => {
+            // the fixed window pre-reserves bsz·seq·hidden K+V floats per
+            // block whatever the occupancy — the bytes the pool replaces
+            (cfg.batch * cfg.seq * cfg.hidden * 2 * cfg.blocks * 4) as f64
+                / 1e6
+        }
+        Mode::FullFwd => 0.0,
+    };
     let res = ScenarioResult {
         rps: n_requests as f64 / dt,
         p50: server.metrics.percentile_us(50.0) / 1e3,
@@ -150,6 +221,7 @@ fn run_scenario(
         prefill_ms: server.metrics.prefill_percentile_us(50.0) / 1e3,
         alloc_mb,
         adapter_mb,
+        kv_mb,
     };
     server.shutdown();
     res
@@ -169,18 +241,23 @@ fn main() {
     let mut table = Table::new(
         "Coordinator serving (tiny preset, host engine, 1 worker)",
         &[
-            "tenants", "decode", "prefill", "adapter", "batching", "req/s",
-            "p50 ms", "p95 ms", "ttft p50 ms", "prefill p50 ms", "tok/s",
-            "alloc MB", "adapter MB",
+            "tenants", "decode", "prefill", "kv", "prefix", "prompts",
+            "adapter", "batching", "req/s", "p50 ms", "p95 ms",
+            "ttft p50 ms", "prefill p50 ms", "tok/s", "alloc MB",
+            "adapter MB", "kv MB",
         ],
     );
     let mut json_cases = Vec::new();
     for &nt in &tenant_counts {
-        // (mode, max_batch, serve_dense): the pooled tier is the default;
-        // one dense-materialized comparison arm per tenant count pins the
-        // memory gap (adapter_mb) and the switching cost side by side
+        // (mode, max_batch, serve_dense): the pooled adapter tier and the
+        // paged KV pool are the defaults; the dense / fixed-window / warm
+        // arms pin the adapter memory gap, the KV memory gap, and the
+        // shared-prefix prefill win side by side
         let cases = [
             (Mode::KvLean, 8usize, false),
+            (Mode::KvWarm, 8, false),
+            (Mode::KvCold, 8, false),
+            (Mode::KvFixed, 8, false),
             (Mode::KvLean, 8, true),
             (Mode::KvLean, 1, false),
             (Mode::KvFullPrefill, 8, false),
@@ -195,6 +272,9 @@ fn main() {
                 nt.to_string(),
                 mode.decode().into(),
                 mode.prefill().into(),
+                mode.kv().into(),
+                mode.prefix().into(),
+                mode.prompts().into(),
                 adapter.into(),
                 label.into(),
                 format!("{:.2}", r.rps),
@@ -205,23 +285,31 @@ fn main() {
                 format!("{:.0}", r.toks),
                 format!("{:.1}", r.alloc_mb),
                 format!("{:.3}", r.adapter_mb),
+                format!("{:.3}", r.kv_mb),
             ]);
             eprintln!(
-                "[serving] tenants={nt} {} prefill={} adapter={adapter} \
-                 {label}: {:.2} req/s ttft_p50={:.1}ms prefill_p50={:.2}ms \
-                 alloc={:.1}MB adapter={:.3}MB",
+                "[serving] tenants={nt} {} prefill={} kv={} prefix={} \
+                 adapter={adapter} {label}: {:.2} req/s ttft_p50={:.1}ms \
+                 prefill_p50={:.2}ms alloc={:.1}MB adapter={:.3}MB \
+                 kv={:.3}MB",
                 mode.decode(),
                 mode.prefill(),
+                mode.kv(),
+                mode.prefix(),
                 r.rps,
                 r.ttft,
                 r.prefill_ms,
                 r.alloc_mb,
                 r.adapter_mb,
+                r.kv_mb,
             );
             json_cases.push(Json::obj(vec![
                 ("tenants", Json::num(nt as f64)),
                 ("decode", Json::str(mode.decode())),
                 ("prefill", Json::str(mode.prefill())),
+                ("kv", Json::str(mode.kv())),
+                ("prefix", Json::str(mode.prefix())),
+                ("prompts", Json::str(mode.prompts())),
                 ("adapter", Json::str(adapter)),
                 ("max_batch", Json::num(mb as f64)),
                 ("req_per_s", Json::num(r.rps)),
@@ -232,6 +320,7 @@ fn main() {
                 ("tok_per_s", Json::num(r.toks)),
                 ("alloc_mb", Json::num(r.alloc_mb)),
                 ("adapter_mb", Json::num(r.adapter_mb)),
+                ("kv_mb", Json::num(r.kv_mb)),
             ]));
         }
     }
@@ -243,10 +332,13 @@ fn main() {
          (kv_step) beats re-running full-window forwards per token \
          (full_fwd) on tok/s and time-to-first-token, the lean \
          inference-only prefill beats the legacy full-forward prefill on \
-         prefill_p50_ms and allocation churn (alloc_mb), and the pooled \
+         prefill_p50_ms and allocation churn (alloc_mb), the pooled \
          adapter tier keeps measured resident adapter bytes (adapter_mb) \
          several-fold below the dense-materialized tier at matched \
-         throughput."
+         throughput, the paged KV pool keeps peak resident KV bytes \
+         (kv_mb) well below the fixed window's slots×window slab at \
+         identical logits, and warm shared-prefix prefills beat cold \
+         ones on prefill_p50_ms by skipping already-resident positions."
     );
 
     let json = Json::obj(vec![

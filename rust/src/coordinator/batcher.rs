@@ -9,6 +9,14 @@
 //! buffering forever. `pop_batch` rotates tenants round-robin so one hot
 //! tenant cannot starve the ready queue, and drops cancelled or
 //! deadline-expired requests before they ever reach an engine.
+//!
+//! Since the model layer serves mixed-tenant batches through per-run
+//! [`AdapterBinding`](crate::model::transformer::AdapterBinding)s (PR 6),
+//! per-tenant batching is a fallback, not a requirement: workers whose
+//! engine supports the stepping path pop with `mix = true`, and a batch
+//! released by one tenant is topped up with other tenants' queued
+//! requests up to capacity. Canonical-order GEMMs make the mixed batch
+//! decode bitwise-identically to per-tenant batches.
 
 use super::metrics::Metrics;
 use crate::eval::GenOptions;
@@ -265,6 +273,33 @@ impl Batcher {
         out
     }
 
+    /// [`Self::try_fill`] without the tenant restriction: pop up to `max`
+    /// queued requests across *all* tenants in rotation order, for a
+    /// worker refilling a mixed decode batch. No fairness decline is
+    /// needed — a mixed batch can absorb any tenant's requests, so
+    /// nothing releasable is being starved.
+    pub fn try_fill_any(&self, max: usize) -> Vec<Request> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut guard = self.q.lock().unwrap();
+        purge(&mut guard, &self.metrics);
+        let q = &mut *guard;
+        let mut out = Vec::new();
+        while out.len() < max {
+            let Some(t) = q.ready.front().cloned() else { break };
+            let reqs = q.by_tenant.get_mut(&t).unwrap();
+            let take = reqs.len().min(max - out.len());
+            out.extend(reqs.drain(..take));
+            q.total -= take;
+            if reqs.is_empty() {
+                q.by_tenant.remove(&t);
+                q.ready.pop_front();
+            }
+        }
+        out
+    }
+
     /// Wake `pop_batch` sleepers so they re-run their purge pass. Called
     /// by `ResponseHandle::cancel`: without it, a cancellation on an
     /// otherwise idle queue sat unresolved until the `max_wait` timeout.
@@ -272,11 +307,19 @@ impl Batcher {
         self.cv.notify_all();
     }
 
-    /// Pop the next per-tenant batch. Blocks until a batch is ready (full,
-    /// or oldest request aged past `max_wait`), or returns None when closed
-    /// and drained. The served tenant rotates to the back of the ready
-    /// order, so concurrently-releasable tenants are served round-robin.
-    pub fn pop_batch(&self) -> Option<(String, Vec<Request>)> {
+    /// Pop the next batch. Blocks until a batch is ready (some tenant's
+    /// queue is full, or its oldest request aged past `max_wait`), or
+    /// returns None when closed and drained. The served tenant rotates to
+    /// the back of the ready order, so concurrently-releasable tenants
+    /// are served round-robin.
+    ///
+    /// With `mix = false` the batch is single-tenant (the full-window
+    /// fallback engines require one adapter per forward). With
+    /// `mix = true`, remaining capacity is topped up with *other*
+    /// tenants' queued requests in rotation order — the stepping engines
+    /// serve mixed rows through per-run adapter bindings, so waiting for
+    /// a same-tenant fill would just waste slots.
+    pub fn pop_batch(&self, mix: bool) -> Option<Vec<Request>> {
         let mut guard = self.q.lock().unwrap();
         loop {
             purge(&mut guard, &self.metrics);
@@ -299,14 +342,29 @@ impl Batcher {
                 let t = q.ready.remove(i).unwrap();
                 let reqs = q.by_tenant.get_mut(&t).unwrap();
                 let take = reqs.len().min(self.max_batch);
-                let batch: Vec<Request> = reqs.drain(..take).collect();
+                let mut batch: Vec<Request> = reqs.drain(..take).collect();
                 q.total -= take;
                 if reqs.is_empty() {
                     q.by_tenant.remove(&t);
                 } else {
                     q.ready.push_back(t.clone());
                 }
-                return Some((t, batch));
+                if mix {
+                    // top up with other tenants' requests, front of the
+                    // rotation first; emptied tenants leave the rotation
+                    while batch.len() < self.max_batch {
+                        let Some(t) = q.ready.front().cloned() else { break };
+                        let reqs = q.by_tenant.get_mut(&t).unwrap();
+                        let take = reqs.len().min(self.max_batch - batch.len());
+                        batch.extend(reqs.drain(..take));
+                        q.total -= take;
+                        if reqs.is_empty() {
+                            q.by_tenant.remove(&t);
+                            q.ready.pop_front();
+                        }
+                    }
+                }
+                return Some(batch);
             }
             if q.closed && q.total == 0 {
                 return None;
@@ -372,9 +430,9 @@ mod tests {
         let (r2, _rx2) = req("a", "p2");
         b.push(r1).unwrap();
         b.push(r2).unwrap();
-        let (tenant, batch) = b.pop_batch().unwrap();
-        assert_eq!(tenant, "a");
+        let batch = b.pop_batch(false).unwrap();
         assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|r| r.tenant == "a"));
         assert_eq!(b.depth(), 0);
     }
 
@@ -384,13 +442,13 @@ mod tests {
         let (r1, _rx) = req("a", "p1");
         b.push(r1).unwrap();
         let t0 = Instant::now();
-        let (_, batch) = b.pop_batch().unwrap();
+        let batch = b.pop_batch(false).unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(15));
     }
 
     #[test]
-    fn tenants_batched_separately() {
+    fn tenants_batched_separately_without_mixing() {
         let b = batcher(2, Duration::from_millis(10));
         let (r1, _x1) = req("a", "p1");
         let (r2, _x2) = req("b", "p2");
@@ -398,11 +456,12 @@ mod tests {
         b.push(r1).unwrap();
         b.push(r2).unwrap();
         b.push(r3).unwrap();
-        let (t1, batch1) = b.pop_batch().unwrap();
-        let (t2, batch2) = b.pop_batch().unwrap();
+        let batch1 = b.pop_batch(false).unwrap();
+        let batch2 = b.pop_batch(false).unwrap();
+        let (t1, t2) = (batch1[0].tenant.clone(), batch2[0].tenant.clone());
         assert_ne!(t1, t2);
         assert_eq!(batch1.len() + batch2.len(), 3);
-        // no cross-tenant mixing
+        // no cross-tenant mixing on the full-window fallback path
         for r in batch1 {
             assert_eq!(r.tenant, t1);
         }
@@ -412,13 +471,75 @@ mod tests {
     }
 
     #[test]
+    fn pop_batch_mixes_tenants_up_to_capacity() {
+        let b = batcher(4, Duration::from_millis(5));
+        let (r1, _x1) = req("a", "p1");
+        let (r2, _x2) = req("b", "p2");
+        let (r3, _x3) = req("b", "p3");
+        let (r4, _x4) = req("c", "p4");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
+        b.push(r4).unwrap();
+        // one mixed pop drains everything: a's aged batch tops up with
+        // b's and c's queued requests
+        let batch = b.pop_batch(true).unwrap();
+        assert_eq!(batch.len(), 4);
+        let mut tenants: Vec<&str> =
+            batch.iter().map(|r| r.tenant.as_str()).collect();
+        tenants.sort();
+        tenants.dedup();
+        assert_eq!(tenants, vec!["a", "b", "c"]);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn mixed_pop_respects_max_batch() {
+        let b = batcher(2, Duration::from_millis(5));
+        for i in 0..2 {
+            // dropped receivers are fine: responses to them are ignored
+            let (r, _x) = req("a", &format!("a{i}"));
+            b.push(r).unwrap();
+        }
+        let (rb, _xb) = req("b", "b0");
+        b.push(rb).unwrap();
+        // a fills the batch alone; b must wait for the next pop
+        let batch = b.pop_batch(true).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|r| r.tenant == "a"));
+        assert_eq!(b.pop_batch(true).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn try_fill_any_pops_across_tenants() {
+        let b = batcher(8, Duration::from_secs(60));
+        let (r1, _x1) = req("a", "p1");
+        let (r2, _x2) = req("b", "p2");
+        let (r3, _x3) = req("b", "p3");
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
+        let got = b.try_fill_any(2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(b.depth(), 1);
+        assert_eq!(b.try_fill_any(8).len(), 1);
+        assert_eq!(b.depth(), 0);
+        assert!(b.try_fill_any(8).is_empty());
+        // invariants intact: a later push + pop still works
+        let (r4, _x4) = req("a", "p4");
+        b.push(r4).unwrap();
+        b.close();
+        assert_eq!(b.pop_batch(true).unwrap().len(), 1);
+    }
+
+    #[test]
     fn close_drains_then_none() {
         let b = Arc::new(batcher(4, Duration::from_millis(5)));
         let (r1, _x1) = req("a", "p1");
         b.push(r1).unwrap();
         b.close();
-        assert!(b.pop_batch().is_some());
-        assert!(b.pop_batch().is_none());
+        assert!(b.pop_batch(false).is_some());
+        assert!(b.pop_batch(false).is_none());
     }
 
     #[test]
@@ -445,7 +566,7 @@ mod tests {
         }
         b.close();
         let mut total = 0;
-        while let Some((_, batch)) = b.pop_batch() {
+        while let Some(batch) = b.pop_batch(false) {
             total += batch.len();
         }
         assert_eq!(total, 12);
@@ -503,7 +624,7 @@ mod tests {
         b.push(r2).unwrap();
         b.push(r3).unwrap();
         cancel_flag.store(true, Ordering::Relaxed);
-        let (_, batch) = b.pop_batch().unwrap();
+        let batch = b.pop_batch(false).unwrap();
         assert_eq!(batch.len(), 2);
         assert!(batch.iter().all(|r| r.prompt != "p1"));
         assert_eq!(rx1.recv().unwrap(), Err(ServeError::Cancelled));
@@ -519,7 +640,7 @@ mod tests {
         b.push(r1).unwrap();
         b.push(r2).unwrap();
         b.push(r3).unwrap();
-        let (_, batch) = b.pop_batch().unwrap();
+        let batch = b.pop_batch(false).unwrap();
         assert_eq!(batch.len(), 2);
         assert!(batch.iter().all(|r| r.prompt != "p1"));
         assert_eq!(rx1.recv().unwrap(), Err(ServeError::Deadline));
@@ -545,7 +666,7 @@ mod tests {
         let (r4, _x4) = req("a", "p4");
         b.push(r4).unwrap();
         b.close(); // make the partial batch releasable without max_wait
-        assert_eq!(b.pop_batch().unwrap().1.len(), 1);
+        assert_eq!(b.pop_batch(false).unwrap().len(), 1);
     }
 
     #[test]
@@ -561,7 +682,7 @@ mod tests {
         b.push(r3).unwrap();
         assert!(b.try_fill("a", 4).is_empty(), "starved tenant b's batch");
         // once b is drained, a's refill proceeds
-        assert_eq!(b.pop_batch().unwrap().0, "b");
+        assert_eq!(b.pop_batch(false).unwrap()[0].tenant, "b");
         assert_eq!(b.try_fill("a", 4).len(), 1);
     }
 
@@ -630,7 +751,7 @@ mod tests {
         let flag = Arc::clone(&r1.cancelled);
         b.push(r1).unwrap();
         let b2 = Arc::clone(&b);
-        let worker = std::thread::spawn(move || b2.pop_batch());
+        let worker = std::thread::spawn(move || b2.pop_batch(false));
         // let the worker reach its cv sleep (the batch is not releasable
         // for 30s), then cancel + notify
         std::thread::sleep(Duration::from_millis(50));
@@ -664,15 +785,14 @@ mod tests {
         let (rc, _xc) = req("cold", "c0");
         b.push(rc).unwrap();
         // hot is at the front and has a full batch: served first, rotated
-        let (t1, _) = b.pop_batch().unwrap();
-        assert_eq!(t1, "hot");
+        assert_eq!(b.pop_batch(false).unwrap()[0].tenant, "hot");
         // age both past max_wait: now cold (front of rotation) wins even
         // though hot still holds a full batch
         std::thread::sleep(Duration::from_millis(25));
-        let (t2, _) = b.pop_batch().unwrap();
-        assert_eq!(t2, "cold", "cold tenant starved by hot tenant");
-        let (t3, batch3) = b.pop_batch().unwrap();
-        assert_eq!(t3, "hot");
+        let b2 = b.pop_batch(false).unwrap();
+        assert_eq!(b2[0].tenant, "cold", "cold tenant starved by hot tenant");
+        let batch3 = b.pop_batch(false).unwrap();
+        assert_eq!(batch3[0].tenant, "hot");
         assert_eq!(batch3.len(), 2);
     }
 }

@@ -2,6 +2,16 @@
 //! budget and picks LRU eviction victims. This is where the paper's
 //! parameter savings become *capacity*: at a fixed budget, ~8× smaller
 //! adapters mean ~8× more resident tenants (fig_memory_scaling bench).
+//!
+//! Since PR 7 the ledger also carries a **KV side-table**: measured
+//! resident page bytes per tenant, reported by the serving workers from
+//! the paged KV pool ([`crate::model::paged::PagePool`]). KV bytes are
+//! accounted *alongside* adapter bytes, not against the adapter budget —
+//! the page pool is its own fixed-size slab whose capacity is enforced
+//! at request admission (reservation-based, degrading to queueing), so
+//! charging it against the adapter LRU would double-limit it. The
+//! invariant servers assert: `kv_used()` equals the pool's resident
+//! bytes, because per-page owner tags partition the pool exactly.
 
 use std::collections::HashMap;
 
@@ -25,6 +35,8 @@ pub struct MemoryLedger {
     /// access clock for LRU
     clock: u64,
     last_access: HashMap<String, u64>,
+    /// Measured resident KV page bytes per tenant (see module docs).
+    kv: HashMap<String, usize>,
 }
 
 impl MemoryLedger {
@@ -35,6 +47,7 @@ impl MemoryLedger {
             entries: HashMap::new(),
             clock: 0,
             last_access: HashMap::new(),
+            kv: HashMap::new(),
         }
     }
 
@@ -104,6 +117,30 @@ impl MemoryLedger {
             self.last_access.remove(tenant);
         }
     }
+
+    /// Record `tenant`'s measured resident KV page bytes (serving workers
+    /// report this from the paged pool's per-owner byte counts; `0`
+    /// clears the entry). Does not count against the adapter budget —
+    /// see the module docs.
+    pub fn set_kv(&mut self, tenant: &str, bytes: usize) {
+        if bytes == 0 {
+            self.kv.remove(tenant);
+        } else {
+            self.kv.insert(tenant.to_string(), bytes);
+        }
+    }
+
+    /// Total KV page bytes charged across tenants. Equals the page
+    /// pool's resident bytes when every serving tenant has reported
+    /// (owner tags partition the pool).
+    pub fn kv_used(&self) -> usize {
+        self.kv.values().sum()
+    }
+
+    /// KV page bytes charged to one tenant.
+    pub fn kv_for(&self, tenant: &str) -> usize {
+        self.kv.get(tenant).copied().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -166,5 +203,24 @@ mod tests {
         l.release("a");
         assert_eq!(l.used(), 0);
         assert_eq!(l.admit("b", 50), Some(vec![]));
+    }
+
+    #[test]
+    fn kv_side_table_tracks_per_tenant_bytes() {
+        let mut l = MemoryLedger::new(100);
+        l.admit("a", 40);
+        l.set_kv("a", 1024);
+        l.set_kv("b", 512);
+        assert_eq!(l.kv_for("a"), 1024);
+        assert_eq!(l.kv_used(), 1536);
+        // KV charges ride alongside the adapter budget, not inside it
+        assert_eq!(l.used(), 40);
+        assert_eq!(l.classify(60), AdmitResult::Admitted);
+        // zero clears; re-reporting replaces rather than accumulating
+        l.set_kv("a", 2048);
+        assert_eq!(l.kv_used(), 2560);
+        l.set_kv("b", 0);
+        assert_eq!(l.kv_used(), 2048);
+        assert_eq!(l.kv_for("b"), 0);
     }
 }

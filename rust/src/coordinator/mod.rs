@@ -5,21 +5,27 @@
 //!
 //! Pipeline: requests enter through [`Server::submit`] with per-request
 //! [`GenOptions`], pass admission control into the [`batcher`] keyed by
-//! tenant; worker threads pull per-tenant batches round-robin, fetch the
-//! tenant's serving adapter through the version-keyed two-tier [`cache`]
-//! (pooled zero-copy shard views by default; dense materialized factors
-//! behind `MOS_SERVE_DENSE=1` — index-based routing makes even that a
+//! tenant; worker threads pull batches round-robin — stepping engines mix
+//! tenants up to capacity (`pop_batch(mix)`, PR 7), grouping the batch
+//! into per-tenant [`EngineRun`]s — fetch each request's serving adapter
+//! through the version-keyed two-tier [`cache`] (pooled zero-copy shard
+//! views by default; dense materialized factors behind
+//! `MOS_SERVE_DENSE=1` — index-based routing makes even that a
 //! *precompute*, paper Limitations §C), and run a continuously batched,
 //! KV-cached decode loop: one single-position step per generated token,
 //! newly queued requests admitted into freed slots between steps
-//! ([`Batcher::try_fill`]), each token streamed through the request's
+//! ([`Batcher::try_fill_any`]), each token streamed through the request's
 //! [`server::ResponseHandle`] before it resolves with a typed `Result`.
-//! The [`registry`] owns versioned tenant state built from
-//! [`TenantSpec`]s, the [`memory`] ledger enforces an accelerator-memory
-//! budget with LRU eviction charging the bytes each serve mode actually
-//! keeps resident (eviction invalidates the adapter cache through
-//! [`Registry::set_evict_hook`]), and [`metrics`] records
-//! latency/TTFT/throughput/rejections.
+//! KV residency runs on the paged pool
+//! ([`crate::model::paged::PagedKvCache`]): refcounted pages with
+//! copy-on-write prefix sharing, reservation-based admission that
+//! degrades to queueing when the pool is full, and measured per-tenant
+//! bytes synced into the ledger's KV side-table. The [`registry`] owns
+//! versioned tenant state built from [`TenantSpec`]s, the [`memory`]
+//! ledger enforces an accelerator-memory budget with LRU eviction
+//! charging the bytes each serve mode actually keeps resident (eviction
+//! invalidates the adapter cache through [`Registry::set_evict_hook`]),
+//! and [`metrics`] records latency/TTFT/throughput/rejections.
 //!
 //! See DESIGN.md §Serving API for the request lifecycle and the migration
 //! notes from the pre-redesign `submit(&str, &str) -> Receiver` surface.
@@ -39,9 +45,13 @@ pub use memory::MemoryLedger;
 pub use metrics::Metrics;
 pub use registry::{Registry, Tenant, TenantSpec};
 pub use server::{
-    FullWindowEngine, HostEngine, ResponseHandle, ServeEngine, Server,
-    ServerCfg,
+    EngineRun, FullWindowEngine, HostEngine, ResponseHandle, ServeEngine,
+    Server, ServerCfg,
 };
+
+// the serving KV-residency probe lives with the paged cache; re-export it
+// so servers/benches observing pool bytes import from one place
+pub use crate::model::paged::KvStats;
 
 // the per-request options live next to the decoder; re-export them here so
 // serving callers import everything from one place

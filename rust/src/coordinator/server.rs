@@ -26,9 +26,10 @@ use crate::adapter::{Factors, ServingAdapter};
 use crate::data::tokenizer::Tokenizer;
 use crate::eval::{DecodeState, GenOptions};
 use crate::model::math::scratch_put;
+use crate::model::paged::{KvStats, PagedKvCache};
 use crate::model::transformer::{
-    decode_step, decode_step_runs, infer_prefill, infer_prefill_runs,
-    AdapterBinding, AdapterRef, KvCache,
+    decode_step_runs, infer_prefill_runs, paged_infer_runs, AdapterBinding,
+    AdapterRef, KvCache,
 };
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -36,6 +37,18 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
+
+/// A contiguous run of batch elements served by one tenant's adapter:
+/// `rows` request rows (`prefill_rows`) or decode entries (`decode_rows`)
+/// share it. A mixed batch is a slice of runs whose `rows` sum to the
+/// call's element count — the engine maps each run onto a per-run
+/// [`AdapterBinding`], and canonical-order GEMMs keep every row's logits
+/// bitwise independent of how the batch was grouped (PR 6 contract).
+pub struct EngineRun<'a> {
+    pub tenant: &'a Tenant,
+    pub adapter: &'a ServingAdapter,
+    pub rows: usize,
+}
 
 /// A per-worker inference engine.
 ///
@@ -46,6 +59,15 @@ use std::time::{Duration, Instant};
 /// token instead of re-running a full-window forward — O(step) instead of
 /// O(window · forward) per token. Fixed-graph PJRT artifact engines keep
 /// the default full-window path.
+///
+/// Stepping engines may additionally manage per-row KV residency (the
+/// paged pool, PR 7) through the `kv_*` hooks. The worker calls
+/// `kv_admit` before occupying a slot — `false` means the pool cannot
+/// cover the request *right now* and the worker keeps it queued
+/// (degradation to queueing, never a mid-decode failure) — and
+/// `kv_release` whenever a slot frees, including cancellations and
+/// deadline expiries. The defaults are no-ops so fixed-cache engines
+/// need not care.
 pub trait ServeEngine {
     /// Batched forward for one tenant: padded tokens (batch*seq) -> logits
     /// (batch*seq*vocab).
@@ -64,12 +86,13 @@ pub trait ServeEngine {
     /// (Re)build the engine's KV cache rows `rows[i]` from the padded
     /// window `tokens` (`rows.len() * seq`), returning **lean**
     /// next-token logits (`rows.len() * vocab`), one row per request
-    /// projected at its `last[i]` window position (PR 5: the full-window
-    /// `(rows·seq·vocab)` return is gone — see DESIGN.md migration table).
+    /// projected at its `last[i]` window position. `runs` groups the
+    /// rows by tenant (PR 7: the single `tenant`/`adapter` pair became
+    /// a run slice so one batch serves mixed tenants — see DESIGN.md
+    /// migration table).
     fn prefill_rows(
         &mut self,
-        _tenant: &Tenant,
-        _adapter: &ServingAdapter,
+        _runs: &[EngineRun],
         _rows: &[usize],
         _tokens: &[i32],
         _last: &[usize],
@@ -77,23 +100,113 @@ pub trait ServeEngine {
         anyhow::bail!("engine does not support KV-cached stepping")
     }
     /// One decode position per entry `(row, pos, token)` -> next-token
-    /// logits (`entries.len() * vocab`).
+    /// logits (`entries.len() * vocab`). `runs` groups the entries by
+    /// tenant, same contract as [`Self::prefill_rows`].
     fn decode_rows(
         &mut self,
-        _tenant: &Tenant,
-        _adapter: &ServingAdapter,
+        _runs: &[EngineRun],
         _entries: &[(usize, usize, i32)],
     ) -> Result<Vec<f32>> {
         anyhow::bail!("engine does not support KV-cached stepping")
     }
+    /// Reserve KV residency for `prompt` on cache row `row` before the
+    /// worker occupies the slot. `false` = the pool cannot cover the
+    /// request now; the worker parks it and retries as rows free.
+    fn kv_admit(
+        &mut self,
+        _row: usize,
+        _tenant: &Tenant,
+        _prompt: &[i32],
+    ) -> bool {
+        true
+    }
+    /// Release every KV page reference `row` holds (idempotent; called on
+    /// completion, cancellation, deadline expiry, and engine error).
+    fn kv_release(&mut self, _row: usize) {}
+    /// Measured resident KV bytes currently tagged to `tenant` (the
+    /// ledger's per-tenant KV charge).
+    fn kv_tenant_bytes(&self, _tenant: &Tenant) -> usize {
+        0
+    }
+    /// Measured resident KV bytes across the whole pool.
+    fn kv_resident_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Which KV residency scheme backs a [`HostEngine`]'s stepping path.
+enum KvBackend {
+    /// PR-4/5 fixed window: `batch × seq` slots resident regardless of
+    /// occupancy. Kept as the comparison arm and oracle.
+    Fixed(KvCache),
+    /// PR-7 paged pool: refcounted fixed-size pages, per-row page tables,
+    /// copy-on-write prefix sharing. Resident bytes track live tokens.
+    Paged(PagedKvCache),
+}
+
+/// Lazily build the worker's KV backend. A free function over the
+/// engine's disjoint fields so callers can keep `&self.cfg`/`&self.base`
+/// borrowed across the `&mut self.kv` it hands back.
+fn ensure_kv<'a>(
+    kv: &'a mut Option<KvBackend>,
+    cfg: &crate::config::ModelCfg,
+    use_fixed: bool,
+    share_prefix: bool,
+    page_tokens: usize,
+    capacity_pages: Option<usize>,
+    stats: &Option<Arc<KvStats>>,
+) -> &'a mut KvBackend {
+    kv.get_or_insert_with(|| {
+        if use_fixed {
+            KvBackend::Fixed(KvCache::new(cfg, cfg.batch))
+        } else {
+            let cap = capacity_pages.unwrap_or_else(|| {
+                // worst case for the slot table: every row at a full window
+                cfg.batch * PagedKvCache::pages_per_row(cfg, page_tokens)
+            });
+            let mut c = PagedKvCache::new(cfg, cfg.batch, page_tokens, cap);
+            if !share_prefix {
+                c = c.without_sharing();
+            }
+            if let Some(s) = stats {
+                c = c.with_stats(Arc::clone(s));
+            }
+            KvBackend::Paged(c)
+        }
+    })
+}
+
+/// Map engine runs onto per-run adapter bindings. `counts[i]` is run
+/// `i`'s batch-element count for *this* call — request rows for the
+/// fixed prefill, cache entries for the paged paths and decode.
+fn run_bindings<'a>(
+    runs: &[EngineRun<'a>],
+    counts: &[usize],
+) -> Vec<AdapterBinding<'a>> {
+    runs.iter()
+        .zip(counts)
+        .map(|(run, &n)| {
+            let adapter = match run.adapter {
+                ServingAdapter::Dense(f) => AdapterRef::Dense(f.as_ref()),
+                ServingAdapter::Pooled(p) => AdapterRef::Pooled(p.as_ref()),
+            };
+            AdapterBinding::new(n, &run.tenant.mc, adapter)
+        })
+        .collect()
 }
 
 /// Host-model serving engine: shared frozen base + cached tenant factors
-/// + a lazily allocated KV cache for the stepping path.
+/// + a lazily allocated KV backend for the stepping path.
 ///
-/// Prefill runs the lean inference-only forward
-/// (`transformer::infer_prefill`: K/V straight into the cache, arena-only
-/// intermediates, last-position-only logits). [`full_prefill`]
+/// Since PR 7 the default backend is the **paged pool**
+/// ([`PagedKvCache`]): resident KV bytes track live tokens instead of
+/// `slots × window`, identical prompt prefixes share pages copy-on-write
+/// within a tenant, and admission degrades to queueing when the pool is
+/// full. [`HostEngine::fixed_kv`] restores the PR-4/5 fixed window — the
+/// bitwise oracle and the bench comparison arm.
+///
+/// Prefill runs the lean inference-only forward (K/V straight into the
+/// cache, arena-only intermediates, last-position-only logits).
 /// [`HostEngine::full_prefill`] re-enables the pre-PR-5 training-forward
 /// prefill (full `ForwardCache` + full-window vocab projection, K/V
 /// copied out) behind the *same* lean return contract — it exists so
@@ -102,8 +215,20 @@ pub trait ServeEngine {
 pub struct HostEngine {
     pub cfg: crate::config::ModelCfg,
     pub base: crate::util::bank::Bank,
-    kv: Option<KvCache>,
+    kv: Option<KvBackend>,
     full_prefill: bool,
+    use_fixed: bool,
+    share_prefix: bool,
+    page_tokens: usize,
+    capacity_pages: Option<usize>,
+    stats: Option<Arc<KvStats>>,
+    /// Engine-lifetime owner registry: the index of an `(id, version)`
+    /// pair is the tag pages carry in the pool. A version bump mints a
+    /// fresh tag, so re-registered tenants never share stale pages.
+    owners: Vec<(String, u64)>,
+    /// Per cache row: first prompt position prefill must compute (the
+    /// positions below it were mapped from shared pages at admission).
+    row_start: Vec<usize>,
     /// One-entry materialization memo for the full-forward arms, which
     /// still need dense factors even when the tenant is served pooled:
     /// `(id, version, factors)` — the worker-owned engine's scratch, not
@@ -114,7 +239,7 @@ pub struct HostEngine {
 impl HostEngine {
     pub fn new(cfg: crate::config::ModelCfg, seed: u64) -> HostEngine {
         let base = crate::model::transformer::init_base(&cfg, seed);
-        HostEngine { cfg, base, kv: None, full_prefill: false, dense_memo: None }
+        HostEngine::with_base(cfg, base)
     }
 
     /// Wrap an existing base bank (e.g. a just-trained model's).
@@ -122,13 +247,75 @@ impl HostEngine {
         cfg: crate::config::ModelCfg,
         base: crate::util::bank::Bank,
     ) -> HostEngine {
-        HostEngine { cfg, base, kv: None, full_prefill: false, dense_memo: None }
+        HostEngine {
+            row_start: vec![0; cfg.batch],
+            cfg,
+            base,
+            kv: None,
+            full_prefill: false,
+            use_fixed: false,
+            share_prefix: true,
+            page_tokens: 16,
+            capacity_pages: None,
+            stats: None,
+            owners: Vec::new(),
+            dense_memo: None,
+        }
     }
 
     /// Use the legacy full-forward prefill (bench/test comparison arm).
+    /// Implies the fixed KV backend.
     pub fn full_prefill(mut self) -> HostEngine {
         self.full_prefill = true;
+        self.use_fixed = true;
         self
+    }
+
+    /// Use the PR-4/5 fixed-window KV cache instead of the paged pool
+    /// (bench comparison arm; bitwise oracle for the paged path).
+    pub fn fixed_kv(mut self) -> HostEngine {
+        self.use_fixed = true;
+        self
+    }
+
+    /// Disable copy-on-write prefix sharing in the paged pool (cold
+    /// comparison arm).
+    pub fn no_prefix_share(mut self) -> HostEngine {
+        self.share_prefix = false;
+        self
+    }
+
+    /// Tokens per KV page (default 16; clamped to the window).
+    pub fn kv_page_tokens(mut self, n: usize) -> HostEngine {
+        self.page_tokens = n;
+        self
+    }
+
+    /// Cap the paged pool at `n` pages (default: worst case for the slot
+    /// table). Smaller pools degrade to queueing at admission.
+    pub fn kv_capacity_pages(mut self, n: usize) -> HostEngine {
+        self.capacity_pages = Some(n);
+        self
+    }
+
+    /// Report pool residency into an externally owned probe so tests and
+    /// benches can watch KV bytes from outside the worker thread.
+    pub fn kv_stats(mut self, stats: Arc<KvStats>) -> HostEngine {
+        self.stats = Some(stats);
+        self
+    }
+
+    /// The pool tag for `tenant`'s pages (minted on first sight).
+    fn owner_tag(&mut self, tenant: &Tenant) -> u32 {
+        if let Some(i) = self
+            .owners
+            .iter()
+            .position(|(id, v)| *id == tenant.id && *v == tenant.version)
+        {
+            return i as u32;
+        }
+        self.owners.push((tenant.id.clone(), tenant.version));
+        (self.owners.len() - 1) as u32
     }
 
     /// Dense factors for the paths that need them (full-window forward,
@@ -195,76 +382,201 @@ impl ServeEngine for HostEngine {
 
     fn prefill_rows(
         &mut self,
-        tenant: &Tenant,
-        adapter: &ServingAdapter,
+        runs: &[EngineRun],
         rows: &[usize],
         tokens: &[i32],
         last: &[usize],
     ) -> Result<Vec<f32>> {
+        let seq = self.cfg.seq;
         if self.full_prefill {
             // legacy arm: the training forward (ForwardCache + full-window
             // vocab projection), K/V copied out, logits re-sliced to the
             // lean shape — bitwise identical rows, ~seq-fold more work
-            let factors = self.dense_factors(tenant, adapter);
-            let kv = self
-                .kv
-                .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
-            let (seq, vocab) = (self.cfg.seq, self.cfg.vocab);
-            let (fc, _) = crate::model::transformer::forward(
-                &self.cfg, &tenant.mc, &self.base, &factors, tokens,
-            );
-            kv.copy_from_forward(&fc, rows);
+            let factors: Vec<TenantFactors> = runs
+                .iter()
+                .map(|run| self.dense_factors(run.tenant, run.adapter))
+                .collect();
+            let vocab = self.cfg.vocab;
+            let kv = match ensure_kv(
+                &mut self.kv,
+                &self.cfg,
+                self.use_fixed,
+                self.share_prefix,
+                self.page_tokens,
+                self.capacity_pages,
+                &self.stats,
+            ) {
+                KvBackend::Fixed(c) => c,
+                KvBackend::Paged(_) => {
+                    unreachable!("full_prefill implies the fixed backend")
+                }
+            };
             let mut lean = vec![0.0f32; rows.len() * vocab];
-            for (i, &p) in last.iter().enumerate() {
-                let src = (i * seq + p) * vocab;
-                lean[i * vocab..(i + 1) * vocab]
-                    .copy_from_slice(&fc.logits[src..src + vocab]);
+            let mut r0 = 0;
+            for (run, f) in runs.iter().zip(&factors) {
+                let n = run.rows;
+                let (fc, _) = crate::model::transformer::forward(
+                    &self.cfg,
+                    &run.tenant.mc,
+                    &self.base,
+                    f,
+                    &tokens[r0 * seq..(r0 + n) * seq],
+                );
+                kv.copy_from_forward(&fc, &rows[r0..r0 + n]);
+                for i in 0..n {
+                    let src = (i * seq + last[r0 + i]) * vocab;
+                    lean[(r0 + i) * vocab..(r0 + i + 1) * vocab]
+                        .copy_from_slice(&fc.logits[src..src + vocab]);
+                }
+                r0 += n;
             }
             return Ok(lean);
         }
-        let kv = self
-            .kv
-            .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
-        Ok(match adapter {
-            ServingAdapter::Dense(f) => infer_prefill(
-                &self.cfg, &tenant.mc, &self.base, f, tokens, last, kv, rows,
-            ),
-            ServingAdapter::Pooled(p) => {
-                // straight off the shard pool — no materialization anywhere
-                let runs = [AdapterBinding::new(
-                    rows.len(),
-                    &tenant.mc,
-                    AdapterRef::Pooled(p.as_ref()),
-                )];
-                infer_prefill_runs(
-                    &self.cfg, &self.base, &runs, tokens, last, kv, rows,
-                )
-            }
-        })
+        Ok(
+            match ensure_kv(
+                &mut self.kv,
+                &self.cfg,
+                self.use_fixed,
+                self.share_prefix,
+                self.page_tokens,
+                self.capacity_pages,
+                &self.stats,
+            ) {
+                KvBackend::Fixed(c) => {
+                    let counts: Vec<usize> =
+                        runs.iter().map(|b| b.rows).collect();
+                    let bindings = run_bindings(runs, &counts);
+                    infer_prefill_runs(
+                        &self.cfg, &self.base, &bindings, tokens, last, c, rows,
+                    )
+                }
+                KvBackend::Paged(c) => {
+                    // tail entries only: positions below row_start were
+                    // mapped from shared pages at admission and are never
+                    // recomputed (the warm-prefix win)
+                    let mut entries: Vec<(usize, usize, i32)> = Vec::new();
+                    let mut lean_idx: Vec<usize> =
+                        Vec::with_capacity(rows.len());
+                    let mut counts: Vec<usize> =
+                        Vec::with_capacity(runs.len());
+                    let mut i = 0;
+                    for run in runs {
+                        let before = entries.len();
+                        for _ in 0..run.rows {
+                            let r = rows[i];
+                            for pos in self.row_start[r]..=last[i] {
+                                entries.push((r, pos, tokens[i * seq + pos]));
+                            }
+                            lean_idx.push(entries.len() - 1);
+                            i += 1;
+                        }
+                        counts.push(entries.len() - before);
+                    }
+                    let bindings = run_bindings(runs, &counts);
+                    let out = paged_infer_runs(
+                        &self.cfg,
+                        &self.base,
+                        &bindings,
+                        c,
+                        &entries,
+                        Some(&lean_idx),
+                    );
+                    // publish each full prompt so later identical prefixes
+                    // admit warm (no-op when sharing is disabled)
+                    for (i, &r) in rows.iter().enumerate() {
+                        c.register_prefix(
+                            r,
+                            &tokens[i * seq..i * seq + last[i] + 1],
+                        );
+                    }
+                    out
+                }
+            },
+        )
     }
 
     fn decode_rows(
         &mut self,
-        tenant: &Tenant,
-        adapter: &ServingAdapter,
+        runs: &[EngineRun],
         entries: &[(usize, usize, i32)],
     ) -> Result<Vec<f32>> {
-        let kv = self
-            .kv
-            .get_or_insert_with(|| KvCache::new(&self.cfg, self.cfg.batch));
-        Ok(match adapter {
-            ServingAdapter::Dense(f) => decode_step(
-                &self.cfg, &tenant.mc, &self.base, f, kv, entries,
-            ),
-            ServingAdapter::Pooled(p) => {
-                let runs = [AdapterBinding::new(
-                    entries.len(),
-                    &tenant.mc,
-                    AdapterRef::Pooled(p.as_ref()),
-                )];
-                decode_step_runs(&self.cfg, &self.base, &runs, kv, entries)
+        let counts: Vec<usize> = runs.iter().map(|b| b.rows).collect();
+        let bindings = run_bindings(runs, &counts);
+        Ok(
+            match ensure_kv(
+                &mut self.kv,
+                &self.cfg,
+                self.use_fixed,
+                self.share_prefix,
+                self.page_tokens,
+                self.capacity_pages,
+                &self.stats,
+            ) {
+                KvBackend::Fixed(c) => decode_step_runs(
+                    &self.cfg, &self.base, &bindings, c, entries,
+                ),
+                KvBackend::Paged(c) => paged_infer_runs(
+                    &self.cfg, &self.base, &bindings, c, entries, None,
+                ),
+            },
+        )
+    }
+
+    fn kv_admit(
+        &mut self,
+        row: usize,
+        tenant: &Tenant,
+        prompt: &[i32],
+    ) -> bool {
+        let owner = self.owner_tag(tenant);
+        let start = match ensure_kv(
+            &mut self.kv,
+            &self.cfg,
+            self.use_fixed,
+            self.share_prefix,
+            self.page_tokens,
+            self.capacity_pages,
+            &self.stats,
+        ) {
+            // the fixed window pre-reserves every slot — always fits
+            KvBackend::Fixed(_) => Some(0),
+            KvBackend::Paged(c) => c.admit_row(row, prompt, owner),
+        };
+        match start {
+            Some(s) => {
+                self.row_start[row] = s;
+                true
             }
-        })
+            None => false,
+        }
+    }
+
+    fn kv_release(&mut self, row: usize) {
+        // don't force-create a backend just to release into it
+        if let Some(KvBackend::Paged(c)) = self.kv.as_mut() {
+            c.release_row(row);
+        }
+    }
+
+    fn kv_tenant_bytes(&self, tenant: &Tenant) -> usize {
+        let Some(KvBackend::Paged(c)) = self.kv.as_ref() else {
+            return 0;
+        };
+        // sum across versions: a re-registered tenant's old-version
+        // retentions still charge its id until they are evicted
+        self.owners
+            .iter()
+            .enumerate()
+            .filter(|(_, (id, _))| *id == tenant.id)
+            .map(|(i, _)| c.owner_bytes(i as u32))
+            .sum()
+    }
+
+    fn kv_resident_bytes(&self) -> usize {
+        match self.kv.as_ref() {
+            Some(KvBackend::Paged(c)) => c.resident_bytes(),
+            _ => 0,
+        }
     }
 }
 
@@ -451,11 +763,14 @@ impl Server {
                     .name(format!("mos-serve-{wid}"))
                     .spawn(move || {
                         let mut engine = factory(wid);
-                        while let Some((tenant_id, batch)) = batcher.pop_batch()
-                        {
+                        // stepping engines decode per-run adapters, so
+                        // their batches may mix tenants; the full-window
+                        // fallback forwards one tenant at a time
+                        let mix = engine.supports_steps();
+                        while let Some(batch) = batcher.pop_batch(mix) {
                             serve_batch(
                                 &registry, &metrics, &cache, &batcher,
-                                &mut engine, &tenant_id, batch,
+                                &mut engine, batch,
                             );
                         }
                     })
@@ -566,10 +881,56 @@ impl Drop for Server {
     }
 }
 
-/// One occupied decode slot: the request plus stream bookkeeping.
+/// One occupied decode slot: the request, its resolved tenant + serving
+/// adapter (mixed batches resolve per request, not per batch), and
+/// stream bookkeeping.
 struct Slot {
     req: Request,
+    tenant: Arc<Tenant>,
+    adapter: ServingAdapter,
     ttft_recorded: bool,
+}
+
+/// Coalesce a tenant-sorted sequence of occupied slot rows into engine
+/// runs (one run per maximal same-`(id, version)` stretch).
+fn build_runs(
+    slots: &[Option<Slot>],
+    rows: impl Iterator<Item = usize>,
+) -> Vec<EngineRun<'_>> {
+    let mut runs: Vec<EngineRun> = Vec::new();
+    for r in rows {
+        let s = slots[r].as_ref().expect("run row must be occupied");
+        match runs.last_mut() {
+            Some(run)
+                if run.tenant.id == s.tenant.id
+                    && run.tenant.version == s.tenant.version =>
+            {
+                run.rows += 1
+            }
+            _ => runs.push(EngineRun {
+                tenant: &*s.tenant,
+                adapter: &s.adapter,
+                rows: 1,
+            }),
+        }
+    }
+    runs
+}
+
+/// Push the pool's measured per-tenant KV bytes into the registry ledger
+/// (a no-op set of zeros for engines without a paged pool).
+fn sync_kv_ledger<E: ServeEngine>(
+    registry: &Registry,
+    engine: &E,
+    seen: &[Arc<Tenant>],
+) {
+    if seen.is_empty() {
+        return;
+    }
+    let mut ledger = registry.ledger.lock().unwrap();
+    for t in seen {
+        ledger.set_kv(&t.id, engine.kv_tenant_bytes(t));
+    }
 }
 
 /// Stream a freshly decoded token to its client, recording time-to-first-
@@ -585,14 +946,17 @@ fn stream_token(metrics: &Metrics, slots: &mut [Option<Slot>], row: usize, tok: 
 }
 
 /// Resolve every finished row: take its output, free the slot, and send
-/// the typed result (Ok, Deadline, or Cancelled).
+/// the typed result (Ok, Deadline, or Cancelled). Returns the freed rows
+/// so the caller can drop their KV page references ([`ServeEngine::
+/// kv_release`]) — including for cancellations and expiries, which is
+/// what makes a cancel storm return the pool to baseline.
 fn sweep_finished(
     st: &mut DecodeState,
     slots: &mut [Option<Slot>],
     metrics: &Metrics,
     tk: &Tokenizer,
-    tenant_id: &str,
-) {
+) -> Vec<usize> {
+    let mut freed = Vec::new();
     for row in 0..slots.len() {
         if slots[row].is_none() || !st.row_done(row) {
             continue;
@@ -601,6 +965,7 @@ fn sweep_finished(
         let slot = slots[row].take().unwrap();
         let cancelled = slot.req.is_cancelled();
         let out = st.release(row);
+        freed.push(row);
         if expired {
             metrics.expired.fetch_add(1, Ordering::Relaxed);
             let _ = slot.req.respond.send(Err(ServeError::Deadline));
@@ -619,7 +984,7 @@ fn sweep_finished(
                 .fetch_add(out.len() as u64, Ordering::Relaxed);
             let _ = slot.req.respond.send(Ok(Response {
                 id: slot.req.id,
-                tenant: tenant_id.to_string(),
+                tenant: slot.req.tenant.clone(),
                 prompt: slot.req.prompt.clone(),
                 text: tk.decode(&out),
                 tokens: out.len(),
@@ -627,37 +992,38 @@ fn sweep_finished(
             }));
         }
     }
+    freed
 }
 
-/// The worker decode loop for one tenant batch: a slot table over the
+/// The worker decode loop for one popped batch: a slot table over the
 /// engine's batch rows. KV-cached stepping when the engine supports it
 /// (prefill per admission, then one single-position step per token);
 /// full-window forwards otherwise. Between steps the loop admits newly
 /// queued requests into freed slots (continuous batching via
-/// [`Batcher::try_fill`]), enforces deadlines and cancellations, and
-/// streams tokens. An engine error short-circuits: every in-flight
-/// request resolves `Err(Engine)` immediately instead of burning the
-/// remaining window of forwards on garbage logits.
+/// [`Batcher::try_fill_any`] / [`Batcher::try_fill`]), enforces
+/// deadlines and cancellations, and streams tokens.
+///
+/// Since PR 7 a stepping batch may **mix tenants**: each request
+/// resolves its own tenant + adapter at admission, and every engine call
+/// receives the batch as tenant-grouped [`EngineRun`]s (canonical GEMMs
+/// make the grouping bitwise-invisible). KV residency is negotiated per
+/// row through [`ServeEngine::kv_admit`]: a full pool parks the request
+/// back in the queue until decode frees pages — bounded waiting, never
+/// an OOM or a mid-decode failure — and only a request that could not
+/// fit in an *empty* pool resolves `Err(Engine)` at admission.
+///
+/// An engine error short-circuits: every in-flight request resolves
+/// `Err(Engine)` immediately instead of burning the remaining window of
+/// forwards on garbage logits.
 fn serve_batch<E: ServeEngine>(
     registry: &Registry,
     metrics: &Metrics,
     cache: &AdapterCache,
     batcher: &Batcher,
     engine: &mut E,
-    tenant_id: &str,
     batch: Vec<Request>,
 ) {
     metrics.record_batch(batch.len());
-    let Some(tenant) = registry.get(tenant_id) else {
-        for req in batch {
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
-            let _ = req
-                .respond
-                .send(Err(ServeError::UnknownTenant(tenant_id.to_string())));
-        }
-        return;
-    };
-    let adapter = cache.get(&registry.cfg, &tenant);
     let (bsz, seq, vocab) = engine.shape();
     let tk = Tokenizer::new();
     let stepping = engine.supports_steps();
@@ -666,6 +1032,8 @@ fn serve_batch<E: ServeEngine>(
     let mut slots: Vec<Option<Slot>> = (0..bsz).map(|_| None).collect();
     let mut pending: VecDeque<Request> = batch.into();
     let mut engine_err: Option<ServeError> = None;
+    // distinct tenant ids this batch touched — the ledger KV sync set
+    let mut seen: Vec<Arc<Tenant>> = Vec::new();
 
     loop {
         // ---- between-step enforcement: deadlines + cancellations ----
@@ -679,8 +1047,8 @@ fn serve_batch<E: ServeEngine>(
             }
         }
         // requests parked in the local overflow (popped batch larger than
-        // the slot table) resolve cancel/deadline now, not once a slot
-        // happens to free for them
+        // the slot table, or waiting out a full KV pool) resolve
+        // cancel/deadline now, not once a slot happens to free for them
         if !pending.is_empty() {
             let mut kept = VecDeque::with_capacity(pending.len());
             for req in pending.drain(..) {
@@ -696,10 +1064,13 @@ fn serve_batch<E: ServeEngine>(
             }
             pending = kept;
         }
-        sweep_finished(&mut st, &mut slots, metrics, &tk, tenant_id);
+        for r in sweep_finished(&mut st, &mut slots, metrics, &tk) {
+            engine.kv_release(r);
+        }
 
         // ---- drained? ----
         if slots.iter().all(|s| s.is_none()) && pending.is_empty() {
+            sync_kv_ledger(registry, engine, &seen);
             return;
         }
 
@@ -720,14 +1091,35 @@ fn serve_batch<E: ServeEngine>(
             let running =
                 slots.iter().any(|s| s.is_some()) || !incoming.is_empty();
             if running && incoming.len() < free.len() {
-                let refill =
-                    batcher.try_fill(tenant_id, free.len() - incoming.len());
+                let want = free.len() - incoming.len();
+                let refill = if stepping {
+                    // mixed batches: drain whichever tenants are queued
+                    batcher.try_fill_any(want)
+                } else {
+                    // full-window batches are single-tenant (mix=false
+                    // pops): refill from the batch's own tenant
+                    let tid = slots
+                        .iter()
+                        .flatten()
+                        .map(|s| s.req.tenant.as_str())
+                        .chain(incoming.iter().map(|r| r.tenant.as_str()))
+                        .next()
+                        .map(str::to_string);
+                    match tid {
+                        Some(t) => batcher.try_fill(&t, want),
+                        None => Vec::new(),
+                    }
+                };
                 metrics.record_refill(refill.len());
                 incoming.extend(refill);
             }
             let now = Instant::now();
             let mut free_iter = free.into_iter();
             let mut newly: Vec<usize> = Vec::new();
+            // requests a full KV pool bounced this round — they go back
+            // to the *front* of the overflow, in order, and retry as
+            // decode frees pages (degradation to queueing)
+            let mut parked: Vec<Request> = Vec::new();
             for req in incoming {
                 if req.is_cancelled() {
                     metrics.cancelled.fetch_add(1, Ordering::Relaxed);
@@ -739,17 +1131,67 @@ fn serve_batch<E: ServeEngine>(
                     let _ = req.respond.send(Err(ServeError::Deadline));
                     continue;
                 }
-                let row = free_iter.next().expect("incoming exceeds free slots");
+                // mixed batches resolve tenant + adapter per request
+                let Some(tenant) = registry.get(&req.tenant) else {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Err(ServeError::UnknownTenant(
+                        req.tenant.clone(),
+                    )));
+                    continue;
+                };
+                let adapter = cache.get(&registry.cfg, &tenant);
+                let row =
+                    free_iter.next().expect("incoming exceeds free slots");
                 let prompt = tk.prompt_tokens(&req.prompt);
                 st.admit(row, &prompt, req.opts.clone(), req.deadline);
-                slots[row] = Some(Slot { req, ttft_recorded: false });
+                if stepping && !st.row_done(row) {
+                    let n = prompt.len().min(seq);
+                    if !engine.kv_admit(row, &tenant, &prompt[..n]) {
+                        // roll the admission back and decide: park while
+                        // anything else holds pages (they free as it
+                        // finishes), error only if even an empty pool
+                        // cannot cover the request
+                        let _ = st.release(row);
+                        if slots.iter().any(|s| s.is_some())
+                            || !newly.is_empty()
+                        {
+                            parked.push(req);
+                        } else {
+                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.respond.send(Err(ServeError::Engine(
+                                "KV pool cannot fit request".to_string(),
+                            )));
+                        }
+                        continue;
+                    }
+                }
+                if !seen.iter().any(|t| t.id == tenant.id) {
+                    seen.push(Arc::clone(&tenant));
+                }
+                slots[row] =
+                    Some(Slot { req, tenant, adapter, ttft_recorded: false });
                 newly.push(row);
             }
+            for req in parked.into_iter().rev() {
+                pending.push_front(req);
+            }
 
-            // KV path: prefill freshly admitted rows, emit first tokens
-            let live_new: Vec<usize> =
+            // KV path: prefill freshly admitted rows, emit first tokens.
+            // Rows are sorted by tenant so the batch forms contiguous
+            // engine runs; canonical GEMMs keep each row's logits bitwise
+            // independent of the grouping.
+            let mut live_new: Vec<usize> =
                 newly.into_iter().filter(|&r| !st.row_done(r)).collect();
             if stepping && !live_new.is_empty() {
+                live_new.sort_by(|&a, &b| {
+                    let ka = slots[a]
+                        .as_ref()
+                        .map(|s| (&s.tenant.id, s.tenant.version));
+                    let kb = slots[b]
+                        .as_ref()
+                        .map(|s| (&s.tenant.id, s.tenant.version));
+                    ka.cmp(&kb)
+                });
                 let mut toks = Vec::with_capacity(live_new.len() * seq);
                 for &r in &live_new {
                     toks.extend_from_slice(&st.tokens()[r * seq..(r + 1) * seq]);
@@ -757,9 +1199,11 @@ fn serve_batch<E: ServeEngine>(
                 let last: Vec<usize> =
                     live_new.iter().map(|&r| st.last_pos(r)).collect();
                 let t0 = Instant::now();
-                match engine
-                    .prefill_rows(&tenant, &adapter, &live_new, &toks, &last)
-                {
+                let res = {
+                    let runs = build_runs(&slots, live_new.iter().copied());
+                    engine.prefill_rows(&runs, &live_new, &toks, &last)
+                };
+                match res {
                     Ok(logits) => {
                         metrics.record_prefill(t0.elapsed());
                         for (row, tok) in st.step_prefill(&live_new, &logits) {
@@ -774,7 +1218,9 @@ fn serve_batch<E: ServeEngine>(
                     }
                 }
             }
-            sweep_finished(&mut st, &mut slots, metrics, &tk, tenant_id);
+            for r in sweep_finished(&mut st, &mut slots, metrics, &tk) {
+                engine.kv_release(r);
+            }
         }
 
         // ---- engine-error short-circuit ----
@@ -783,13 +1229,29 @@ fn serve_batch<E: ServeEngine>(
             let live = st.live_rows();
             if !live.is_empty() {
                 if stepping {
-                    let entries = st.step_entries();
-                    match engine.decode_rows(&tenant, &adapter, &entries) {
+                    let mut entries = st.step_entries();
+                    // group by tenant for the run slice; step_rows pairs
+                    // logits back by entry order, so the sort is safe
+                    entries.sort_by(|a, b| {
+                        let ka = slots[a.0]
+                            .as_ref()
+                            .map(|s| (&s.tenant.id, s.tenant.version));
+                        let kb = slots[b.0]
+                            .as_ref()
+                            .map(|s| (&s.tenant.id, s.tenant.version));
+                        ka.cmp(&kb)
+                    });
+                    let res = {
+                        let runs =
+                            build_runs(&slots, entries.iter().map(|e| e.0));
+                        engine.decode_rows(&runs, &entries)
+                    };
+                    match res {
                         Ok(logits) => {
                             for (row, tok) in st.step_rows(&entries, &logits) {
                                 stream_token(metrics, &mut slots, row, tok);
                             }
-                            // arena-backed (see decode_step): recycle
+                            // arena-backed (see decode_step_runs): recycle
                             scratch_put(logits);
                         }
                         Err(e) => {
@@ -798,6 +1260,16 @@ fn serve_batch<E: ServeEngine>(
                         }
                     }
                 } else {
+                    // full-window fallback: single-tenant by construction
+                    // (mix=false pops), so any occupied slot names it
+                    let (tenant, adapter) = {
+                        let s = slots
+                            .iter()
+                            .flatten()
+                            .next()
+                            .expect("live rows require an occupied slot");
+                        (Arc::clone(&s.tenant), s.adapter.clone())
+                    };
                     match engine.forward(&tenant, &adapter, st.tokens()) {
                         Ok(logits) => {
                             for (row, tok) in st.step_full(&logits) {
@@ -827,8 +1299,13 @@ fn serve_batch<E: ServeEngine>(
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = req.respond.send(Err(e.clone()));
             }
+            for r in 0..bsz {
+                engine.kv_release(r);
+            }
+            sync_kv_ledger(registry, engine, &seen);
             return;
         }
+        sync_kv_ledger(registry, engine, &seen);
     }
 }
 
@@ -1364,6 +1841,185 @@ mod tests {
         server.cache.get(&server.registry.cfg, &b);
         let (_, m1) = server.cache.stats();
         assert_eq!(m1, m0, "survivor was needlessly rebuilt");
+    }
+
+    #[test]
+    fn two_tenant_mixed_batch_matches_single_tenant_batches() {
+        // PR-7 satellite: a mixed alice+bob batch must decode each
+        // request bitwise-identically to serving its tenant alone —
+        // per-run adapter bindings + canonical GEMMs make the batch
+        // composition invisible (same contract the transformer-level
+        // runs tests pin, here proven through the whole server stack)
+        let opts = || GenOptions::greedy().max_new_tokens(10);
+        let solo = |tenant: &str, seed: u64| -> Vec<String> {
+            let (mut server, cfg) = make_server(1 << 30);
+            server.register(tenant, spec(seed)).unwrap();
+            let hs: Vec<_> = (0..2)
+                .map(|i| {
+                    server.submit(tenant, &format!("q:{i}"), opts()).unwrap()
+                })
+                .collect();
+            let cfg2 = cfg.clone();
+            server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+            let texts = hs
+                .into_iter()
+                .map(|h| {
+                    h.wait_timeout(Duration::from_secs(30))
+                        .unwrap()
+                        .unwrap()
+                        .text
+                })
+                .collect();
+            server.shutdown();
+            texts
+        };
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        server.register("bob", spec(2)).unwrap();
+        // submit interleaved before starting the worker: one aged pop
+        // drains alice then tops up with bob — a genuinely mixed batch
+        let mut hs = Vec::new();
+        for i in 0..2 {
+            hs.push(server.submit("alice", &format!("q:{i}"), opts()).unwrap());
+            hs.push(server.submit("bob", &format!("q:{i}"), opts()).unwrap());
+        }
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let mixed: Vec<String> = hs
+            .into_iter()
+            .map(|h| {
+                h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap().text
+            })
+            .collect();
+        server.shutdown();
+        let a = solo("alice", 1);
+        let b = solo("bob", 2);
+        assert_eq!(&mixed[0], &a[0], "alice q:0 diverged in the mixed batch");
+        assert_eq!(&mixed[2], &a[1], "alice q:1 diverged in the mixed batch");
+        assert_eq!(&mixed[1], &b[0], "bob q:0 diverged in the mixed batch");
+        assert_eq!(&mixed[3], &b[1], "bob q:1 diverged in the mixed batch");
+    }
+
+    #[test]
+    fn ledger_tracks_paged_kv_resident_bytes() {
+        // PR-7 satellite: the registry ledger's KV side-table must equal
+        // the pool's measured resident bytes — owner tags partition the
+        // pool, so summing per-tenant charges reconstructs the total
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        server.register("bob", spec(2)).unwrap();
+        let probe = Arc::new(KvStats::default());
+        let probe2 = Arc::clone(&probe);
+        let cfg2 = cfg.clone();
+        // page_tokens 2: short prompts still fill whole pages, so prefix
+        // retentions keep bytes resident after the requests finish
+        server.start(1, move |_| {
+            HostEngine::new(cfg2.clone(), 0)
+                .kv_page_tokens(2)
+                .kv_stats(Arc::clone(&probe2))
+        });
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let t = if i % 2 == 0 { "alice" } else { "bob" };
+                server
+                    .submit(
+                        t,
+                        &format!("q:{i}"),
+                        GenOptions::greedy().max_new_tokens(6),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for h in hs {
+            h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        }
+        // the worker's final ledger sync happens before it exits, so a
+        // joined shutdown makes the comparison race-free
+        server.shutdown();
+        let ledger = server.registry.ledger.lock().unwrap();
+        let total = probe.resident_bytes();
+        assert!(total > 0, "prefix retentions should keep pages resident");
+        assert_eq!(
+            ledger.kv_used(),
+            total,
+            "ledger KV side-table != pool resident bytes"
+        );
+        assert!(ledger.kv_for("alice") > 0);
+        assert!(ledger.kv_for("bob") > 0);
+    }
+
+    #[test]
+    fn full_kv_pool_degrades_to_queueing() {
+        // tentpole acceptance: a pool sized for a single row never OOMs
+        // and never fails mid-decode — excess requests wait at admission
+        // and every one of them eventually resolves Ok
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let cfg2 = cfg.clone();
+        // seq 48, page_tokens 16 => a full window reserves exactly 3
+        // pages: capacity 3 serves one request at a time
+        server.start(1, move |_| {
+            HostEngine::new(cfg2.clone(), 0)
+                .kv_capacity_pages(3)
+                .no_prefix_share()
+        });
+        let hs: Vec<_> = (0..5)
+            .map(|i| {
+                server
+                    .submit(
+                        "alice",
+                        &format!("q:{i}"),
+                        GenOptions::greedy().max_new_tokens(8),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for h in hs {
+            let r = h.wait_timeout(Duration::from_secs(60)).unwrap();
+            assert!(r.is_ok(), "pool saturation must queue, not error: {r:?}");
+        }
+        assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn cancel_storm_returns_kv_pool_to_baseline() {
+        // PR-7 satellite: cancelling mid-decode must drop every page
+        // reference — with sharing disabled there are no prefix
+        // retentions either, so the pool drains to exactly zero
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let probe = Arc::new(KvStats::default());
+        let probe2 = Arc::clone(&probe);
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| {
+            HostEngine::new(cfg2.clone(), 0)
+                .no_prefix_share()
+                .kv_stats(Arc::clone(&probe2))
+        });
+        let hs: Vec<_> = (0..6)
+            .map(|i| {
+                server
+                    .submit(
+                        "alice",
+                        &format!("q:{i}"),
+                        GenOptions::greedy().max_new_tokens(40),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        // let some requests reach mid-decode before the storm
+        thread::sleep(Duration::from_millis(30));
+        for h in &hs {
+            h.cancel();
+        }
+        for h in hs {
+            // cancelled or already finished — either way resolved
+            let _ = h.wait_timeout(Duration::from_secs(30)).unwrap();
+        }
+        server.shutdown();
+        assert_eq!(probe.resident_bytes(), 0, "cancel storm leaked KV pages");
+        assert_eq!(server.registry.ledger.lock().unwrap().kv_used(), 0);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 pub mod adamw;
 pub mod math;
+pub mod paged;
 pub mod transformer;
 
 use crate::adapter::{self, Factors};

@@ -1,0 +1,866 @@
+//! Block-paged KV cache with copy-on-write shared-prefix reuse.
+//!
+//! MoS's core move — one global pool of fixed-size shards with per-tenant
+//! index tables selecting into it — applied to KV memory instead of
+//! adapter weights: a [`PagePool`] of refcounted fixed-size K/V pages
+//! (the shards) plus a per-row page table per live request (the index
+//! table), so resident KV bytes track live tokens instead of the fixed
+//! `slots × window` buffer [`KvCache`](super::transformer::KvCache)
+//! allocates up front.
+//!
+//! On top of paging sits prefix sharing: at admission the prompt's full
+//! pages are chain-hashed ([`chain_hash`], FNV-1a over the token bytes so
+//! page `i`'s key commits to the *entire* prefix `0..(i+1)*P`) and looked
+//! up in a per-owner [`PrefixIndex`]. A hit — confirmed by a **full token
+//! compare**, the hash alone is never trusted — maps the already-filled
+//! pages into the new row's table (refcount bump, no copy, no compute)
+//! and prefill only runs the unshared tail. A row that writes into a
+//! page whose refcount is above one first forks a private copy
+//! (copy-on-write), so sharers never observe each other's writes.
+//!
+//! Admission is reservation-based: [`PagedKvCache::admit_row`] reserves
+//! the row's worst-case page count (window pages minus fully-shared
+//! pages) up front and fails — *before* the row holds any state — when
+//! the pool can't cover it. Decode-time page acquisition draws from the
+//! reservation and therefore cannot fail mid-decode: a full pool degrades
+//! to queueing at admission, never to OOM or a mid-generation error.
+//! Stale prefix retentions are evicted LRU-first when a reservation
+//! would otherwise not fit.
+//!
+//! Everything on the steady-state path — lookup, compare, page
+//! acquire/release, COW fork — is allocation-free: the pool's slab,
+//! refcounts and free list are preallocated, page tables are sized to
+//! the window at construction, and forks copy within the slab.
+
+use crate::config::ModelCfg;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// FNV-1a offset basis: the seed for the first page's [`chain_hash`].
+pub const PREFIX_HASH_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Extend an FNV-1a chain hash over one page worth of tokens. Seeding
+/// each page's hash with the previous page's makes the key for page `i`
+/// commit to the whole prefix `0..(i+1)*page_tokens`, so two prompts
+/// can only collide per-level, and a single token compare at the
+/// matched level verifies the entire prefix.
+pub fn chain_hash(mut h: u64, tokens: &[i32]) -> u64 {
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Shared observability for the paged KV subsystem: resident/peak pool
+/// bytes, COW forks, and the shared-vs-computed position counters the
+/// warm-prefill skip proof and `bench_serving`'s `kv_mb` column read.
+/// Cloned (`Arc`) into the pool, the serving engine, tests, and benches.
+#[derive(Debug, Default)]
+pub struct KvStats {
+    resident_bytes: AtomicUsize,
+    peak_resident_bytes: AtomicUsize,
+    cow_forks: AtomicU64,
+    shared_positions: AtomicU64,
+    computed_positions: AtomicU64,
+}
+
+impl KvStats {
+    /// Bytes of pool slab currently backing at least one reference.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of [`Self::resident_bytes`].
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak_resident_bytes.load(Ordering::SeqCst)
+    }
+
+    /// Copy-on-write forks performed (a sharer wrote a shared page).
+    pub fn cow_forks(&self) -> u64 {
+        self.cow_forks.load(Ordering::SeqCst)
+    }
+
+    /// Prompt positions admitted *without* compute via prefix sharing.
+    pub fn shared_positions(&self) -> u64 {
+        self.shared_positions.load(Ordering::SeqCst)
+    }
+
+    /// Positions actually run through the paged transformer path
+    /// (prefill tail entries + decode steps) — the warm-prefill tests
+    /// assert this counter, not timing, to prove positions were skipped.
+    pub fn computed_positions(&self) -> u64 {
+        self.computed_positions.load(Ordering::SeqCst)
+    }
+
+    /// Record `m` computed positions (called by the paged model path).
+    pub(crate) fn note_computed(&self, m: usize) {
+        self.computed_positions.fetch_add(m as u64, Ordering::SeqCst);
+    }
+
+    fn note_resident(&self, bytes: usize) {
+        self.resident_bytes.store(bytes, Ordering::SeqCst);
+        self.peak_resident_bytes.fetch_max(bytes, Ordering::SeqCst);
+    }
+}
+
+/// The global pool of fixed-size K/V pages — the KV-side analogue of
+/// MoS's shard pool. One contiguous `f32` slab holds every page; a page
+/// spans **all blocks** (one refcount covers the whole token range,
+/// because prefix sharing is by token position, which is identical
+/// across layers — per-layer tables would multiply bookkeeping for no
+/// extra sharing). Page layout: `[block][k|v][slot][dim]`.
+pub struct PagePool {
+    blocks: usize,
+    dim: usize,
+    page_tokens: usize,
+    /// Floats per page: `blocks * 2 * page_tokens * dim`.
+    page_floats: usize,
+    data: Vec<f32>,
+    refcnt: Vec<u32>,
+    /// Owner tag per resident page (an engine-assigned tenant tag);
+    /// sharing never crosses owners, so per-owner page counts partition
+    /// the pool exactly — the ledger-vs-pool assertion relies on this.
+    owner: Vec<u32>,
+    /// Free list: acquisition and release are a push/pop, no allocation.
+    free: Vec<u32>,
+    stats: Arc<KvStats>,
+}
+
+impl PagePool {
+    pub fn new(
+        blocks: usize,
+        dim: usize,
+        page_tokens: usize,
+        capacity_pages: usize,
+        stats: Arc<KvStats>,
+    ) -> PagePool {
+        assert!(page_tokens > 0 && capacity_pages > 0);
+        let page_floats = blocks * 2 * page_tokens * dim;
+        PagePool {
+            blocks,
+            dim,
+            page_tokens,
+            page_floats,
+            data: vec![0.0; capacity_pages * page_floats],
+            refcnt: vec![0; capacity_pages],
+            owner: vec![0; capacity_pages],
+            // pop() hands out low page ids first
+            free: (0..capacity_pages as u32).rev().collect(),
+            stats: Arc::clone(&stats),
+        }
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.refcnt.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Bytes one page keeps resident.
+    pub fn page_bytes(&self) -> usize {
+        self.page_floats * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes of slab currently backing at least one reference.
+    pub fn resident_bytes(&self) -> usize {
+        (self.capacity_pages() - self.free_pages()) * self.page_bytes()
+    }
+
+    /// Resident pages carrying `owner`'s tag.
+    pub fn owned_pages(&self, owner: u32) -> usize {
+        self.refcnt
+            .iter()
+            .zip(&self.owner)
+            .filter(|&(&rc, &o)| rc > 0 && o == owner)
+            .count()
+    }
+
+    /// Take a free page (refcount 1) tagged with `owner`.
+    fn acquire(&mut self, owner: u32) -> Option<u32> {
+        let pg = self.free.pop()?;
+        debug_assert_eq!(self.refcnt[pg as usize], 0);
+        self.refcnt[pg as usize] = 1;
+        self.owner[pg as usize] = owner;
+        self.stats.note_resident(self.resident_bytes());
+        Some(pg)
+    }
+
+    /// Add a reference to a resident page (prefix share / index retain).
+    fn retain(&mut self, pg: u32) {
+        debug_assert!(self.refcnt[pg as usize] > 0);
+        self.refcnt[pg as usize] += 1;
+    }
+
+    /// Drop a reference; the page returns to the free list when the
+    /// last reference goes. No zeroing: writes always precede reads
+    /// (decode overwrites position `p` before attending over `0..=p`),
+    /// and gathers copy only live spans.
+    fn release(&mut self, pg: u32) {
+        let rc = &mut self.refcnt[pg as usize];
+        debug_assert!(*rc > 0);
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(pg);
+            self.stats.note_resident(self.resident_bytes());
+        }
+    }
+
+    #[inline]
+    fn offset(&self, pg: u32, kb: usize, kv: usize, slot: usize) -> usize {
+        debug_assert!(kb < self.blocks && kv < 2 && slot < self.page_tokens);
+        pg as usize * self.page_floats
+            + ((kb * 2 + kv) * self.page_tokens + slot) * self.dim
+    }
+
+    /// Fork `src` into `dst`: copy the whole page (every block, K and
+    /// V) within the slab — allocation-free.
+    fn copy_page(&mut self, src: u32, dst: u32) {
+        let (s, d) = (
+            src as usize * self.page_floats,
+            dst as usize * self.page_floats,
+        );
+        self.data.copy_within(s..s + self.page_floats, d);
+    }
+}
+
+/// One live request row's view into the pool.
+#[derive(Default)]
+struct RowTable {
+    /// Page ids covering positions `[i*P, (i+1)*P)`; capacity is fixed
+    /// at `ceil(seq / P)` from construction so pushes never allocate.
+    pages: Vec<u32>,
+    /// Filled positions (high-water mark).
+    len: usize,
+    /// Pages reserved at admission but not yet acquired; decode-time
+    /// acquisition draws these down and is therefore infallible.
+    reserved: usize,
+    owner: u32,
+    admitted: bool,
+}
+
+/// Per-owner chain-hash index from full prompt pages to pool pages.
+/// Each entry retains its page (one index reference), stores the
+/// **entire prefix token string** for the mandatory compare-on-hit, and
+/// carries an LRU stamp for eviction when a reservation needs room.
+#[derive(Default)]
+struct PrefixIndex {
+    map: HashMap<(u32, u64), PrefixEntry>,
+    clock: u64,
+}
+
+struct PrefixEntry {
+    tokens: Vec<i32>,
+    page: u32,
+    stamp: u64,
+}
+
+impl PrefixIndex {
+    /// Hash hit + full token compare; a hit refreshes the LRU stamp.
+    fn lookup(&mut self, owner: u32, hash: u64, prefix: &[i32]) -> Option<u32> {
+        let e = self.map.get_mut(&(owner, hash))?;
+        if e.tokens.as_slice() != prefix {
+            return None; // hash collision: never share on hash alone
+        }
+        self.clock += 1;
+        e.stamp = self.clock;
+        Some(e.page)
+    }
+
+    fn contains(&self, owner: u32, hash: u64) -> bool {
+        self.map.contains_key(&(owner, hash))
+    }
+
+    fn insert(&mut self, owner: u32, hash: u64, tokens: Vec<i32>, page: u32) {
+        self.clock += 1;
+        let stamp = self.clock;
+        self.map.insert((owner, hash), PrefixEntry { tokens, page, stamp });
+    }
+
+    /// Remove the least-recently-used entry, returning its page.
+    fn evict_lru(&mut self) -> Option<u32> {
+        let key = *self
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(k, _)| k)?;
+        self.map.remove(&key).map(|e| e.page)
+    }
+}
+
+/// Paged replacement for the fixed-window
+/// [`KvCache`](super::transformer::KvCache): a [`PagePool`] plus one
+/// page table per batch row. The transformer's paged path reads and
+/// writes K/V through [`Self::k_at`]/[`Self::write_kv`]; the serving
+/// layer drives the row lifecycle through
+/// [`Self::admit_row`]/[`Self::register_prefix`]/[`Self::release_row`].
+pub struct PagedKvCache {
+    pub bsz: usize,
+    pub seq: usize,
+    /// Hidden width of the cached projections (MHA: K/V rows == Q rows).
+    pub dim: usize,
+    page_tokens: usize,
+    pool: PagePool,
+    rows: Vec<RowTable>,
+    /// Total pages promised to admitted rows but not yet acquired.
+    reserved_unacquired: usize,
+    /// Prefix sharing enabled (the cold bench arm turns it off).
+    share: bool,
+    prefix: PrefixIndex,
+    stats: Arc<KvStats>,
+    /// Sinusoidal position table (seq, hidden) — same values the
+    /// fixed-window cache and the training forward derive.
+    pos: Vec<f32>,
+}
+
+impl PagedKvCache {
+    /// Worst-case pages one row can touch: `ceil(seq / page_tokens)`.
+    pub fn pages_per_row(cfg: &ModelCfg, page_tokens: usize) -> usize {
+        cfg.seq.div_ceil(page_tokens)
+    }
+
+    pub fn new(
+        cfg: &ModelCfg,
+        bsz: usize,
+        page_tokens: usize,
+        capacity_pages: usize,
+    ) -> PagedKvCache {
+        assert_eq!(
+            cfg.kv_heads, cfg.heads,
+            "host KV cache assumes MHA (kv_heads == heads)"
+        );
+        assert_eq!(
+            cfg.heads * cfg.head_dim(),
+            cfg.hidden,
+            "host KV-cached inference assumes heads * head_dim == hidden"
+        );
+        let page_tokens = page_tokens.clamp(1, cfg.seq);
+        let stats = Arc::new(KvStats::default());
+        let per_row = cfg.seq.div_ceil(page_tokens);
+        let rows = (0..bsz)
+            .map(|_| RowTable {
+                pages: Vec::with_capacity(per_row),
+                ..RowTable::default()
+            })
+            .collect();
+        PagedKvCache {
+            bsz,
+            seq: cfg.seq,
+            dim: cfg.hidden,
+            page_tokens,
+            pool: PagePool::new(
+                cfg.blocks,
+                cfg.hidden,
+                page_tokens,
+                capacity_pages,
+                Arc::clone(&stats),
+            ),
+            rows,
+            reserved_unacquired: 0,
+            share: true,
+            prefix: PrefixIndex::default(),
+            stats,
+            pos: super::transformer::sinusoid(cfg.seq, cfg.hidden),
+        }
+    }
+
+    /// Disable prefix sharing (admission never maps existing pages and
+    /// prefill never registers them) — the cold comparison arm.
+    pub fn without_sharing(mut self) -> PagedKvCache {
+        self.share = false;
+        self
+    }
+
+    /// Report into an externally-owned stats probe instead of the
+    /// internal one (lets servers and benches observe the pool from
+    /// outside the engine's worker thread). Call before any admission.
+    pub fn with_stats(mut self, stats: Arc<KvStats>) -> PagedKvCache {
+        debug_assert_eq!(self.pool.resident_bytes(), 0);
+        self.pool.stats = Arc::clone(&stats);
+        self.stats = stats;
+        self
+    }
+
+    /// The shared stats handle (clone to observe from outside).
+    pub fn stats(&self) -> Arc<KvStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Count `m` positions as computed (the paged model path calls this;
+    /// the warm-prefill tests read it to prove shared positions were
+    /// skipped, not recomputed).
+    pub fn note_computed(&self, m: usize) {
+        self.stats.note_computed(m);
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.pool.resident_bytes()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.pool.free_pages()
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.pool.capacity_pages()
+    }
+
+    /// Resident bytes carrying `owner`'s tag (per-tenant ledger charge).
+    pub fn owner_bytes(&self, owner: u32) -> usize {
+        self.pool.owned_pages(owner) * self.pool.page_bytes()
+    }
+
+    /// Position-embedding row `p` (the sinusoid table slice).
+    pub fn pos_row(&self, p: usize) -> &[f32] {
+        &self.pos[p * self.dim..(p + 1) * self.dim]
+    }
+
+    /// Filled positions of `row`.
+    pub fn row_len(&self, row: usize) -> usize {
+        self.rows[row].len
+    }
+
+    /// Free pages not yet promised to an admitted row.
+    fn avail(&self) -> usize {
+        self.pool.free_pages() - self.reserved_unacquired
+    }
+
+    /// Admit `row` with `prompt`, reserving its worst-case page count
+    /// and mapping any shared prefix pages. Returns the first position
+    /// prefill must compute (`0` = cold, `s` = positions `0..s` are
+    /// already cached via sharing), or `None` when the pool cannot
+    /// cover the reservation even after evicting stale prefix
+    /// retentions — the caller keeps the request queued and retries;
+    /// nothing is held on failure.
+    ///
+    /// The shared length is capped at `prompt.len() - 1` so at least
+    /// the last prompt position is always computed (its logits seed
+    /// decoding).
+    pub fn admit_row(
+        &mut self,
+        row: usize,
+        prompt: &[i32],
+        owner: u32,
+    ) -> Option<usize> {
+        let p = self.page_tokens;
+        let rt = &mut self.rows[row];
+        assert!(
+            !rt.admitted && rt.pages.is_empty(),
+            "row {row} admitted twice without release"
+        );
+        debug_assert!(!prompt.is_empty() && prompt.len() <= self.seq);
+
+        // 1. walk the chain hash over the prompt's full pages, collecting
+        //    matched pages (token-compared, not just hash-matched)
+        let mut matched = 0usize;
+        if self.share {
+            let mut h = PREFIX_HASH_SEED;
+            for i in 0..prompt.len() / p {
+                h = chain_hash(h, &prompt[i * p..(i + 1) * p]);
+                match self.prefix.lookup(owner, h, &prompt[..(i + 1) * p]) {
+                    Some(pg) => {
+                        rt.pages.push(pg);
+                        matched = i + 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        let shared = if matched == 0 {
+            0
+        } else {
+            (matched * p).min(prompt.len() - 1)
+        };
+        // pages actually mapped: those covering positions 0..shared
+        rt.pages.truncate(shared.div_ceil(p));
+        // map = retain NOW, before any prefix eviction below could free
+        // a page we are counting on
+        for i in 0..rt.pages.len() {
+            self.pool.retain(rt.pages[i]);
+        }
+
+        // 2. reserve the worst case: every window page except the shared
+        //    pages this row will never write (a partially-shared boundary
+        //    page still counts — writing it costs a COW fork page)
+        let needed = self.seq.div_ceil(p) - shared / p;
+        while self.avail() < needed {
+            let Some(pg) = self.prefix.evict_lru() else { break };
+            self.pool.release(pg);
+        }
+        if self.avail() < needed {
+            // roll back: drop the mapped shares, hold nothing
+            let rt = &mut self.rows[row];
+            while let Some(pg) = rt.pages.pop() {
+                self.pool.release(pg);
+            }
+            return None;
+        }
+
+        self.reserved_unacquired += needed;
+        let rt = &mut self.rows[row];
+        rt.reserved = needed;
+        rt.len = shared;
+        rt.owner = owner;
+        rt.admitted = true;
+        self.stats
+            .shared_positions
+            .fetch_add(shared as u64, Ordering::SeqCst);
+        Some(shared)
+    }
+
+    /// Publish `row`'s freshly prefilled full prompt pages into the
+    /// prefix index so later admissions of the same prefix can share
+    /// them. Re-registering an identical prompt is a no-op (hash hit +
+    /// equal tokens), keeping the steady state allocation-free. Pages
+    /// already shared *from* the index (or COW forks of them) hash-hit
+    /// their existing entries and are skipped too.
+    pub fn register_prefix(&mut self, row: usize, prompt: &[i32]) {
+        if !self.share {
+            return;
+        }
+        let p = self.page_tokens;
+        let rt = &self.rows[row];
+        debug_assert!(rt.admitted && rt.len >= prompt.len());
+        let owner = rt.owner;
+        let mut h = PREFIX_HASH_SEED;
+        for i in 0..prompt.len() / p {
+            h = chain_hash(h, &prompt[i * p..(i + 1) * p]);
+            if self.prefix.contains(owner, h) {
+                // identical prefix already published (or a collision —
+                // first writer wins; lookups compare tokens anyway, and
+                // deeper levels of a broken chain could never be walked)
+                continue;
+            }
+            let pg = self.rows[row].pages[i];
+            self.pool.retain(pg);
+            self.prefix.insert(owner, h, prompt[..(i + 1) * p].to_vec(), pg);
+        }
+    }
+
+    /// Release every page reference `row` holds and return its unused
+    /// reservation; the row can be admitted again afterwards. Idempotent
+    /// (releasing a never-admitted row is a no-op), so cancel/deadline
+    /// sweeps can call it unconditionally. Pages also retained by the
+    /// prefix index or other rows stay resident; the rest return to the
+    /// free list — after a cancel storm the pool is back at its
+    /// prefix-retention baseline.
+    pub fn release_row(&mut self, row: usize) {
+        let rt = &mut self.rows[row];
+        if !rt.admitted {
+            return;
+        }
+        self.reserved_unacquired -= rt.reserved;
+        rt.reserved = 0;
+        rt.len = 0;
+        rt.admitted = false;
+        while let Some(pg) = rt.pages.pop() {
+            self.pool.release(pg);
+        }
+    }
+
+    /// Make position `pos` of `row` writable: acquire the next page at
+    /// a page boundary, or fork a shared page before the first write
+    /// into it (copy-on-write). Draws on the admission reservation, so
+    /// it cannot fail mid-decode.
+    pub fn prepare_write(&mut self, row: usize, pos: usize) {
+        let p = self.page_tokens;
+        let pi = pos / p;
+        let rt = &mut self.rows[row];
+        debug_assert!(rt.admitted && pos < self.seq);
+        debug_assert!(pi <= rt.pages.len(), "non-contiguous page write");
+        if pi == rt.pages.len() {
+            debug_assert!(rt.reserved > 0, "write past the admission reservation");
+            let owner = rt.owner;
+            let pg = self
+                .pool
+                .acquire(owner)
+                .expect("reservation guarantees a free page");
+            let rt = &mut self.rows[row];
+            rt.pages.push(pg);
+            rt.reserved -= 1;
+            self.reserved_unacquired -= 1;
+        } else if self.pool.refcnt[rt.pages[pi] as usize] > 1 {
+            // first write into a partially-shared page: fork a private
+            // copy so sharers keep seeing the original bits
+            debug_assert!(rt.reserved > 0, "write past the admission reservation");
+            let (owner, old) = (rt.owner, rt.pages[pi]);
+            let fresh = self
+                .pool
+                .acquire(owner)
+                .expect("reservation guarantees a free page");
+            self.pool.copy_page(old, fresh);
+            self.pool.release(old);
+            let rt = &mut self.rows[row];
+            rt.pages[pi] = fresh;
+            rt.reserved -= 1;
+            self.reserved_unacquired -= 1;
+            self.stats.cow_forks.fetch_add(1, Ordering::SeqCst);
+        }
+        let rt = &mut self.rows[row];
+        rt.len = rt.len.max(pos + 1);
+    }
+
+    /// Block `kb`'s cached K at `(row, pos)` — one `dim`-wide slice read
+    /// through the page table.
+    #[inline]
+    pub fn k_at(&self, row: usize, kb: usize, pos: usize) -> &[f32] {
+        let rt = &self.rows[row];
+        debug_assert!(pos < rt.len, "read of an unwritten position");
+        let off = self.pool.offset(
+            rt.pages[pos / self.page_tokens],
+            kb,
+            0,
+            pos % self.page_tokens,
+        );
+        &self.pool.data[off..off + self.dim]
+    }
+
+    /// Block `kb`'s cached V at `(row, pos)`.
+    #[inline]
+    pub fn v_at(&self, row: usize, kb: usize, pos: usize) -> &[f32] {
+        let rt = &self.rows[row];
+        debug_assert!(pos < rt.len, "read of an unwritten position");
+        let off = self.pool.offset(
+            rt.pages[pos / self.page_tokens],
+            kb,
+            1,
+            pos % self.page_tokens,
+        );
+        &self.pool.data[off..off + self.dim]
+    }
+
+    /// Write block `kb`'s K and V rows at `(row, pos)`. The page must
+    /// have been made writable by [`Self::prepare_write`] first.
+    pub fn write_kv(&mut self, row: usize, kb: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let rt = &self.rows[row];
+        debug_assert!(pos < rt.len);
+        let pg = rt.pages[pos / self.page_tokens];
+        debug_assert!(
+            self.pool.refcnt[pg as usize] == 1,
+            "write into a still-shared page (prepare_write not called?)"
+        );
+        let slot = pos % self.page_tokens;
+        let ko = self.pool.offset(pg, kb, 0, slot);
+        self.pool.data[ko..ko + self.dim].copy_from_slice(k);
+        let vo = self.pool.offset(pg, kb, 1, slot);
+        self.pool.data[vo..vo + self.dim].copy_from_slice(v);
+    }
+
+    /// Test hook: plant a prefix-index entry under an arbitrary hash
+    /// (backed by a real acquired page) to force a hash collision.
+    #[cfg(test)]
+    pub(crate) fn insert_prefix_raw(&mut self, owner: u32, hash: u64, tokens: Vec<i32>) {
+        let pg = self.pool.acquire(owner).expect("pool full in test");
+        self.prefix.insert(owner, hash, tokens, pg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn micro() -> ModelCfg {
+        let mut cfg = presets::tiny();
+        cfg.blocks = 2;
+        cfg.hidden = 8;
+        cfg.heads = 2;
+        cfg.kv_heads = 2;
+        cfg.seq = 8;
+        cfg
+    }
+
+    /// Fill positions `0..n` of `row` with a per-position marker.
+    fn fill(cache: &mut PagedKvCache, row: usize, n: usize, tag: f32) {
+        let d = cache.dim;
+        for pos in 0..n {
+            cache.prepare_write(row, pos);
+            for kb in 0..2 {
+                let val = tag + pos as f32 + kb as f32 * 0.25;
+                cache.write_kv(row, kb, pos, &vec![val; d], &vec![-val; d]);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_acquire_release_roundtrip_tracks_resident_bytes() {
+        let stats = Arc::new(KvStats::default());
+        let mut pool = PagePool::new(2, 8, 4, 3, Arc::clone(&stats));
+        assert_eq!(pool.free_pages(), 3);
+        assert_eq!(pool.resident_bytes(), 0);
+        let a = pool.acquire(7).unwrap();
+        let b = pool.acquire(7).unwrap();
+        assert_eq!(pool.free_pages(), 1);
+        assert_eq!(pool.resident_bytes(), 2 * pool.page_bytes());
+        assert_eq!(stats.resident_bytes(), 2 * pool.page_bytes());
+        assert_eq!(pool.owned_pages(7), 2);
+        pool.retain(a);
+        pool.release(a); // still referenced
+        assert_eq!(pool.free_pages(), 1);
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.free_pages(), 3);
+        assert_eq!(pool.resident_bytes(), 0);
+        assert_eq!(stats.resident_bytes(), 0);
+        assert_eq!(stats.peak_resident_bytes(), 2 * pool.page_bytes());
+        let c = pool.acquire(1).unwrap();
+        assert!((c as usize) < 3);
+    }
+
+    #[test]
+    fn admission_reserves_worst_case_and_declines_when_full() {
+        let cfg = micro(); // seq 8
+        // 2 pages per row, pool of 3: one full row + one page of slack
+        let mut cache = PagedKvCache::new(&cfg, 2, 4, 3);
+        assert_eq!(cache.admit_row(0, &[1, 2, 3], 0), Some(0));
+        // row 0 acquired nothing yet, but its 2-page reservation stands:
+        // a second 2-page admission cannot be covered by the 1 free page
+        assert_eq!(cache.admit_row(1, &[4, 5], 0), None);
+        let r1 = &cache.rows[1];
+        assert!(!r1.admitted && r1.pages.is_empty() && r1.reserved == 0);
+        // a release returns the reservation and admission succeeds
+        cache.release_row(0);
+        assert_eq!(cache.admit_row(1, &[4, 5], 0), Some(0));
+    }
+
+    #[test]
+    fn cancel_storm_returns_pool_to_baseline() {
+        let cfg = micro();
+        let mut cache = PagedKvCache::new(&cfg, 4, 4, 8).without_sharing();
+        for storm in 0..10 {
+            for row in 0..4 {
+                assert_eq!(cache.admit_row(row, &[1, 2, 3, 4, 5], 0), Some(0));
+                // partial fill: mid-decode cancellation leaves pages
+                // acquired and reservation partly drawn
+                fill(&mut cache, row, 3 + row, storm as f32);
+            }
+            assert!(cache.resident_bytes() > 0);
+            for row in 0..4 {
+                cache.release_row(row);
+            }
+            assert_eq!(cache.resident_bytes(), 0, "leaked pages after storm");
+            assert_eq!(cache.free_pages(), cache.capacity_pages());
+            assert_eq!(cache.reserved_unacquired, 0);
+        }
+    }
+
+    #[test]
+    fn prefix_sharing_maps_pages_and_caps_at_last_position() {
+        let cfg = micro();
+        let mut cache = PagedKvCache::new(&cfg, 3, 2, 12);
+        let prompt = [10, 11, 12, 13, 14]; // 2 full pages + 1 slot
+        assert_eq!(cache.admit_row(0, &prompt, 0), Some(0));
+        fill(&mut cache, 0, 5, 100.0);
+        cache.register_prefix(0, &prompt);
+        let baseline = cache.resident_bytes();
+
+        // same prompt, longer tail: shares both full pages
+        let longer = [10, 11, 12, 13, 14, 15, 16];
+        let shared = cache.admit_row(1, &longer, 0).unwrap();
+        assert_eq!(shared, 4);
+        assert_eq!(cache.rows[1].pages.len(), 2);
+        assert_eq!(cache.rows[1].pages[..2], cache.rows[0].pages[..2]);
+        // mapping bumped refcounts, not pages: nothing new resident
+        assert_eq!(cache.resident_bytes(), baseline);
+        // shared reads see row 0's bits
+        assert_eq!(cache.k_at(1, 0, 2), cache.k_at(0, 0, 2));
+
+        // identical prompt: shared capped at prompt_len - 1 so the last
+        // position is still computed
+        let shared = cache.admit_row(2, &prompt, 0).unwrap();
+        assert_eq!(shared, 4);
+
+        // a different owner never shares
+        cache.release_row(2);
+        assert_eq!(cache.admit_row(2, &prompt, 9), Some(0));
+        assert_eq!(cache.stats().shared_positions(), 8);
+    }
+
+    #[test]
+    fn cow_fork_on_write_into_partially_shared_page() {
+        let cfg = micro();
+        let mut cache = PagedKvCache::new(&cfg, 2, 2, 10);
+        let prompt = [20, 21, 22, 23]; // exactly 2 full pages
+        cache.admit_row(0, &prompt, 0).unwrap();
+        fill(&mut cache, 0, 4, 0.0);
+        cache.register_prefix(0, &prompt);
+
+        // identical prompt: shared = 3, boundary page (positions 2..4)
+        // is mapped shared and will be written at position 3
+        let shared = cache.admit_row(1, &prompt, 0).unwrap();
+        assert_eq!(shared, 3);
+        let shared_page = cache.rows[1].pages[1];
+        assert_eq!(shared_page, cache.rows[0].pages[1]);
+
+        cache.prepare_write(1, 3);
+        assert_eq!(cache.stats().cow_forks(), 1);
+        let forked = cache.rows[1].pages[1];
+        assert_ne!(forked, shared_page, "write went into the shared page");
+        // the fork carried the shared bits at the untouched position 2
+        assert_eq!(cache.k_at(1, 0, 2), cache.k_at(0, 0, 2).to_vec());
+        // a divergent write is invisible to the original row
+        let d = cache.dim;
+        cache.write_kv(1, 0, 3, &vec![77.0; d], &vec![-77.0; d]);
+        assert_eq!(cache.k_at(0, 0, 3), vec![3.0_f32; d]);
+        assert_eq!(cache.k_at(1, 0, 3), vec![77.0; d]);
+        // page 0 (fully shared, never written) is still shared
+        assert_eq!(cache.rows[1].pages[0], cache.rows[0].pages[0]);
+    }
+
+    #[test]
+    fn prefix_hash_collision_rejected_by_token_compare() {
+        let cfg = micro();
+        let mut cache = PagedKvCache::new(&cfg, 1, 2, 8);
+        let prompt = [30, 31, 32];
+        // plant an entry under the exact chain hash of prompt's first
+        // page but with different tokens — a forced collision
+        let h = chain_hash(PREFIX_HASH_SEED, &prompt[..2]);
+        cache.insert_prefix_raw(0, h, vec![99, 98]);
+        // admission must refuse to share: token compare fails
+        assert_eq!(cache.admit_row(0, &prompt, 0), Some(0));
+        assert_eq!(cache.stats().shared_positions(), 0);
+    }
+
+    #[test]
+    fn stale_prefix_retentions_evicted_to_cover_reservation() {
+        let cfg = micro(); // seq 8, P=4 -> 2 pages per row
+        let mut cache = PagedKvCache::new(&cfg, 2, 4, 4);
+        let prompt = [1, 2, 3, 4, 5, 6, 7];
+        cache.admit_row(0, &prompt, 0).unwrap();
+        fill(&mut cache, 0, 7, 0.0);
+        cache.register_prefix(0, &prompt);
+        cache.release_row(0);
+        // the index retains 1 full page; 2 rows of cold admissions need
+        // all 4 pages -> the retention must be evicted, not block
+        assert_eq!(cache.resident_bytes(), cache.pool.page_bytes());
+        let a = cache.admit_row(0, &[9, 9, 9, 9, 9, 9], 1).unwrap();
+        let b = cache.admit_row(1, &[8, 8, 8, 8, 8, 8], 1).unwrap();
+        assert_eq!((a, b), (0, 0));
+        fill(&mut cache, 0, 6, 1.0);
+        fill(&mut cache, 1, 6, 2.0);
+        assert_eq!(cache.free_pages(), 0);
+    }
+
+    #[test]
+    fn owner_bytes_partition_the_pool() {
+        let cfg = micro();
+        let mut cache = PagedKvCache::new(&cfg, 4, 4, 8);
+        cache.admit_row(0, &[1, 2, 3, 4, 5], 3).unwrap();
+        fill(&mut cache, 0, 5, 0.0);
+        cache.admit_row(1, &[6, 7], 4).unwrap();
+        fill(&mut cache, 1, 2, 0.0);
+        assert_eq!(
+            cache.owner_bytes(3) + cache.owner_bytes(4),
+            cache.resident_bytes()
+        );
+    }
+}

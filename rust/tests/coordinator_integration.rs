@@ -6,8 +6,8 @@
 use mos::adapter::mos::router::build_router;
 use mos::config::{presets, MethodCfg};
 use mos::coordinator::{
-    GenOptions, HostEngine, Registry, ServeEngine, Server, ServerCfg,
-    TenantSpec,
+    EngineRun, GenOptions, HostEngine, Registry, ServeEngine, Server,
+    ServerCfg, TenantSpec,
 };
 use mos::data::tasks::{Task, TaskKind};
 use mos::data::Tokenizer;
@@ -42,22 +42,37 @@ impl ServeEngine for SlowStepEngine {
     }
     fn prefill_rows(
         &mut self,
-        tenant: &mos::coordinator::Tenant,
-        adapter: &mos::adapter::ServingAdapter,
+        runs: &[EngineRun],
         rows: &[usize],
         tokens: &[i32],
         last: &[usize],
     ) -> anyhow::Result<Vec<f32>> {
-        self.inner.prefill_rows(tenant, adapter, rows, tokens, last)
+        self.inner.prefill_rows(runs, rows, tokens, last)
     }
     fn decode_rows(
         &mut self,
-        tenant: &mos::coordinator::Tenant,
-        adapter: &mos::adapter::ServingAdapter,
+        runs: &[EngineRun],
         entries: &[(usize, usize, i32)],
     ) -> anyhow::Result<Vec<f32>> {
         std::thread::sleep(self.step_delay);
-        self.inner.decode_rows(tenant, adapter, entries)
+        self.inner.decode_rows(runs, entries)
+    }
+    fn kv_admit(
+        &mut self,
+        row: usize,
+        tenant: &mos::coordinator::Tenant,
+        prompt: &[i32],
+    ) -> bool {
+        self.inner.kv_admit(row, tenant, prompt)
+    }
+    fn kv_release(&mut self, row: usize) {
+        self.inner.kv_release(row)
+    }
+    fn kv_tenant_bytes(&self, tenant: &mos::coordinator::Tenant) -> usize {
+        self.inner.kv_tenant_bytes(tenant)
+    }
+    fn kv_resident_bytes(&self) -> usize {
+        self.inner.kv_resident_bytes()
     }
 }
 

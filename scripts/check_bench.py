@@ -30,6 +30,9 @@ SERVING_CASE = [
     "tenants",
     "decode",
     "prefill",
+    "kv",
+    "prefix",
+    "prompts",
     "adapter",
     "max_batch",
     "req_per_s",
@@ -40,6 +43,7 @@ SERVING_CASE = [
     "tok_per_s",
     "alloc_mb",
     "adapter_mb",
+    "kv_mb",
 ]
 # the sweep must actually contain the arms the ROADMAP row compares
 SERVING_ARMS = [
@@ -47,6 +51,10 @@ SERVING_ARMS = [
     {"decode": "kv_step", "prefill": "lean", "adapter": "dense"},
     {"decode": "kv_step", "prefill": "full_fwd_prefill"},
     {"decode": "full_fwd"},
+    {"decode": "kv_step", "kv": "paged", "prefix": "cold", "prompts": "uniq"},
+    {"decode": "kv_step", "kv": "paged", "prefix": "cold", "prompts": "shared"},
+    {"decode": "kv_step", "kv": "fixed"},
+    {"decode": "kv_step", "kv": "paged", "prefix": "warm"},
 ]
 
 

@@ -11,8 +11,11 @@ Default mode prints the GEMM row matching the ROADMAP Perf table columns:
 --serving prints the serving-trajectory row (prefill ratio is
 full_fwd_prefill p50 / lean p50 — the lean speedup, expect >> 1; the
 adapter column is measured resident adapter MB at the largest tenant
-count, pooled vs dense-materialized — the PR-6 memory claim):
-| PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full | adapter MB pooled vs dense |
+count, pooled vs dense-materialized — the PR-6 memory claim; the kv
+column is peak resident KV MB, paged pool vs fixed window, and the
+warm/cold column is cold prefill p50 / warm shared-prefix prefill p50 —
+both PR-7 claims):
+| PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full | adapter MB pooled vs dense | kv MB paged vs fixed | prefill p50 cold/warm |
 
 CI appends both to the job summary and uploads the raw JSON as an
 artifact; the next PR pastes the rows into ROADMAP.md.
@@ -55,10 +58,31 @@ def serving_row(path: str) -> str:
         # largest tenant count = the most serving-like point of the sweep
         return max(rows, key=lambda c: c.get("tenants", 0)) if rows else None
 
-    lean = pick(decode="kv_step", prefill="lean", max_batch=8, adapter="pooled")
+    lean = pick(
+        decode="kv_step",
+        prefill="lean",
+        max_batch=8,
+        adapter="pooled",
+        prefix="cold",
+        kv="paged",
+        prompts="uniq",
+    )
     full_pre = pick(decode="kv_step", prefill="full_fwd_prefill", max_batch=8)
     full_fwd = pick(decode="full_fwd", max_batch=8)
-    dense_ad = pick(decode="kv_step", prefill="lean", max_batch=8, adapter="dense")
+    dense_ad = pick(
+        decode="kv_step",
+        prefill="lean",
+        max_batch=8,
+        adapter="dense",
+        prefix="cold",
+    )
+    fixed_kv = pick(decode="kv_step", kv="fixed", prefill="lean", max_batch=8)
+    warm = pick(decode="kv_step", kv="paged", prefix="warm", max_batch=8)
+    # cold control for the warm ratio: the SAME shared-prefix prompt set
+    # with sharing disabled, so the ratio isolates the COW prefix reuse
+    cold_shared = pick(
+        decode="kv_step", kv="paged", prefix="cold", prompts="shared", max_batch=8
+    )
 
     def ratio(a, b, key):
         if not a or not b or not b.get(key):
@@ -70,8 +94,8 @@ def serving_row(path: str) -> str:
 
     return (
         "| {} | {} | {:.2f}x | {:.2f}x | {:.1f} | {:.0f} vs {:.0f} "
-        "| {:.2f} vs {:.2f} |".format(
-            pr_arg("6 (pooled serving)"),
+        "| {:.2f} vs {:.2f} | {:.3f} vs {:.3f} | {:.2f}x |".format(
+            pr_arg("7 (paged KV)"),
             machine(),
             ratio(lean, full_fwd, "tok_per_s"),
             ratio(full_pre, lean, "prefill_p50_ms"),
@@ -80,6 +104,9 @@ def serving_row(path: str) -> str:
             val(full_pre, "alloc_mb"),
             val(lean, "adapter_mb"),
             val(dense_ad, "adapter_mb"),
+            val(lean, "kv_mb"),
+            val(fixed_kv, "kv_mb"),
+            ratio(cold_shared, warm, "prefill_p50_ms"),
         )
     )
 

@@ -1,0 +1,165 @@
+//! Traffic-replay bench: the load harness drives the serving stack with
+//! the six named adversarial traffic shapes (steady Poisson, bursty,
+//! diurnal ramp, hot-tenant Zipfian skew over a 1k+ tenant pooled tier,
+//! cancel storm, tight-deadline mix), each expanded deterministically
+//! from a seed by `loadgen::plan`. By default requests go straight into
+//! `Server::submit`; with MOS_TRAFFIC_HTTP=1 they go through the HTTP
+//! front door on a loopback socket instead — same shapes, same seeds,
+//! plus the network edge (cancellations become connection drops).
+//!
+//! Emits BENCH_traffic.json with per-shape p50/p99 ttft and latency,
+//! tok/s, and reject/expire/cancel counts — gated by
+//! scripts/check_bench.py and rendered into the ROADMAP trajectory table
+//! by scripts/perf_row.py --traffic.
+//!
+//! Run: cargo bench --bench bench_traffic
+//! Knobs: MOS_TRAFFIC_REQS (default 32, per shape), MOS_TRAFFIC_SEED
+//! (default 0), MOS_TRAFFIC_SHAPES (csv of shape names, default all six),
+//! MOS_TRAFFIC_HTTP (1 = drive the front door), MOS_TRAFFIC_ZIPF_TENANTS
+//! (default 1200), MOS_BENCH_OUT (dir for BENCH_traffic.json, default .)
+
+use mos::bench::Table;
+use mos::config::presets;
+use mos::coordinator::{HostEngine, Registry, Server, ServerCfg};
+use mos::frontend::{Frontend, FrontendCfg};
+use mos::loadgen::{
+    register_tenants, register_tenants_http, run_shape, HttpClient,
+    InProcessClient, Shape, ShapeReport, TrafficCfg, ALL_SHAPES,
+};
+use mos::util::json::Json;
+use std::sync::Arc;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// One shape = one fresh server (and, in HTTP mode, one fresh front
+/// door): shapes must not share queue state or KV residue.
+fn run_one(cfg: &TrafficCfg, over_http: bool) -> ShapeReport {
+    let model = presets::tiny();
+    let registry = Arc::new(Registry::new(model.clone(), 1 << 30));
+    let mut server = Server::new(
+        registry,
+        ServerCfg {
+            cache_capacity: cfg.tenants.clamp(64, 2048),
+            ..ServerCfg::default()
+        },
+    );
+    let model2 = model.clone();
+    server.start(2, move |_| HostEngine::new(model2.clone(), 0));
+    let server = Arc::new(server);
+    if over_http {
+        let mut fe = Frontend::start(
+            Arc::clone(&server),
+            "127.0.0.1:0",
+            FrontendCfg::default(),
+        )
+        .expect("frontend bind");
+        let addr = fe.local_addr();
+        register_tenants_http(addr, cfg.tenants)
+            .expect("tenant registration over HTTP");
+        let report = run_shape(cfg, Arc::new(HttpClient::new(addr)));
+        fe.shutdown();
+        report
+    } else {
+        register_tenants(&server, cfg.tenants)
+            .expect("tenant registration");
+        let client = InProcessClient::new(Arc::clone(&server));
+        run_shape(cfg, Arc::new(client))
+    }
+}
+
+fn main() {
+    let requests = env_usize("MOS_TRAFFIC_REQS", 32);
+    let seed = env_usize("MOS_TRAFFIC_SEED", 0) as u64;
+    let over_http = std::env::var("MOS_TRAFFIC_HTTP")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let zipf_tenants = env_usize("MOS_TRAFFIC_ZIPF_TENANTS", 1200);
+    let shapes: Vec<Shape> = match std::env::var("MOS_TRAFFIC_SHAPES") {
+        Ok(csv) => csv
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| Shape::parse(s).unwrap_or_else(|| {
+                panic!("unknown shape '{s}' in MOS_TRAFFIC_SHAPES")
+            }))
+            .collect(),
+        Err(_) => ALL_SHAPES.to_vec(),
+    };
+
+    let target = if over_http { "http" } else { "in_process" };
+    eprintln!(
+        "[traffic] target={target} requests/shape={requests} seed={seed}"
+    );
+    let mut table = Table::new(
+        &format!("traffic replay ({target}, seed {seed})"),
+        &[
+            "shape", "reqs", "tenants", "ok", "rej", "exp", "cxl", "err",
+            "ttft p50", "ttft p99", "lat p50", "lat p99", "tok/s",
+        ],
+    );
+    let mut json_shapes = Vec::new();
+    for shape in shapes {
+        let mut cfg = TrafficCfg::named(shape, requests, seed);
+        if shape == Shape::Zipf {
+            cfg.tenants = zipf_tenants;
+        }
+        let r = run_one(&cfg, over_http);
+        eprintln!(
+            "[traffic] {} done: {}/{} ok, {} rej, {} exp, {} cxl, {} err, \
+             ttft p50={:.1}ms p99={:.1}ms, {:.0} tok/s",
+            r.shape,
+            r.completed,
+            r.requests,
+            r.rejected,
+            r.expired,
+            r.cancelled,
+            r.errors,
+            r.ttft_p50_ms,
+            r.ttft_p99_ms,
+            r.tok_per_s,
+        );
+        table.row(vec![
+            r.shape.clone(),
+            r.requests.to_string(),
+            r.tenants.to_string(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            r.expired.to_string(),
+            r.cancelled.to_string(),
+            r.errors.to_string(),
+            format!("{:.1}", r.ttft_p50_ms),
+            format!("{:.1}", r.ttft_p99_ms),
+            format!("{:.1}", r.latency_p50_ms),
+            format!("{:.1}", r.latency_p99_ms),
+            format!("{:.0}", r.tok_per_s),
+        ]);
+        json_shapes.push(r.to_json());
+    }
+    table.print();
+    println!(
+        "\nreproduction target: the pooled tier absorbs every shape \
+         without eviction thrash — the Zipfian arm serves a 1k+ tenant \
+         universe from shared shard pools, bursts degrade to queueing \
+         (rejects only past the admission bound, never errors), cancel \
+         storms return admission slots and KV pages, and tight deadlines \
+         expire cleanly at decode-step boundaries."
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("traffic")),
+        ("seed", Json::num(seed as f64)),
+        ("requests_per_shape", Json::num(requests as f64)),
+        ("target", Json::str(target)),
+        ("shapes", Json::Arr(json_shapes)),
+    ]);
+    let out_dir = std::env::var("MOS_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out_dir).join("BENCH_traffic.json");
+    std::fs::write(&path, json.to_string_pretty() + "\n")
+        .expect("write BENCH_traffic.json");
+    eprintln!("[traffic] wrote {}", path.display());
+}

@@ -173,6 +173,7 @@ fn purge(q: &mut Queues, metrics: &Metrics) {
         return;
     }
     q.total -= dropped;
+    metrics.set_queue_depth(q.total);
     let Queues { by_tenant, ready, .. } = q;
     ready.retain(|t| by_tenant.get(t).is_some_and(|r| !r.is_empty()));
     by_tenant.retain(|_, r| !r.is_empty());
@@ -220,6 +221,7 @@ impl Batcher {
             purge(&mut guard, &self.metrics);
             if at_limit(&guard) {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.record_tenant_rejected(&req.tenant);
                 return Err(ServeError::QueueFull { tenant: req.tenant });
             }
         }
@@ -232,6 +234,7 @@ impl Batcher {
             .or_default()
             .push_back(req);
         q.total += 1;
+        self.metrics.set_queue_depth(q.total);
         self.cv.notify_one();
         Ok(())
     }
@@ -266,6 +269,7 @@ impl Batcher {
         let take = reqs.len().min(max);
         let out: Vec<Request> = reqs.drain(..take).collect();
         q.total -= take;
+        self.metrics.set_queue_depth(q.total);
         if reqs.is_empty() {
             q.by_tenant.remove(tenant);
             q.ready.retain(|t| t != tenant);
@@ -297,6 +301,7 @@ impl Batcher {
                 q.ready.pop_front();
             }
         }
+        self.metrics.set_queue_depth(q.total);
         out
     }
 
@@ -364,6 +369,7 @@ impl Batcher {
                         }
                     }
                 }
+                self.metrics.set_queue_depth(q.total);
                 return Some(batch);
             }
             if q.closed && q.total == 0 {

@@ -1,7 +1,11 @@
 //! Serving metrics: latency + time-to-first-token histograms (log-spaced
-//! buckets), counters, and percentile snapshots for the serving benches.
+//! buckets), counters, and percentile snapshots for the serving benches
+//! and the front door's `/metrics` endpoint ([`Metrics::snapshot`]).
 
+use crate::util::json::Json;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 const BUCKETS: usize = 40;
@@ -114,6 +118,20 @@ pub struct Metrics {
     pub refilled: AtomicU64,
     pub generated_tokens: AtomicU64,
     total_latency_us: AtomicU64,
+    /// Current batcher queue depth. A gauge, not a counter: the batcher
+    /// sets it to the post-mutation depth under its own queue lock, so at
+    /// any quiescent point it equals `Batcher::depth()` exactly.
+    queue_depth: AtomicU64,
+    /// Per-tenant outcome counters keyed by tenant id: requests resolved
+    /// `Ok` (served) and admission-control rejections (rejected).
+    per_tenant: Mutex<HashMap<String, TenantCounters>>,
+}
+
+/// Per-tenant slice of the serving counters.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TenantCounters {
+    pub served: u64,
+    pub rejected: u64,
 }
 
 impl Metrics {
@@ -173,6 +191,88 @@ impl Metrics {
             return 0.0;
         }
         self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Set the queue-depth gauge. Called by the batcher with the
+    /// post-mutation depth while its queue lock is held.
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Last queue depth published by the batcher.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Count a request for `tenant` resolved `Ok`.
+    pub fn record_served(&self, tenant: &str) {
+        let mut map = self.per_tenant.lock().unwrap();
+        map.entry(tenant.to_string()).or_default().served += 1;
+    }
+
+    /// Count an admission-control rejection for `tenant`.
+    pub fn record_tenant_rejected(&self, tenant: &str) {
+        let mut map = self.per_tenant.lock().unwrap();
+        map.entry(tenant.to_string()).or_default().rejected += 1;
+    }
+
+    /// Per-tenant counters for `tenant` (zeros when it has no traffic).
+    pub fn tenant_counters(&self, tenant: &str) -> TenantCounters {
+        self.per_tenant
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Point-in-time JSON export of every counter, the queue-depth gauge,
+    /// latency/ttft/prefill percentiles (ms), and the per-tenant
+    /// served/rejected table — the payload behind the front door's
+    /// `GET /metrics`.
+    pub fn snapshot(&self) -> Json {
+        let c = |a: &AtomicU64| Json::num(a.load(Ordering::Relaxed) as f64);
+        let hist = |h: &Histogram| {
+            Json::obj(vec![
+                ("p50_ms", Json::num(h.percentile_us(50.0) / 1e3)),
+                ("p95_ms", Json::num(h.percentile_us(95.0) / 1e3)),
+                ("p99_ms", Json::num(h.percentile_us(99.0) / 1e3)),
+                ("count", Json::num(h.count() as f64)),
+            ])
+        };
+        let tenants = self
+            .per_tenant
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, t)| {
+                (
+                    id.clone(),
+                    Json::obj(vec![
+                        ("served", Json::num(t.served as f64)),
+                        ("rejected", Json::num(t.rejected as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("requests", c(&self.requests)),
+            ("completed", c(&self.completed)),
+            ("errors", c(&self.errors)),
+            ("rejected", c(&self.rejected)),
+            ("cancelled", c(&self.cancelled)),
+            ("expired", c(&self.expired)),
+            ("batches", c(&self.batches)),
+            ("refilled", c(&self.refilled)),
+            ("generated_tokens", c(&self.generated_tokens)),
+            ("queue_depth", c(&self.queue_depth)),
+            ("mean_latency_ms", Json::num(self.mean_latency_us() / 1e3)),
+            ("mean_batch_size", Json::num(self.mean_batch_size())),
+            ("latency", hist(&self.latency)),
+            ("ttft", hist(&self.ttft)),
+            ("prefill", hist(&self.prefill)),
+            ("tenants", Json::Obj(tenants)),
+        ])
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -317,6 +417,95 @@ mod tests {
         let b = bucket_of(300);
         assert!((bucket_lower(b)..bucket_lower(b + 1)).contains(&p));
         assert!(p < m.ttft_percentile_us(50.0));
+    }
+
+    #[test]
+    fn snapshot_shape_and_values() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(Duration::from_micros(800));
+        m.record_ttft(Duration::from_micros(100));
+        m.record_batch(2);
+        m.set_queue_depth(5);
+        m.record_served("alice");
+        m.record_served("alice");
+        m.record_tenant_rejected("bob");
+        let snap = m.snapshot();
+        // every top-level key the /metrics consumers rely on
+        for key in [
+            "requests",
+            "completed",
+            "errors",
+            "rejected",
+            "cancelled",
+            "expired",
+            "batches",
+            "refilled",
+            "generated_tokens",
+            "queue_depth",
+            "mean_latency_ms",
+            "mean_batch_size",
+            "latency",
+            "ttft",
+            "prefill",
+            "tenants",
+        ] {
+            assert!(snap.get(key).is_some(), "snapshot missing '{key}'");
+        }
+        assert_eq!(snap.req_usize("requests").unwrap(), 3);
+        assert_eq!(snap.req_usize("completed").unwrap(), 1);
+        assert_eq!(snap.req_usize("queue_depth").unwrap(), 5);
+        for h in ["latency", "ttft", "prefill"] {
+            let sub = snap.get(h).unwrap();
+            for k in ["p50_ms", "p95_ms", "p99_ms", "count"] {
+                assert!(sub.get(k).is_some(), "{h} missing '{k}'");
+            }
+        }
+        assert_eq!(snap.get("latency").unwrap().req_usize("count").unwrap(), 1);
+        let alice = snap.get("tenants").unwrap().get("alice").unwrap();
+        assert_eq!(alice.req_usize("served").unwrap(), 2);
+        assert_eq!(alice.req_usize("rejected").unwrap(), 0);
+        let bob = snap.get("tenants").unwrap().get("bob").unwrap();
+        assert_eq!(bob.req_usize("rejected").unwrap(), 1);
+        // the export must round-trip through the hand-rolled serializer
+        let parsed = Json::parse(&snap.to_string()).unwrap();
+        assert_eq!(parsed.req_usize("queue_depth").unwrap(), 5);
+    }
+
+    #[test]
+    fn tenant_counters_default_zero() {
+        let m = Metrics::new();
+        let t = m.tenant_counters("ghost");
+        assert_eq!((t.served, t.rejected), (0, 0));
+    }
+
+    #[test]
+    fn gauge_consistent_under_concurrent_updates() {
+        // writers race set_queue_depth with disjoint values; the gauge
+        // must always read one of the written values (no torn or stale-
+        // forever reads) and settle on the final published depth
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for w in 0..4u64 {
+            let m = std::sync::Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    m.set_queue_depth((w * 1000 + i) as usize);
+                    m.record_served(&format!("t{w}"));
+                    let d = m.queue_depth();
+                    assert!(d < 4000, "impossible gauge value {d}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        m.set_queue_depth(7);
+        assert_eq!(m.queue_depth(), 7);
+        // per-tenant counters saw every increment despite the contention
+        for w in 0..4u64 {
+            assert_eq!(m.tenant_counters(&format!("t{w}")).served, 500);
+        }
     }
 
     #[test]

@@ -975,6 +975,7 @@ fn sweep_finished(
         } else {
             let latency = slot.req.enqueued.elapsed();
             metrics.record_latency(latency);
+            metrics.record_served(&slot.req.tenant);
             if !slot.ttft_recorded {
                 // zero-token generations: first (only) signal is resolution
                 metrics.record_ttft(latency);
@@ -2044,5 +2045,219 @@ mod tests {
         // both resolved; ids are distinct and stable
         assert_ne!(r1.id, r2.id);
         server.shutdown();
+    }
+
+    /// Stepping engine with a per-decode-step delay, so tests can observe
+    /// (and interrupt) a generation mid-flight without racing the real
+    /// decode speed.
+    struct SlowStepEngine {
+        inner: HostEngine,
+        step_delay: Duration,
+    }
+
+    impl ServeEngine for SlowStepEngine {
+        fn forward(
+            &mut self,
+            tenant: &Tenant,
+            adapter: &ServingAdapter,
+            tokens: &[i32],
+        ) -> Result<Vec<f32>> {
+            self.inner.forward(tenant, adapter, tokens)
+        }
+        fn shape(&self) -> (usize, usize, usize) {
+            self.inner.shape()
+        }
+        fn supports_steps(&self) -> bool {
+            true
+        }
+        fn prefill_rows(
+            &mut self,
+            runs: &[EngineRun],
+            rows: &[usize],
+            tokens: &[i32],
+            last: &[usize],
+        ) -> Result<Vec<f32>> {
+            self.inner.prefill_rows(runs, rows, tokens, last)
+        }
+        fn decode_rows(
+            &mut self,
+            runs: &[EngineRun],
+            entries: &[(usize, usize, i32)],
+        ) -> Result<Vec<f32>> {
+            thread::sleep(self.step_delay);
+            self.inner.decode_rows(runs, entries)
+        }
+        fn kv_admit(
+            &mut self,
+            row: usize,
+            tenant: &Tenant,
+            prompt: &[i32],
+        ) -> bool {
+            self.inner.kv_admit(row, tenant, prompt)
+        }
+        fn kv_release(&mut self, row: usize) {
+            self.inner.kv_release(row)
+        }
+        fn kv_tenant_bytes(&self, tenant: &Tenant) -> usize {
+            self.inner.kv_tenant_bytes(tenant)
+        }
+        fn kv_resident_bytes(&self) -> usize {
+            self.inner.kv_resident_bytes()
+        }
+    }
+
+    fn slow_server(step_delay: Duration) -> (Server, crate::config::ModelCfg) {
+        let (mut server, cfg) = make_server(1 << 30);
+        server.register("alice", spec(1)).unwrap();
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| SlowStepEngine {
+            inner: HostEngine::new(cfg2.clone(), 0),
+            step_delay,
+        });
+        (server, cfg)
+    }
+
+    /// Poll a handle the way a streaming front end does: bounded
+    /// `recv_token_timeout` ticks, terminal-result check on every timeout,
+    /// buffered tokens drained after resolution. Panics on a hang.
+    fn pump_stream(h: &ResponseHandle) -> (usize, ServeResult) {
+        let t0 = Instant::now();
+        loop {
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "stream receiver hung: neither tokens nor a resolution"
+            );
+            let mut tokens = 0usize;
+            match h.recv_token_timeout(Duration::from_millis(20)) {
+                Some(_) => tokens = 1,
+                None => {
+                    if let Some(res) = h.try_wait() {
+                        // tokens sent before the resolution may still be
+                        // buffered — drain so the count is exact
+                        while h.try_recv_token().is_some() {
+                            tokens += 1;
+                        }
+                        return (tokens, res);
+                    }
+                }
+            }
+            if tokens > 0 {
+                let (more, res) = pump_rest(h, t0);
+                return (tokens + more, res);
+            }
+        }
+    }
+
+    fn pump_rest(h: &ResponseHandle, t0: Instant) -> (usize, ServeResult) {
+        let mut tokens = 0usize;
+        loop {
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "stream receiver hung mid-generation"
+            );
+            match h.recv_token_timeout(Duration::from_millis(20)) {
+                Some(_) => tokens += 1,
+                None => {
+                    if let Some(res) = h.try_wait() {
+                        while h.try_recv_token().is_some() {
+                            tokens += 1;
+                        }
+                        return (tokens, res);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recv_token_timeout_wakes_on_cancel_mid_stream() {
+        // a streaming consumer blocked in recv_token_timeout must observe
+        // a mid-decode cancel promptly: stream closes, handle resolves
+        // Cancelled, admission depth returns, and the server keeps serving
+        let (mut server, _cfg) = slow_server(Duration::from_millis(3));
+        let h = server
+            .submit(
+                "alice",
+                "q:cancel",
+                GenOptions::greedy().max_new_tokens(40),
+            )
+            .unwrap();
+        // wait until it is demonstrably mid-decode
+        assert!(
+            h.recv_token_timeout(Duration::from_secs(10)).is_some(),
+            "no first token"
+        );
+        h.cancel();
+        let t0 = Instant::now();
+        let (_tokens, res) = pump_rest(&h, t0);
+        assert_eq!(res, Err(ServeError::Cancelled));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "cancel wakeup stalled"
+        );
+        assert_eq!(server.batcher.depth(), 0, "cancel leaked queue depth");
+        let h2 = server
+            .submit("alice", "q:after", GenOptions::greedy())
+            .unwrap();
+        assert!(h2.wait_timeout(Duration::from_secs(30)).unwrap().is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn recv_token_timeout_wakes_on_deadline_expiry() {
+        // 3ms/step × 40 tokens against a 25ms budget: the deadline lapses
+        // mid-decode and the blocked receiver must resolve Deadline, not
+        // spin until max_new_tokens
+        let (mut server, _cfg) = slow_server(Duration::from_millis(3));
+        let h = server
+            .submit(
+                "alice",
+                "q:tight",
+                GenOptions::greedy()
+                    .max_new_tokens(40)
+                    .deadline(Duration::from_millis(25)),
+            )
+            .unwrap();
+        let (tokens, res) = pump_stream(&h);
+        assert_eq!(res, Err(ServeError::Deadline));
+        assert!(tokens < 40, "deadline never fired: {tokens} tokens");
+        assert_eq!(server.batcher.depth(), 0, "expiry leaked queue depth");
+        assert_eq!(server.metrics.expired.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_streams() {
+        // shutdown is close + drain: a consumer blocked on the stream sees
+        // the generation complete (every token, then Ok), never a hang or
+        // a silently dropped channel
+        let (mut server, _cfg) = slow_server(Duration::from_millis(2));
+        let h = server
+            .submit(
+                "alice",
+                "q:drain",
+                GenOptions::greedy().max_new_tokens(8),
+            )
+            .unwrap();
+        let reader = thread::spawn(move || {
+            let out = pump_stream(&h);
+            drop(h);
+            out
+        });
+        server.shutdown(); // blocks until the worker drained the queue
+        let (tokens, res) = reader.join().expect("reader panicked");
+        let resp = res.expect("drained request must resolve Ok");
+        assert_eq!(
+            tokens, resp.tokens,
+            "stream token count != final response count"
+        );
+        assert_eq!(server.batcher.depth(), 0);
+        // post-shutdown submits fail fast instead of queueing forever
+        assert_eq!(
+            server
+                .submit("alice", "q:late", GenOptions::greedy())
+                .unwrap_err(),
+            ServeError::ShuttingDown
+        );
     }
 }

@@ -1,0 +1,442 @@
+//! HTTP/1.1 wire handling for the front door: request parsing with hard
+//! size/time limits, plain and chunked response writing.
+//!
+//! Deliberately minimal — the edge speaks exactly the subset the routes
+//! in [`super`] need: one request per connection (`Connection: close`),
+//! `Content-Length` bodies in, fixed or chunked bodies out. No keep-alive,
+//! no pipelining, no transfer-encoding on the request side.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// Cap on the request line + headers. A client that cannot name a route
+/// and a content length in 8 KiB is not one of ours.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Cap on the request body (prompts and tenant specs are small).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A parsed request: method, path, and the raw body bytes.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be read. Each variant maps to one status code
+/// in [`read_error_status`]; `Closed` means the peer went away before
+/// sending a full head and deserves no response at all.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Connection closed (or reset) before a full request arrived.
+    Closed,
+    /// A read blocked past the socket's configured timeout.
+    TimedOut,
+    /// Head exceeded [`MAX_HEAD_BYTES`] or body [`MAX_BODY_BYTES`].
+    TooLarge,
+    /// Not parseable as HTTP/1.1.
+    Malformed(&'static str),
+}
+
+/// Status code + reason for a request that never parsed.
+pub fn read_error_status(e: &ReadError) -> Option<(u16, &'static str)> {
+    match e {
+        ReadError::Closed => None,
+        ReadError::TimedOut => Some((408, "request head/body timed out")),
+        ReadError::TooLarge => Some((413, "request exceeds size limits")),
+        ReadError::Malformed(why) => Some((400, why)),
+    }
+}
+
+fn io_read_error(e: io::Error) -> ReadError {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+            ReadError::TimedOut
+        }
+        _ => ReadError::Closed,
+    }
+}
+
+/// Read one HTTP/1.1 request off `stream`. The caller is expected to have
+/// set a read timeout on the socket — that plus the byte caps bound both
+/// dimensions (time and size) a hostile client could stretch.
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest, ReadError> {
+    // head: byte-at-a-time until CRLFCRLF, capped. One syscall per byte
+    // would be slow for bulk data, but heads are tiny and this keeps us
+    // from reading past the head into the body.
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() >= MAX_HEAD_BYTES {
+            return Err(ReadError::TooLarge);
+        }
+        match stream.read(&mut byte) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(_) => head.push(byte[0]),
+            Err(e) => return Err(io_read_error(e)),
+        }
+    }
+    let head = std::str::from_utf8(&head)
+        .map_err(|_| ReadError::Malformed("head is not utf-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or(ReadError::Malformed("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or(ReadError::Malformed("request line missing path"))?
+        .to_string();
+    match parts.next() {
+        Some(v) if v.starts_with("HTTP/1.") => {}
+        _ => return Err(ReadError::Malformed("not HTTP/1.x")),
+    }
+    let mut headers = HashMap::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(ReadError::Malformed("header line without ':'"));
+        };
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    let len = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| ReadError::Malformed("bad content-length"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(ReadError::TooLarge);
+    }
+    let mut body = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match stream.read(&mut body[got..]) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(n) => got += n,
+            Err(e) => return Err(io_read_error(e)),
+        }
+    }
+    Ok(HttpRequest { method, path, headers, body })
+}
+
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response. One request per connection, so
+/// every response carries `Connection: close`.
+pub fn write_response(
+    stream: &mut TcpStream,
+    code: u16,
+    content_type: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        code,
+        status_reason(code),
+        content_type,
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Begin a chunked (streaming) response.
+pub fn start_chunked(
+    stream: &mut TcpStream,
+    code: u16,
+    content_type: &str,
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        code,
+        status_reason(code),
+        content_type,
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()
+}
+
+/// Write one chunk and flush it — each streamed token must hit the wire
+/// immediately, not sit in a buffer until the generation finishes.
+pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    stream.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+/// Terminate a chunked response.
+pub fn end_chunked(stream: &mut TcpStream) -> io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+// ---------------------------------------------------------------------
+// Client side: the load harness's HTTP client and the loopback tests
+// read responses with the same byte-level care the server reads requests.
+// ---------------------------------------------------------------------
+
+/// Read bytes until CRLFCRLF, capped at [`MAX_HEAD_BYTES`].
+fn read_head_bytes(stream: &mut TcpStream) -> Result<Vec<u8>, ReadError> {
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() >= MAX_HEAD_BYTES {
+            return Err(ReadError::TooLarge);
+        }
+        match stream.read(&mut byte) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(_) => head.push(byte[0]),
+            Err(e) => return Err(io_read_error(e)),
+        }
+    }
+    Ok(head)
+}
+
+/// Client-side: read a response's status line + headers, leaving the
+/// stream positioned at the body.
+pub fn read_response_head(
+    stream: &mut TcpStream,
+) -> Result<(u16, HashMap<String, String>), ReadError> {
+    let head = read_head_bytes(stream)?;
+    let head = std::str::from_utf8(&head)
+        .map_err(|_| ReadError::Malformed("head is not utf-8"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.split(' ');
+    match parts.next() {
+        Some(v) if v.starts_with("HTTP/1.") => {}
+        _ => return Err(ReadError::Malformed("not an HTTP/1.x response")),
+    }
+    let status = parts
+        .next()
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or(ReadError::Malformed("bad status code"))?;
+    let mut headers = HashMap::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(ReadError::Malformed("header line without ':'"));
+        };
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    Ok((status, headers))
+}
+
+/// Client-side: read one chunk of a chunked body. `Ok(None)` is the
+/// terminal zero-length chunk. Chunk boundaries mirror the server's
+/// `write_chunk` calls exactly (one streamed line per chunk), regardless
+/// of how TCP segments the bytes.
+pub fn read_chunk(
+    stream: &mut TcpStream,
+) -> Result<Option<Vec<u8>>, ReadError> {
+    // size line: hex digits then CRLF
+    let mut line = Vec::with_capacity(8);
+    let mut byte = [0u8; 1];
+    while !line.ends_with(b"\r\n") {
+        if line.len() > 18 {
+            return Err(ReadError::Malformed("chunk size line too long"));
+        }
+        match stream.read(&mut byte) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(_) => line.push(byte[0]),
+            Err(e) => return Err(io_read_error(e)),
+        }
+    }
+    let size_str = std::str::from_utf8(&line[..line.len() - 2])
+        .map_err(|_| ReadError::Malformed("chunk size not utf-8"))?;
+    let size = usize::from_str_radix(size_str.trim(), 16)
+        .map_err(|_| ReadError::Malformed("chunk size not hex"))?;
+    if size > MAX_BODY_BYTES {
+        return Err(ReadError::TooLarge);
+    }
+    let mut data = vec![0u8; size + 2]; // payload + trailing CRLF
+    let mut got = 0;
+    while got < data.len() {
+        match stream.read(&mut data[got..]) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(n) => got += n,
+            Err(e) => return Err(io_read_error(e)),
+        }
+    }
+    data.truncate(size);
+    if size == 0 {
+        return Ok(None);
+    }
+    Ok(Some(data))
+}
+
+/// Client-side: read a fixed-length (`Content-Length`) body.
+pub fn read_sized_body(
+    stream: &mut TcpStream,
+    headers: &HashMap<String, String>,
+) -> Result<Vec<u8>, ReadError> {
+    let len = headers
+        .get("content-length")
+        .and_then(|v| v.parse::<usize>().ok())
+        .ok_or(ReadError::Malformed("response missing content-length"))?;
+    if len > MAX_BODY_BYTES {
+        return Err(ReadError::TooLarge);
+    }
+    let mut body = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match stream.read(&mut body[got..]) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(n) => got += n,
+            Err(e) => return Err(io_read_error(e)),
+        }
+    }
+    Ok(body)
+}
+
+/// Has the peer hung up? Used between token polls so a client that drops
+/// its connection mid-stream cancels the request instead of decoding to
+/// completion into a dead socket. A live streaming client has nothing
+/// left to send, so a successful zero-byte peek (orderly shutdown) or a
+/// hard error (reset) both mean "gone"; `WouldBlock` means still there.
+pub fn client_gone(stream: &TcpStream) -> bool {
+    let mut buf = [0u8; 8];
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let gone = match stream.peek(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    /// Feed raw bytes to `read_request` through a loopback socket pair.
+    fn parse(raw: &[u8]) -> Result<HttpRequest, ReadError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut serverside, _) = listener.accept().unwrap();
+        serverside
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        client.write_all(raw).unwrap();
+        drop(client); // EOF after the payload: Closed only if head short
+        read_request(&mut serverside)
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let req = parse(
+            b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(req.headers.get("host").map(String::as_str), Some("x"));
+    }
+
+    #[test]
+    fn parses_bodyless_get() {
+        let req = parse(b"GET /health HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/health");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn header_names_case_folded() {
+        let req =
+            parse(b"POST / HTTP/1.1\r\ncOnTeNt-LeNgTh: 2\r\n\r\nhi").unwrap();
+        assert_eq!(req.body, b"hi");
+    }
+
+    #[test]
+    fn rejects_non_http() {
+        assert!(matches!(
+            parse(b"hello there\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_content_length() {
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_oversized_head() {
+        let mut raw = b"GET /".to_vec();
+        raw.extend(vec![b'a'; MAX_HEAD_BYTES + 1]);
+        raw.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+        assert!(matches!(parse(&raw), Err(ReadError::TooLarge)));
+    }
+
+    #[test]
+    fn rejects_oversized_body_before_reading_it() {
+        let raw = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(matches!(parse(raw.as_bytes()), Err(ReadError::TooLarge)));
+    }
+
+    #[test]
+    fn truncated_body_reports_closed() {
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(ReadError::Closed)
+        ));
+    }
+
+    #[test]
+    fn read_error_statuses() {
+        assert!(read_error_status(&ReadError::Closed).is_none());
+        assert_eq!(read_error_status(&ReadError::TimedOut).unwrap().0, 408);
+        assert_eq!(read_error_status(&ReadError::TooLarge).unwrap().0, 413);
+        assert_eq!(
+            read_error_status(&ReadError::Malformed("x")).unwrap().0,
+            400
+        );
+    }
+}

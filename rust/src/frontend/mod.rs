@@ -1,0 +1,706 @@
+//! Front door: a minimal HTTP/1.1 serving edge over the coordinator.
+//!
+//! Hand-rolled on `std::net::TcpListener` (the offline build vendors no
+//! HTTP crate): one acceptor thread feeds a small pool of connection
+//! threads through a bounded queue, each connection carries exactly one
+//! request (`Connection: close`). Routes:
+//!
+//! | route                      | behavior                                  |
+//! |----------------------------|-------------------------------------------|
+//! | `POST /v1/generate`        | submit; tokens stream back as chunked     |
+//! |                            | ndjson, one `{"token":N}` line per chunk, |
+//! |                            | then a terminal `{"done":true,...}` line  |
+//! | `POST /v1/tenants`         | register a tenant from a JSON spec        |
+//! | `DELETE /v1/tenants/<id>`  | remove a tenant                           |
+//! | `GET /health`              | liveness + tenant count                   |
+//! | `GET /metrics`             | [`Metrics::snapshot`] as JSON             |
+//!
+//! Cancellation is connection drop: between token polls the streamer
+//! peeks the socket, and a hung-up client (or a failed chunk write)
+//! triggers [`ResponseHandle::cancel`], returning the request's admission
+//! slot and KV pages. [`ServeError`] variants map to status codes via
+//! [`status_for`]. [`Frontend::shutdown`] stops accepting, then joins the
+//! connection threads — in-flight streams drain to their terminal line
+//! rather than being severed.
+//!
+//! [`Metrics::snapshot`]: crate::coordinator::Metrics::snapshot
+
+pub mod http;
+
+use crate::config::MethodCfg;
+use crate::coordinator::{
+    GenOptions, ResponseHandle, ServeError, Server, TenantSpec,
+};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use http::{read_error_status, read_request, HttpRequest};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// Front-door tuning knobs. Defaults suit both the loopback tests and the
+/// load-harness smoke runs.
+#[derive(Debug, Clone)]
+pub struct FrontendCfg {
+    /// Connection-thread pool size.
+    pub workers: usize,
+    /// Accepted connections queued ahead of the pool; beyond this the
+    /// acceptor sheds load with a best-effort 503.
+    pub backlog: usize,
+    /// Per-socket read/write timeout (request head+body on the way in,
+    /// stalled clients on the way out).
+    pub io_timeout: Duration,
+    /// Token poll tick while streaming: bounds how quickly a client
+    /// disconnect is noticed when no tokens are flowing.
+    pub poll: Duration,
+}
+
+impl Default for FrontendCfg {
+    fn default() -> FrontendCfg {
+        FrontendCfg {
+            workers: 4,
+            backlog: 64,
+            io_timeout: Duration::from_secs(5),
+            poll: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Map a [`ServeError`] to its HTTP status code.
+pub fn status_for(e: &ServeError) -> u16 {
+    match e {
+        ServeError::UnknownTenant(_) => 404,
+        ServeError::QueueFull { .. } => 429,
+        ServeError::Deadline => 504,
+        ServeError::Cancelled => 499,
+        ServeError::ShuttingDown => 503,
+        ServeError::Engine(_) => 500,
+    }
+}
+
+/// Stable machine-readable tag for a [`ServeError`], carried in error
+/// bodies and terminal stream lines next to the human-readable message.
+pub fn error_kind(e: &ServeError) -> &'static str {
+    match e {
+        ServeError::UnknownTenant(_) => "unknown_tenant",
+        ServeError::QueueFull { .. } => "queue_full",
+        ServeError::Deadline => "deadline",
+        ServeError::Cancelled => "cancelled",
+        ServeError::ShuttingDown => "shutting_down",
+        ServeError::Engine(_) => "engine",
+    }
+}
+
+/// The running HTTP edge. Dropping it (or calling [`Frontend::shutdown`])
+/// stops the acceptor and drains in-flight connections.
+pub struct Frontend {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Frontend {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// serving `server` behind it.
+    pub fn start(
+        server: Arc<Server>,
+        addr: &str,
+        cfg: FrontendCfg,
+    ) -> Result<Frontend> {
+        assert!(cfg.workers > 0);
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("frontend bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = sync_channel::<TcpStream>(cfg.backlog);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let rx = Arc::clone(&rx);
+            let server = Arc::clone(&server);
+            let cfg = cfg.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("frontend-{i}"))
+                    .spawn(move || worker_loop(&rx, &server, &cfg))?,
+            );
+        }
+        let stop2 = Arc::clone(&stop);
+        let io_timeout = cfg.io_timeout;
+        let acceptor = thread::Builder::new()
+            .name("frontend-accept".into())
+            .spawn(move || {
+                accept_loop(&listener, &tx, &stop2, io_timeout);
+            })?;
+        Ok(Frontend {
+            addr: local,
+            stop,
+            acceptor: Some(acceptor),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves the actual port when started on `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting new connections and drain the in-flight ones: the
+    /// acceptor exits and drops its queue sender, the pool finishes every
+    /// queued and active connection (streams run to their terminal line),
+    /// then the threads are joined. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Frontend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Accept until `stop`: hand sockets to the pool, shed with a best-effort
+/// 503 once the backlog is full (a blocked acceptor would otherwise let
+/// the kernel queue grow unbounded).
+fn accept_loop(
+    listener: &TcpListener,
+    tx: &std::sync::mpsc::SyncSender<TcpStream>,
+    stop: &AtomicBool,
+    io_timeout: Duration,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_read_timeout(Some(io_timeout));
+                let _ = stream.set_write_timeout(Some(io_timeout));
+                match tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(mut stream)) => {
+                        let _ = respond_error(
+                            &mut stream,
+                            503,
+                            "shedding",
+                            "connection backlog full",
+                        );
+                    }
+                    Err(TrySendError::Disconnected(_)) => return,
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// One pool thread: serve connections until the acceptor drops the queue.
+fn worker_loop(
+    rx: &Mutex<Receiver<TcpStream>>,
+    server: &Server,
+    cfg: &FrontendCfg,
+) {
+    loop {
+        let conn = rx.lock().unwrap().recv();
+        match conn {
+            Ok(mut stream) => handle_conn(&mut stream, server, cfg),
+            Err(_) => return,
+        }
+    }
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    code: u16,
+    body: &Json,
+) -> std::io::Result<()> {
+    http::write_response(
+        stream,
+        code,
+        "application/json",
+        body.to_string().as_bytes(),
+    )
+}
+
+fn respond_error(
+    stream: &mut TcpStream,
+    code: u16,
+    kind: &str,
+    msg: &str,
+) -> std::io::Result<()> {
+    respond_json(
+        stream,
+        code,
+        &Json::obj(vec![
+            ("error", Json::str(msg)),
+            ("kind", Json::str(kind)),
+        ]),
+    )
+}
+
+/// Parse, route, respond. Any panic would only take down this connection's
+/// thread, but the routes below are panic-free by construction.
+fn handle_conn(stream: &mut TcpStream, server: &Server, cfg: &FrontendCfg) {
+    let req = match read_request(stream) {
+        Ok(req) => req,
+        Err(e) => {
+            if let Some((code, msg)) = read_error_status(&e) {
+                let _ = respond_error(stream, code, "bad_request", msg);
+            }
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => route_generate(stream, server, cfg, &req),
+        ("POST", "/v1/tenants") => route_register(stream, server, &req),
+        ("DELETE", path) if path.starts_with("/v1/tenants/") => {
+            route_remove(stream, server, &path["/v1/tenants/".len()..])
+        }
+        ("GET", "/health") => {
+            let body = Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("tenants", Json::num(server.tenant_ids().len() as f64)),
+            ]);
+            let _ = respond_json(stream, 200, &body);
+        }
+        ("GET", "/metrics") => {
+            let _ = http::write_response(
+                stream,
+                200,
+                "application/json",
+                server.metrics.snapshot().to_string_pretty().as_bytes(),
+            );
+        }
+        ("GET" | "POST" | "DELETE", p)
+            if matches!(
+                p,
+                "/v1/generate" | "/v1/tenants" | "/health" | "/metrics"
+            ) =>
+        {
+            let _ = respond_error(
+                stream,
+                405,
+                "method_not_allowed",
+                "wrong method for this route",
+            );
+        }
+        _ => {
+            let _ =
+                respond_error(stream, 404, "no_such_route", "no such route");
+        }
+    }
+}
+
+/// Body for `POST /v1/generate`, all fields but `tenant`/`prompt`
+/// optional: `max_new_tokens`, `temperature`, `top_k`, `seed`,
+/// `deadline_ms`.
+fn gen_options(body: &Json) -> GenOptions {
+    let mut opts = GenOptions::greedy();
+    if let Some(n) = body.get("max_new_tokens").and_then(Json::as_usize) {
+        opts.max_new_tokens = n;
+    }
+    if let Some(t) = body.get("temperature").and_then(Json::as_f64) {
+        opts.temperature = t as f32;
+    }
+    if let Some(k) = body.get("top_k").and_then(Json::as_usize) {
+        opts.top_k = k;
+    }
+    if let Some(s) = body.get("seed").and_then(Json::as_f64) {
+        opts.seed = s as u64;
+    }
+    if let Some(ms) = body.get("deadline_ms").and_then(Json::as_f64) {
+        opts.deadline = Some(Duration::from_millis(ms as u64));
+    }
+    opts
+}
+
+fn route_generate(
+    stream: &mut TcpStream,
+    server: &Server,
+    cfg: &FrontendCfg,
+    req: &HttpRequest,
+) {
+    let body = match std::str::from_utf8(&req.body)
+        .map_err(|_| ())
+        .and_then(|s| Json::parse(s).map_err(|_| ()))
+    {
+        Ok(b) => b,
+        Err(()) => {
+            let _ = respond_error(
+                stream,
+                400,
+                "bad_request",
+                "body is not valid JSON",
+            );
+            return;
+        }
+    };
+    let (Some(tenant), Some(prompt)) = (
+        body.get("tenant").and_then(Json::as_str),
+        body.get("prompt").and_then(Json::as_str),
+    ) else {
+        let _ = respond_error(
+            stream,
+            400,
+            "bad_request",
+            "body needs string fields 'tenant' and 'prompt'",
+        );
+        return;
+    };
+    let handle = match server.submit(tenant, prompt, gen_options(&body)) {
+        Ok(h) => h,
+        Err(e) => {
+            let _ = respond_error(
+                stream,
+                status_for(&e),
+                error_kind(&e),
+                &e.to_string(),
+            );
+            return;
+        }
+    };
+    stream_tokens(stream, &handle, cfg.poll);
+}
+
+/// Chunked ndjson streaming of one generation. Client disconnect (failed
+/// chunk write, or a hang-up observed between polls) cancels the request.
+fn stream_tokens(
+    stream: &mut TcpStream,
+    handle: &ResponseHandle,
+    poll: Duration,
+) {
+    if http::start_chunked(stream, 200, "application/x-ndjson").is_err() {
+        handle.cancel();
+        return;
+    }
+    let send_line = |stream: &mut TcpStream, line: &Json| {
+        let mut data = line.to_string();
+        data.push('\n');
+        http::write_chunk(stream, data.as_bytes())
+    };
+    let token_line =
+        |tok: i32| Json::obj(vec![("token", Json::num(tok as f64))]);
+    loop {
+        match handle.recv_token_timeout(poll) {
+            Some(tok) => {
+                if send_line(stream, &token_line(tok)).is_err() {
+                    handle.cancel();
+                    return;
+                }
+            }
+            None => {
+                if let Some(result) = handle.try_wait() {
+                    // tokens streamed before the resolution are already
+                    // queued: drain them ahead of the terminal line
+                    while let Some(tok) = handle.try_recv_token() {
+                        if send_line(stream, &token_line(tok)).is_err() {
+                            handle.cancel();
+                            return;
+                        }
+                    }
+                    let line = match result {
+                        Ok(resp) => Json::obj(vec![
+                            ("done", Json::Bool(true)),
+                            ("id", Json::num(resp.id as f64)),
+                            ("text", Json::str(resp.text)),
+                            ("tokens", Json::num(resp.tokens as f64)),
+                            (
+                                "latency_ms",
+                                Json::num(resp.latency.as_secs_f64() * 1e3),
+                            ),
+                        ]),
+                        Err(e) => Json::obj(vec![
+                            ("done", Json::Bool(true)),
+                            ("error", Json::str(e.to_string())),
+                            ("kind", Json::str(error_kind(&e))),
+                        ]),
+                    };
+                    let _ = send_line(stream, &line);
+                    let _ = http::end_chunked(stream);
+                    return;
+                }
+                if http::client_gone(stream) {
+                    handle.cancel();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Body for `POST /v1/tenants`: `{"id": ..., "method": "mos"|"lora",
+/// "r": 8, "l": 2, "e": 2, "private_rank": 1, "seed": 0}` — everything
+/// but `id` optional, defaults shown.
+fn tenant_spec(body: &Json) -> Result<(String, TenantSpec)> {
+    let id = body.req_str("id")?.to_string();
+    let r = body.get("r").and_then(Json::as_usize).unwrap_or(8);
+    let seed = body.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let spec = match body.get("method").and_then(Json::as_str).unwrap_or("mos")
+    {
+        "lora" => TenantSpec::lora(r),
+        "mos" => {
+            let l = body.get("l").and_then(Json::as_usize).unwrap_or(2);
+            let e = body.get("e").and_then(Json::as_usize).unwrap_or(2);
+            let p = body
+                .get("private_rank")
+                .and_then(Json::as_usize)
+                .unwrap_or(1);
+            TenantSpec::method(MethodCfg::mos(r, l, e, p))
+        }
+        other => return Err(anyhow!("unknown method '{other}'")),
+    };
+    Ok((id, spec.seed(seed)))
+}
+
+fn route_register(
+    stream: &mut TcpStream,
+    server: &Server,
+    req: &HttpRequest,
+) {
+    let body = match std::str::from_utf8(&req.body)
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+    {
+        Some(b) => b,
+        None => {
+            let _ = respond_error(
+                stream,
+                400,
+                "bad_request",
+                "body is not valid JSON",
+            );
+            return;
+        }
+    };
+    let (id, spec) = match tenant_spec(&body) {
+        Ok(v) => v,
+        Err(e) => {
+            let _ =
+                respond_error(stream, 400, "bad_request", &e.to_string());
+            return;
+        }
+    };
+    match server.register(&id, spec) {
+        Ok(evicted) => {
+            let body = Json::obj(vec![
+                ("registered", Json::str(id)),
+                (
+                    "evicted",
+                    Json::Arr(evicted.into_iter().map(Json::str).collect()),
+                ),
+            ]);
+            let _ = respond_json(stream, 201, &body);
+        }
+        Err(e) => {
+            let _ = respond_error(stream, 400, "register", &e.to_string());
+        }
+    }
+}
+
+fn route_remove(stream: &mut TcpStream, server: &Server, id: &str) {
+    if server.remove(id) {
+        let _ = respond_json(
+            stream,
+            200,
+            &Json::obj(vec![("removed", Json::str(id))]),
+        );
+    } else {
+        let _ = respond_error(
+            stream,
+            404,
+            "unknown_tenant",
+            &format!("no tenant '{id}'"),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::coordinator::{Admission, Registry, ServerCfg};
+
+    /// Registry+server with no engine workers: enough for every route
+    /// except a completed generation.
+    fn edge(admission: Admission) -> (Arc<Server>, Frontend) {
+        let mut cfg = presets::tiny();
+        cfg.batch = 4;
+        let registry = Arc::new(Registry::new(cfg, 1 << 30));
+        let server = Arc::new(Server::new(
+            registry,
+            ServerCfg { admission, ..ServerCfg::default() },
+        ));
+        let fe = Frontend::start(
+            Arc::clone(&server),
+            "127.0.0.1:0",
+            FrontendCfg {
+                workers: 2,
+                io_timeout: Duration::from_secs(2),
+                ..FrontendCfg::default()
+            },
+        )
+        .unwrap();
+        (server, fe)
+    }
+
+    /// One-shot request helper: send `raw`, read status + JSON body.
+    fn call(addr: SocketAddr, raw: String) -> (u16, Json) {
+        use std::io::Write;
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let (status, headers) = http::read_response_head(&mut s).unwrap();
+        let body = http::read_sized_body(&mut s, &headers).unwrap();
+        let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        (status, json)
+    }
+
+    fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, Json) {
+        call(
+            addr,
+            format!(
+                "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        )
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, Json) {
+        call(addr, format!("GET {path} HTTP/1.1\r\n\r\n"))
+    }
+
+    #[test]
+    fn status_mapping_covers_every_variant() {
+        let cases = [
+            (ServeError::UnknownTenant("x".into()), 404, "unknown_tenant"),
+            (ServeError::QueueFull { tenant: "x".into() }, 429, "queue_full"),
+            (ServeError::Deadline, 504, "deadline"),
+            (ServeError::Cancelled, 499, "cancelled"),
+            (ServeError::ShuttingDown, 503, "shutting_down"),
+            (ServeError::Engine("boom".into()), 500, "engine"),
+        ];
+        for (e, code, kind) in cases {
+            assert_eq!(status_for(&e), code, "{e:?}");
+            assert_eq!(error_kind(&e), kind, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn health_metrics_register_remove_roundtrip() {
+        let (_server, mut fe) = edge(Admission::default());
+        let addr = fe.local_addr();
+
+        let (code, body) = get(addr, "/health");
+        assert_eq!(code, 200);
+        assert_eq!(body.req_str("status").unwrap(), "ok");
+        assert_eq!(body.req_usize("tenants").unwrap(), 0);
+
+        let (code, body) =
+            post(addr, "/v1/tenants", r#"{"id":"alice","seed":3}"#);
+        assert_eq!(code, 201);
+        assert_eq!(body.req_str("registered").unwrap(), "alice");
+        assert!(body.get("evicted").unwrap().as_arr().unwrap().is_empty());
+
+        let (code, body) = get(addr, "/health");
+        assert_eq!(code, 200);
+        assert_eq!(body.req_usize("tenants").unwrap(), 1);
+
+        let (code, body) = get(addr, "/metrics");
+        assert_eq!(code, 200);
+        assert_eq!(body.req_usize("requests").unwrap(), 0);
+        assert!(body.get("queue_depth").is_some());
+        assert!(body.get("tenants").is_some());
+
+        let (code, _) = call(
+            addr,
+            "DELETE /v1/tenants/alice HTTP/1.1\r\n\r\n".to_string(),
+        );
+        assert_eq!(code, 200);
+        let (code, _) = call(
+            addr,
+            "DELETE /v1/tenants/alice HTTP/1.1\r\n\r\n".to_string(),
+        );
+        assert_eq!(code, 404);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn submit_errors_map_to_status_codes() {
+        // per_tenant 1 so the second enqueued request rejects QueueFull
+        let (server, mut fe) =
+            edge(Admission { per_tenant: 1, global: 100 });
+        let addr = fe.local_addr();
+
+        let (code, body) = post(
+            addr,
+            "/v1/generate",
+            r#"{"tenant":"ghost","prompt":"q:x"}"#,
+        );
+        assert_eq!(code, 404);
+        assert_eq!(body.req_str("kind").unwrap(), "unknown_tenant");
+
+        server.register("alice", TenantSpec::mos(4, 2, 2, 1)).unwrap();
+        // no workers: this submit parks in the queue and holds the depth
+        let held = server
+            .submit("alice", "q:hold", GenOptions::greedy())
+            .unwrap();
+        let (code, body) = post(
+            addr,
+            "/v1/generate",
+            r#"{"tenant":"alice","prompt":"q:over"}"#,
+        );
+        assert_eq!(code, 429);
+        assert_eq!(body.req_str("kind").unwrap(), "queue_full");
+        held.cancel();
+        fe.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let (_server, mut fe) = edge(Admission::default());
+        let addr = fe.local_addr();
+        let (code, _) = post(addr, "/v1/generate", "not json");
+        assert_eq!(code, 400);
+        let (code, _) = post(addr, "/v1/generate", r#"{"tenant":"a"}"#);
+        assert_eq!(code, 400);
+        let (code, _) =
+            post(addr, "/v1/tenants", r#"{"id":"x","method":"vera"}"#);
+        assert_eq!(code, 400);
+        let (code, body) = get(addr, "/nope");
+        assert_eq!(code, 404);
+        assert_eq!(body.req_str("kind").unwrap(), "no_such_route");
+        let (code, _) = get(addr, "/v1/generate");
+        assert_eq!(code, 405);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn shutdown_idempotent_and_rebindable() {
+        let (_server, mut fe) = edge(Admission::default());
+        let addr = fe.local_addr();
+        let (code, _) = get(addr, "/health");
+        assert_eq!(code, 200);
+        fe.shutdown();
+        fe.shutdown(); // second call is a no-op
+        assert!(TcpStream::connect(addr).is_err() || {
+            // some platforms accept then reset; either way no service
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+            use std::io::Write;
+            let _ = s.write_all(b"GET /health HTTP/1.1\r\n\r\n");
+            http::read_response_head(&mut s).is_err()
+        });
+    }
+}

@@ -26,6 +26,8 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod frontend;
+pub mod loadgen;
 pub mod model;
 pub mod runtime;
 pub mod stats;

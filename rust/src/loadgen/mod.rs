@@ -1,0 +1,550 @@
+//! Load harness: replay seeded traffic shapes against the serving stack.
+//!
+//! [`shapes::plan`] expands a [`TrafficCfg`] into a deterministic arrival
+//! schedule; [`run_shape`] replays it open-loop (arrivals fire on the
+//! planned clock, one collector thread per in-flight request) against
+//! either target:
+//!
+//! - [`InProcessClient`] — straight into `Server::submit`, measuring the
+//!   coordinator alone;
+//! - [`HttpClient`] — through the [`crate::frontend`] HTTP edge,
+//!   measuring the full network path (cancellations become connection
+//!   drops, exactly like a real client hanging up).
+//!
+//! Each replay aggregates into a [`ShapeReport`]: p50/p99 ttft and
+//! latency, tok/s, and reject/expire/cancel counts — the rows of
+//! `BENCH_traffic.json`.
+
+pub mod shapes;
+
+pub use shapes::{plan, Arrival, Shape, TrafficCfg, ALL_SHAPES};
+
+use crate::coordinator::{ServeError, Server, TenantSpec};
+use crate::frontend::http;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Canonical id of the `i`-th tenant in a replay's registered universe.
+pub fn tenant_id(i: usize) -> String {
+    format!("t{i}")
+}
+
+/// Pooled-tier MoS spec for replay tenants: small ranks so a 1k+ Zipf
+/// universe registers quickly, seeded per tenant so factors differ.
+pub fn tenant_spec(i: usize) -> TenantSpec {
+    TenantSpec::mos(4, 2, 2, 1).seed(i as u64 + 1)
+}
+
+/// Register `t0..t{n-1}` directly on `server`. Fails if any registration
+/// evicts a peer — eviction thrash while building the universe means the
+/// registry capacity is mis-sized for the experiment.
+pub fn register_tenants(server: &Server, n: usize) -> Result<()> {
+    for i in 0..n {
+        let evicted = server.register(&tenant_id(i), tenant_spec(i))?;
+        if !evicted.is_empty() {
+            bail!(
+                "eviction thrash: registering {} evicted {:?}",
+                tenant_id(i),
+                evicted
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Register `t0..t{n-1}` through the HTTP edge (`POST /v1/tenants`) —
+/// the same specs as [`register_tenants`], driven over the wire.
+pub fn register_tenants_http(addr: SocketAddr, n: usize) -> Result<()> {
+    for i in 0..n {
+        let body = Json::obj(vec![
+            ("id", Json::str(tenant_id(i))),
+            ("method", Json::str("mos")),
+            ("r", Json::num(4.0)),
+            ("l", Json::num(2.0)),
+            ("e", Json::num(2.0)),
+            ("private_rank", Json::num(1.0)),
+            ("seed", Json::num((i + 1) as f64)),
+        ])
+        .to_string();
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let req = format!(
+            "POST /v1/tenants HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(req.as_bytes())?;
+        let (status, headers) = http::read_response_head(&mut stream)
+            .map_err(|e| anyhow::anyhow!("register {i}: {e:?}"))?;
+        if status != 201 {
+            bail!("register {}: HTTP {status}", tenant_id(i));
+        }
+        let resp = http::read_sized_body(&mut stream, &headers)
+            .ok()
+            .and_then(|b| String::from_utf8(b).ok())
+            .and_then(|s| Json::parse(&s).ok());
+        if let Some(evicted) = resp
+            .as_ref()
+            .and_then(|j| j.get("evicted"))
+            .and_then(Json::as_arr)
+        {
+            if !evicted.is_empty() {
+                bail!("eviction thrash registering {}", tenant_id(i));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// How one replayed request resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Ok,
+    /// Admission control turned it away (`QueueFull` / HTTP 429).
+    Rejected,
+    /// Deadline lapsed (`ServeError::Deadline` / HTTP 504).
+    Expired,
+    /// Cancelled by plan (in-process `cancel()`, or HTTP connection drop).
+    Cancelled,
+    /// Anything else: engine error, transport error, malformed stream.
+    Error,
+}
+
+fn outcome_of(e: &ServeError) -> Outcome {
+    match e {
+        ServeError::QueueFull { .. } => Outcome::Rejected,
+        ServeError::Deadline => Outcome::Expired,
+        ServeError::Cancelled => Outcome::Cancelled,
+        _ => Outcome::Error,
+    }
+}
+
+/// One request's measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub outcome: Outcome,
+    /// Submit → first streamed token, when one arrived.
+    pub ttft_ms: Option<f64>,
+    /// Submit → resolution (or drop, for plan cancellations).
+    pub latency_ms: f64,
+    pub tokens: usize,
+}
+
+/// A blocking request executor: submit, stream, resolve, measure.
+pub trait Client: Send + Sync {
+    fn call(&self, tenant: &str, arrival: &Arrival) -> Sample;
+}
+
+fn ms_since(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// Drives `Server::submit` directly.
+pub struct InProcessClient {
+    server: Arc<Server>,
+    /// Token-poll tick; also bounds cancellation-timing slop.
+    poll: Duration,
+}
+
+impl InProcessClient {
+    pub fn new(server: Arc<Server>) -> InProcessClient {
+        InProcessClient { server, poll: Duration::from_millis(2) }
+    }
+}
+
+impl Client for InProcessClient {
+    fn call(&self, tenant: &str, a: &Arrival) -> Sample {
+        let t0 = Instant::now();
+        let handle =
+            match self.server.submit(tenant, &a.prompt, a.opts.clone()) {
+                Ok(h) => h,
+                Err(e) => {
+                    return Sample {
+                        outcome: outcome_of(&e),
+                        ttft_ms: None,
+                        latency_ms: ms_since(t0),
+                        tokens: 0,
+                    }
+                }
+            };
+        let cancel_at = a.cancel_after.map(|d| t0 + d);
+        let mut cancelled = false;
+        let mut ttft = None;
+        let mut tokens = 0usize;
+        loop {
+            if let Some(at) = cancel_at {
+                if !cancelled && Instant::now() >= at {
+                    handle.cancel();
+                    cancelled = true;
+                }
+            }
+            // poll no further than the pending cancel instant
+            let tick = match cancel_at {
+                Some(at) if !cancelled => at
+                    .saturating_duration_since(Instant::now())
+                    .clamp(Duration::from_micros(100), self.poll),
+                _ => self.poll,
+            };
+            match handle.recv_token_timeout(tick) {
+                Some(_) => {
+                    tokens += 1;
+                    if ttft.is_none() {
+                        ttft = Some(ms_since(t0));
+                    }
+                }
+                None => {
+                    if let Some(res) = handle.try_wait() {
+                        while handle.try_recv_token().is_some() {
+                            tokens += 1;
+                        }
+                        let outcome = match res {
+                            Ok(_) => Outcome::Ok,
+                            Err(e) => outcome_of(&e),
+                        };
+                        return Sample {
+                            outcome,
+                            ttft_ms: ttft,
+                            latency_ms: ms_since(t0),
+                            tokens,
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drives the HTTP edge: one connection per request, chunked ndjson
+/// stream back, cancellation = dropping the connection.
+pub struct HttpClient {
+    addr: SocketAddr,
+    io_timeout: Duration,
+    /// Hard wall on one request's lifetime (queue waits included).
+    max_wall: Duration,
+}
+
+impl HttpClient {
+    pub fn new(addr: SocketAddr) -> HttpClient {
+        HttpClient {
+            addr,
+            io_timeout: Duration::from_secs(5),
+            max_wall: Duration::from_secs(120),
+        }
+    }
+}
+
+impl Client for HttpClient {
+    fn call(&self, tenant: &str, a: &Arrival) -> Sample {
+        let t0 = Instant::now();
+        let mut ttft = None;
+        let mut tokens = 0usize;
+        let sample = |outcome, ttft, tokens, t0| Sample {
+            outcome,
+            ttft_ms: ttft,
+            latency_ms: ms_since(t0),
+            tokens,
+        };
+        let Ok(mut stream) = TcpStream::connect(self.addr) else {
+            return sample(Outcome::Error, ttft, tokens, t0);
+        };
+        let _ = stream.set_read_timeout(Some(self.io_timeout));
+        let _ = stream.set_write_timeout(Some(self.io_timeout));
+        let mut fields = vec![
+            ("tenant", Json::str(tenant)),
+            ("prompt", Json::str(a.prompt.clone())),
+            ("max_new_tokens", Json::num(a.opts.max_new_tokens as f64)),
+        ];
+        if let Some(d) = a.opts.deadline {
+            fields.push(("deadline_ms", Json::num(d.as_millis() as f64)));
+        }
+        let body = Json::obj(fields).to_string();
+        let req = format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        if stream.write_all(req.as_bytes()).is_err() {
+            return sample(Outcome::Error, ttft, tokens, t0);
+        }
+        let Ok((status, _headers)) = http::read_response_head(&mut stream)
+        else {
+            return sample(Outcome::Error, ttft, tokens, t0);
+        };
+        if status != 200 {
+            let outcome = match status {
+                429 => Outcome::Rejected,
+                504 => Outcome::Expired,
+                _ => Outcome::Error,
+            };
+            return sample(outcome, ttft, tokens, t0);
+        }
+        let cancel_at = a.cancel_after.map(|d| t0 + d);
+        loop {
+            if t0.elapsed() > self.max_wall {
+                return sample(Outcome::Error, ttft, tokens, t0);
+            }
+            if let Some(at) = cancel_at {
+                let now = Instant::now();
+                if now >= at {
+                    // dropping the connection IS the cancel signal
+                    return sample(Outcome::Cancelled, ttft, tokens, t0);
+                }
+                let _ = stream.set_read_timeout(Some(
+                    (at - now).min(self.io_timeout),
+                ));
+            }
+            match http::read_chunk(&mut stream) {
+                Ok(Some(line)) => {
+                    let parsed = std::str::from_utf8(&line)
+                        .ok()
+                        .and_then(|s| Json::parse(s.trim()).ok());
+                    let Some(json) = parsed else {
+                        return sample(Outcome::Error, ttft, tokens, t0);
+                    };
+                    if json.get("token").is_some() {
+                        tokens += 1;
+                        if ttft.is_none() {
+                            ttft = Some(ms_since(t0));
+                        }
+                    } else if json.get("done").is_some() {
+                        let outcome = match json
+                            .get("kind")
+                            .and_then(Json::as_str)
+                        {
+                            None => Outcome::Ok,
+                            Some("deadline") => Outcome::Expired,
+                            Some("cancelled") => Outcome::Cancelled,
+                            Some("queue_full") => Outcome::Rejected,
+                            Some(_) => Outcome::Error,
+                        };
+                        return sample(outcome, ttft, tokens, t0);
+                    }
+                }
+                Ok(None) => {
+                    // terminal chunk without a done line
+                    return sample(Outcome::Error, ttft, tokens, t0);
+                }
+                Err(http::ReadError::TimedOut) => {
+                    // loop: re-check the cancel clock / wall cap
+                }
+                Err(_) => {
+                    return sample(Outcome::Error, ttft, tokens, t0);
+                }
+            }
+        }
+    }
+}
+
+/// Exact percentile over a sorted slice (nearest-rank on the closed
+/// index range — unlike the serving histograms there is no bucketing).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Aggregated result of one shape's replay.
+#[derive(Debug, Clone)]
+pub struct ShapeReport {
+    pub shape: String,
+    pub requests: usize,
+    pub tenants: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub expired: usize,
+    pub cancelled: usize,
+    pub errors: usize,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    pub tok_per_s: f64,
+    pub duration_s: f64,
+}
+
+impl ShapeReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shape", Json::str(self.shape.clone())),
+            ("requests", Json::num(self.requests as f64)),
+            ("tenants", Json::num(self.tenants as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("ttft_p50_ms", Json::num(self.ttft_p50_ms)),
+            ("ttft_p99_ms", Json::num(self.ttft_p99_ms)),
+            ("latency_p50_ms", Json::num(self.latency_p50_ms)),
+            ("latency_p99_ms", Json::num(self.latency_p99_ms)),
+            ("tok_per_s", Json::num(self.tok_per_s)),
+            ("duration_s", Json::num(self.duration_s)),
+        ])
+    }
+}
+
+fn aggregate(
+    cfg: &TrafficCfg,
+    samples: &[Sample],
+    duration_s: f64,
+) -> ShapeReport {
+    let count =
+        |o: Outcome| samples.iter().filter(|s| s.outcome == o).count();
+    let mut ttfts: Vec<f64> =
+        samples.iter().filter_map(|s| s.ttft_ms).collect();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // latency percentiles over completed requests only: folding in
+    // instant rejections or early cancels would fake a faster server
+    let mut lats: Vec<f64> = samples
+        .iter()
+        .filter(|s| s.outcome == Outcome::Ok)
+        .map(|s| s.latency_ms)
+        .collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total_tokens: usize = samples.iter().map(|s| s.tokens).sum();
+    ShapeReport {
+        shape: cfg.shape.name().to_string(),
+        requests: samples.len(),
+        tenants: cfg.tenants,
+        completed: count(Outcome::Ok),
+        rejected: count(Outcome::Rejected),
+        expired: count(Outcome::Expired),
+        cancelled: count(Outcome::Cancelled),
+        errors: count(Outcome::Error),
+        ttft_p50_ms: percentile(&ttfts, 50.0),
+        ttft_p99_ms: percentile(&ttfts, 99.0),
+        latency_p50_ms: percentile(&lats, 50.0),
+        latency_p99_ms: percentile(&lats, 99.0),
+        tok_per_s: if duration_s > 0.0 {
+            total_tokens as f64 / duration_s
+        } else {
+            0.0
+        },
+        duration_s,
+    }
+}
+
+/// Replay one shape open-loop: sleep to each planned arrival offset, fire
+/// the request on its own collector thread, join everything, aggregate.
+pub fn run_shape(cfg: &TrafficCfg, client: Arc<dyn Client>) -> ShapeReport {
+    let arrivals = plan(cfg);
+    let start = Instant::now();
+    let samples: Arc<Mutex<Vec<Sample>>> =
+        Arc::new(Mutex::new(Vec::with_capacity(arrivals.len())));
+    let mut collectors = Vec::with_capacity(arrivals.len());
+    for a in arrivals {
+        let target = start + a.at;
+        let now = Instant::now();
+        if target > now {
+            thread::sleep(target - now);
+        }
+        let client = Arc::clone(&client);
+        let samples = Arc::clone(&samples);
+        let tenant = tenant_id(a.tenant);
+        collectors.push(thread::spawn(move || {
+            let s = client.call(&tenant, &a);
+            samples.lock().unwrap().push(s);
+        }));
+    }
+    for c in collectors {
+        let _ = c.join();
+    }
+    let duration_s = start.elapsed().as_secs_f64();
+    let samples = samples.lock().unwrap();
+    aggregate(cfg, &samples, duration_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::coordinator::{HostEngine, Registry, Server, ServerCfg};
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert!((percentile(&v, 50.0) - 50.0).abs() <= 1.0);
+        assert!(percentile(&v, 99.0) >= 98.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn outcome_mapping() {
+        assert_eq!(
+            outcome_of(&ServeError::QueueFull { tenant: "x".into() }),
+            Outcome::Rejected
+        );
+        assert_eq!(outcome_of(&ServeError::Deadline), Outcome::Expired);
+        assert_eq!(outcome_of(&ServeError::Cancelled), Outcome::Cancelled);
+        assert_eq!(
+            outcome_of(&ServeError::Engine("x".into())),
+            Outcome::Error
+        );
+        assert_eq!(
+            outcome_of(&ServeError::ShuttingDown),
+            Outcome::Error
+        );
+    }
+
+    #[test]
+    fn steady_replay_in_process_completes_everything() {
+        let cfg = presets::tiny();
+        let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+        let mut server = Server::new(registry, ServerCfg::default());
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let server = Arc::new(server);
+        register_tenants(&server, 4).unwrap();
+        let mut tcfg = TrafficCfg::named(Shape::Steady, 8, 11);
+        tcfg.tenants = 4;
+        tcfg.rate = 400.0;
+        let report = run_shape(
+            &tcfg,
+            Arc::new(InProcessClient::new(Arc::clone(&server))),
+        );
+        assert_eq!(report.requests, 8);
+        assert_eq!(report.completed, 8, "{report:?}");
+        assert_eq!(report.errors, 0);
+        assert!(report.tok_per_s > 0.0);
+        assert!(report.ttft_p50_ms > 0.0);
+        assert!(report.ttft_p50_ms <= report.ttft_p99_ms);
+        assert!(report.latency_p50_ms <= report.latency_p99_ms);
+    }
+
+    #[test]
+    fn cancel_storm_replay_resolves_every_request() {
+        let cfg = presets::tiny();
+        let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+        let mut server = Server::new(registry, ServerCfg::default());
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let server = Arc::new(server);
+        register_tenants(&server, 4).unwrap();
+        let mut tcfg = TrafficCfg::named(Shape::CancelStorm, 12, 5);
+        tcfg.tenants = 4;
+        tcfg.max_new_tokens = 40;
+        let report = run_shape(
+            &tcfg,
+            Arc::new(InProcessClient::new(Arc::clone(&server))),
+        );
+        assert_eq!(report.requests, 12);
+        assert_eq!(
+            report.completed
+                + report.cancelled
+                + report.rejected
+                + report.expired,
+            12,
+            "unresolved requests: {report:?}"
+        );
+        assert_eq!(report.errors, 0, "{report:?}");
+        // no admission depth leaked behind the storm
+        assert_eq!(server.batcher.depth(), 0);
+    }
+}

@@ -1,0 +1,318 @@
+//! Seeded traffic-shape planning.
+//!
+//! [`plan`] is a pure function of [`TrafficCfg`] (shape + seed): it emits
+//! the full arrival schedule — offsets, tenant picks, prompts, options,
+//! cancellation plans — before any request is sent. Replaying a plan is
+//! what makes `bench_traffic` deterministic: the *workload* is fixed by
+//! the seed even though measured latencies are machine-dependent.
+
+use crate::coordinator::GenOptions;
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// The six named adversarial traffic shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// Poisson arrivals at a constant mean rate.
+    Steady,
+    /// Poisson-spaced bursts of 4–12 back-to-back requests.
+    Bursty,
+    /// Low → high → low rate ramp (a compressed diurnal cycle).
+    Diurnal,
+    /// Steady arrivals with hot-tenant Zipfian skew over a 1k+ tenant
+    /// universe on the pooled tier.
+    Zipf,
+    /// Bursty arrivals where most requests are cancelled mid-flight.
+    CancelStorm,
+    /// Steady arrivals where half the requests carry tight deadlines.
+    DeadlineMix,
+}
+
+pub const ALL_SHAPES: [Shape; 6] = [
+    Shape::Steady,
+    Shape::Bursty,
+    Shape::Diurnal,
+    Shape::Zipf,
+    Shape::CancelStorm,
+    Shape::DeadlineMix,
+];
+
+impl Shape {
+    pub fn name(self) -> &'static str {
+        match self {
+            Shape::Steady => "steady",
+            Shape::Bursty => "bursty",
+            Shape::Diurnal => "diurnal",
+            Shape::Zipf => "zipf",
+            Shape::CancelStorm => "cancel_storm",
+            Shape::DeadlineMix => "deadline_mix",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Shape> {
+        ALL_SHAPES.iter().copied().find(|s| s.name() == name)
+    }
+
+    /// Stable RNG stream id, so each shape's schedule is independent of
+    /// which other shapes run.
+    fn stream(self) -> u64 {
+        ALL_SHAPES.iter().position(|s| *s == self).unwrap() as u64
+    }
+}
+
+/// One shape's workload parameters.
+#[derive(Debug, Clone)]
+pub struct TrafficCfg {
+    pub shape: Shape,
+    /// Total requests in the schedule.
+    pub requests: usize,
+    /// Registered tenant universe the schedule draws from.
+    pub tenants: usize,
+    pub seed: u64,
+    /// Mean arrival rate, requests/second.
+    pub rate: f64,
+    /// Generation length cap per request.
+    pub max_new_tokens: usize,
+    /// Deadline budget for the tight half of [`Shape::DeadlineMix`].
+    pub deadline_ms: u64,
+    /// How long after submit a [`Shape::CancelStorm`] victim is cancelled.
+    pub cancel_after_ms: u64,
+}
+
+impl TrafficCfg {
+    /// Per-shape defaults: the Zipf shape exercises a 1.2k-tenant pooled
+    /// tier (the paper-scale claim), everything else a small universe.
+    pub fn named(shape: Shape, requests: usize, seed: u64) -> TrafficCfg {
+        TrafficCfg {
+            shape,
+            requests,
+            tenants: if shape == Shape::Zipf { 1200 } else { 8 },
+            seed,
+            rate: 150.0,
+            max_new_tokens: 8,
+            deadline_ms: 25,
+            cancel_after_ms: 5,
+        }
+    }
+}
+
+/// One planned request.
+#[derive(Debug)]
+pub struct Arrival {
+    /// Offset from the start of the replay.
+    pub at: Duration,
+    /// Index into the registered tenant universe (see
+    /// [`super::tenant_id`]).
+    pub tenant: usize,
+    pub prompt: String,
+    pub opts: GenOptions,
+    /// `Some(d)`: cancel this request `d` after submitting it.
+    pub cancel_after: Option<Duration>,
+}
+
+/// Exponential inter-arrival gap for a Poisson process at `rate`/s.
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+/// Inverse-CDF Zipf(s) sampler over `n` ranks.
+struct ZipfSampler {
+    cum: Vec<f64>,
+}
+
+impl ZipfSampler {
+    fn new(n: usize, s: f64) -> ZipfSampler {
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for i in 0..n {
+            total += 1.0 / ((i + 1) as f64).powf(s);
+            cum.push(total);
+        }
+        ZipfSampler { cum }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64() * self.cum.last().copied().unwrap_or(1.0);
+        self.cum.partition_point(|&c| c < u).min(self.cum.len() - 1)
+    }
+}
+
+/// Short prompt over the char-level tokenizer's charset; with BOS/SEP
+/// framing it stays far inside the tiny preset's 48-token window.
+fn prompt(rng: &mut Rng) -> String {
+    format!("q:{:06}", rng.below(1_000_000))
+}
+
+/// Expand `cfg` into its full deterministic arrival schedule, sorted by
+/// offset.
+pub fn plan(cfg: &TrafficCfg) -> Vec<Arrival> {
+    assert!(cfg.tenants > 0 && cfg.requests > 0);
+    let mut rng = Rng::new(cfg.seed, cfg.shape.stream());
+    let zipf = ZipfSampler::new(cfg.tenants, 1.1);
+    let mut out = Vec::with_capacity(cfg.requests);
+    let mut t = 0.0f64;
+    let mut burst_left = 0usize;
+    for i in 0..cfg.requests {
+        // arrival offset
+        match cfg.shape {
+            Shape::Steady | Shape::Zipf | Shape::DeadlineMix => {
+                t += exp_gap(&mut rng, cfg.rate);
+            }
+            Shape::Bursty | Shape::CancelStorm => {
+                if burst_left == 0 {
+                    burst_left = rng.range(4, 13);
+                    // burst times spaced so the mean rate stays ~cfg.rate
+                    t += exp_gap(&mut rng, cfg.rate / 8.0);
+                }
+                burst_left -= 1;
+            }
+            Shape::Diurnal => {
+                // thirds: trough, 2.5x peak, trough
+                let phase = i * 3 / cfg.requests;
+                let mult = if phase == 1 { 2.5 } else { 0.3 };
+                t += exp_gap(&mut rng, cfg.rate * mult);
+            }
+        }
+        // tenant pick
+        let tenant = match cfg.shape {
+            Shape::Zipf => zipf.sample(&mut rng),
+            _ => rng.below(cfg.tenants as u32) as usize,
+        };
+        // options
+        let mut opts = GenOptions::greedy();
+        opts.max_new_tokens = cfg.max_new_tokens;
+        if cfg.shape == Shape::DeadlineMix && rng.bool(0.5) {
+            opts.deadline =
+                Some(Duration::from_millis(cfg.deadline_ms.max(1)));
+        }
+        // cancellation plan
+        let cancel_after = if cfg.shape == Shape::CancelStorm
+            && rng.bool(0.7)
+        {
+            let jitter = rng.below(1 + cfg.cancel_after_ms as u32) as u64;
+            Some(Duration::from_millis(cfg.cancel_after_ms + jitter))
+        } else {
+            None
+        };
+        out.push(Arrival {
+            at: Duration::from_secs_f64(t),
+            tenant,
+            prompt: prompt(&mut rng),
+            opts,
+            cancel_after,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(shape: Shape) -> TrafficCfg {
+        TrafficCfg::named(shape, 64, 7)
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for s in ALL_SHAPES {
+            assert_eq!(Shape::parse(s.name()), Some(s));
+        }
+        assert_eq!(Shape::parse("nope"), None);
+    }
+
+    #[test]
+    fn plan_is_deterministic_per_seed() {
+        for shape in ALL_SHAPES {
+            let a = plan(&cfg(shape));
+            let b = plan(&cfg(shape));
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.at, y.at, "{shape:?}");
+                assert_eq!(x.tenant, y.tenant, "{shape:?}");
+                assert_eq!(x.prompt, y.prompt, "{shape:?}");
+                assert_eq!(x.cancel_after, y.cancel_after, "{shape:?}");
+                assert_eq!(
+                    x.opts.deadline, y.opts.deadline,
+                    "{shape:?}"
+                );
+            }
+            let mut other = cfg(shape);
+            other.seed = 8;
+            let c = plan(&other);
+            assert!(
+                a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt
+                    || x.at != y.at),
+                "{shape:?}: different seed produced an identical plan"
+            );
+        }
+    }
+
+    #[test]
+    fn arrivals_sorted_and_bounded() {
+        for shape in ALL_SHAPES {
+            let c = cfg(shape);
+            let arrivals = plan(&c);
+            assert_eq!(arrivals.len(), c.requests);
+            let mut prev = Duration::ZERO;
+            for a in &arrivals {
+                assert!(a.at >= prev, "{shape:?}: arrivals out of order");
+                prev = a.at;
+                assert!(a.tenant < c.tenants, "{shape:?}: tenant oob");
+                // BOS + prompt + SEP must fit the tiny 48-token window
+                assert!(a.prompt.len() <= 16, "{shape:?}: prompt too long");
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_skews_hot_and_covers_big_universe() {
+        let c = TrafficCfg::named(Shape::Zipf, 2000, 3);
+        assert!(c.tenants >= 1000, "zipf must exercise a 1k+ universe");
+        let arrivals = plan(&c);
+        let hot = arrivals.iter().filter(|a| a.tenant == 0).count();
+        let cold = arrivals.iter().filter(|a| a.tenant == 500).count();
+        assert!(
+            hot > cold,
+            "rank 0 ({hot}) should outdraw rank 500 ({cold})"
+        );
+        assert!(hot > arrivals.len() / 50, "hot tenant barely hot: {hot}");
+        let distinct: std::collections::HashSet<_> =
+            arrivals.iter().map(|a| a.tenant).collect();
+        assert!(distinct.len() > 50, "tail too thin: {}", distinct.len());
+    }
+
+    #[test]
+    fn cancel_storm_plans_cancels_and_deadline_mix_plans_deadlines() {
+        let storm = plan(&cfg(Shape::CancelStorm));
+        let cancels =
+            storm.iter().filter(|a| a.cancel_after.is_some()).count();
+        assert!(
+            cancels * 10 >= storm.len() * 5,
+            "storm is mostly cancels: {cancels}/{}",
+            storm.len()
+        );
+        let mix = plan(&cfg(Shape::DeadlineMix));
+        let tight =
+            mix.iter().filter(|a| a.opts.deadline.is_some()).count();
+        assert!(tight > 0 && tight < mix.len(), "mix half-tight: {tight}");
+        // other shapes plan neither
+        for a in plan(&cfg(Shape::Steady)) {
+            assert!(a.cancel_after.is_none());
+            assert!(a.opts.deadline.is_none());
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster() {
+        let arrivals = plan(&cfg(Shape::Bursty));
+        let zero_gaps = arrivals
+            .windows(2)
+            .filter(|w| w[1].at == w[0].at)
+            .count();
+        assert!(
+            zero_gaps > arrivals.len() / 2,
+            "bursts should share arrival instants: {zero_gaps}"
+        );
+    }
+}

@@ -2,13 +2,16 @@
 //!
 //! Subcommands:
 //!   train     train one adapter on a synthetic task (pjrt or host backend)
-//!   serve     multi-tenant serving demo (registers tenants, runs traffic)
+//!   serve     multi-tenant serving demo, or (with --http) the HTTP edge
+//!   traffic   replay a named seeded traffic shape (in-process or vs --http)
 //!   eval      evaluate a checkpoint on a task
 //!   params    parameter accounting / memory model on any geometry
 //!   info      show manifest / artifact inventory
 //!
 //! Examples:
 //!   mos train --preset tiny --method mos --r 8 --l 2 --e 2 --task recall
+//!   mos serve --preset tiny --tenants 8 --http 127.0.0.1:8700
+//!   mos traffic --shape cancel_storm --requests 64 --seed 0
 //!   mos params --geometry llama2-7b
 //!   mos info
 
@@ -20,6 +23,11 @@ use mos::coordinator::{
     TenantSpec,
 };
 use mos::data::tasks::{Task, TaskKind};
+use mos::frontend::{Frontend, FrontendCfg};
+use mos::loadgen::{
+    register_tenants, register_tenants_http, run_shape, HttpClient,
+    InProcessClient, Shape, TrafficCfg,
+};
 use mos::runtime::{Manifest, Runtime};
 use mos::train::checkpoint::Checkpoint;
 use mos::train::host::HostBackend;
@@ -44,6 +52,7 @@ fn real_main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
+        Some("traffic") => cmd_traffic(&args),
         Some("eval") => cmd_eval(&args),
         Some("params") => cmd_params(&args),
         Some("info") => cmd_info(&args),
@@ -57,18 +66,29 @@ fn real_main() -> Result<()> {
 fn print_usage() {
     println!(
         "mos — Mixture of Shards multi-tenant adapter framework\n\n\
-         USAGE: mos <train|serve|eval|params|info> [flags]\n\n\
-         train:  --preset tiny --method mos --r 8 --l 2 --e 2 \
+         USAGE: mos <train|serve|traffic|eval|params|info> [flags]\n\n\
+         train:   --preset tiny --method mos --r 8 --l 2 --e 2 \
          [--private-rank 1] --task recall --steps 300 --lr 0.02 \
          [--backend auto|host|pjrt] [--seed 0] [--out ckpt_dir]\n\
-         serve:  --preset tiny --tenants 8 --requests 64 \
+         serve:   --preset tiny --tenants 8 --requests 64 \
          [--capacity-mb 64] [--workers 1] [--batch 8] [--max-wait-ms 5] \
          [--queue-per-tenant 256] [--queue-global 1024] \
          [--max-new-tokens N] [--temperature 0.0] [--top-k 0] \
-         [--sample-seed 0] [--deadline-ms 0]\n\
-         eval:   --ckpt ckpt_dir --task recall [--n 32]\n\
-         params: --geometry llama2-7b [--tenants 10000]\n\
-         info:   [--artifacts DIR]"
+         [--sample-seed 0] [--deadline-ms 0] \
+         [--http IP:PORT [--http-secs 0]]\n\
+         \x20        with --http: serve the HTTP edge on IP:PORT instead of \
+         running the demo loop\n\
+         \x20        (POST /v1/generate streams ndjson; --http-secs 0 runs \
+         until killed)\n\
+         traffic: --shape steady|bursty|diurnal|zipf|cancel_storm|\
+         deadline_mix\n\
+         \x20        [--requests 32] [--seed 0] [--tenants N] \
+         [--http IP:PORT] [--no-register]\n\
+         \x20        replays one seeded shape in-process, or against a \
+         running edge with --http\n\
+         eval:    --ckpt ckpt_dir --task recall [--n 32]\n\
+         params:  --geometry llama2-7b [--tenants 10000]\n\
+         info:    [--artifacts DIR]"
     );
 }
 
@@ -229,6 +249,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg2 = cfg.clone();
     server.start(workers, move |_| HostEngine::new(cfg2.clone(), 0));
 
+    // --http: expose the edge instead of running the demo loop
+    if let Some(addr) = args.get("http") {
+        let server = Arc::new(server);
+        let mut fe =
+            Frontend::start(Arc::clone(&server), addr, FrontendCfg::default())
+                .context("starting HTTP edge")?;
+        println!("http edge listening on {}", fe.local_addr());
+        let secs = args.u64("http-secs", 0)?;
+        if secs == 0 {
+            // run until killed
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(Duration::from_secs(secs));
+        fe.shutdown();
+        println!("{}", server.metrics.summary());
+        return Ok(());
+    }
+
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     let mut rejected = 0usize;
@@ -265,6 +305,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (hits, misses) = server.cache.stats();
     println!("materialization cache: {hits} hits / {misses} builds");
     server.shutdown();
+    Ok(())
+}
+
+/// Replay one named seeded traffic shape and print its `ShapeReport` as
+/// JSON. In-process by default (spins up a fresh tiny server); with
+/// `--http IP:PORT` it drives a running edge instead (see `mos serve
+/// --http`), registering the replay tenants over the wire first unless
+/// `--no-register` is given.
+fn cmd_traffic(args: &Args) -> Result<()> {
+    let shape_name = args.str("shape", "steady");
+    let shape = Shape::parse(&shape_name)
+        .with_context(|| format!("unknown shape '{shape_name}'"))?;
+    let requests = args.usize("requests", 32)?;
+    let seed = args.u64("seed", 0)?;
+    let mut tcfg = TrafficCfg::named(shape, requests, seed);
+    tcfg.tenants = args.usize("tenants", tcfg.tenants)?;
+
+    let report = if let Some(addr) = args.get("http") {
+        let addr: std::net::SocketAddr =
+            addr.parse().context("--http wants IP:PORT")?;
+        if !args.has("no-register") {
+            register_tenants_http(addr, tcfg.tenants)?;
+        }
+        run_shape(&tcfg, Arc::new(HttpClient::new(addr)))
+    } else {
+        let preset = args.str("preset", "tiny");
+        let cfg = presets::by_name(&preset).context("unknown preset")?;
+        let capacity = args.usize("capacity-mb", 1024)? << 20;
+        let registry = Arc::new(Registry::new(cfg.clone(), capacity));
+        let mut server = Server::new(
+            registry,
+            ServerCfg {
+                cache_capacity: tcfg.tenants.clamp(64, 2048),
+                ..ServerCfg::default()
+            },
+        );
+        let cfg2 = cfg.clone();
+        server.start(args.usize("workers", 2)?, move |_| {
+            HostEngine::new(cfg2.clone(), 0)
+        });
+        let server = Arc::new(server);
+        register_tenants(&server, tcfg.tenants)?;
+        run_shape(&tcfg, Arc::new(InProcessClient::new(Arc::clone(&server))))
+    };
+    println!("{}", report.to_json().to_string_pretty());
     Ok(())
 }
 

@@ -1,0 +1,293 @@
+//! Front-door integration: the HTTP edge must be a transparent window
+//! onto the coordinator — byte-identical token streams, and the same
+//! cancel / deadline / shutdown semantics (with the same resource
+//! accounting) as an in-process `ResponseHandle`.
+
+use mos::config::presets;
+use mos::coordinator::{
+    EngineRun, GenOptions, HostEngine, KvStats, Registry, ServeEngine,
+    Server, ServerCfg, TenantSpec,
+};
+use mos::frontend::{http, Frontend, FrontendCfg};
+use mos::util::json::Json;
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// A host engine whose decode steps are artificially slowed, so tests can
+/// hang up / expire a generation mid-flight without racing the real
+/// decode speed. `Duration::ZERO` leaves it at full speed.
+struct SlowStepEngine {
+    inner: HostEngine,
+    step_delay: Duration,
+}
+
+impl ServeEngine for SlowStepEngine {
+    fn forward(
+        &mut self,
+        tenant: &mos::coordinator::Tenant,
+        adapter: &mos::adapter::ServingAdapter,
+        tokens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.inner.forward(tenant, adapter, tokens)
+    }
+    fn shape(&self) -> (usize, usize, usize) {
+        self.inner.shape()
+    }
+    fn supports_steps(&self) -> bool {
+        true
+    }
+    fn prefill_rows(
+        &mut self,
+        runs: &[EngineRun],
+        rows: &[usize],
+        tokens: &[i32],
+        last: &[usize],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.inner.prefill_rows(runs, rows, tokens, last)
+    }
+    fn decode_rows(
+        &mut self,
+        runs: &[EngineRun],
+        entries: &[(usize, usize, i32)],
+    ) -> anyhow::Result<Vec<f32>> {
+        if self.step_delay > Duration::ZERO {
+            thread::sleep(self.step_delay);
+        }
+        self.inner.decode_rows(runs, entries)
+    }
+    fn kv_admit(
+        &mut self,
+        row: usize,
+        tenant: &mos::coordinator::Tenant,
+        prompt: &[i32],
+    ) -> bool {
+        self.inner.kv_admit(row, tenant, prompt)
+    }
+    fn kv_release(&mut self, row: usize) {
+        self.inner.kv_release(row)
+    }
+    fn kv_tenant_bytes(&self, tenant: &mos::coordinator::Tenant) -> usize {
+        self.inner.kv_tenant_bytes(tenant)
+    }
+    fn kv_resident_bytes(&self) -> usize {
+        self.inner.kv_resident_bytes()
+    }
+}
+
+/// Tiny server with one engine worker and "alice" registered, fronted by
+/// the HTTP edge on an ephemeral loopback port. A `probe` also disables
+/// prefix sharing so a cancel storm drains the KV pool to exactly zero.
+fn serve_edge(
+    step_delay: Duration,
+    probe: Option<Arc<KvStats>>,
+) -> (Arc<Server>, Frontend) {
+    let cfg = presets::tiny();
+    let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+    let mut server = Server::new(
+        registry,
+        ServerCfg { max_batch: 4, ..ServerCfg::default() },
+    );
+    server
+        .register("alice", TenantSpec::mos(4, 2, 2, 1).seed(7))
+        .unwrap();
+    let cfg2 = cfg.clone();
+    server.start(1, move |_| {
+        let mut inner = HostEngine::new(cfg2.clone(), 0);
+        if let Some(p) = &probe {
+            inner = inner.no_prefix_share().kv_stats(Arc::clone(p));
+        }
+        SlowStepEngine { inner, step_delay }
+    });
+    let server = Arc::new(server);
+    let fe = Frontend::start(
+        Arc::clone(&server),
+        "127.0.0.1:0",
+        FrontendCfg {
+            poll: Duration::from_millis(5),
+            ..FrontendCfg::default()
+        },
+    )
+    .unwrap();
+    (server, fe)
+}
+
+/// Full `POST /v1/generate` round trip: returns the status, the streamed
+/// token ids in arrival order, and the terminal `{"done":...}` line.
+fn generate_http(
+    addr: SocketAddr,
+    tenant: &str,
+    prompt: &str,
+    max_new_tokens: usize,
+    deadline_ms: Option<u64>,
+) -> (u16, Vec<i32>, Option<Json>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut fields = vec![
+        ("tenant", Json::str(tenant)),
+        ("prompt", Json::str(prompt)),
+        ("max_new_tokens", Json::num(max_new_tokens as f64)),
+    ];
+    if let Some(ms) = deadline_ms {
+        fields.push(("deadline_ms", Json::num(ms as f64)));
+    }
+    let body = Json::obj(fields).to_string();
+    stream
+        .write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let (status, _headers) = http::read_response_head(&mut stream).unwrap();
+    if status != 200 {
+        return (status, Vec::new(), None);
+    }
+    let mut tokens = Vec::new();
+    let mut done = None;
+    while let Ok(Some(line)) = http::read_chunk(&mut stream) {
+        let json = Json::parse(std::str::from_utf8(&line).unwrap().trim())
+            .expect("stream line is not JSON");
+        if let Some(t) = json.get("token").and_then(Json::as_f64) {
+            tokens.push(t as i32);
+        } else if json.get("done").is_some() {
+            done = Some(json);
+        }
+    }
+    (status, tokens, done)
+}
+
+#[test]
+fn http_stream_matches_in_process_token_sequence() {
+    let (server, fe) = serve_edge(Duration::ZERO, None);
+    let addr = fe.local_addr();
+
+    // in-process reference: same tenant, same prompt, same options
+    let h = server
+        .submit("alice", "q:42", GenOptions::greedy().max_new_tokens(12))
+        .unwrap();
+    let resp = h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    let reference: Vec<i32> = h.tokens().collect();
+    assert!(!reference.is_empty());
+
+    let (status, tokens, done) =
+        generate_http(addr, "alice", "q:42", 12, None);
+    assert_eq!(status, 200);
+    assert_eq!(tokens, reference, "HTTP stream diverged from in-process");
+    let done = done.expect("stream ended without a terminal line");
+    assert!(done.get("error").is_none(), "{done:?}");
+    assert_eq!(done.req_str("text").unwrap(), resp.text);
+    assert_eq!(done.req_usize("tokens").unwrap(), resp.tokens);
+    assert!(done.get("latency_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    drop(fe);
+}
+
+#[test]
+fn connection_drop_cancels_and_frees_admission_and_kv() {
+    let probe = Arc::new(KvStats::default());
+    let (server, fe) =
+        serve_edge(Duration::from_millis(3), Some(Arc::clone(&probe)));
+    let addr = fe.local_addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let body =
+        r#"{"tenant":"alice","prompt":"q:drop","max_new_tokens":200}"#;
+    stream
+        .write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let (status, _) = http::read_response_head(&mut stream).unwrap();
+    assert_eq!(status, 200);
+    // first token line proves the decode is mid-flight
+    assert!(http::read_chunk(&mut stream).unwrap().is_some());
+    drop(stream); // hang up — over HTTP this IS the cancel
+
+    let t0 = Instant::now();
+    while server.metrics.cancelled.load(Ordering::Relaxed) == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "connection drop never cancelled the request"
+        );
+        thread::sleep(Duration::from_millis(5));
+    }
+    // the cancel must return both the admission slot and the KV pages
+    let t0 = Instant::now();
+    while server.batcher.depth() != 0 || probe.resident_bytes() != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "leaked after drop: depth={} kv_bytes={}",
+            server.batcher.depth(),
+            probe.resident_bytes()
+        );
+        thread::sleep(Duration::from_millis(5));
+    }
+    // and the freed slot serves the next request
+    let h = server
+        .submit("alice", "q:next", GenOptions::greedy().max_new_tokens(4))
+        .unwrap();
+    assert!(h.wait_timeout(Duration::from_secs(30)).unwrap().is_ok());
+    drop(fe);
+}
+
+#[test]
+fn deadline_expires_cleanly_over_http() {
+    let (server, fe) = serve_edge(Duration::from_millis(3), None);
+    let addr = fe.local_addr();
+    // 3ms/step against a 20ms budget: expires mid-decode, after the 200
+    // status and a few token lines have already gone out
+    let (status, tokens, done) =
+        generate_http(addr, "alice", "q:tight", 200, Some(20));
+    assert_eq!(
+        status, 200,
+        "mid-stream expiry ends in a terminal line, not an error status"
+    );
+    let done = done.expect("missing terminal line");
+    assert_eq!(done.req_str("kind").unwrap(), "deadline", "{done:?}");
+    assert!(tokens.len() < 200, "deadline never fired");
+    assert_eq!(server.metrics.expired.load(Ordering::Relaxed), 1);
+    assert_eq!(server.batcher.depth(), 0);
+    drop(fe);
+}
+
+#[test]
+fn frontend_shutdown_drains_in_flight_stream() {
+    let (server, mut fe) = serve_edge(Duration::from_millis(2), None);
+    let addr = fe.local_addr();
+    let client = thread::spawn(move || {
+        generate_http(addr, "alice", "q:drain", 24, None)
+    });
+    // let the stream get going, then shut the edge down under it
+    thread::sleep(Duration::from_millis(30));
+    fe.shutdown();
+    let (status, tokens, done) =
+        client.join().expect("client hung across frontend shutdown");
+    assert_eq!(status, 200);
+    let done =
+        done.expect("shutdown severed the stream before its terminal line");
+    assert!(done.get("error").is_none(), "{done:?}");
+    assert_eq!(done.req_usize("tokens").unwrap(), tokens.len());
+    // the coordinator outlives its edge: in-process serving still works
+    let h = server
+        .submit(
+            "alice",
+            "q:post-edge",
+            GenOptions::greedy().max_new_tokens(4),
+        )
+        .unwrap();
+    assert!(h.wait_timeout(Duration::from_secs(30)).unwrap().is_ok());
+}

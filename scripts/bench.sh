@@ -15,6 +15,8 @@ export MOS_THREADS="${MOS_THREADS:-$(nproc 2>/dev/null || echo 4)}"
 export MOS_GEMM_MS="${MOS_GEMM_MS:-200}"
 export MOS_SERVE_REQS="${MOS_SERVE_REQS:-48}"
 export MOS_SERVE_TENANTS="${MOS_SERVE_TENANTS:-1,4,16}"
+export MOS_TRAFFIC_REQS="${MOS_TRAFFIC_REQS:-32}"
+export MOS_TRAFFIC_ZIPF_TENANTS="${MOS_TRAFFIC_ZIPF_TENANTS:-1200}"
 export MOS_BENCH_BACKEND="${MOS_BENCH_BACKEND:-host}"
 
 # the crate may live at the root or under rust/
@@ -31,10 +33,15 @@ echo "== bench_serving (reqs=$MOS_SERVE_REQS, tenants=$MOS_SERVE_TENANTS) =="
 # shellcheck disable=SC2086
 cargo bench $MANIFEST_ARGS --bench bench_serving
 
+echo "== bench_traffic (reqs/shape=$MOS_TRAFFIC_REQS, zipf tenants=$MOS_TRAFFIC_ZIPF_TENANTS) =="
+# shellcheck disable=SC2086
+cargo bench $MANIFEST_ARGS --bench bench_traffic
+
 # same schema gate CI enforces: fail loud on a silently empty artifact
 if command -v python3 >/dev/null 2>&1; then
     python3 scripts/check_bench.py \
-        "$MOS_BENCH_OUT/BENCH_gemm.json" "$MOS_BENCH_OUT/BENCH_serving.json"
+        "$MOS_BENCH_OUT/BENCH_gemm.json" "$MOS_BENCH_OUT/BENCH_serving.json" \
+        "$MOS_BENCH_OUT/BENCH_traffic.json"
 fi
 
-echo "wrote $MOS_BENCH_OUT/BENCH_gemm.json and $MOS_BENCH_OUT/BENCH_serving.json"
+echo "wrote $MOS_BENCH_OUT/BENCH_gemm.json, $MOS_BENCH_OUT/BENCH_serving.json and $MOS_BENCH_OUT/BENCH_traffic.json"

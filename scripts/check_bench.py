@@ -45,6 +45,33 @@ SERVING_CASE = [
     "adapter_mb",
     "kv_mb",
 ]
+TRAFFIC_TOP = ["bench", "seed", "requests_per_shape", "target", "shapes"]
+TRAFFIC_SHAPE = [
+    "shape",
+    "requests",
+    "tenants",
+    "completed",
+    "rejected",
+    "expired",
+    "cancelled",
+    "errors",
+    "ttft_p50_ms",
+    "ttft_p99_ms",
+    "latency_p50_ms",
+    "latency_p99_ms",
+    "tok_per_s",
+    "duration_s",
+]
+# every named adversarial shape must be present in the replay
+TRAFFIC_SHAPES = [
+    "steady",
+    "bursty",
+    "diurnal",
+    "zipf",
+    "cancel_storm",
+    "deadline_mix",
+]
+
 # the sweep must actually contain the arms the ROADMAP row compares
 SERVING_ARMS = [
     {"decode": "kv_step", "prefill": "lean", "adapter": "pooled"},
@@ -109,6 +136,43 @@ def check_serving(path: str, data: dict) -> None:
     print(f"check_bench: {path} ok ({len(cases)} cases)")
 
 
+def check_traffic(path: str, data: dict) -> None:
+    require(data, TRAFFIC_TOP, path)
+    shapes = data.get("shapes")
+    if not isinstance(shapes, list) or not shapes:
+        fail(f"{path}: 'shapes' is empty or not a list")
+    by_name = {}
+    for i, shape in enumerate(shapes):
+        if not isinstance(shape, dict):
+            fail(f"{path}: shapes[{i}] is not an object")
+        require(shape, TRAFFIC_SHAPE, f"{path}: shapes[{i}]")
+        by_name[shape["shape"]] = shape
+    for name in TRAFFIC_SHAPES:
+        if name not in by_name:
+            fail(f"{path}: replay is missing the '{name}' shape")
+    for name, shape in by_name.items():
+        resolved = (
+            shape["completed"]
+            + shape["rejected"]
+            + shape["expired"]
+            + shape["cancelled"]
+            + shape["errors"]
+        )
+        if resolved != shape["requests"]:
+            fail(
+                f"{path}: {name}: {resolved} resolved != "
+                f"{shape['requests']} requests"
+            )
+    # the paper-scale claim: a 1k+ tenant pooled tier absorbs the skewed
+    # shape without eviction thrash (thrash surfaces as errors)
+    zipf = by_name["zipf"]
+    if zipf["tenants"] < 1000:
+        fail(f"{path}: zipf ran only {zipf['tenants']} tenants (< 1000)")
+    if zipf["errors"] != 0:
+        fail(f"{path}: zipf replay had {zipf['errors']} errors")
+    print(f"check_bench: {path} ok ({len(shapes)} shapes)")
+
+
 def main() -> int:
     args = sys.argv[1:] or ["BENCH_gemm.json", "BENCH_serving.json"]
     for path in args:
@@ -119,6 +183,8 @@ def main() -> int:
             check_serving(path, data)
         elif kind == "gemm":
             check_gemm(path, data)
+        elif kind == "traffic":
+            check_traffic(path, data)
         else:
             fail(f"{path}: unknown or missing 'bench' kind ({kind!r})")
     return 0

@@ -4,6 +4,7 @@
 Usage:
   scripts/perf_row.py [BENCH_gemm.json] [--pr N]
   scripts/perf_row.py --serving [BENCH_serving.json] [--pr N]
+  scripts/perf_row.py --traffic [BENCH_traffic.json] [--pr N]
 
 Default mode prints the GEMM row matching the ROADMAP Perf table columns:
 | PR | machine | threads | serving-scale GEMM speedup vs seed scalar (min) | geomean |
@@ -17,7 +18,13 @@ warm/cold column is cold prefill p50 / warm shared-prefix prefill p50 —
 both PR-7 claims):
 | PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full | adapter MB pooled vs dense | kv MB paged vs fixed | prefill p50 cold/warm |
 
-CI appends both to the job summary and uploads the raw JSON as an
+--traffic prints the traffic-trajectory row from the load-harness replay
+(steady ttft p50/p99 is the uncontended baseline; burst p99 shows queueing
+degradation; zipf runs the 1k+ tenant pooled tier; storm/deadline columns
+show the resolved-outcome mix of the adversarial shapes):
+| PR | machine | target | steady ttft p50/p99 ms | steady tok/s | burst ttft p99 ms | zipf tenants | zipf ttft p99 ms | storm cxl/ok | deadline exp/ok |
+
+CI appends the rows to the job summary and uploads the raw JSON as an
 artifact; the next PR pastes the rows into ROADMAP.md.
 """
 import json
@@ -111,6 +118,35 @@ def serving_row(path: str) -> str:
     )
 
 
+def traffic_row(path: str) -> str:
+    with open(path) as f:
+        bench = json.load(f)
+    by_name = {s.get("shape"): s for s in bench.get("shapes", [])}
+
+    def val(name, key):
+        shape = by_name.get(name)
+        return float(shape.get(key, float("nan"))) if shape else float("nan")
+
+    return (
+        "| {} | {} | {} | {:.1f}/{:.1f} | {:.0f} | {:.1f} | {} "
+        "| {:.1f} | {:.0f}/{:.0f} | {:.0f}/{:.0f} |".format(
+            pr_arg("8 (front door)"),
+            machine(),
+            bench.get("target", "?"),
+            val("steady", "ttft_p50_ms"),
+            val("steady", "ttft_p99_ms"),
+            val("steady", "tok_per_s"),
+            val("bursty", "ttft_p99_ms"),
+            int(val("zipf", "tenants")),
+            val("zipf", "ttft_p99_ms"),
+            val("cancel_storm", "cancelled"),
+            val("cancel_storm", "completed"),
+            val("deadline_mix", "expired"),
+            val("deadline_mix", "completed"),
+        )
+    )
+
+
 def main() -> int:
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     # --pr consumes its value; drop it from the positional list
@@ -120,6 +156,8 @@ def main() -> int:
             args.remove(val)
     if "--serving" in sys.argv:
         print(serving_row(args[0] if args else "BENCH_serving.json"))
+    elif "--traffic" in sys.argv:
+        print(traffic_row(args[0] if args else "BENCH_traffic.json"))
     else:
         print(gemm_row(args[0] if args else "BENCH_gemm.json"))
     return 0

@@ -1,22 +1,30 @@
 //! Traffic-replay bench: the load harness drives the serving stack with
-//! the six named adversarial traffic shapes (steady Poisson, bursty,
+//! the seven named adversarial traffic shapes (steady Poisson, bursty,
 //! diurnal ramp, hot-tenant Zipfian skew over a 1k+ tenant pooled tier,
-//! cancel storm, tight-deadline mix), each expanded deterministically
-//! from a seed by `loadgen::plan`. By default requests go straight into
-//! `Server::submit`; with MOS_TRAFFIC_HTTP=1 they go through the HTTP
-//! front door on a loopback socket instead — same shapes, same seeds,
-//! plus the network edge (cancellations become connection drops).
+//! cancel storm, tight-deadline mix, weighted DWRR contention), each
+//! expanded deterministically from a seed by `loadgen::plan`. By default
+//! requests go straight into `Server::submit`; with MOS_TRAFFIC_HTTP=1
+//! they go through the HTTP front door on a loopback socket instead —
+//! same shapes, same seeds, plus the network edge (cancellations become
+//! connection drops).
+//!
+//! The replay server runs with chunked prefill on (PR 9). The
+//! prefill-contended shapes (bursty, deadline_mix — long prompts) also
+//! run an unchunked control arm and record its ttft p99 alongside, so
+//! scripts/check_bench.py can gate "chunked strictly beats one-shot".
 //!
 //! Emits BENCH_traffic.json with per-shape p50/p99 ttft and latency,
 //! tok/s, and reject/expire/cancel counts — gated by
 //! scripts/check_bench.py and rendered into the ROADMAP trajectory table
 //! by scripts/perf_row.py --traffic.
 //!
-//! Run: cargo bench --bench bench_traffic
-//! Knobs: MOS_TRAFFIC_REQS (default 32, per shape), MOS_TRAFFIC_SEED
-//! (default 0), MOS_TRAFFIC_SHAPES (csv of shape names, default all six),
-//! MOS_TRAFFIC_HTTP (1 = drive the front door), MOS_TRAFFIC_ZIPF_TENANTS
-//! (default 1200), MOS_BENCH_OUT (dir for BENCH_traffic.json, default .)
+//! Run: cargo bench --bench bench_traffic [-- --shapes a,b --requests N
+//!      --seed S --zipf-tenants N --prefill-chunk N]
+//! Env fallbacks for the same knobs: MOS_TRAFFIC_SHAPES,
+//! MOS_TRAFFIC_REQS, MOS_TRAFFIC_SEED, MOS_TRAFFIC_ZIPF_TENANTS,
+//! MOS_TRAFFIC_CHUNK (0 = one-shot prefill), plus MOS_TRAFFIC_HTTP
+//! (1 = drive the front door) and MOS_BENCH_OUT (dir for
+//! BENCH_traffic.json, default .)
 
 use mos::bench::Table;
 use mos::config::presets;
@@ -26,32 +34,51 @@ use mos::loadgen::{
     register_tenants, register_tenants_http, run_shape, HttpClient,
     InProcessClient, Shape, ShapeReport, TrafficCfg, ALL_SHAPES,
 };
+use mos::util::cli::Args;
 use mos::util::json::Json;
 use std::sync::Arc;
 
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
+/// CLI flag if given, else env var, else default — the PR-9 promotion
+/// of the traffic knobs to proper flags, env still honored.
+fn knob_usize(args: &Args, flag: &str, env: &str, default: usize) -> usize {
+    if let Some(v) = args.get(flag) {
+        return v
+            .parse()
+            .unwrap_or_else(|_| panic!("--{flag}: '{v}' is not an integer"));
+    }
+    std::env::var(env)
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
 }
 
+fn knob_str(args: &Args, flag: &str, env: &str) -> Option<String> {
+    args.get(flag)
+        .map(str::to_string)
+        .or_else(|| std::env::var(env).ok())
+}
+
 /// One shape = one fresh server (and, in HTTP mode, one fresh front
 /// door): shapes must not share queue state or KV residue.
-fn run_one(cfg: &TrafficCfg, over_http: bool) -> ShapeReport {
+fn run_one(
+    cfg: &TrafficCfg,
+    over_http: bool,
+    prefill_chunk: Option<usize>,
+) -> ShapeReport {
     let model = presets::tiny();
     let registry = Arc::new(Registry::new(model.clone(), 1 << 30));
     let mut server = Server::new(
         registry,
         ServerCfg {
             cache_capacity: cfg.tenants.clamp(64, 2048),
+            prefill_chunk,
             ..ServerCfg::default()
         },
     );
     let model2 = model.clone();
     server.start(2, move |_| HostEngine::new(model2.clone(), 0));
     let server = Arc::new(server);
-    if over_http {
+    let mut report = if over_http {
         let mut fe = Frontend::start(
             Arc::clone(&server),
             "127.0.0.1:0",
@@ -59,47 +86,60 @@ fn run_one(cfg: &TrafficCfg, over_http: bool) -> ShapeReport {
         )
         .expect("frontend bind");
         let addr = fe.local_addr();
-        register_tenants_http(addr, cfg.tenants)
+        register_tenants_http(addr, cfg)
             .expect("tenant registration over HTTP");
         let report = run_shape(cfg, Arc::new(HttpClient::new(addr)));
         fe.shutdown();
         report
     } else {
-        register_tenants(&server, cfg.tenants)
-            .expect("tenant registration");
+        register_tenants(&server, cfg).expect("tenant registration");
         let client = InProcessClient::new(Arc::clone(&server));
         run_shape(cfg, Arc::new(client))
-    }
+    };
+    report.prefill_chunk = prefill_chunk;
+    report
 }
 
 fn main() {
-    let requests = env_usize("MOS_TRAFFIC_REQS", 32);
-    let seed = env_usize("MOS_TRAFFIC_SEED", 0) as u64;
+    let args = Args::from_env().expect("parse args");
+    let requests = knob_usize(&args, "requests", "MOS_TRAFFIC_REQS", 32);
+    let seed = knob_usize(&args, "seed", "MOS_TRAFFIC_SEED", 0) as u64;
     let over_http = std::env::var("MOS_TRAFFIC_HTTP")
         .map(|v| v == "1")
         .unwrap_or(false);
-    let zipf_tenants = env_usize("MOS_TRAFFIC_ZIPF_TENANTS", 1200);
-    let shapes: Vec<Shape> = match std::env::var("MOS_TRAFFIC_SHAPES") {
-        Ok(csv) => csv
-            .split(',')
-            .map(str::trim)
-            .filter(|s| !s.is_empty())
-            .map(|s| Shape::parse(s).unwrap_or_else(|| {
-                panic!("unknown shape '{s}' in MOS_TRAFFIC_SHAPES")
-            }))
-            .collect(),
-        Err(_) => ALL_SHAPES.to_vec(),
-    };
+    let zipf_tenants =
+        knob_usize(&args, "zipf-tenants", "MOS_TRAFFIC_ZIPF_TENANTS", 1200);
+    let chunk =
+        match knob_usize(&args, "prefill-chunk", "MOS_TRAFFIC_CHUNK", 8) {
+            0 => None,
+            n => Some(n),
+        };
+    let shapes: Vec<Shape> =
+        match knob_str(&args, "shapes", "MOS_TRAFFIC_SHAPES") {
+            Some(csv) => csv
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    Shape::parse(s).unwrap_or_else(|| {
+                        panic!("unknown shape '{s}' in --shapes")
+                    })
+                })
+                .collect(),
+            None => ALL_SHAPES.to_vec(),
+        };
 
     let target = if over_http { "http" } else { "in_process" };
     eprintln!(
-        "[traffic] target={target} requests/shape={requests} seed={seed}"
+        "[traffic] target={target} requests/shape={requests} seed={seed} \
+         prefill_chunk={chunk:?}"
     );
     let mut table = Table::new(
         &format!("traffic replay ({target}, seed {seed})"),
         &[
             "shape", "reqs", "tenants", "ok", "rej", "exp", "cxl", "err",
-            "ttft p50", "ttft p99", "lat p50", "lat p99", "tok/s",
+            "ttft p50", "ttft p99", "ttft p99 1shot", "lat p50", "lat p99",
+            "tok/s",
         ],
     );
     let mut json_shapes = Vec::new();
@@ -108,10 +148,18 @@ fn main() {
         if shape == Shape::Zipf {
             cfg.tenants = zipf_tenants;
         }
-        let r = run_one(&cfg, over_http);
+        let mut r = run_one(&cfg, over_http, chunk);
+        // prefill-contended shapes: also run the one-shot control arm so
+        // the CI gate can hold "chunked prefill lowers the ttft tail"
+        let contended =
+            matches!(shape, Shape::Bursty | Shape::DeadlineMix);
+        if contended && chunk.is_some() {
+            let control = run_one(&cfg, over_http, None);
+            r.ttft_p99_unchunked_ms = Some(control.ttft_p99_ms);
+        }
         eprintln!(
             "[traffic] {} done: {}/{} ok, {} rej, {} exp, {} cxl, {} err, \
-             ttft p50={:.1}ms p99={:.1}ms, {:.0} tok/s",
+             ttft p50={:.1}ms p99={:.1}ms (one-shot p99={}), {:.0} tok/s",
             r.shape,
             r.completed,
             r.requests,
@@ -121,6 +169,9 @@ fn main() {
             r.errors,
             r.ttft_p50_ms,
             r.ttft_p99_ms,
+            r.ttft_p99_unchunked_ms
+                .map(|v| format!("{v:.1}ms"))
+                .unwrap_or_else(|| "n/a".into()),
             r.tok_per_s,
         );
         table.row(vec![
@@ -134,6 +185,9 @@ fn main() {
             r.errors.to_string(),
             format!("{:.1}", r.ttft_p50_ms),
             format!("{:.1}", r.ttft_p99_ms),
+            r.ttft_p99_unchunked_ms
+                .map(|v| format!("{v:.1}"))
+                .unwrap_or_else(|| "-".into()),
             format!("{:.1}", r.latency_p50_ms),
             format!("{:.1}", r.latency_p99_ms),
             format!("{:.0}", r.tok_per_s),
@@ -146,8 +200,10 @@ fn main() {
          without eviction thrash — the Zipfian arm serves a 1k+ tenant \
          universe from shared shard pools, bursts degrade to queueing \
          (rejects only past the admission bound, never errors), cancel \
-         storms return admission slots and KV pages, and tight deadlines \
-         expire cleanly at decode-step boundaries."
+         storms return admission slots and KV pages, tight deadlines \
+         expire cleanly at decode-step boundaries, the weighted arm \
+         splits served tokens by DWRR contract, and chunked prefill \
+         holds the bursty/deadline ttft tail below the one-shot control."
     );
 
     let json = Json::obj(vec![
@@ -155,6 +211,10 @@ fn main() {
         ("seed", Json::num(seed as f64)),
         ("requests_per_shape", Json::num(requests as f64)),
         ("target", Json::str(target)),
+        (
+            "prefill_chunk",
+            Json::num(chunk.unwrap_or(0) as f64),
+        ),
         ("shapes", Json::Arr(json_shapes)),
     ]);
     let out_dir = std::env::var("MOS_BENCH_OUT").unwrap_or_else(|_| ".".into());

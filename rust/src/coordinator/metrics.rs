@@ -123,7 +123,8 @@ pub struct Metrics {
     /// any quiescent point it equals `Batcher::depth()` exactly.
     queue_depth: AtomicU64,
     /// Per-tenant outcome counters keyed by tenant id: requests resolved
-    /// `Ok` (served) and admission-control rejections (rejected).
+    /// `Ok` (served), admission-control rejections (rejected), and the
+    /// tenant's current queue depth (a gauge, batcher-maintained).
     per_tenant: Mutex<HashMap<String, TenantCounters>>,
 }
 
@@ -132,6 +133,11 @@ pub struct Metrics {
 pub struct TenantCounters {
     pub served: u64,
     pub rejected: u64,
+    /// Requests currently queued for this tenant. Like the global
+    /// `queue_depth` gauge, the batcher sets it to the post-mutation
+    /// depth under its queue lock (push/pop/purge), so at quiescence it
+    /// equals the tenant's actual queue length.
+    pub queued: u64,
 }
 
 impl Metrics {
@@ -216,6 +222,14 @@ impl Metrics {
         map.entry(tenant.to_string()).or_default().rejected += 1;
     }
 
+    /// Set `tenant`'s queue-depth gauge. Called by the batcher with the
+    /// post-mutation per-tenant depth while its queue lock is held, from
+    /// every path that changes a tenant's queue (push/pop/fill/purge).
+    pub fn set_tenant_depth(&self, tenant: &str, depth: usize) {
+        let mut map = self.per_tenant.lock().unwrap();
+        map.entry(tenant.to_string()).or_default().queued = depth as u64;
+    }
+
     /// Per-tenant counters for `tenant` (zeros when it has no traffic).
     pub fn tenant_counters(&self, tenant: &str) -> TenantCounters {
         self.per_tenant
@@ -251,6 +265,7 @@ impl Metrics {
                     Json::obj(vec![
                         ("served", Json::num(t.served as f64)),
                         ("rejected", Json::num(t.rejected as f64)),
+                        ("queued", Json::num(t.queued as f64)),
                     ]),
                 )
             })
@@ -476,7 +491,26 @@ mod tests {
     fn tenant_counters_default_zero() {
         let m = Metrics::new();
         let t = m.tenant_counters("ghost");
-        assert_eq!((t.served, t.rejected), (0, 0));
+        assert_eq!((t.served, t.rejected, t.queued), (0, 0, 0));
+    }
+
+    #[test]
+    fn tenant_depth_gauge_tracks_last_set_and_survives_counters() {
+        let m = Metrics::new();
+        m.set_tenant_depth("alice", 3);
+        assert_eq!(m.tenant_counters("alice").queued, 3);
+        // a gauge: later sets replace, counters on the same entry keep
+        m.record_served("alice");
+        m.set_tenant_depth("alice", 1);
+        let t = m.tenant_counters("alice");
+        assert_eq!((t.served, t.queued), (1, 1));
+        m.set_tenant_depth("alice", 0);
+        assert_eq!(m.tenant_counters("alice").queued, 0);
+        // snapshot carries the per-tenant depth
+        let snap = m.snapshot();
+        let alice = snap.get("tenants").unwrap().get("alice").unwrap();
+        assert_eq!(alice.req_usize("queued").unwrap(), 0);
+        assert_eq!(alice.req_usize("served").unwrap(), 1);
     }
 
     #[test]

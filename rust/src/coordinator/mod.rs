@@ -43,7 +43,7 @@ pub use batcher::{
 pub use cache::{AdapterCache, TenantFactors};
 pub use memory::MemoryLedger;
 pub use metrics::{Metrics, TenantCounters};
-pub use registry::{Registry, Tenant, TenantSpec};
+pub use registry::{QosSpec, Registry, Tenant, TenantSpec};
 pub use server::{
     EngineRun, FullWindowEngine, HostEngine, ResponseHandle, ServeEngine,
     Server, ServerCfg,

@@ -41,6 +41,31 @@ impl Tenant {
     }
 }
 
+/// Per-tenant scheduling contract: a deficit-weighted-round-robin weight
+/// plus an optional token-bucket rate limit. Carried on the [`TenantSpec`]
+/// and plumbed to the batcher at registration (`Server::register`), so the
+/// registry stays purely about adapter state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosSpec {
+    /// Relative share of scheduled tokens under contention (DWRR credit
+    /// per scheduling round). Must be ≥ 1; default 1 = the old equal
+    /// round-robin share.
+    pub weight: u32,
+    /// Token-bucket refill rate in scheduled tokens per second; `None`
+    /// disables rate limiting (the default).
+    pub rate_tok_per_s: Option<f64>,
+    /// Bucket capacity in tokens — the largest burst the tenant can spend
+    /// at once. Only meaningful with a rate; clamped up to cover at least
+    /// one typical request so a limited tenant can always make progress.
+    pub burst: f64,
+}
+
+impl Default for QosSpec {
+    fn default() -> QosSpec {
+        QosSpec { weight: 1, rate_tok_per_s: None, burst: 0.0 }
+    }
+}
+
 /// Declarative tenant recipe — replaces the hand-assembled `Bank` + router
 /// ritual every call site used to repeat. Build with one of the method
 /// constructors (or from a checkpoint), then register through
@@ -48,11 +73,18 @@ impl Tenant {
 ///
 /// ```ignore
 /// server.register("alice", TenantSpec::mos(8, 2, 2, 1).seed(42))?;
-/// server.register("bob", TenantSpec::lora(8))?;
-/// server.register("carol", TenantSpec::from_checkpoint(ckpt))?;
+/// server.register("bob", TenantSpec::lora(8).weight(4))?;
+/// server.register("carol", TenantSpec::from_checkpoint(ckpt)
+///     .rate_limit(500.0, 64.0))?;
 /// ```
 #[derive(Debug, Clone)]
-pub enum TenantSpec {
+pub struct TenantSpec {
+    source: SpecSource,
+    qos: QosSpec,
+}
+
+#[derive(Debug, Clone)]
+enum SpecSource {
     /// Freshly initialized adapter of the given geometry and init seed.
     Fresh { mc: MethodCfg, seed: u64 },
     /// Trained adapter state loaded from a checkpoint.
@@ -73,36 +105,65 @@ impl TenantSpec {
 
     /// Any other adapter geometry.
     pub fn method(mc: MethodCfg) -> TenantSpec {
-        TenantSpec::Fresh { mc, seed: 0 }
+        TenantSpec {
+            source: SpecSource::Fresh { mc, seed: 0 },
+            qos: QosSpec::default(),
+        }
     }
 
     /// A trained adapter (params + router state) from a checkpoint.
     pub fn from_checkpoint(ck: Checkpoint) -> TenantSpec {
-        TenantSpec::Checkpoint(Box::new(ck))
+        TenantSpec {
+            source: SpecSource::Checkpoint(Box::new(ck)),
+            qos: QosSpec::default(),
+        }
     }
 
     /// Init seed for a fresh adapter (ignored for checkpoints, which carry
     /// their own router seed).
     pub fn seed(mut self, seed: u64) -> TenantSpec {
-        if let TenantSpec::Fresh { seed: s, .. } = &mut self {
+        if let SpecSource::Fresh { seed: s, .. } = &mut self.source {
             *s = seed;
         }
         self
     }
 
+    /// DWRR weight (≥ 1): this tenant's relative share of scheduled
+    /// tokens when the queue is contended.
+    pub fn weight(mut self, weight: u32) -> TenantSpec {
+        assert!(weight >= 1, "QoS weight must be >= 1");
+        self.qos.weight = weight;
+        self
+    }
+
+    /// Token-bucket rate limit: `tok_per_s` sustained scheduled tokens
+    /// per second with up to `burst` tokens of headroom. A limited tenant
+    /// is *deferred* in rotation while its bucket is dry, never errored.
+    pub fn rate_limit(mut self, tok_per_s: f64, burst: f64) -> TenantSpec {
+        assert!(tok_per_s > 0.0, "rate must be positive");
+        self.qos.rate_tok_per_s = Some(tok_per_s);
+        self.qos.burst = burst.max(1.0);
+        self
+    }
+
+    /// The scheduling contract this spec will hand the batcher.
+    pub fn qos(&self) -> QosSpec {
+        self.qos
+    }
+
     /// The adapter geometry this spec will register.
     pub fn method_cfg(&self) -> &MethodCfg {
-        match self {
-            TenantSpec::Fresh { mc, .. } => mc,
-            TenantSpec::Checkpoint(ck) => &ck.mc,
+        match &self.source {
+            SpecSource::Fresh { mc, .. } => mc,
+            SpecSource::Checkpoint(ck) => &ck.mc,
         }
     }
 
     /// Materialize the tenant state for `id` on the given base geometry.
     /// Version starts at 0; the registry assigns the real one.
     pub fn build(self, cfg: &ModelCfg, id: &str) -> Result<Tenant> {
-        match self {
-            TenantSpec::Fresh { mc, seed } => {
+        match self.source {
+            SpecSource::Fresh { mc, seed } => {
                 mc.validate(cfg)?;
                 Ok(Tenant {
                     id: id.to_string(),
@@ -116,7 +177,7 @@ impl TenantSpec {
                     version: 0,
                 })
             }
-            TenantSpec::Checkpoint(ck) => {
+            SpecSource::Checkpoint(ck) => {
                 ck.mc.validate(cfg)?;
                 Ok(Tenant {
                     id: id.to_string(),
@@ -417,6 +478,24 @@ mod tests {
         let evicted = reg.register(mk_tenant(&cfg, "c", 3)).unwrap();
         assert_eq!(evicted, vec!["b".to_string()]);
         assert_eq!(*seen.lock().unwrap(), vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn qos_builders_compose_with_method_builders() {
+        let spec = TenantSpec::mos(4, 2, 2, 0)
+            .seed(9)
+            .weight(4)
+            .rate_limit(100.0, 16.0);
+        assert_eq!(spec.qos().weight, 4);
+        assert_eq!(spec.qos().rate_tok_per_s, Some(100.0));
+        assert_eq!(spec.qos().burst, 16.0);
+        // defaults: weight 1, unlimited — the pre-QoS behavior
+        assert_eq!(TenantSpec::lora(4).qos(), QosSpec::default());
+        // qos does not disturb the built adapter state
+        let cfg = presets::tiny();
+        let a = TenantSpec::mos(4, 2, 2, 0).seed(9).build(&cfg, "t").unwrap();
+        let b = spec.build(&cfg, "t").unwrap();
+        assert_eq!(a.aux, b.aux);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use super::batcher::{
 };
 use super::cache::{AdapterCache, TenantFactors};
 use super::metrics::Metrics;
-use super::registry::{Registry, Tenant, TenantSpec};
+use super::registry::{QosSpec, Registry, Tenant, TenantSpec};
 use crate::adapter::{Factors, ServingAdapter};
 use crate::data::tokenizer::Tokenizer;
 use crate::eval::{DecodeState, GenOptions};
@@ -108,6 +108,30 @@ pub trait ServeEngine {
         _entries: &[(usize, usize, i32)],
     ) -> Result<Vec<f32>> {
         anyhow::bail!("engine does not support KV-cached stepping")
+    }
+    /// Chunked prefill (PR 9): advance each row's prefill by at most
+    /// `chunk` prompt positions, writing K/V for the computed span.
+    /// `last[i]` is row `rows[i]`'s *final* prompt position. Returns the
+    /// indices (into `rows`) whose prefill completed this call, paired
+    /// with their lean next-token logits (`done.len() * vocab`, in the
+    /// same order). Incomplete rows carry their cursor engine-side and
+    /// finish across later calls; interleaving decode steps between
+    /// calls must not change any logits (chunk N+1 reads chunk N's K/V
+    /// through the same cache the decode path uses).
+    ///
+    /// The default completes everything in one shot via
+    /// [`Self::prefill_rows`] — correct for engines without a prefill
+    /// cursor; they just don't get the interleaving win.
+    fn prefill_rows_partial(
+        &mut self,
+        runs: &[EngineRun],
+        rows: &[usize],
+        tokens: &[i32],
+        last: &[usize],
+        _chunk: usize,
+    ) -> Result<(Vec<usize>, Vec<f32>)> {
+        let logits = self.prefill_rows(runs, rows, tokens, last)?;
+        Ok(((0..rows.len()).collect(), logits))
     }
     /// Reserve KV residency for `prompt` on cache row `row` before the
     /// worker occupies the slot. `false` = the pool cannot cover the
@@ -522,6 +546,80 @@ impl ServeEngine for HostEngine {
         )
     }
 
+    fn prefill_rows_partial(
+        &mut self,
+        runs: &[EngineRun],
+        rows: &[usize],
+        tokens: &[i32],
+        last: &[usize],
+        chunk: usize,
+    ) -> Result<(Vec<usize>, Vec<f32>)> {
+        if self.full_prefill || self.use_fixed {
+            // the fixed-window backends carry no prefill cursor: one-shot
+            let logits = self.prefill_rows(runs, rows, tokens, last)?;
+            return Ok(((0..rows.len()).collect(), logits));
+        }
+        let seq = self.cfg.seq;
+        let chunk = chunk.max(1);
+        let kv = ensure_kv(
+            &mut self.kv,
+            &self.cfg,
+            self.use_fixed,
+            self.share_prefix,
+            self.page_tokens,
+            self.capacity_pages,
+            &self.stats,
+        );
+        let KvBackend::Paged(c) = kv else {
+            unreachable!("chunked prefill requires the paged backend")
+        };
+        // each row advances from its cursor (`row_start`, seeded by
+        // admission's warm-prefix mapping) by at most `chunk` positions;
+        // lean logits only for rows that reach their final position —
+        // chunk N+1's attention reads chunk N's K/V through the page
+        // tables, the exact warm-prefix tail mechanism PR 7 proved
+        // bitwise-identical
+        let mut entries: Vec<(usize, usize, i32)> = Vec::new();
+        let mut lean_idx: Vec<usize> = Vec::new();
+        let mut done: Vec<usize> = Vec::new();
+        let mut counts: Vec<usize> = Vec::with_capacity(runs.len());
+        let mut i = 0;
+        for run in runs {
+            let before = entries.len();
+            for _ in 0..run.rows {
+                let r = rows[i];
+                let start = self.row_start[r];
+                let end = (start + chunk - 1).min(last[i]);
+                for pos in start..=end {
+                    entries.push((r, pos, tokens[i * seq + pos]));
+                }
+                if end == last[i] {
+                    done.push(i);
+                    lean_idx.push(entries.len() - 1);
+                }
+                self.row_start[r] = end + 1;
+                i += 1;
+            }
+            counts.push(entries.len() - before);
+        }
+        let bindings = run_bindings(runs, &counts);
+        let out = paged_infer_runs(
+            &self.cfg,
+            &self.base,
+            &bindings,
+            c,
+            &entries,
+            Some(&lean_idx),
+        );
+        // publish completed prompts only: intermediate spans must not
+        // enter the warm-prefix index as if they were whole prompts
+        for &j in &done {
+            let r = rows[j];
+            c.register_prefix(r, &tokens[j * seq..j * seq + last[j] + 1]);
+        }
+        Ok((done, out))
+    }
+
     fn kv_admit(
         &mut self,
         row: usize,
@@ -613,6 +711,13 @@ pub struct ServerCfg {
     pub cache_capacity: usize,
     /// Queue-depth bounds; past them `submit` returns `QueueFull`.
     pub admission: Admission,
+    /// Chunked prefill (PR 9): advance each prompt's prefill by at most
+    /// this many positions per decode round, so one long prompt cannot
+    /// monopolize the engine between decode steps. `None` keeps the
+    /// one-shot prefill. Bitwise-identical output either way (the chunk
+    /// boundary is just the warm-prefix tail mechanism applied
+    /// repeatedly).
+    pub prefill_chunk: Option<usize>,
 }
 
 impl Default for ServerCfg {
@@ -622,6 +727,7 @@ impl Default for ServerCfg {
             max_wait: Duration::from_millis(5),
             cache_capacity: 64,
             admission: Admission::default(),
+            prefill_chunk: None,
         }
     }
 }
@@ -717,6 +823,7 @@ pub struct Server {
     pub cache: Arc<AdapterCache>,
     workers: Vec<thread::JoinHandle<()>>,
     next_id: AtomicU64,
+    prefill_chunk: Option<usize>,
 }
 
 impl Server {
@@ -742,6 +849,7 @@ impl Server {
             cache,
             workers: Vec::new(),
             next_id: AtomicU64::new(0),
+            prefill_chunk: cfg.prefill_chunk,
         }
     }
 
@@ -758,6 +866,7 @@ impl Server {
             let metrics = Arc::clone(&self.metrics);
             let cache = Arc::clone(&self.cache);
             let factory = Arc::clone(&factory);
+            let prefill_chunk = self.prefill_chunk;
             self.workers.push(
                 thread::Builder::new()
                     .name(format!("mos-serve-{wid}"))
@@ -770,7 +879,7 @@ impl Server {
                         while let Some(batch) = batcher.pop_batch(mix) {
                             serve_batch(
                                 &registry, &metrics, &cache, &batcher,
-                                &mut engine, batch,
+                                &mut engine, batch, prefill_chunk,
                             );
                         }
                     })
@@ -781,20 +890,26 @@ impl Server {
 
     /// Build a tenant from a spec and register it (replacing any previous
     /// registration under this id — the version bump makes the next
-    /// factor lookup rebuild). Returns LRU-evicted tenant ids.
+    /// factor lookup rebuild). The spec's [`QosSpec`] (weight, rate
+    /// limit) is installed in the batcher as the tenant's scheduling
+    /// contract. Returns LRU-evicted tenant ids.
     pub fn register(&self, id: &str, spec: TenantSpec) -> Result<Vec<String>> {
+        let qos: QosSpec = spec.qos();
         // eviction victims are invalidated by the registry's evict hook
         let evicted = self.registry.register_spec(id, spec)?;
         self.cache.invalidate(id);
+        self.batcher.set_qos(id, qos);
         Ok(evicted)
     }
 
-    /// Drop a tenant and its cached factors. Queued requests for it
-    /// resolve to `Err(UnknownTenant)` when a worker picks them up.
+    /// Drop a tenant, its cached factors, and its scheduling contract.
+    /// Queued requests for it resolve to `Err(UnknownTenant)` when a
+    /// worker picks them up.
     pub fn remove(&self, id: &str) -> bool {
         let removed = self.registry.remove(id);
         if removed {
             self.cache.invalidate(id);
+            self.batcher.clear_qos(id);
         }
         removed
     }
@@ -1023,6 +1138,7 @@ fn serve_batch<E: ServeEngine>(
     batcher: &Batcher,
     engine: &mut E,
     batch: Vec<Request>,
+    prefill_chunk: Option<usize>,
 ) {
     metrics.record_batch(batch.len());
     let (bsz, seq, vocab) = engine.shape();
@@ -1035,6 +1151,11 @@ fn serve_batch<E: ServeEngine>(
     let mut engine_err: Option<ServeError> = None;
     // distinct tenant ids this batch touched — the ledger KV sync set
     let mut seen: Vec<Arc<Tenant>> = Vec::new();
+    // rows whose prefill is mid-flight under chunking (PR 9): they
+    // advance one chunk per loop iteration, interleaved with the decode
+    // steps of already-prefilled rows, and emit no decode entries until
+    // their first token arrives from the final chunk's lean logits
+    let mut prefill_q: Vec<usize> = Vec::new();
 
     loop {
         // ---- between-step enforcement: deadlines + cancellations ----
@@ -1183,6 +1304,12 @@ fn serve_batch<E: ServeEngine>(
             // independent of the grouping.
             let mut live_new: Vec<usize> =
                 newly.into_iter().filter(|&r| !st.row_done(r)).collect();
+            if stepping && prefill_chunk.is_some() {
+                // chunked mode: defer to the chunk-advance section below
+                // so the prompt prefills chunk-by-chunk between decode
+                // rounds instead of in one engine-monopolizing call
+                prefill_q.extend(live_new.drain(..));
+            }
             if stepping && !live_new.is_empty() {
                 live_new.sort_by(|&a, &b| {
                     let ka = slots[a]
@@ -1224,13 +1351,66 @@ fn serve_batch<E: ServeEngine>(
             }
         }
 
+        // ---- chunked prefill: one chunk per pending prompt per round ----
+        // cancelled/expired rows were swept above; drop them from the
+        // queue before handing it to the engine
+        prefill_q.retain(|&r| slots[r].is_some() && !st.row_done(r));
+        if engine_err.is_none() && !prefill_q.is_empty() {
+            let chunk = prefill_chunk.expect("prefill_q only fills chunked");
+            // tenant-sorted like every engine call, so the queue forms
+            // contiguous runs (stable sort keeps admission order within
+            // a tenant)
+            prefill_q.sort_by(|&a, &b| {
+                let ka = slots[a]
+                    .as_ref()
+                    .map(|s| (&s.tenant.id, s.tenant.version));
+                let kb = slots[b]
+                    .as_ref()
+                    .map(|s| (&s.tenant.id, s.tenant.version));
+                ka.cmp(&kb)
+            });
+            let mut toks = Vec::with_capacity(prefill_q.len() * seq);
+            for &r in &prefill_q {
+                toks.extend_from_slice(&st.tokens()[r * seq..(r + 1) * seq]);
+            }
+            let last: Vec<usize> =
+                prefill_q.iter().map(|&r| st.last_pos(r)).collect();
+            let t0 = Instant::now();
+            let res = {
+                let runs = build_runs(&slots, prefill_q.iter().copied());
+                engine.prefill_rows_partial(
+                    &runs, &prefill_q, &toks, &last, chunk,
+                )
+            };
+            match res {
+                Ok((done_idx, logits)) => {
+                    metrics.record_prefill(t0.elapsed());
+                    let done_rows: Vec<usize> =
+                        done_idx.iter().map(|&i| prefill_q[i]).collect();
+                    for (row, tok) in st.step_prefill(&done_rows, &logits) {
+                        stream_token(metrics, &mut slots, row, tok);
+                    }
+                    scratch_put(logits);
+                    prefill_q.retain(|r| !done_rows.contains(r));
+                }
+                Err(e) => {
+                    engine_err = Some(ServeError::Engine(e.to_string()));
+                }
+            }
+            for r in sweep_finished(&mut st, &mut slots, metrics, &tk) {
+                engine.kv_release(r);
+            }
+        }
+
         // ---- engine-error short-circuit ----
         if engine_err.is_none() {
             // ---- one decode step for every live row ----
             let live = st.live_rows();
             if !live.is_empty() {
                 if stepping {
-                    let mut entries = st.step_entries();
+                    // rows still mid-chunked-prefill have no first token
+                    // yet and emit no decode entry this round
+                    let mut entries = st.step_entries_decoding();
                     // group by tenant for the run slice; step_rows pairs
                     // logits back by entry order, so the sort is safe
                     entries.sort_by(|a, b| {
@@ -1242,7 +1422,10 @@ fn serve_batch<E: ServeEngine>(
                             .map(|s| (&s.tenant.id, s.tenant.version));
                         ka.cmp(&kb)
                     });
-                    let res = {
+                    let res = if entries.is_empty() {
+                        // everything live is still prefilling
+                        Ok(Vec::new())
+                    } else {
                         let runs =
                             build_runs(&slots, entries.iter().map(|e| e.0));
                         engine.decode_rows(&runs, &entries)
@@ -1842,6 +2025,87 @@ mod tests {
         server.cache.get(&server.registry.cfg, &b);
         let (_, m1) = server.cache.stats();
         assert_eq!(m1, m0, "survivor was needlessly rebuilt");
+    }
+
+    #[test]
+    fn register_plumbs_qos_to_batcher() {
+        // ISSUE 9 tentpole (a): the TenantSpec's scheduling contract must
+        // reach the batcher at register and leave at remove
+        let (server, _cfg) = make_server(1 << 30);
+        server
+            .register("alice", spec(1).weight(4).rate_limit(1000.0, 64.0))
+            .unwrap();
+        let q = server.batcher.qos_of("alice").unwrap();
+        assert_eq!(q.weight, 4);
+        assert_eq!(q.rate_tok_per_s, Some(1000.0));
+        assert_eq!(q.burst, 64.0);
+        // an unadorned spec installs the default contract
+        server.register("bob", spec(2)).unwrap();
+        assert_eq!(server.batcher.qos_of("bob").unwrap(), QosSpec::default());
+        assert!(server.remove("alice"));
+        assert!(server.batcher.qos_of("alice").is_none());
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot_bitwise() {
+        // ISSUE 9 acceptance: chunked prefill must serve exactly what the
+        // one-shot prefill serves, through the full server, with prompts
+        // that end on a chunk boundary, mid-chunk, and below one chunk —
+        // and with mixed tenants so run grouping is exercised too
+        let serve_with = |chunk: Option<usize>| -> Vec<String> {
+            let mut cfg = presets::tiny();
+            cfg.batch = 4;
+            let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+            let mut server = Server::new(
+                registry,
+                ServerCfg {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(10),
+                    cache_capacity: 8,
+                    prefill_chunk: chunk,
+                    ..ServerCfg::default()
+                },
+            );
+            server.register("alice", spec(7)).unwrap();
+            server.register("bob", spec(8)).unwrap();
+            let prompts = [
+                "q:a",
+                "q:a considerably longer prompt",
+                "q:bb",
+                "q:medium length!",
+            ];
+            let mut hs = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                let t = if i % 2 == 0 { "alice" } else { "bob" };
+                hs.push(
+                    server
+                        .submit(t, p, GenOptions::greedy().max_new_tokens(8))
+                        .unwrap(),
+                );
+            }
+            let cfg2 = cfg.clone();
+            server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+            let texts = hs
+                .into_iter()
+                .map(|h| {
+                    h.wait_timeout(Duration::from_secs(30))
+                        .unwrap()
+                        .unwrap()
+                        .text
+                })
+                .collect();
+            server.shutdown();
+            texts
+        };
+        let oneshot = serve_with(None);
+        assert!(!oneshot.iter().all(|t| t.is_empty()));
+        for chunk in [1, 3, 5, 64] {
+            assert_eq!(
+                serve_with(Some(chunk)),
+                oneshot,
+                "chunk={chunk} diverged from one-shot prefill"
+            );
+        }
     }
 
     #[test]

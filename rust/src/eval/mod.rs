@@ -291,6 +291,21 @@ impl DecodeState {
             .collect()
     }
 
+    /// [`step_entries`][DecodeState::step_entries] restricted to rows
+    /// whose first token has already arrived (`len > prompt_len`). Rows
+    /// still mid-prefill under chunking (PR 9) are live but have no
+    /// position to decode yet — they are skipped instead of asserted on.
+    pub fn step_entries_decoding(&self) -> Vec<(usize, usize, i32)> {
+        self.live_rows()
+            .into_iter()
+            .filter(|&r| self.rows[r].len > self.rows[r].prompt_len)
+            .map(|r| {
+                let pos = self.rows[r].len - 1;
+                (r, pos, self.tokens[r * self.seq + pos])
+            })
+            .collect()
+    }
+
     /// Window position of the newest filled token for `row` — the
     /// position whose next-token logits a lean prefill must return
     /// (`ServeEngine::prefill_rows`'s `last` argument).

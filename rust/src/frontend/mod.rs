@@ -442,7 +442,9 @@ fn stream_tokens(
 
 /// Body for `POST /v1/tenants`: `{"id": ..., "method": "mos"|"lora",
 /// "r": 8, "l": 2, "e": 2, "private_rank": 1, "seed": 0}` — everything
-/// but `id` optional, defaults shown.
+/// but `id` optional, defaults shown. Scheduling-QoS fields (PR 9):
+/// `"weight"` (DWRR share, ≥ 1) and `"rate_tok_per_s"` + `"burst"`
+/// (token-bucket rate limit; `burst` defaults to one second of rate).
 fn tenant_spec(body: &Json) -> Result<(String, TenantSpec)> {
     let id = body.req_str("id")?.to_string();
     let r = body.get("r").and_then(Json::as_usize).unwrap_or(8);
@@ -461,7 +463,24 @@ fn tenant_spec(body: &Json) -> Result<(String, TenantSpec)> {
         }
         other => return Err(anyhow!("unknown method '{other}'")),
     };
-    Ok((id, spec.seed(seed)))
+    let mut spec = spec.seed(seed);
+    if let Some(w) = body.get("weight").and_then(Json::as_usize) {
+        if w == 0 {
+            return Err(anyhow!("weight must be >= 1"));
+        }
+        spec = spec.weight(w as u32);
+    }
+    if let Some(rate) = body.get("rate_tok_per_s").and_then(Json::as_f64) {
+        if !(rate > 0.0) {
+            return Err(anyhow!("rate_tok_per_s must be > 0"));
+        }
+        let burst = body
+            .get("burst")
+            .and_then(Json::as_f64)
+            .unwrap_or(rate); // default: one second of rate
+        spec = spec.rate_limit(rate, burst);
+    }
+    Ok((id, spec))
 }
 
 fn route_register(
@@ -633,6 +652,41 @@ mod tests {
             "DELETE /v1/tenants/alice HTTP/1.1\r\n\r\n".to_string(),
         );
         assert_eq!(code, 404);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn register_with_qos_fields_installs_contract() {
+        let (server, mut fe) = edge(Admission::default());
+        let addr = fe.local_addr();
+        let (code, _) = post(
+            addr,
+            "/v1/tenants",
+            r#"{"id":"gold","weight":4,"rate_tok_per_s":500.0,"burst":64.0}"#,
+        );
+        assert_eq!(code, 201);
+        let q = server.batcher.qos_of("gold").unwrap();
+        assert_eq!(q.weight, 4);
+        assert_eq!(q.rate_tok_per_s, Some(500.0));
+        assert_eq!(q.burst, 64.0);
+        // burst defaults to one second of rate
+        let (code, _) = post(
+            addr,
+            "/v1/tenants",
+            r#"{"id":"silver","rate_tok_per_s":200.0}"#,
+        );
+        assert_eq!(code, 201);
+        assert_eq!(server.batcher.qos_of("silver").unwrap().burst, 200.0);
+        // invalid contracts are 400s, not panics
+        let (code, _) =
+            post(addr, "/v1/tenants", r#"{"id":"bad","weight":0}"#);
+        assert_eq!(code, 400);
+        let (code, _) = post(
+            addr,
+            "/v1/tenants",
+            r#"{"id":"bad","rate_tok_per_s":-1.0}"#,
+        );
+        assert_eq!(code, 400);
         fe.shutdown();
     }
 

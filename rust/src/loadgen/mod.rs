@@ -40,12 +40,25 @@ pub fn tenant_spec(i: usize) -> TenantSpec {
     TenantSpec::mos(4, 2, 2, 1).seed(i as u64 + 1)
 }
 
-/// Register `t0..t{n-1}` directly on `server`. Fails if any registration
-/// evicts a peer — eviction thrash while building the universe means the
+/// DWRR weight of the `i`-th replay tenant: the [`Shape::Weighted`]
+/// shape cycles weight classes 1/2/4 across its universe; every other
+/// shape keeps the default weight 1.
+pub fn tenant_weight(shape: Shape, i: usize) -> u32 {
+    match shape {
+        Shape::Weighted => 1 << (i % 3),
+        _ => 1,
+    }
+}
+
+/// Register `cfg`'s tenant universe (`t0..`) directly on `server`,
+/// applying the shape's DWRR weights. Fails if any registration evicts
+/// a peer — eviction thrash while building the universe means the
 /// registry capacity is mis-sized for the experiment.
-pub fn register_tenants(server: &Server, n: usize) -> Result<()> {
-    for i in 0..n {
-        let evicted = server.register(&tenant_id(i), tenant_spec(i))?;
+pub fn register_tenants(server: &Server, cfg: &TrafficCfg) -> Result<()> {
+    for i in 0..cfg.tenants {
+        let spec =
+            tenant_spec(i).weight(tenant_weight(cfg.shape, i));
+        let evicted = server.register(&tenant_id(i), spec)?;
         if !evicted.is_empty() {
             bail!(
                 "eviction thrash: registering {} evicted {:?}",
@@ -57,11 +70,12 @@ pub fn register_tenants(server: &Server, n: usize) -> Result<()> {
     Ok(())
 }
 
-/// Register `t0..t{n-1}` through the HTTP edge (`POST /v1/tenants`) —
-/// the same specs as [`register_tenants`], driven over the wire.
-pub fn register_tenants_http(addr: SocketAddr, n: usize) -> Result<()> {
-    for i in 0..n {
-        let body = Json::obj(vec![
+/// Register `cfg`'s tenant universe through the HTTP edge
+/// (`POST /v1/tenants`) — the same specs and weights as
+/// [`register_tenants`], driven over the wire.
+pub fn register_tenants_http(addr: SocketAddr, cfg: &TrafficCfg) -> Result<()> {
+    for i in 0..cfg.tenants {
+        let mut fields = vec![
             ("id", Json::str(tenant_id(i))),
             ("method", Json::str("mos")),
             ("r", Json::num(4.0)),
@@ -69,8 +83,12 @@ pub fn register_tenants_http(addr: SocketAddr, n: usize) -> Result<()> {
             ("e", Json::num(2.0)),
             ("private_rank", Json::num(1.0)),
             ("seed", Json::num((i + 1) as f64)),
-        ])
-        .to_string();
+        ];
+        let weight = tenant_weight(cfg.shape, i);
+        if weight > 1 {
+            fields.push(("weight", Json::num(weight as f64)));
+        }
+        let body = Json::obj(fields).to_string();
         let mut stream = TcpStream::connect(addr)?;
         stream.set_read_timeout(Some(Duration::from_secs(10)))?;
         let req = format!(
@@ -365,11 +383,17 @@ pub struct ShapeReport {
     pub latency_p99_ms: f64,
     pub tok_per_s: f64,
     pub duration_s: f64,
+    /// Chunked-prefill budget the replay's server ran with (`None`:
+    /// one-shot prefill). Recorded so the bench JSON names its arm.
+    pub prefill_chunk: Option<usize>,
+    /// ttft p99 of the unchunked control arm, when the bench ran one
+    /// (the PR-9 chunked-prefill gate compares against it).
+    pub ttft_p99_unchunked_ms: Option<f64>,
 }
 
 impl ShapeReport {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("shape", Json::str(self.shape.clone())),
             ("requests", Json::num(self.requests as f64)),
             ("tenants", Json::num(self.tenants as f64)),
@@ -384,7 +408,14 @@ impl ShapeReport {
             ("latency_p99_ms", Json::num(self.latency_p99_ms)),
             ("tok_per_s", Json::num(self.tok_per_s)),
             ("duration_s", Json::num(self.duration_s)),
-        ])
+        ];
+        if let Some(chunk) = self.prefill_chunk {
+            fields.push(("prefill_chunk", Json::num(chunk as f64)));
+        }
+        if let Some(p99) = self.ttft_p99_unchunked_ms {
+            fields.push(("ttft_p99_unchunked_ms", Json::num(p99)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -426,6 +457,8 @@ fn aggregate(
             0.0
         },
         duration_s,
+        prefill_chunk: None,
+        ttft_p99_unchunked_ms: None,
     }
 }
 
@@ -501,10 +534,10 @@ mod tests {
         let cfg2 = cfg.clone();
         server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
         let server = Arc::new(server);
-        register_tenants(&server, 4).unwrap();
         let mut tcfg = TrafficCfg::named(Shape::Steady, 8, 11);
         tcfg.tenants = 4;
         tcfg.rate = 400.0;
+        register_tenants(&server, &tcfg).unwrap();
         let report = run_shape(
             &tcfg,
             Arc::new(InProcessClient::new(Arc::clone(&server))),
@@ -519,6 +552,24 @@ mod tests {
     }
 
     #[test]
+    fn weighted_shape_registration_installs_cycling_weights() {
+        let cfg = presets::tiny();
+        let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
+        let mut server = Server::new(registry, ServerCfg::default());
+        let cfg2 = cfg.clone();
+        server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
+        let tcfg = TrafficCfg::named(Shape::Weighted, 8, 1);
+        register_tenants(&server, &tcfg).unwrap();
+        for i in 0..tcfg.tenants {
+            let qos = server.batcher.qos_of(&tenant_id(i)).unwrap();
+            assert_eq!(qos.weight, 1 << (i % 3), "tenant {i}");
+        }
+        // other shapes keep every tenant at the default weight
+        assert_eq!(tenant_weight(Shape::Steady, 5), 1);
+        server.shutdown();
+    }
+
+    #[test]
     fn cancel_storm_replay_resolves_every_request() {
         let cfg = presets::tiny();
         let registry = Arc::new(Registry::new(cfg.clone(), 1 << 30));
@@ -526,10 +577,10 @@ mod tests {
         let cfg2 = cfg.clone();
         server.start(1, move |_| HostEngine::new(cfg2.clone(), 0));
         let server = Arc::new(server);
-        register_tenants(&server, 4).unwrap();
         let mut tcfg = TrafficCfg::named(Shape::CancelStorm, 12, 5);
         tcfg.tenants = 4;
         tcfg.max_new_tokens = 40;
+        register_tenants(&server, &tcfg).unwrap();
         let report = run_shape(
             &tcfg,
             Arc::new(InProcessClient::new(Arc::clone(&server))),

@@ -10,7 +10,7 @@ use crate::coordinator::GenOptions;
 use crate::util::rng::Rng;
 use std::time::Duration;
 
-/// The six named adversarial traffic shapes.
+/// The seven named adversarial traffic shapes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Shape {
     /// Poisson arrivals at a constant mean rate.
@@ -26,15 +26,22 @@ pub enum Shape {
     CancelStorm,
     /// Steady arrivals where half the requests carry tight deadlines.
     DeadlineMix,
+    /// Saturating arrivals over a small universe whose tenants carry
+    /// cycling DWRR weights 1/2/4 (see [`super::tenant_weight`]) — the
+    /// contrast shape for the PR-9 weighted-fairness scheduler.
+    Weighted,
 }
 
-pub const ALL_SHAPES: [Shape; 6] = [
+// New shapes must be APPENDED: `Shape::stream()` is positional, so
+// inserting in the middle would silently reseed every later shape.
+pub const ALL_SHAPES: [Shape; 7] = [
     Shape::Steady,
     Shape::Bursty,
     Shape::Diurnal,
     Shape::Zipf,
     Shape::CancelStorm,
     Shape::DeadlineMix,
+    Shape::Weighted,
 ];
 
 impl Shape {
@@ -46,6 +53,7 @@ impl Shape {
             Shape::Zipf => "zipf",
             Shape::CancelStorm => "cancel_storm",
             Shape::DeadlineMix => "deadline_mix",
+            Shape::Weighted => "weighted",
         }
     }
 
@@ -81,12 +89,18 @@ pub struct TrafficCfg {
 
 impl TrafficCfg {
     /// Per-shape defaults: the Zipf shape exercises a 1.2k-tenant pooled
-    /// tier (the paper-scale claim), everything else a small universe.
+    /// tier (the paper-scale claim), the Weighted shape a six-tenant
+    /// universe (two tenants per weight class 1/2/4), everything else a
+    /// small universe.
     pub fn named(shape: Shape, requests: usize, seed: u64) -> TrafficCfg {
         TrafficCfg {
             shape,
             requests,
-            tenants: if shape == Shape::Zipf { 1200 } else { 8 },
+            tenants: match shape {
+                Shape::Zipf => 1200,
+                Shape::Weighted => 6,
+                _ => 8,
+            },
             seed,
             rate: 150.0,
             max_new_tokens: 8,
@@ -143,6 +157,23 @@ fn prompt(rng: &mut Rng) -> String {
     format!("q:{:06}", rng.below(1_000_000))
 }
 
+/// Long prompt for the prefill-contended shapes (bursty, deadline_mix):
+/// 21–33 chars → 23–35 tokens with BOS/SEP framing, leaving ≥ 13
+/// positions of the tiny 48-token window for generation. Long enough
+/// that one-shot prefill visibly monopolizes the engine — the workload
+/// chunked prefill (PR 9) exists to break up — and variable-length so
+/// co-admitted rows finish at different times (slot churn, not
+/// lock-step batches).
+fn long_prompt(rng: &mut Rng) -> String {
+    let pad = rng.range(12, 25);
+    format!(
+        "q:{:06}x{:0w$}",
+        rng.below(1_000_000),
+        rng.below(1_000_000),
+        w = pad
+    )
+}
+
 /// Expand `cfg` into its full deterministic arrival schedule, sorted by
 /// offset.
 pub fn plan(cfg: &TrafficCfg) -> Vec<Arrival> {
@@ -155,7 +186,10 @@ pub fn plan(cfg: &TrafficCfg) -> Vec<Arrival> {
     for i in 0..cfg.requests {
         // arrival offset
         match cfg.shape {
-            Shape::Steady | Shape::Zipf | Shape::DeadlineMix => {
+            Shape::Steady
+            | Shape::Zipf
+            | Shape::DeadlineMix
+            | Shape::Weighted => {
                 t += exp_gap(&mut rng, cfg.rate);
             }
             Shape::Bursty | Shape::CancelStorm => {
@@ -194,10 +228,14 @@ pub fn plan(cfg: &TrafficCfg) -> Vec<Arrival> {
         } else {
             None
         };
+        let prompt = match cfg.shape {
+            Shape::Bursty | Shape::DeadlineMix => long_prompt(&mut rng),
+            _ => prompt(&mut rng),
+        };
         out.push(Arrival {
             at: Duration::from_secs_f64(t),
             tenant,
-            prompt: prompt(&mut rng),
+            prompt,
             opts,
             cancel_after,
         });
@@ -259,9 +297,42 @@ mod tests {
                 assert!(a.at >= prev, "{shape:?}: arrivals out of order");
                 prev = a.at;
                 assert!(a.tenant < c.tenants, "{shape:?}: tenant oob");
-                // BOS + prompt + SEP must fit the tiny 48-token window
-                assert!(a.prompt.len() <= 16, "{shape:?}: prompt too long");
+                // BOS + prompt + SEP + 8 generated tokens must fit the
+                // tiny 48-token window: prompt ≤ 33 chars
+                assert!(a.prompt.len() <= 33, "{shape:?}: prompt too long");
             }
+        }
+    }
+
+    #[test]
+    fn prefill_contended_shapes_plan_long_prompts() {
+        // bursty / deadline_mix make prefill the contended resource —
+        // every prompt is long; steady keeps the short baseline
+        for shape in [Shape::Bursty, Shape::DeadlineMix] {
+            for a in plan(&cfg(shape)) {
+                assert!(
+                    a.prompt.len() > 16,
+                    "{shape:?}: expected a long prompt, got {:?}",
+                    a.prompt
+                );
+            }
+        }
+        for a in plan(&cfg(Shape::Steady)) {
+            assert!(a.prompt.len() <= 16, "steady prompt grew: {:?}", a.prompt);
+        }
+    }
+
+    #[test]
+    fn weighted_shape_covers_small_universe_evenly() {
+        let c = cfg(Shape::Weighted);
+        assert_eq!(c.tenants, 6, "two tenants per weight class 1/2/4");
+        let arrivals = plan(&TrafficCfg::named(Shape::Weighted, 300, 9));
+        let distinct: std::collections::HashSet<_> =
+            arrivals.iter().map(|a| a.tenant).collect();
+        assert_eq!(distinct.len(), 6, "all weight classes must contend");
+        for a in &arrivals {
+            assert!(a.cancel_after.is_none());
+            assert!(a.opts.deadline.is_none());
         }
     }
 

@@ -75,17 +75,24 @@ fn print_usage() {
          [--queue-per-tenant 256] [--queue-global 1024] \
          [--max-new-tokens N] [--temperature 0.0] [--top-k 0] \
          [--sample-seed 0] [--deadline-ms 0] \
+         [--weights 1,2,4] [--rate-tok-s 0] [--burst R] \
+         [--prefill-chunk 0] \
          [--http IP:PORT [--http-secs 0]]\n\
          \x20        with --http: serve the HTTP edge on IP:PORT instead of \
          running the demo loop\n\
          \x20        (POST /v1/generate streams ndjson; --http-secs 0 runs \
          until killed)\n\
+         \x20        --weights cycles DWRR weights across tenants; \
+         --rate-tok-s/--burst set a token-bucket per tenant; \
+         --prefill-chunk N chunks long prefills (0 = one-shot)\n\
          traffic: --shape steady|bursty|diurnal|zipf|cancel_storm|\
-         deadline_mix\n\
-         \x20        [--requests 32] [--seed 0] [--tenants N] \
+         deadline_mix|weighted\n\
+         \x20        [--shapes a,b,c] [--requests 32] [--seed 0] \
+         [--tenants N] [--zipf-tenants 1200] [--prefill-chunk 0] \
          [--http IP:PORT] [--no-register]\n\
-         \x20        replays one seeded shape in-process, or against a \
-         running edge with --http\n\
+         \x20        replays seeded shapes in-process, or against a \
+         running edge with --http; env fallbacks MOS_TRAFFIC_SHAPES/\
+         REQS/SEED/ZIPF_TENANTS still honored\n\
          eval:    --ckpt ckpt_dir --task recall [--n 32]\n\
          params:  --geometry llama2-7b [--tenants 10000]\n\
          info:    [--artifacts DIR]"
@@ -221,6 +228,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         opts = opts.deadline(Duration::from_millis(deadline_ms));
     }
 
+    // QoS contracts (PR 9): --weights cycles DWRR weights across the
+    // registered tenants; --rate-tok-s/--burst arm every tenant's token
+    // bucket; --prefill-chunk bounds prefill work per decode round.
+    let weights: Vec<u32> = args
+        .list("weights", &["1"])
+        .iter()
+        .map(|w| {
+            w.parse::<u32>()
+                .ok()
+                .filter(|&w| w >= 1)
+                .with_context(|| format!("--weights: bad weight '{w}'"))
+        })
+        .collect::<Result<_>>()?;
+    if weights.is_empty() {
+        bail!("--weights: need at least one weight");
+    }
+    let rate_tok_s = args.f64("rate-tok-s", 0.0)?;
+    let burst = args.f64("burst", rate_tok_s)?;
+    let prefill_chunk = match args.usize("prefill-chunk", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+
     let registry = Arc::new(Registry::new(cfg.clone(), capacity));
     let mut server = Server::new(
         Arc::clone(&registry),
@@ -232,13 +262,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 per_tenant: args.usize("queue-per-tenant", 256)?,
                 global: args.usize("queue-global", 1024)?,
             },
+            prefill_chunk,
         },
     );
     for i in 0..n_tenants {
-        server.register(
-            &format!("tenant-{i}"),
-            TenantSpec::mos(8, 2, 2, 1).seed(i as u64),
-        )?;
+        let mut spec = TenantSpec::mos(8, 2, 2, 1)
+            .seed(i as u64)
+            .weight(weights[i % weights.len()]);
+        if rate_tok_s > 0.0 {
+            spec = spec.rate_limit(rate_tok_s, burst);
+        }
+        server.register(&format!("tenant-{i}"), spec)?;
     }
     println!(
         "registered {n_tenants} MoS tenants; ledger used {} of {}",
@@ -308,48 +342,104 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Replay one named seeded traffic shape and print its `ShapeReport` as
-/// JSON. In-process by default (spins up a fresh tiny server); with
-/// `--http IP:PORT` it drives a running edge instead (see `mos serve
-/// --http`), registering the replay tenants over the wire first unless
-/// `--no-register` is given.
-fn cmd_traffic(args: &Args) -> Result<()> {
-    let shape_name = args.str("shape", "steady");
-    let shape = Shape::parse(&shape_name)
-        .with_context(|| format!("unknown shape '{shape_name}'"))?;
-    let requests = args.usize("requests", 32)?;
-    let seed = args.u64("seed", 0)?;
-    let mut tcfg = TrafficCfg::named(shape, requests, seed);
-    tcfg.tenants = args.usize("tenants", tcfg.tenants)?;
+/// CLI flag if given, else `env` var, else `default` — the PR-9
+/// promotion of the traffic env knobs to proper flags.
+fn knob_usize(
+    args: &Args,
+    flag: &str,
+    env: &str,
+    default: usize,
+) -> Result<usize> {
+    if args.has(flag) {
+        return args.usize(flag, default);
+    }
+    Ok(std::env::var(env)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default))
+}
 
-    let report = if let Some(addr) = args.get("http") {
-        let addr: std::net::SocketAddr =
-            addr.parse().context("--http wants IP:PORT")?;
-        if !args.has("no-register") {
-            register_tenants_http(addr, tcfg.tenants)?;
-        }
-        run_shape(&tcfg, Arc::new(HttpClient::new(addr)))
-    } else {
-        let preset = args.str("preset", "tiny");
-        let cfg = presets::by_name(&preset).context("unknown preset")?;
-        let capacity = args.usize("capacity-mb", 1024)? << 20;
-        let registry = Arc::new(Registry::new(cfg.clone(), capacity));
-        let mut server = Server::new(
-            registry,
-            ServerCfg {
-                cache_capacity: tcfg.tenants.clamp(64, 2048),
-                ..ServerCfg::default()
-            },
-        );
-        let cfg2 = cfg.clone();
-        server.start(args.usize("workers", 2)?, move |_| {
-            HostEngine::new(cfg2.clone(), 0)
-        });
-        let server = Arc::new(server);
-        register_tenants(&server, tcfg.tenants)?;
-        run_shape(&tcfg, Arc::new(InProcessClient::new(Arc::clone(&server))))
+/// Replay named seeded traffic shapes and print their `ShapeReport`s as
+/// JSON (`--shape` for one, `--shapes a,b,c` for several — one JSON
+/// object, or an array). In-process by default (a fresh tiny server per
+/// shape, so shapes share no queue state); with `--http IP:PORT` it
+/// drives a running edge instead (see `mos serve --http`), registering
+/// the replay tenants over the wire first unless `--no-register` is
+/// given. `MOS_TRAFFIC_SHAPES/REQS/SEED/ZIPF_TENANTS` are honored as
+/// fallbacks for the matching flags.
+fn cmd_traffic(args: &Args) -> Result<()> {
+    let shapes_csv = args
+        .get("shapes")
+        .map(str::to_string)
+        .or_else(|| std::env::var("MOS_TRAFFIC_SHAPES").ok())
+        .unwrap_or_else(|| args.str("shape", "steady"));
+    let shapes: Vec<Shape> = shapes_csv
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            Shape::parse(s).with_context(|| format!("unknown shape '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    let requests = knob_usize(args, "requests", "MOS_TRAFFIC_REQS", 32)?;
+    let seed = knob_usize(args, "seed", "MOS_TRAFFIC_SEED", 0)? as u64;
+    let zipf_tenants =
+        knob_usize(args, "zipf-tenants", "MOS_TRAFFIC_ZIPF_TENANTS", 1200)?;
+    let prefill_chunk = match args.usize("prefill-chunk", 0)? {
+        0 => None,
+        n => Some(n),
     };
-    println!("{}", report.to_json().to_string_pretty());
+
+    let mut reports = Vec::new();
+    for shape in &shapes {
+        let mut tcfg = TrafficCfg::named(*shape, requests, seed);
+        if *shape == Shape::Zipf {
+            tcfg.tenants = zipf_tenants;
+        }
+        tcfg.tenants = args.usize("tenants", tcfg.tenants)?;
+
+        let mut report = if let Some(addr) = args.get("http") {
+            let addr: std::net::SocketAddr =
+                addr.parse().context("--http wants IP:PORT")?;
+            if !args.has("no-register") {
+                register_tenants_http(addr, &tcfg)?;
+            }
+            run_shape(&tcfg, Arc::new(HttpClient::new(addr)))
+        } else {
+            let preset = args.str("preset", "tiny");
+            let cfg = presets::by_name(&preset).context("unknown preset")?;
+            let capacity = args.usize("capacity-mb", 1024)? << 20;
+            let registry = Arc::new(Registry::new(cfg.clone(), capacity));
+            let mut server = Server::new(
+                registry,
+                ServerCfg {
+                    cache_capacity: tcfg.tenants.clamp(64, 2048),
+                    prefill_chunk,
+                    ..ServerCfg::default()
+                },
+            );
+            let cfg2 = cfg.clone();
+            server.start(args.usize("workers", 2)?, move |_| {
+                HostEngine::new(cfg2.clone(), 0)
+            });
+            let server = Arc::new(server);
+            register_tenants(&server, &tcfg)?;
+            run_shape(
+                &tcfg,
+                Arc::new(InProcessClient::new(Arc::clone(&server))),
+            )
+        };
+        if args.get("http").is_none() {
+            report.prefill_chunk = prefill_chunk;
+        }
+        reports.push(report.to_json());
+    }
+    let out = if reports.len() == 1 {
+        reports.pop().unwrap()
+    } else {
+        mos::util::json::Json::Arr(reports)
+    };
+    println!("{}", out.to_string_pretty());
     Ok(())
 }
 

@@ -70,7 +70,14 @@ TRAFFIC_SHAPES = [
     "zipf",
     "cancel_storm",
     "deadline_mix",
+    "weighted",
 ]
+# prefill-contended shapes must carry the chunked-vs-one-shot control
+# arm (PR 9): the replay ran chunked, and records the one-shot p99
+TRAFFIC_CHUNK_GATED = ["bursty", "deadline_mix"]
+# QoS ceiling: chunked prefill must hold the bursty ttft tail within
+# this factor of the uncontended steady baseline
+MAX_BURSTY_OVER_STEADY_TTFT_P99 = 50.0
 
 # the sweep must actually contain the arms the ROADMAP row compares
 SERVING_ARMS = [
@@ -170,6 +177,36 @@ def check_traffic(path: str, data: dict) -> None:
         fail(f"{path}: zipf ran only {zipf['tenants']} tenants (< 1000)")
     if zipf["errors"] != 0:
         fail(f"{path}: zipf replay had {zipf['errors']} errors")
+    # PR-9 QoS gate: the weighted DWRR shape must resolve cleanly (a
+    # rate/weight bug surfaces as errors or starved never-resolved rows)
+    weighted = by_name["weighted"]
+    if weighted["errors"] != 0:
+        fail(f"{path}: weighted replay had {weighted['errors']} errors")
+    # PR-9 chunked-prefill gate: the prefill-contended shapes ran with
+    # chunking on and must show a strictly lower ttft p99 than their
+    # one-shot control arm
+    for name in TRAFFIC_CHUNK_GATED:
+        shape = by_name[name]
+        for key in ("prefill_chunk", "ttft_p99_unchunked_ms"):
+            if key not in shape:
+                fail(f"{path}: {name}: missing '{key}' (control arm not run?)")
+        if not shape["prefill_chunk"]:
+            fail(f"{path}: {name}: replay ran without chunked prefill")
+        if not shape["ttft_p99_ms"] < shape["ttft_p99_unchunked_ms"]:
+            fail(
+                f"{path}: {name}: chunked ttft p99 "
+                f"{shape['ttft_p99_ms']:.1f}ms is not below the one-shot "
+                f"control {shape['ttft_p99_unchunked_ms']:.1f}ms"
+            )
+    # ... and hold the bursty tail within a fixed factor of steady
+    steady_p99 = by_name["steady"]["ttft_p99_ms"]
+    bursty_p99 = by_name["bursty"]["ttft_p99_ms"]
+    if steady_p99 > 0 and bursty_p99 > steady_p99 * MAX_BURSTY_OVER_STEADY_TTFT_P99:
+        fail(
+            f"{path}: bursty ttft p99 {bursty_p99:.1f}ms exceeds "
+            f"{MAX_BURSTY_OVER_STEADY_TTFT_P99:.0f}x the steady baseline "
+            f"{steady_p99:.1f}ms"
+        )
     print(f"check_bench: {path} ok ({len(shapes)} shapes)")
 
 

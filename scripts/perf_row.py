@@ -19,10 +19,12 @@ both PR-7 claims):
 | PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full | adapter MB pooled vs dense | kv MB paged vs fixed | prefill p50 cold/warm |
 
 --traffic prints the traffic-trajectory row from the load-harness replay
-(steady ttft p50/p99 is the uncontended baseline; burst p99 shows queueing
-degradation; zipf runs the 1k+ tenant pooled tier; storm/deadline columns
-show the resolved-outcome mix of the adversarial shapes):
-| PR | machine | target | steady ttft p50/p99 ms | steady tok/s | burst ttft p99 ms | zipf tenants | zipf ttft p99 ms | storm cxl/ok | deadline exp/ok |
+(steady ttft p50/p99 is the uncontended baseline; the burst column shows
+the chunked-prefill p99 vs its one-shot control arm — the PR-9 claim;
+weighted is the DWRR contention shape's tail; zipf runs the 1k+ tenant
+pooled tier; storm/deadline columns show the resolved-outcome mix of the
+adversarial shapes):
+| PR | machine | target | steady ttft p50/p99 ms | steady tok/s | burst ttft p99 ms chunked/1shot | weighted ttft p99 ms | zipf tenants | zipf ttft p99 ms | storm cxl/ok | deadline exp/ok chunked/1shot p99 |
 
 CI appends the rows to the job summary and uploads the raw JSON as an
 artifact; the next PR pastes the rows into ROADMAP.md.
@@ -128,21 +130,25 @@ def traffic_row(path: str) -> str:
         return float(shape.get(key, float("nan"))) if shape else float("nan")
 
     return (
-        "| {} | {} | {} | {:.1f}/{:.1f} | {:.0f} | {:.1f} | {} "
-        "| {:.1f} | {:.0f}/{:.0f} | {:.0f}/{:.0f} |".format(
-            pr_arg("8 (front door)"),
+        "| {} | {} | {} | {:.1f}/{:.1f} | {:.0f} | {:.1f}/{:.1f} | {:.1f} "
+        "| {} | {:.1f} | {:.0f}/{:.0f} | {:.0f}/{:.0f} ({:.1f}/{:.1f}) |".format(
+            pr_arg("9 (scheduler QoS)"),
             machine(),
             bench.get("target", "?"),
             val("steady", "ttft_p50_ms"),
             val("steady", "ttft_p99_ms"),
             val("steady", "tok_per_s"),
             val("bursty", "ttft_p99_ms"),
+            val("bursty", "ttft_p99_unchunked_ms"),
+            val("weighted", "ttft_p99_ms"),
             int(val("zipf", "tenants")),
             val("zipf", "ttft_p99_ms"),
             val("cancel_storm", "cancelled"),
             val("cancel_storm", "completed"),
             val("deadline_mix", "expired"),
             val("deadline_mix", "completed"),
+            val("deadline_mix", "ttft_p99_ms"),
+            val("deadline_mix", "ttft_p99_unchunked_ms"),
         )
     )
 

@@ -9,7 +9,8 @@
 
 use mos::bench::Table;
 use mos::config::presets;
-use mos::model::math::{self, gemm_with, Trans};
+use mos::model::math::{self, gemm_with, gemm_with_kernel, Kernel, Trans};
+use mos::model::quant::{self, QuantMatrix};
 use mos::util::json::Json;
 use mos::util::rng::Rng;
 use std::time::Instant;
@@ -90,14 +91,25 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(200.0);
     let threads = math::pool().workers();
+    let kernel = math::selected_kernel();
 
     let mut table = Table::new(
-        "GEMM engine (nt layout, f32): seed scalar vs blocked vs blocked+threads",
-        &["shape (m,k,n)", "case", "seed GF/s", "blocked 1t", "blocked mt", "speedup"],
+        "GEMM engine (nt layout): seed scalar vs blocked tiers (f32 simd/scalar, int8)",
+        &[
+            "shape (m,k,n)",
+            "case",
+            "seed GF/s",
+            "blocked 1t",
+            "blocked mt",
+            "scalar mt",
+            "int8 mt",
+            "speedup",
+        ],
     );
     let mut json_cases = Vec::new();
     let mut serving_speedups = Vec::new();
     let mut all_speedups = Vec::new();
+    let mut serving_simd_speedups = Vec::new();
 
     for case in cases() {
         let (m, k, n) = (case.m, case.k, case.n);
@@ -134,12 +146,43 @@ fn main() {
             c.fill(0.0);
             gemm_with(Some(math::pool()), m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c);
         });
+        // the explicit-SIMD tentpole arm: selected kernel (what gemm_with
+        // just ran) vs the scalar tile pinned, same pool — their ratio is
+        // the microkernel's own win, fenced off from threading/blocking
+        let scalar_s = time_secs(budget_ms, || {
+            c.fill(0.0);
+            gemm_with_kernel(
+                Kernel::Scalar, Some(math::pool()),
+                m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c,
+            );
+        });
+        // int8 weight-only serving kernel on the same shape (weights = b,
+        // quantized once as serving does; activations stay f32)
+        let qb = QuantMatrix::quantize(n, k, &b);
+        let mut ci = vec![0.0f32; m * n];
+        quant::gemm_canon_q8(m, n, k, 1.0, &a, &qb.q, &qb.scale, &mut ci);
+        for (i, (&got, &exp)) in ci.iter().zip(&want).enumerate() {
+            assert!(
+                (got - exp).abs() <= 5e-2 * kf.sqrt() + 5e-2 * exp.abs(),
+                "{}: int8 kernel out of tolerance at {i}: {got} vs {exp}",
+                case.name
+            );
+        }
+        let int8_s = time_secs(budget_ms, || {
+            ci.fill(0.0);
+            quant::gemm_canon_q8(m, n, k, 1.0, &a, &qb.q, &qb.scale, &mut ci);
+        });
 
         let (gf_seed, gf_b1, gf_mt) =
             (flops / seed_s / 1e9, flops / b1_s / 1e9, flops / bmt_s / 1e9);
+        let (gf_scalar, gf_int8) =
+            (flops / scalar_s / 1e9, flops / int8_s / 1e9);
         let speedup = seed_s / bmt_s;
+        let simd_speedup = scalar_s / bmt_s;
+        let int8_speedup = bmt_s / int8_s;
         if case.serving_scale {
             serving_speedups.push(speedup);
+            serving_simd_speedups.push(simd_speedup);
         }
         all_speedups.push(speedup);
 
@@ -149,11 +192,15 @@ fn main() {
             format!("{gf_seed:.2}"),
             format!("{gf_b1:.2}"),
             format!("{gf_mt:.2}"),
+            format!("{gf_scalar:.2}"),
+            format!("{gf_int8:.2}"),
             format!("{speedup:.2}x"),
         ]);
         eprintln!(
-            "[gemm] {} ({m}x{k}x{n}): {gf_seed:.2} -> {gf_mt:.2} GF/s ({speedup:.2}x)",
-            case.name
+            "[gemm] {} ({m}x{k}x{n}): {gf_seed:.2} -> {gf_mt:.2} GF/s \
+             ({speedup:.2}x; {} vs scalar {simd_speedup:.2}x; int8 {gf_int8:.2})",
+            case.name,
+            kernel.name()
         );
 
         json_cases.push(Json::obj(vec![
@@ -165,7 +212,11 @@ fn main() {
             ("seed_scalar_gflops", Json::num(gf_seed)),
             ("blocked_1t_gflops", Json::num(gf_b1)),
             ("blocked_mt_gflops", Json::num(gf_mt)),
+            ("kernel_scalar_gflops", Json::num(gf_scalar)),
+            ("int8_gflops", Json::num(gf_int8)),
             ("speedup_mt_vs_seed", Json::num(speedup)),
+            ("simd_speedup_vs_scalar", Json::num(simd_speedup)),
+            ("int8_speedup_vs_f32", Json::num(int8_speedup)),
         ]));
     }
 
@@ -178,15 +229,22 @@ fn main() {
         .iter()
         .cloned()
         .fold(f64::INFINITY, f64::min);
+    let min_simd_serving = serving_simd_speedups
+        .iter()
+        .cloned()
+        .fold(f64::INFINITY, f64::min);
     println!(
-        "\nthreads={threads}; serving-scale speedup (min) {min_serving:.2}x, \
-         geomean over all shapes {geomean:.2}x (target: >= 4x at serving \
-         scale on a multi-core box)"
+        "\nthreads={threads}; kernel={}; serving-scale speedup (min) \
+         {min_serving:.2}x, geomean over all shapes {geomean:.2}x, simd vs \
+         scalar (min, serving scale) {min_simd_serving:.2}x (target: >= 4x \
+         vs seed at serving scale on a multi-core box)",
+        kernel.name()
     );
 
     let json = Json::obj(vec![
         ("bench", Json::str("gemm")),
         ("threads", Json::num(threads as f64)),
+        ("kernel", Json::str(kernel.name())),
         ("budget_ms", Json::num(budget_ms)),
         ("cases", Json::Arr(json_cases)),
         (
@@ -194,6 +252,10 @@ fn main() {
             Json::obj(vec![
                 ("min_speedup_serving_scale", Json::num(min_serving)),
                 ("geomean_speedup", Json::num(geomean)),
+                (
+                    "min_simd_speedup_serving_scale",
+                    Json::num(min_simd_serving),
+                ),
             ]),
         ),
     ]);

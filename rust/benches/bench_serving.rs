@@ -110,6 +110,9 @@ struct ScenarioResult {
     alloc_mb: f64,
     /// Measured resident adapter bytes across all cached tenants (MB).
     adapter_mb: f64,
+    /// Measured resident frozen-base bytes under the scenario's
+    /// representation (f32 bank, or int8 codes+scales plus f32 norms).
+    base_mb: f64,
     /// Peak resident KV bytes (MB): measured from the pool's stats probe
     /// for the paged arms, analytic `bsz·seq·hidden·2·blocks·4` for the
     /// fixed window, 0 for full-forward decoding (no KV state).
@@ -122,14 +125,14 @@ fn run_scenario(
     max_batch: usize,
     mode: Mode,
     serve_dense: bool,
+    serve_int8: bool,
 ) -> ScenarioResult {
     let mut cfg = presets::tiny();
     cfg.batch = max_batch.max(1);
-    let registry = Arc::new(Registry::with_serve_mode(
-        cfg.clone(),
-        1 << 30,
-        serve_dense,
-    ));
+    let registry = Arc::new(
+        Registry::with_serve_mode(cfg.clone(), 1 << 30, serve_dense)
+            .with_int8(serve_int8),
+    );
     let mut server = Server::new(
         Arc::clone(&registry),
         ServerCfg {
@@ -150,17 +153,24 @@ fn run_scenario(
     let cfg2 = cfg.clone();
     let probe = Arc::new(KvStats::default());
     let probe2 = Arc::clone(&probe);
+    // int8 arms quantize the engine's base too (only the stepping modes
+    // run quantized — the full-forward arms need the f32 base)
+    let mk = move |cfg: &mos::config::ModelCfg| {
+        let e = HostEngine::new(cfg.clone(), 0);
+        if serve_int8 {
+            e.serve_int8()
+        } else {
+            e
+        }
+    };
     match mode {
         Mode::KvLean | Mode::KvWarm => server.start(1, move |_| {
-            HostEngine::new(cfg2.clone(), 0).kv_stats(Arc::clone(&probe2))
+            mk(&cfg2).kv_stats(Arc::clone(&probe2))
         }),
         Mode::KvCold => server.start(1, move |_| {
-            HostEngine::new(cfg2.clone(), 0)
-                .no_prefix_share()
-                .kv_stats(Arc::clone(&probe2))
+            mk(&cfg2).no_prefix_share().kv_stats(Arc::clone(&probe2))
         }),
-        Mode::KvFixed => server
-            .start(1, move |_| HostEngine::new(cfg2.clone(), 0).fixed_kv()),
+        Mode::KvFixed => server.start(1, move |_| mk(&cfg2).fixed_kv()),
         Mode::KvFullPrefill => server.start(1, move |_| {
             HostEngine::new(cfg2.clone(), 0).full_prefill()
         }),
@@ -168,6 +178,12 @@ fn run_scenario(
             FullWindowEngine(HostEngine::new(cfg2.clone(), 0))
         }),
     }
+    // the worker owns its engine; probe base residency from a twin
+    let base_mb = {
+        let e = HostEngine::new(cfg.clone(), 0);
+        let e = if serve_int8 { e.serve_int8() } else { e };
+        e.base_resident_bytes() as f64 / 1e6
+    };
     let bytes0 = alloc::total_bytes();
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_requests)
@@ -221,10 +237,77 @@ fn run_scenario(
         prefill_ms: server.metrics.prefill_percentile_us(50.0) / 1e3,
         alloc_mb,
         adapter_mb,
+        base_mb,
         kv_mb,
     };
     server.shutdown();
     res
+}
+
+/// Side-by-side tiny-preset accuracy probe for the int8 tier: prefill +
+/// fixed-token decode through the fully quantized path (int8 base + int8
+/// shard pool) vs the f32 pooled oracle. Returns
+/// `(max |dlogit|, top-1 agreement)` — gated against the logit budget by
+/// `scripts/check_bench.py`.
+fn int8_accuracy() -> (f64, f64) {
+    use mos::adapter::{PooledAdapter, QuantPooledAdapter};
+    use mos::model::transformer::{
+        decode_step_runs_base, infer_prefill_runs_base, init_base,
+        quantize_base, AdapterBinding, AdapterRef, BaseRef, KvCache,
+    };
+    let mut cfg = presets::tiny();
+    cfg.batch = 2;
+    let base = init_base(&cfg, 0);
+    let t = TenantSpec::mos(8, 2, 2, 1).seed(0).build(&cfg, "t").unwrap();
+    let pooled = PooledAdapter::new(
+        t.mc.clone(),
+        Arc::clone(&t.params),
+        Arc::clone(&t.aux),
+    )
+    .unwrap();
+    let qpool = QuantPooledAdapter::quantize(&pooled);
+    let qbase = quantize_base(&cfg, &base);
+    let t_len = cfg.seq;
+    let prompts: [&[i32]; 2] = [&[1, 9, 4, 2], &[1, 5, 6]];
+    let mut window = vec![0i32; 2 * t_len];
+    for (r, p) in prompts.iter().enumerate() {
+        window[r * t_len..r * t_len + p.len()].copy_from_slice(p);
+    }
+    let last: Vec<usize> = prompts.iter().map(|p| p.len() - 1).collect();
+    let runs_f = [AdapterBinding::new(2, &t.mc, AdapterRef::Pooled(&pooled))];
+    let runs_q =
+        [AdapterBinding::new(2, &t.mc, AdapterRef::PooledInt8(&qpool))];
+    let mut cache_f = KvCache::new(&cfg, 2);
+    let mut reference = infer_prefill_runs_base(
+        &cfg, BaseRef::f32(&base), &runs_f, &window, &last, &mut cache_f,
+        &[0, 1],
+    );
+    let mut cache_q = KvCache::new(&cfg, 2);
+    let mut candidate = infer_prefill_runs_base(
+        &cfg,
+        BaseRef::int8(&base, &qbase),
+        &runs_q,
+        &window,
+        &last,
+        &mut cache_q,
+        &[0, 1],
+    );
+    for (j, (ta, tb)) in [(9i32, 5i32), (2, 7), (4, 1), (8, 3)].iter().enumerate()
+    {
+        let entries = [(0usize, 4 + j, *ta), (1usize, 3 + j, *tb)];
+        reference.extend(decode_step_runs_base(
+            &cfg, BaseRef::f32(&base), &runs_f, &mut cache_f, &entries,
+        ));
+        candidate.extend(decode_step_runs_base(
+            &cfg,
+            BaseRef::int8(&base, &qbase),
+            &runs_q,
+            &mut cache_q,
+            &entries,
+        ));
+    }
+    let err = mos::model::quant::logit_error(&reference, &candidate, cfg.vocab);
+    (err.max_abs as f64, err.top1_agree as f64)
 }
 
 fn main() {
@@ -244,30 +327,39 @@ fn main() {
             "tenants", "decode", "prefill", "kv", "prefix", "prompts",
             "adapter", "batching", "req/s", "p50 ms", "p95 ms",
             "ttft p50 ms", "prefill p50 ms", "tok/s", "alloc MB",
-            "adapter MB", "kv MB",
+            "adapter MB", "base MB", "kv MB",
         ],
     );
     let mut json_cases = Vec::new();
     for &nt in &tenant_counts {
-        // (mode, max_batch, serve_dense): the pooled adapter tier and the
-        // paged KV pool are the defaults; the dense / fixed-window / warm
-        // arms pin the adapter memory gap, the KV memory gap, and the
-        // shared-prefix prefill win side by side
+        // (mode, max_batch, serve_dense, serve_int8): the pooled adapter
+        // tier and the paged KV pool are the defaults; the dense /
+        // fixed-window / warm arms pin the adapter memory gap, the KV
+        // memory gap, and the shared-prefix prefill win side by side; the
+        // int8 arm pins the quantized tier's adapter+base residency
+        // against the f32 KvLean arm it mirrors
         let cases = [
-            (Mode::KvLean, 8usize, false),
-            (Mode::KvWarm, 8, false),
-            (Mode::KvCold, 8, false),
-            (Mode::KvFixed, 8, false),
-            (Mode::KvLean, 8, true),
-            (Mode::KvLean, 1, false),
-            (Mode::KvFullPrefill, 8, false),
-            (Mode::FullFwd, 8, false),
-            (Mode::FullFwd, 1, false),
+            (Mode::KvLean, 8usize, false, false),
+            (Mode::KvLean, 8, false, true),
+            (Mode::KvWarm, 8, false, false),
+            (Mode::KvCold, 8, false, false),
+            (Mode::KvFixed, 8, false, false),
+            (Mode::KvLean, 8, true, false),
+            (Mode::KvLean, 1, false, false),
+            (Mode::KvFullPrefill, 8, false, false),
+            (Mode::FullFwd, 8, false, false),
+            (Mode::FullFwd, 1, false, false),
         ];
-        for (mode, mb, dense) in cases {
+        for (mode, mb, dense, int8) in cases {
             let label = if mb > 1 { "batched (8)" } else { "unbatched (1)" };
-            let adapter = if dense { "dense" } else { "pooled" };
-            let r = run_scenario(nt, n_requests, mb, mode, dense);
+            let adapter = if dense {
+                "dense"
+            } else if int8 {
+                "pooled_int8"
+            } else {
+                "pooled"
+            };
+            let r = run_scenario(nt, n_requests, mb, mode, dense, int8);
             table.row(vec![
                 nt.to_string(),
                 mode.decode().into(),
@@ -285,13 +377,14 @@ fn main() {
                 format!("{:.0}", r.toks),
                 format!("{:.1}", r.alloc_mb),
                 format!("{:.3}", r.adapter_mb),
+                format!("{:.3}", r.base_mb),
                 format!("{:.3}", r.kv_mb),
             ]);
             eprintln!(
                 "[serving] tenants={nt} {} prefill={} kv={} prefix={} \
                  adapter={adapter} {label}: {:.2} req/s ttft_p50={:.1}ms \
                  prefill_p50={:.2}ms alloc={:.1}MB adapter={:.3}MB \
-                 kv={:.3}MB",
+                 base={:.3}MB kv={:.3}MB",
                 mode.decode(),
                 mode.prefill(),
                 mode.kv(),
@@ -301,6 +394,7 @@ fn main() {
                 r.prefill_ms,
                 r.alloc_mb,
                 r.adapter_mb,
+                r.base_mb,
                 r.kv_mb,
             );
             json_cases.push(Json::obj(vec![
@@ -320,6 +414,7 @@ fn main() {
                 ("tok_per_s", Json::num(r.toks)),
                 ("alloc_mb", Json::num(r.alloc_mb)),
                 ("adapter_mb", Json::num(r.adapter_mb)),
+                ("base_mb", Json::num(r.base_mb)),
                 ("kv_mb", Json::num(r.kv_mb)),
             ]));
         }
@@ -338,12 +433,38 @@ fn main() {
          throughput, the paged KV pool keeps peak resident KV bytes \
          (kv_mb) well below the fixed window's slots×window slab at \
          identical logits, and warm shared-prefix prefills beat cold \
-         ones on prefill_p50_ms by skipping already-resident positions."
+         ones on prefill_p50_ms by skipping already-resident positions. \
+         The int8 tier (adapter=pooled_int8) keeps measured adapter+base \
+         residency <= 0.35x the f32 pooled arm while staying inside the \
+         logit-error budget (int8_accuracy below)."
+    );
+
+    let (max_abs_dlogit, top1_agree) = int8_accuracy();
+    eprintln!(
+        "[serving] int8 accuracy: max|dlogit|={max_abs_dlogit:.4} \
+         (budget {}), top1_agree={top1_agree:.3} (budget {})",
+        mos::model::quant::LOGIT_BUDGET_MAX_ABS,
+        mos::model::quant::LOGIT_BUDGET_TOP1,
     );
 
     let json = Json::obj(vec![
         ("bench", Json::str("serving")),
         ("requests", Json::num(n_requests as f64)),
+        (
+            "int8_accuracy",
+            Json::obj(vec![
+                ("max_abs_dlogit", Json::num(max_abs_dlogit)),
+                ("top1_agree", Json::num(top1_agree)),
+                (
+                    "budget_max_abs",
+                    Json::num(mos::model::quant::LOGIT_BUDGET_MAX_ABS as f64),
+                ),
+                (
+                    "budget_top1",
+                    Json::num(mos::model::quant::LOGIT_BUDGET_TOP1 as f64),
+                ),
+            ]),
+        ),
         ("cases", Json::Arr(json_cases)),
     ]);
     let out_dir = std::env::var("MOS_BENCH_OUT").unwrap_or_else(|_| ".".into());

@@ -20,6 +20,7 @@ pub mod tied;
 pub mod vera;
 
 use crate::config::{Method, MethodCfg, ModelCfg, LAYER_TYPES};
+use crate::model::quant::QuantPool;
 use crate::util::bank::{Bank, Tensor};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
@@ -269,17 +270,116 @@ impl PooledAdapter {
     }
 }
 
-/// What the serving stack hands the model per tenant: either the legacy
-/// dense per-block factors (training parity / non-MoS methods /
-/// `MOS_SERVE_DENSE=1`), or the pooled zero-copy representation the
-/// shard-gather GEMM path consumes directly. Cheap to clone (both arms
-/// are `Arc`s).
+/// Borrowed per-layer-type view into a [`QuantPooledAdapter`]: int8
+/// shard pools plus the same f32/i32 index and scale tables the f32
+/// [`PooledView`] carries. Per-block slicing is the caller's, as there.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantPooledView<'a> {
+    /// A-side shard pool, `(n, in/l)` int8 codes + per-shard scales.
+    pub pool_a: &'a QuantPool,
+    /// B-side shard pool, `(n, out/l)` int8 codes + per-shard scales.
+    pub pool_b: &'a QuantPool,
+    /// `(blocks, r, l)` shard indices into `pool_a`.
+    pub idx_a: &'a [i32],
+    /// `(blocks, r, l)` shard indices into `pool_b`.
+    pub idx_b: &'a [i32],
+    /// `(blocks, r)` per-rank scale, folded into the A side.
+    pub rank_scale: &'a [f32],
+}
+
+/// The int8 serving representation of one MoS tenant
+/// (`MOS_SERVE_INT8=1`): the shard pools quantized once per tenant
+/// version (per-shard symmetric scales, built from the *same* registry
+/// pools the f32 [`PooledAdapter`] serves), while the index tables and
+/// rank scales stay shared with the registry's aux bank. Residency drops
+/// to ~1/4 of the f32 pool bytes (codes are 1 byte + one f32 scale per
+/// shard row).
+#[derive(Debug)]
+pub struct QuantPooledAdapter {
+    pub mc: MethodCfg,
+    aux: Arc<Bank>,
+    /// Parallel to [`LAYER_TYPES`]: quantized (pool_a, pool_b).
+    pools: Vec<(QuantPool, QuantPool)>,
+    /// Parallel to [`LAYER_TYPES`].
+    keys: Vec<PooledKeys>,
+}
+
+impl QuantPooledAdapter {
+    /// Quantize an f32 pooled adapter's shard pools (index/scale tables
+    /// are shared, not copied). One pass per layer type at build time —
+    /// the serving hot path only ever reads the codes.
+    pub fn quantize(p: &PooledAdapter) -> QuantPooledAdapter {
+        let pools = LAYER_TYPES
+            .iter()
+            .map(|t| {
+                let v = p.view(t);
+                (
+                    QuantPool::quantize(v.shard_w_a, v.pool_a),
+                    QuantPool::quantize(v.shard_w_b, v.pool_b),
+                )
+            })
+            .collect();
+        let keys = LAYER_TYPES
+            .iter()
+            .map(|t| PooledKeys {
+                pool_a: format!("{t}.pool_a"),
+                pool_b: format!("{t}.pool_b"),
+                idx_a: format!("{t}.idx_a"),
+                idx_b: format!("{t}.idx_b"),
+                rank_scale: format!("{t}.rank_scale"),
+            })
+            .collect();
+        QuantPooledAdapter {
+            mc: p.mc.clone(),
+            aux: Arc::clone(&p.aux),
+            pools,
+            keys,
+        }
+    }
+
+    /// The int8 pooled slices for one layer type (`"q"`, `"gate"`, ...).
+    pub fn view(&self, layer_type: &str) -> QuantPooledView<'_> {
+        let ti = LAYER_TYPES
+            .iter()
+            .position(|t| *t == layer_type)
+            .unwrap_or_else(|| panic!("unknown layer type '{layer_type}'"));
+        let k = &self.keys[ti];
+        let (pool_a, pool_b) = &self.pools[ti];
+        QuantPooledView {
+            pool_a,
+            pool_b,
+            idx_a: self.aux[&k.idx_a].i32s().unwrap(),
+            idx_b: self.aux[&k.idx_b].i32s().unwrap(),
+            rank_scale: self.aux[&k.rank_scale].f32s().unwrap(),
+        }
+    }
+
+    /// Measured resident bytes: int8 pool codes + per-shard f32 scales,
+    /// plus the shared index/scale tables (unchanged from f32 serving).
+    /// The registry's analytic int8 model must equal this exactly
+    /// (enforced by test).
+    pub fn resident_bytes(&self) -> usize {
+        self.pools
+            .iter()
+            .map(|(a, b)| a.nbytes() + b.nbytes())
+            .sum::<usize>()
+            + self.aux.values().map(|t| t.nbytes()).sum::<usize>()
+    }
+}
+
+/// What the serving stack hands the model per tenant: the legacy dense
+/// per-block factors (training parity / non-MoS methods /
+/// `MOS_SERVE_DENSE=1`), the pooled zero-copy representation the
+/// shard-gather GEMM path consumes directly, or its int8 twin
+/// (`MOS_SERVE_INT8=1`). Cheap to clone (all arms are `Arc`s).
 #[derive(Debug, Clone)]
 pub enum ServingAdapter {
     /// Dense per-block factors for every layer type (materialized size).
     Dense(Arc<BTreeMap<String, Factors>>),
     /// Shard pools + index tables, shared with the registry (pool size).
     Pooled(Arc<PooledAdapter>),
+    /// Int8 shard pools + shared index tables (~pool size / 4).
+    PooledInt8(Arc<QuantPooledAdapter>),
 }
 
 impl ServingAdapter {
@@ -295,6 +395,7 @@ impl ServingAdapter {
                 })
                 .sum(),
             ServingAdapter::Pooled(p) => p.resident_bytes(),
+            ServingAdapter::PooledInt8(p) => p.resident_bytes(),
         }
     }
 
@@ -302,15 +403,23 @@ impl ServingAdapter {
     pub fn dense(&self) -> Option<&BTreeMap<String, Factors>> {
         match self {
             ServingAdapter::Dense(f) => Some(f),
-            ServingAdapter::Pooled(_) => None,
+            _ => None,
         }
     }
 
-    /// The pooled adapter, when this is the pooled representation.
+    /// The pooled adapter, when this is the f32 pooled representation.
     pub fn pooled(&self) -> Option<&PooledAdapter> {
         match self {
-            ServingAdapter::Dense(_) => None,
             ServingAdapter::Pooled(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// The int8 pooled adapter, when this is the int8 representation.
+    pub fn pooled_int8(&self) -> Option<&QuantPooledAdapter> {
+        match self {
+            ServingAdapter::PooledInt8(p) => Some(p),
+            _ => None,
         }
     }
 }
@@ -420,6 +529,44 @@ mod tests {
             assert_eq!(v.idx_a.len(), cfg.blocks * mc.r * mc.l, "{t} idx_a");
             assert_eq!(v.idx_b.len(), cfg.blocks * mc.r * mc.l, "{t} idx_b");
             assert_eq!(v.rank_scale.len(), cfg.blocks * mc.r, "{t} scale");
+        }
+    }
+
+    #[test]
+    fn quant_pooled_resident_bytes_match_analytic_model() {
+        // the int8 ledger contract: measured residency is exactly
+        // 1 byte/element + 4 bytes/shard-row over the params pools, plus
+        // the aux tables unchanged — the formula the registry charges
+        let cfg = presets::tiny();
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let params = Arc::new(init_params(&cfg, &mc, 0));
+        let aux = Arc::new(mos::router::build_router(&cfg, &mc, 0).into_bank());
+        let pooled =
+            PooledAdapter::new(mc.clone(), params.clone(), aux.clone()).unwrap();
+        let q = QuantPooledAdapter::quantize(&pooled);
+        let analytic: usize = params
+            .values()
+            .map(|t| t.len() + 4 * t.shape()[0])
+            .sum::<usize>()
+            + aux.values().map(|t| t.nbytes()).sum::<usize>();
+        assert_eq!(q.resident_bytes(), analytic);
+        // the quantized pools themselves sit near 1/4 of the f32 pools
+        let aux_bytes: usize = aux.values().map(|t| t.nbytes()).sum();
+        let f32_pools: usize = params.values().map(|t| t.nbytes()).sum();
+        let q_pools = q.resident_bytes() - aux_bytes;
+        assert!(
+            q_pools * 100 <= f32_pools * 35,
+            "int8 pools {q_pools} B vs f32 pools {f32_pools} B: > 0.35x"
+        );
+        // views share the registry's index/scale tables byte-for-byte
+        for t in LAYER_TYPES {
+            let vf = pooled.view(t);
+            let vq = q.view(t);
+            assert_eq!(vq.pool_a.shard_w, vf.shard_w_a, "{t} A shard width");
+            assert_eq!(vq.pool_b.shard_w, vf.shard_w_b, "{t} B shard width");
+            assert_eq!(vq.idx_a, vf.idx_a, "{t} idx_a");
+            assert_eq!(vq.idx_b, vf.idx_b, "{t} idx_b");
+            assert_eq!(vq.rank_scale, vf.rank_scale, "{t} rank_scale");
         }
     }
 

@@ -1,14 +1,20 @@
 //! Adapter cache: per-tenant serving representations, built once per
-//! tenant version and LRU-evicted under a capacity bound. Two tiers:
+//! tenant version and LRU-evicted under a capacity bound. Three tiers:
 //!
 //! * **Pooled** (default, MoS tenants): the [`ServingAdapter::Pooled`]
 //!   representation `Arc`-aliases the registry's own shard pools and index
 //!   tables — building an entry copies nothing, and the tenant's resident
 //!   adapter bytes stay O(pool), which is the paper's whole serving claim.
+//! * **PooledInt8** (`MOS_SERVE_INT8=1`, MoS tenants): the pooled shard
+//!   tensors quantized once per tenant version to int8 codes + per-shard
+//!   scales (~0.28x the f32 pool); index/scale aux tables still alias the
+//!   registry. Accuracy is gated by the logit budget in
+//!   [`crate::model::quant`].
 //! * **Dense** (non-MoS methods, or `MOS_SERVE_DENSE=1`): the legacy
 //!   gather+concat materialization into per-block [`Factors`], built once
 //!   per tenant version (index-based routing = pure precompute, paper
-//!   Limitations §C).
+//!   Limitations §C). Dense stays f32 even under `MOS_SERVE_INT8` — the
+//!   legacy tier is the accuracy oracle.
 //!
 //! Entries are keyed by `(tenant id, version)` — re-registering a tenant
 //! bumps its version in the [`super::registry::Registry`], so a lookup for
@@ -17,7 +23,9 @@
 //! builds, the rest wait on a condvar and then hit — `misses` counts
 //! builds exactly.
 
-use crate::adapter::{self, Factors, PooledAdapter, ServingAdapter};
+use crate::adapter::{
+    self, Factors, PooledAdapter, QuantPooledAdapter, ServingAdapter,
+};
 use crate::config::{Method, ModelCfg, LAYER_TYPES};
 use crate::coordinator::registry::Tenant;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -31,6 +39,8 @@ pub struct AdapterCache {
     capacity: usize,
     /// Build dense materialized entries for everyone (legacy tier).
     dense: bool,
+    /// Quantize pooled entries to int8 (`MOS_SERVE_INT8=1` tier).
+    int8: bool,
     inner: Mutex<Inner>,
     /// Signalled after every finished build (single-flight waiters).
     built: Condvar,
@@ -55,6 +65,7 @@ impl AdapterCache {
         AdapterCache {
             capacity,
             dense,
+            int8: false,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 order: VecDeque::new(),
@@ -66,9 +77,22 @@ impl AdapterCache {
         }
     }
 
+    /// Quantize pooled entries to int8 (normally driven by
+    /// `Registry::serve_int8`, i.e. `MOS_SERVE_INT8`). No effect on the
+    /// dense tier or non-MoS tenants, which stay f32.
+    pub fn with_int8(mut self, int8: bool) -> AdapterCache {
+        self.int8 = int8;
+        self
+    }
+
     /// Is this cache serving the dense materialized tier?
     pub fn serves_dense(&self) -> bool {
         self.dense
+    }
+
+    /// Are pooled entries quantized to int8?
+    pub fn serves_int8(&self) -> bool {
+        self.int8
     }
 
     /// Fetch (or build) the serving adapter for a tenant. A version
@@ -143,6 +167,13 @@ impl AdapterCache {
                 Arc::clone(&tenant.aux),
             )
             .expect("registered MoS tenant must have pooled geometry");
+            if self.int8 {
+                // quantize once per tenant version; the codes+scales are
+                // the only new allocation (aux tables still aliased)
+                return ServingAdapter::PooledInt8(Arc::new(
+                    QuantPooledAdapter::quantize(&pooled),
+                ));
+            }
             return ServingAdapter::Pooled(Arc::new(pooled));
         }
         // dense tier: the seven layer types are independent, so fan the
@@ -211,6 +242,7 @@ mod tests {
         match a {
             ServingAdapter::Dense(f) => Arc::as_ptr(f) as usize,
             ServingAdapter::Pooled(p) => Arc::as_ptr(p) as usize,
+            ServingAdapter::PooledInt8(p) => Arc::as_ptr(p) as usize,
         }
     }
 
@@ -254,6 +286,31 @@ mod tests {
         }
         // dense residency is the materialized size: well above the pool
         assert!(a.resident_bytes() > 3 * t.actual_bytes());
+    }
+
+    #[test]
+    fn int8_tier_quantizes_mos_and_leaves_dense_f32() {
+        let cfg = presets::tiny();
+        let cache = AdapterCache::new(4, false).with_int8(true);
+        assert!(cache.serves_int8());
+        let t = tenant(&cfg, "a", 1);
+        let a = cache.get(&cfg, &t);
+        let q = a.pooled_int8().expect("MoS tenant must get the int8 tier");
+        // residency must sit well under the f32 pool the registry holds
+        assert!(
+            q.resident_bytes() < t.actual_bytes(),
+            "int8 entry {} B not below f32 pool {} B",
+            q.resident_bytes(),
+            t.actual_bytes()
+        );
+        // non-MoS tenants still get dense f32 factors under int8 mode
+        let l = TenantSpec::lora(4).seed(1).build(&cfg, "l").unwrap();
+        let al = cache.get(&cfg, &l);
+        assert!(al.dense().is_some(), "LoRA tenant cannot serve int8 pooled");
+        // and the dense override wins over int8 for everyone
+        let dense = AdapterCache::new(4, true).with_int8(true);
+        let ad = dense.get(&cfg, &t);
+        assert!(ad.dense().is_some(), "dense mode must stay f32 materialized");
     }
 
     #[test]

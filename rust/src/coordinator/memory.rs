@@ -12,6 +12,13 @@
 //! charging it against the adapter LRU would double-limit it. The
 //! invariant servers assert: `kv_used()` equals the pool's resident
 //! bytes, because per-page owner tags partition the pool exactly.
+//!
+//! Since PR 10 the adapter charge follows the serving representation:
+//! under `MOS_SERVE_INT8=1` a pooled MoS tenant is admitted at its int8
+//! bytes (codes + per-shard scales + f32 aux tables), which the registry
+//! computes analytically and tests pin to the quantized entry's measured
+//! `resident_bytes` — so the ~4× pool shrink buys ~4× more resident
+//! tenants on top of the MoS ~8×, under the same budget.
 
 use std::collections::HashMap;
 

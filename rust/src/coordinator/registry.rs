@@ -203,6 +203,10 @@ pub struct Registry {
     /// `true` = serve dense materialized factors (legacy path, forced by
     /// `MOS_SERVE_DENSE=1`); the ledger then charges materialized size.
     serve_dense: bool,
+    /// `true` = quantize pooled MoS entries to int8 (`MOS_SERVE_INT8=1`);
+    /// the ledger then charges codes + per-shard scales instead of f32
+    /// pools. Ignored when `serve_dense` (dense stays the f32 oracle).
+    serve_int8: bool,
     /// Called with each ledger-evicted tenant id while it is being dropped
     /// — the server wires this to `AdapterCache::invalidate` so "evicted"
     /// tenants cannot keep serving from the cache.
@@ -214,7 +218,10 @@ impl Registry {
         let dense = std::env::var("MOS_SERVE_DENSE")
             .map(|v| v == "1")
             .unwrap_or(false);
-        Registry::with_serve_mode(cfg, capacity_bytes, dense)
+        let int8 = std::env::var("MOS_SERVE_INT8")
+            .map(|v| v == "1")
+            .unwrap_or(false);
+        Registry::with_serve_mode(cfg, capacity_bytes, dense).with_int8(int8)
     }
 
     /// Like [`Registry::new`] with the serving representation pinned
@@ -230,14 +237,28 @@ impl Registry {
             ledger: Mutex::new(MemoryLedger::new(capacity_bytes)),
             versions: Mutex::new(HashMap::new()),
             serve_dense,
+            serve_int8: false,
             evict_hook: Mutex::new(None),
         }
+    }
+
+    /// Pin the int8 pooled tier explicitly (tests/benches; [`Registry::new`]
+    /// reads `MOS_SERVE_INT8`). Must be applied before tenants register —
+    /// the ledger charge is computed at admission.
+    pub fn with_int8(mut self, int8: bool) -> Registry {
+        self.serve_int8 = int8;
+        self
     }
 
     /// Should tenants be served from dense materialized factors instead of
     /// the pooled zero-copy representation?
     pub fn serve_dense(&self) -> bool {
         self.serve_dense
+    }
+
+    /// Should pooled MoS tenants be served from int8-quantized shard pools?
+    pub fn serve_int8(&self) -> bool {
+        self.serve_int8
     }
 
     /// Install the eviction callback (replacing any previous one).
@@ -264,6 +285,17 @@ impl Registry {
                     self.cfg.blocks * tenant.mc.r * (i + o) * 4
                 })
                 .sum()
+        } else if self.serve_int8 {
+            // int8 pooled tier: 1 byte per pool element + one f32 scale
+            // per shard (shards = leading dim of each params tensor); aux
+            // index/scale tables stay f32 and aliased. This is exactly
+            // `QuantPooledAdapter::resident_bytes` — asserted in tests.
+            tenant
+                .params
+                .values()
+                .map(|t| t.len() + 4 * t.shape()[0])
+                .sum::<usize>()
+                + tenant.aux.values().map(|t| t.nbytes()).sum::<usize>()
         } else {
             tenant.actual_bytes()
         }
@@ -459,6 +491,36 @@ mod tests {
         let db = dense.ledger.lock().unwrap().used();
         let ratio = db as f64 / t.actual_bytes() as f64;
         assert!(ratio > 3.0, "dense/pooled byte ratio only {ratio:.1}");
+    }
+
+    #[test]
+    fn int8_ledger_charge_matches_measured_quantized_bytes() {
+        // the analytic int8 admission charge must equal what the cache's
+        // quantized entry actually keeps resident — the ledger stays
+        // measured under MOS_SERVE_INT8 exactly as it is for f32 pooled
+        use crate::adapter::{PooledAdapter, QuantPooledAdapter};
+        let cfg = presets::tiny();
+        let reg =
+            Registry::with_serve_mode(cfg.clone(), 1 << 30, false).with_int8(true);
+        assert!(reg.serve_int8());
+        reg.register(mk_tenant(&cfg, "a", 1)).unwrap();
+        let t = reg.get("a").unwrap();
+        let pooled = PooledAdapter::new(
+            t.mc.clone(),
+            Arc::clone(&t.params),
+            Arc::clone(&t.aux),
+        )
+        .unwrap();
+        let q = QuantPooledAdapter::quantize(&pooled);
+        let charged = reg.ledger.lock().unwrap().used();
+        assert_eq!(charged, q.resident_bytes());
+        assert_eq!(charged, reg.resident_bytes_for(&t));
+        // and the int8 charge sits well under the f32 pooled charge
+        assert!(
+            charged < t.actual_bytes(),
+            "int8 charge {charged} B not below f32 {} B",
+            t.actual_bytes()
+        );
     }
 
     #[test]

@@ -27,9 +27,10 @@ use crate::data::tokenizer::Tokenizer;
 use crate::eval::{DecodeState, GenOptions};
 use crate::model::math::scratch_put;
 use crate::model::paged::{KvStats, PagedKvCache};
+use crate::model::quant::QuantBase;
 use crate::model::transformer::{
-    decode_step_runs, infer_prefill_runs, paged_infer_runs, AdapterBinding,
-    AdapterRef, KvCache,
+    decode_step_runs_base, infer_prefill_runs_base, paged_infer_runs_base,
+    quantize_base, AdapterBinding, AdapterRef, BaseRef, KvCache,
 };
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -200,6 +201,19 @@ fn ensure_kv<'a>(
     })
 }
 
+/// The engine's frozen-base view for the stepping paths. A free function
+/// over disjoint `HostEngine` fields (like [`ensure_kv`]) so callers can
+/// keep it live across the `&mut self.kv` borrow.
+fn base_ref<'a>(
+    base: &'a crate::util::bank::Bank,
+    quant: &'a Option<QuantBase>,
+) -> BaseRef<'a> {
+    match quant {
+        Some(q) => BaseRef::int8(base, q),
+        None => BaseRef::f32(base),
+    }
+}
+
 /// Map engine runs onto per-run adapter bindings. `counts[i]` is run
 /// `i`'s batch-element count for *this* call — request rows for the
 /// fixed prefill, cache entries for the paged paths and decode.
@@ -213,6 +227,9 @@ fn run_bindings<'a>(
             let adapter = match run.adapter {
                 ServingAdapter::Dense(f) => AdapterRef::Dense(f.as_ref()),
                 ServingAdapter::Pooled(p) => AdapterRef::Pooled(p.as_ref()),
+                ServingAdapter::PooledInt8(p) => {
+                    AdapterRef::PooledInt8(p.as_ref())
+                }
             };
             AdapterBinding::new(n, &run.tenant.mc, adapter)
         })
@@ -239,6 +256,12 @@ fn run_bindings<'a>(
 pub struct HostEngine {
     pub cfg: crate::config::ModelCfg,
     pub base: crate::util::bank::Bank,
+    /// `MOS_SERVE_INT8=1` tier: the projection stacks and tied embedding
+    /// quantized once at engine construction. When set, the f32 copies
+    /// are *stripped* from `base` (norms stay — they are read f32 by
+    /// every path), so the engine's resident base bytes are the int8
+    /// ones, not both representations.
+    quant: Option<QuantBase>,
     kv: Option<KvBackend>,
     full_prefill: bool,
     use_fixed: bool,
@@ -271,10 +294,14 @@ impl HostEngine {
         cfg: crate::config::ModelCfg,
         base: crate::util::bank::Bank,
     ) -> HostEngine {
-        HostEngine {
+        let int8 = std::env::var("MOS_SERVE_INT8")
+            .map(|v| v == "1")
+            .unwrap_or(false);
+        let e = HostEngine {
             row_start: vec![0; cfg.batch],
             cfg,
             base,
+            quant: None,
             kv: None,
             full_prefill: false,
             use_fixed: false,
@@ -284,7 +311,37 @@ impl HostEngine {
             stats: None,
             owners: Vec::new(),
             dense_memo: None,
+        };
+        if int8 {
+            e.serve_int8()
+        } else {
+            e
         }
+    }
+
+    /// Serve the frozen base int8-quantized (tests/benches pin it here;
+    /// [`HostEngine::with_base`] reads `MOS_SERVE_INT8`). Quantizes the
+    /// projection stacks and the tied embedding once, then drops their
+    /// f32 copies from the bank. The full-window arms
+    /// ([`ServeEngine::forward`], [`HostEngine::full_prefill`]) need the
+    /// f32 base and error out on an int8 engine.
+    pub fn serve_int8(mut self) -> HostEngine {
+        if self.quant.is_none() {
+            self.quant = Some(quantize_base(&self.cfg, &self.base));
+            for t in crate::config::LAYER_TYPES {
+                self.base.remove(&format!("w.{t}"));
+            }
+            self.base.remove("embed");
+        }
+        self
+    }
+
+    /// Measured resident bytes of the frozen base under the active
+    /// representation: the bank's remaining f32 tensors plus the int8
+    /// codes + scales when quantized (the `base_mb` bench column).
+    pub fn base_resident_bytes(&self) -> usize {
+        self.base.values().map(|t| t.nbytes()).sum::<usize>()
+            + self.quant.as_ref().map_or(0, |q| q.nbytes())
     }
 
     /// Use the legacy full-forward prefill (bench/test comparison arm).
@@ -385,6 +442,12 @@ impl ServeEngine for HostEngine {
         adapter: &ServingAdapter,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
+        if self.quant.is_some() {
+            anyhow::bail!(
+                "full-window forward needs the f32 base; an int8 engine \
+                 (MOS_SERVE_INT8) serves the stepping path only"
+            );
+        }
         let factors = self.dense_factors(tenant, adapter);
         let (cache, _) = crate::model::transformer::forward(
             &self.cfg,
@@ -413,6 +476,12 @@ impl ServeEngine for HostEngine {
     ) -> Result<Vec<f32>> {
         let seq = self.cfg.seq;
         if self.full_prefill {
+            if self.quant.is_some() {
+                anyhow::bail!(
+                    "full_prefill needs the f32 base; an int8 engine \
+                     (MOS_SERVE_INT8) serves the lean stepping path only"
+                );
+            }
             // legacy arm: the training forward (ForwardCache + full-window
             // vocab projection), K/V copied out, logits re-sliced to the
             // lean shape — bitwise identical rows, ~seq-fold more work
@@ -470,8 +539,14 @@ impl ServeEngine for HostEngine {
                     let counts: Vec<usize> =
                         runs.iter().map(|b| b.rows).collect();
                     let bindings = run_bindings(runs, &counts);
-                    infer_prefill_runs(
-                        &self.cfg, &self.base, &bindings, tokens, last, c, rows,
+                    infer_prefill_runs_base(
+                        &self.cfg,
+                        base_ref(&self.base, &self.quant),
+                        &bindings,
+                        tokens,
+                        last,
+                        c,
+                        rows,
                     )
                 }
                 KvBackend::Paged(c) => {
@@ -497,9 +572,9 @@ impl ServeEngine for HostEngine {
                         counts.push(entries.len() - before);
                     }
                     let bindings = run_bindings(runs, &counts);
-                    let out = paged_infer_runs(
+                    let out = paged_infer_runs_base(
                         &self.cfg,
-                        &self.base,
+                        base_ref(&self.base, &self.quant),
                         &bindings,
                         c,
                         &entries,
@@ -536,11 +611,20 @@ impl ServeEngine for HostEngine {
                 self.capacity_pages,
                 &self.stats,
             ) {
-                KvBackend::Fixed(c) => decode_step_runs(
-                    &self.cfg, &self.base, &bindings, c, entries,
+                KvBackend::Fixed(c) => decode_step_runs_base(
+                    &self.cfg,
+                    base_ref(&self.base, &self.quant),
+                    &bindings,
+                    c,
+                    entries,
                 ),
-                KvBackend::Paged(c) => paged_infer_runs(
-                    &self.cfg, &self.base, &bindings, c, entries, None,
+                KvBackend::Paged(c) => paged_infer_runs_base(
+                    &self.cfg,
+                    base_ref(&self.base, &self.quant),
+                    &bindings,
+                    c,
+                    entries,
+                    None,
                 ),
             },
         )
@@ -603,9 +687,9 @@ impl ServeEngine for HostEngine {
             counts.push(entries.len() - before);
         }
         let bindings = run_bindings(runs, &counts);
-        let out = paged_infer_runs(
+        let out = paged_infer_runs_base(
             &self.cfg,
-            &self.base,
+            base_ref(&self.base, &self.quant),
             &bindings,
             c,
             &entries,
@@ -829,10 +913,10 @@ pub struct Server {
 impl Server {
     pub fn new(registry: Arc<Registry>, cfg: ServerCfg) -> Server {
         let metrics = Arc::new(Metrics::new());
-        let cache = Arc::new(AdapterCache::new(
-            cfg.cache_capacity,
-            registry.serve_dense(),
-        ));
+        let cache = Arc::new(
+            AdapterCache::new(cfg.cache_capacity, registry.serve_dense())
+                .with_int8(registry.serve_int8()),
+        );
         // ledger eviction must invalidate the cache, or "evicted" tenants
         // keep serving from it (ledger<->cache coherence)
         let cache2 = Arc::clone(&cache);
@@ -1567,6 +1651,73 @@ mod tests {
         }
         assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 6);
         server.shutdown();
+    }
+
+    #[test]
+    fn int8_serving_end_to_end() {
+        // MOS_SERVE_INT8 wiring, pinned explicitly: registry charges the
+        // analytic int8 bytes, the cache builds PooledInt8 entries, the
+        // engine serves the quantized stepping path, and requests resolve
+        let mut cfg = presets::tiny();
+        cfg.batch = 4;
+        let registry = Arc::new(
+            Registry::with_serve_mode(cfg.clone(), 1 << 30, false)
+                .with_int8(true),
+        );
+        let mut server = Server::new(
+            registry,
+            ServerCfg {
+                max_batch: 4,
+                max_wait: Duration::from_millis(10),
+                cache_capacity: 8,
+                ..ServerCfg::default()
+            },
+        );
+        server.register("alice", spec(1)).unwrap();
+        let cfg2 = cfg.clone();
+        server
+            .start(1, move |_| HostEngine::new(cfg2.clone(), 0).serve_int8());
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                server
+                    .submit(
+                        "alice",
+                        &format!("q:{i}"),
+                        GenOptions::greedy().max_new_tokens(8),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        }
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 4);
+        let t = server.registry.get("alice").unwrap();
+        let a = server.cache.get(&cfg, &t);
+        let q = a.pooled_int8().expect("int8 registry must serve PooledInt8");
+        assert_eq!(
+            q.resident_bytes(),
+            server.registry.resident_bytes_for(&t),
+            "ledger charge diverges from measured int8 residency"
+        );
+        server.shutdown();
+
+        // the quantized base strips its f32 projections: well under the
+        // f32 engine's residency, and the full-window arm refuses to run
+        let f32_engine = HostEngine::new(cfg.clone(), 0);
+        let mut int8_engine = HostEngine::new(cfg.clone(), 0).serve_int8();
+        assert!(
+            int8_engine.base_resident_bytes() * 100
+                <= f32_engine.base_resident_bytes() * 35,
+            "int8 base {} B vs f32 base {} B: > 0.35x",
+            int8_engine.base_resident_bytes(),
+            f32_engine.base_resident_bytes()
+        );
+        let toks = vec![0i32; cfg.batch * cfg.seq];
+        assert!(
+            int8_engine.forward(&t, &a, &toks).is_err(),
+            "full-window forward must refuse the int8 base"
+        );
     }
 
     #[test]

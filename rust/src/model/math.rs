@@ -9,9 +9,14 @@
 //! combinations (`nt`, `nn`, `tn`, `tt`) share a single optimized path.
 //!
 //! * **Microkernel** — a register-tiled `MR x NR` (4x8) block of C held in
-//!   independent accumulators; the inner loop walks packed panels so the
-//!   autovectorizer emits wide fma (same multi-accumulator trick as
-//!   [`dot`]).
+//!   independent accumulators. The tile ships in explicit-SIMD flavors
+//!   ([`Kernel`]): 256-bit AVX and 128-bit SSE2 `core::arch` kernels plus
+//!   the portable scalar tile, selected once per process by runtime
+//!   feature detection (override with `MOS_SIMD=0|auto|4|8`). Every SIMD
+//!   tile performs the scalar tile's exact per-element mul/add sequence
+//!   (separate mul and add — **no fma**), so all kernels are bitwise
+//!   interchangeable and the canonical-order contracts below hold for any
+//!   selection.
 //! * **Packing** — B is packed once per call into `NR`-wide column panels
 //!   (`KC`-deep blocks, k-major inside each panel) and A into `MR`-wide
 //!   row panels per `(row-block, k-block)`, so the microkernel reads both
@@ -62,7 +67,7 @@ pub fn pool() -> &'static ThreadPool {
 /// Pool for an auto-parallel kernel call from the current thread: the
 /// global pool, unless this thread *is* a pool worker (nested fan-out runs
 /// serial — see `threadpool::in_worker`).
-fn auto_pool() -> Option<&'static ThreadPool> {
+pub(crate) fn auto_pool() -> Option<&'static ThreadPool> {
     if threadpool::in_worker() {
         None
     } else {
@@ -164,9 +169,9 @@ pub enum Trans {
 /// Microkernel tile height (C rows per register tile).
 const MR: usize = 4;
 /// Microkernel tile width (C cols per register tile).
-const NR: usize = 8;
+pub(crate) const NR: usize = 8;
 /// k-blocking: depth of one packed panel block.
-const KC: usize = 256;
+pub(crate) const KC: usize = 256;
 /// Row-blocking: A rows packed per inner block (multiple of MR).
 const MC: usize = 64;
 /// Column-blocking: packed-B columns walked per group (multiple of NR).
@@ -179,10 +184,122 @@ const NC: usize = 512;
 /// Below this many flops the scalar kernels win (packing overhead).
 const SMALL_FLOPS: usize = 1 << 16;
 /// Below this many flops a single core is faster than fan-out.
-const PAR_FLOPS: usize = 1 << 21;
+pub(crate) const PAR_FLOPS: usize = 1 << 21;
 
-fn div_up(a: usize, b: usize) -> usize {
+pub(crate) fn div_up(a: usize, b: usize) -> usize {
     (a + b - 1) / b
+}
+
+// ---------------------------------------------------------------------------
+// microkernel selection (explicit SIMD)
+// ---------------------------------------------------------------------------
+
+/// Microkernel flavor for the blocked path's `MR x NR` register tile.
+///
+/// All flavors execute the *same* per-element IEEE-754 operation sequence
+/// (independent accumulator per C element, ascending-k mul-then-add, no
+/// fma), so they are bitwise interchangeable — the choice affects speed
+/// only, and every canonical-order contract (thread invariance, decode
+/// vs. prefill row batching) holds identically under each of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar tile (the autovectorizer may still emit SIMD).
+    Scalar,
+    /// 128-bit SSE2 lanes (width 4): part of the x86_64 baseline, so it
+    /// is always runnable on this arch.
+    #[cfg(target_arch = "x86_64")]
+    Sse4,
+    /// 256-bit AVX lanes (width 8): runtime-detected, so a baseline
+    /// `x86-64` build still uses 256-bit ops on hardware that has them.
+    #[cfg(target_arch = "x86_64")]
+    Avx8,
+}
+
+impl Kernel {
+    /// Stable name used by `BENCH_gemm.json` and the bench gates.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Sse4 => "sse4",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx8 => "avx8",
+        }
+    }
+
+    /// Lane width in f32 elements (1 for the scalar tile).
+    pub fn width(self) -> usize {
+        match self {
+            Kernel::Scalar => 1,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Sse4 => 4,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx8 => 8,
+        }
+    }
+
+    /// Whether the current CPU can run this kernel.
+    pub fn supported(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Sse4 => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx8 => std::arch::is_x86_feature_detected!("avx"),
+        }
+    }
+}
+
+/// Every kernel compiled into this build, widest last. Not all are
+/// necessarily runnable at runtime — filter with [`Kernel::supported`].
+pub fn compiled_kernels() -> &'static [Kernel] {
+    #[cfg(target_arch = "x86_64")]
+    {
+        &[Kernel::Scalar, Kernel::Sse4, Kernel::Avx8]
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        &[Kernel::Scalar]
+    }
+}
+
+/// Widest supported kernel with lane width `<= max_width` — the
+/// deterministic fallback chain 8 → 4 → scalar.
+fn widest_supported(max_width: usize) -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if max_width >= 8 && Kernel::Avx8.supported() {
+            return Kernel::Avx8;
+        }
+        if max_width >= 4 {
+            return Kernel::Sse4;
+        }
+    }
+    let _ = max_width;
+    Kernel::Scalar
+}
+
+/// The process-wide microkernel, selected once from `MOS_SIMD`:
+/// * `0` / `scalar` — pin the scalar tile;
+/// * `auto` or unset — widest runtime-supported lane width;
+/// * a width (`4`, `8`) — that lane width, falling back deterministically
+///   (8 → 4 → scalar) when the CPU or build lacks it.
+///
+/// Selection never changes results (see [`Kernel`]); benches pin kernels
+/// explicitly through [`gemm_with_kernel`] instead of re-reading the env.
+pub fn selected_kernel() -> Kernel {
+    static SEL: OnceLock<Kernel> = OnceLock::new();
+    *SEL.get_or_init(|| match std::env::var("MOS_SIMD").ok().as_deref() {
+        None => widest_supported(usize::MAX),
+        Some(s) => match s.trim() {
+            "auto" | "" => widest_supported(usize::MAX),
+            "scalar" => Kernel::Scalar,
+            w => match w.parse::<usize>() {
+                Ok(w) => widest_supported(w),
+                Err(_) => widest_supported(usize::MAX),
+            },
+        },
+    })
 }
 
 /// `c (m,n) += alpha * op(a) @ op(b)` on the auto-selected pool (global
@@ -205,6 +322,47 @@ pub fn gemm(
 /// the thread-invariance tests pin pools through this entry.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_with(
+    pool: Option<&ThreadPool>,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    gemm_dispatch(selected_kernel(), pool, m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// [`gemm_with`] with the blocked path's microkernel pinned explicitly
+/// (the per-kernel bench arms and lane-width invariance tests; normal
+/// callers go through the `MOS_SIMD` selection). Shapes below the tile /
+/// flop thresholds take the same scalar fallbacks as [`gemm_with`] —
+/// kernels are bitwise interchangeable, so the pin affects speed only.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_kernel(
+    kernel: Kernel,
+    pool: Option<&ThreadPool>,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    debug_assert!(kernel.supported());
+    gemm_dispatch(kernel, pool, m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// The one shape dispatch behind [`gemm_with`] / [`gemm_with_kernel`].
+#[allow(clippy::too_many_arguments)]
+fn gemm_dispatch(
+    kernel: Kernel,
     pool: Option<&ThreadPool>,
     m: usize,
     n: usize,
@@ -257,7 +415,7 @@ pub fn gemm_with(
         return gemm_small(m, n, k, alpha, a, ta, b, tb, c);
     }
     let pool = pool.filter(|_| flops >= PAR_FLOPS);
-    gemm_blocked(pool, m, n, k, alpha, a, ta, b, tb, c)
+    gemm_blocked_k(kernel, pool, m, n, k, alpha, a, ta, b, tb, c)
 }
 
 /// Canonical-order GEMM: `c (m,n) += alpha * op(a) @ op(b)` with a
@@ -776,9 +934,29 @@ fn gemm_row(
     pool.unwrap().scoped_map(tasks, |(j0, cchunk)| row_range(j0, cchunk));
 }
 
-/// Blocked path: pack B once, then fan row-blocks of C out over the pool.
+/// Blocked path: pack B once, then fan row-blocks of C out over the pool,
+/// with the process-selected microkernel.
 #[allow(clippy::too_many_arguments)]
 fn gemm_blocked(
+    pool: Option<&ThreadPool>,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    b: &[f32],
+    tb: Trans,
+    c: &mut [f32],
+) {
+    gemm_blocked_k(selected_kernel(), pool, m, n, k, alpha, a, ta, b, tb, c)
+}
+
+/// [`gemm_blocked`] with an explicit microkernel (threaded into every
+/// worker's [`run_chunk`], so one call uses one kernel throughout).
+#[allow(clippy::too_many_arguments)]
+fn gemm_blocked_k(
+    kernel: Kernel,
     pool: Option<&ThreadPool>,
     m: usize,
     n: usize,
@@ -797,7 +975,7 @@ fn gemm_blocked(
     let nth = pool.map(|p| p.workers()).unwrap_or(1);
     let max_chunks = div_up(m, MR);
     if nth <= 1 || max_chunks < 2 {
-        run_chunk(a, ta, m, k, n, n_round, alpha, &bp, 0, m, c);
+        run_chunk(kernel, a, ta, m, k, n, n_round, alpha, &bp, 0, m, c);
     } else {
         let nchunks = nth.min(max_chunks);
         let chunk_rows = div_up(div_up(m, nchunks), MR) * MR;
@@ -813,7 +991,7 @@ fn gemm_blocked(
         }
         let bp_ref: &[f32] = &bp;
         pool.unwrap().scoped_map(tasks, |(i0, rows, cchunk)| {
-            run_chunk(a, ta, m, k, n, n_round, alpha, bp_ref, i0, rows, cchunk)
+            run_chunk(kernel, a, ta, m, k, n, n_round, alpha, bp_ref, i0, rows, cchunk)
         });
     }
     scratch_put(bp);
@@ -895,11 +1073,31 @@ fn pack_a(
     }
 }
 
-/// Register-tiled MR x NR microkernel over packed panels: independent
-/// accumulators per C element break the fp dependency chain so the
-/// autovectorizer emits wide fma over the NR lane dimension.
+/// Register-tiled MR x NR microkernel over packed panels: dispatch to the
+/// selected flavor. All flavors perform the identical per-element
+/// sequence — for each `p` ascending, each C element does one mul and one
+/// add (`acc[r][j] += ap[p,r] * bp[p,j]`, **never** fused) — so outputs
+/// are bitwise equal across kernels; only the register width differs.
 #[inline(always)]
-fn micro_tile(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+fn micro_tile(kernel: Kernel, kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    match kernel {
+        Kernel::Scalar => micro_tile_scalar(kc, ap, bp, acc),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse4 => micro_tile_sse4(kc, ap, bp, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx8 is only selectable/pinnable when
+        // `Kernel::supported()` saw the `avx` cpuid bit (selected_kernel's
+        // fallback chain and gemm_with_kernel's debug_assert enforce it).
+        Kernel::Avx8 => unsafe { micro_tile_avx8(kc, ap, bp, acc) },
+    }
+}
+
+/// Scalar tile: independent accumulators per C element break the fp
+/// dependency chain; the autovectorizer may widen the NR lane dimension,
+/// which preserves the per-element mul/add sequence exactly like the
+/// hand-written tiles below.
+#[inline(always)]
+fn micro_tile_scalar(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
     debug_assert!(ap.len() >= kc * MR);
     debug_assert!(bp.len() >= kc * NR);
     for p in 0..kc {
@@ -915,6 +1113,82 @@ fn micro_tile(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
     }
 }
 
+// The hand-written tiles are unrolled for exactly the 4x8 geometry.
+#[cfg(target_arch = "x86_64")]
+const _: () = assert!(MR == 4 && NR == 8, "SIMD tiles assume a 4x8 tile");
+
+/// SSE2 tile (lane width 4): two 128-bit accumulators per C row. SSE2 is
+/// part of the x86_64 baseline, so this flavor is always runnable here.
+/// `_mm_add_ps(_, _mm_mul_ps(..))` keeps mul and add as separate IEEE
+/// roundings per lane — the scalar tile's sequence, four lanes at a time.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn micro_tile_sse4(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kc * MR);
+    debug_assert!(bp.len() >= kc * NR);
+    // SAFETY: all pointers stay inside `ap`/`bp`/`acc` (lengths asserted
+    // above; acc rows are NR = 8 floats); loads/stores are unaligned.
+    unsafe {
+        let mut lo = [
+            _mm_loadu_ps(acc[0].as_ptr()),
+            _mm_loadu_ps(acc[1].as_ptr()),
+            _mm_loadu_ps(acc[2].as_ptr()),
+            _mm_loadu_ps(acc[3].as_ptr()),
+        ];
+        let mut hi = [
+            _mm_loadu_ps(acc[0].as_ptr().add(4)),
+            _mm_loadu_ps(acc[1].as_ptr().add(4)),
+            _mm_loadu_ps(acc[2].as_ptr().add(4)),
+            _mm_loadu_ps(acc[3].as_ptr().add(4)),
+        ];
+        let (a, b) = (ap.as_ptr(), bp.as_ptr());
+        for p in 0..kc {
+            let blo = _mm_loadu_ps(b.add(p * NR));
+            let bhi = _mm_loadu_ps(b.add(p * NR + 4));
+            for r in 0..MR {
+                let av = _mm_set1_ps(*a.add(p * MR + r));
+                lo[r] = _mm_add_ps(lo[r], _mm_mul_ps(av, blo));
+                hi[r] = _mm_add_ps(hi[r], _mm_mul_ps(av, bhi));
+            }
+        }
+        for r in 0..MR {
+            _mm_storeu_ps(acc[r].as_mut_ptr(), lo[r]);
+            _mm_storeu_ps(acc[r].as_mut_ptr().add(4), hi[r]);
+        }
+    }
+}
+
+/// AVX tile (lane width 8): one 256-bit accumulator per C row, compiled
+/// with the `avx` target feature so a baseline `x86-64` build still emits
+/// 256-bit ops — the caller must have verified runtime support.
+/// `_mm256_add_ps(_, _mm256_mul_ps(..))` — separate mul and add, never
+/// fma, so each lane reproduces the scalar tile's roundings bit-for-bit.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn micro_tile_avx8(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kc * MR);
+    debug_assert!(bp.len() >= kc * NR);
+    let mut v = [
+        _mm256_loadu_ps(acc[0].as_ptr()),
+        _mm256_loadu_ps(acc[1].as_ptr()),
+        _mm256_loadu_ps(acc[2].as_ptr()),
+        _mm256_loadu_ps(acc[3].as_ptr()),
+    ];
+    let (a, b) = (ap.as_ptr(), bp.as_ptr());
+    for p in 0..kc {
+        let br = _mm256_loadu_ps(b.add(p * NR));
+        for r in 0..MR {
+            let av = _mm256_set1_ps(*a.add(p * MR + r));
+            v[r] = _mm256_add_ps(v[r], _mm256_mul_ps(av, br));
+        }
+    }
+    for r in 0..MR {
+        _mm256_storeu_ps(acc[r].as_mut_ptr(), v[r]);
+    }
+}
+
 /// One worker's share: C rows `[i0, i0+rows)` (given as the matching
 /// `cchunk` slice), all k-blocks, all column panels. Column panels are
 /// walked in `NC`-wide groups (outermost loop) so the packed-B working
@@ -926,6 +1200,7 @@ fn micro_tile(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
 /// bitwise independent of both the worker count and the grouping.
 #[allow(clippy::too_many_arguments)]
 fn run_chunk(
+    kernel: Kernel,
     a: &[f32],
     ta: Trans,
     m: usize,
@@ -961,7 +1236,7 @@ fn run_chunk(
                     for jp in jc..jend {
                         let bpanel = &bblock[jp * kc * NR..(jp + 1) * kc * NR];
                         let mut acc = [[0.0f32; NR]; MR];
-                        micro_tile(kc, appanel, bpanel, &mut acc);
+                        micro_tile(kernel, kc, appanel, bpanel, &mut acc);
                         let j0 = jp * NR;
                         let w = NR.min(n - j0);
                         for r in 0..h {
@@ -1573,6 +1848,105 @@ mod tests {
         let b1: Vec<u32> = c1.iter().map(|v| v.to_bits()).collect();
         let b2: Vec<u32> = c2.iter().map(|v| v.to_bits()).collect();
         assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn simd_kernels_bitwise_match_scalar_tile() {
+        // THE lane-width contract: every supported kernel must produce the
+        // exact bits of the scalar tile on the blocked path, serially and
+        // under any worker count — this is what makes MOS_SIMD a pure
+        // performance knob, and what carries the canonical-order contracts
+        // (decode vs. prefill row batching) over to the SIMD tiles
+        // unchanged. Shapes cross the MR/NR/KC/NC boundaries and use
+        // alpha != 1 for the per-KC-block writeback.
+        let pool1 = ThreadPool::new(1);
+        let pool4 = ThreadPool::new(4);
+        let mut rng = Rng::new(57, 3);
+        for (m, k, n, alpha) in [
+            (65usize, 47usize, 33usize, 1.0f32),
+            (128, KC + 44, 96, 1.7),
+            (48, 64, NC + 9, 1.0),
+            (12, 300, 40, 0.25),
+        ] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut want = c0.clone();
+            gemm_blocked_k(
+                Kernel::Scalar, None, m, n, k, alpha, &a, Trans::N, &b, Trans::T, &mut want,
+            );
+            // the scalar tile itself must agree with the naive oracle
+            let naive = naive_matmul(&a, &b, m, k, n, false, true);
+            let want_delta: Vec<f32> = want
+                .iter()
+                .zip(&c0)
+                .map(|(w, c)| (w - c) / alpha)
+                .collect();
+            prop::assert_allclose(&want_delta, &naive, 1e-3, 1e-3).unwrap();
+            let wbits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            for &kern in compiled_kernels() {
+                if !kern.supported() {
+                    continue;
+                }
+                for pool in [None, Some(&pool1), Some(&pool4)] {
+                    let mut c = c0.clone();
+                    gemm_blocked_k(
+                        kern, pool, m, n, k, alpha, &a, Trans::N, &b, Trans::T, &mut c,
+                    );
+                    let bits: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        wbits,
+                        bits,
+                        "kernel {} (width {}) pool={:?} diverges from scalar on ({m},{k},{n}) alpha={alpha}",
+                        kern.name(),
+                        kern.width(),
+                        pool.map(|p| p.workers()),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_with_kernel_full_dispatch_matches_default() {
+        // the pinned public entry must route small/m=1/low-rank shapes
+        // through the same fallbacks as gemm_with — bit-equal end to end
+        let mut rng = Rng::new(59, 1);
+        for (m, k, n) in [(1usize, 96usize, 64usize), (3, 40, 24), (48, 64, 64), (200, 128, 96)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            let mut base = vec![0.0f32; m * n];
+            gemm_with(None, m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut base);
+            for &kern in compiled_kernels() {
+                if !kern.supported() {
+                    continue;
+                }
+                let mut c = vec![0.0f32; m * n];
+                gemm_with_kernel(kern, None, m, n, k, 1.0, &a, Trans::N, &b, Trans::T, &mut c);
+                let b1: Vec<u32> = base.iter().map(|v| v.to_bits()).collect();
+                let b2: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(b1, b2, "kernel {} ({m},{k},{n})", kern.name());
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_selection_is_supported_and_deterministic() {
+        // whatever MOS_SIMD said, the selected kernel must be runnable
+        // here and stable across calls; names/widths are the bench keys
+        let sel = selected_kernel();
+        assert!(sel.supported());
+        assert_eq!(sel, selected_kernel());
+        assert!(compiled_kernels().contains(&sel));
+        for &k in compiled_kernels() {
+            assert!(["scalar", "sse4", "avx8"].contains(&k.name()));
+            assert!(k.width() == 1 || k.width() == 4 || k.width() == 8);
+        }
+        // the fallback chain is deterministic and never widens past the cap
+        assert_eq!(widest_supported(0), Kernel::Scalar);
+        assert!(widest_supported(4).width() <= 4);
+        assert!(widest_supported(8).width() <= 8);
+        assert!(widest_supported(usize::MAX).supported());
     }
 
     #[test]

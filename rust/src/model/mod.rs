@@ -13,6 +13,7 @@
 pub mod adamw;
 pub mod math;
 pub mod paged;
+pub mod quant;
 pub mod transformer;
 
 use crate::adapter::{self, Factors};

@@ -1,0 +1,620 @@
+//! Int8 weight-only quantization for the serving path.
+//!
+//! MoS's serving economy — one shared shard pool behind every tenant —
+//! means a *single* quantization of the pool (and of the frozen base
+//! weights, once per model) amortizes across all adapters. This module
+//! holds the quantized representations and the canonical-order kernels
+//! that consume them; the wiring (`MOS_SERVE_INT8=1`) lives in
+//! `coordinator::*` and `model::transformer`.
+//!
+//! ## Scheme
+//!
+//! Symmetric per-row quantization, weights only:
+//!
+//! * scale `s_j = max_abs(row j) / 127` (`1.0` for an all-zero row);
+//! * `q = round(x / s_j)` clamped to `[-127, 127]` (the `-128` code is
+//!   unused, keeping the grid symmetric);
+//! * activations stay f32; accumulation is f32 throughout.
+//!
+//! "Row" is an output row for a base weight matrix ([`QuantMatrix`],
+//! `(out, in)` row-major) and a shard for the shared pool
+//! ([`QuantPool`], `(shards, shard_w)`), so each scale covers exactly the
+//! weights one output coordinate (or one shard) streams.
+//!
+//! ## Canonical order
+//!
+//! [`gemm_canon_q8`] fixes a per-element operation sequence that depends
+//! on neither the batch size nor the worker count: for each C element,
+//! `KC` blocks ascending, a single f32 accumulator over
+//! `a[i,p] * (q[j,p] as f32)` in ascending `p`, then
+//! `c += alpha * (s_j * acc)` at block writeback. Row-batching
+//! independence (a decode row bit-matches the same row inside a prefill
+//! batch) and `MOS_THREADS` invariance therefore hold exactly as they do
+//! for the f32 `gemm_canon` — int8 results differ from f32 results (that
+//! is the quantization error, gated by the logit-error budget), but they
+//! never differ from *themselves* across batching or threads.
+//!
+//! The gather path ([`gemm_gather_canon_q8`]) keeps residency int8: only
+//! the `rank x (l * shard_w)` gathered operand is dequantized, into
+//! per-thread scratch, then the ordinary f32 `gemm_canon` runs — so the
+//! pooled bitwise contracts carry over unchanged.
+
+use super::math::{self, auto_pool, div_up, scratch_put, scratch_take, Trans, KC, NR};
+
+/// Serving accuracy budget: max tolerated `|logit_f32 - logit_int8|`
+/// on the tiny preset. Gross quantization breakage (wrong scales, code
+/// overflow, mis-sliced blocks) lands orders of magnitude above this.
+pub const LOGIT_BUDGET_MAX_ABS: f32 = 0.5;
+/// Serving accuracy budget: minimum fraction of positions whose argmax
+/// logit agrees between the f32 and int8 paths.
+pub const LOGIT_BUDGET_TOP1: f32 = 0.70;
+
+/// A quantized row-major matrix `(rows, cols)` with one scale per row.
+#[derive(Debug, Clone)]
+pub struct QuantMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major codes, `rows * cols` entries in `[-127, 127]`.
+    pub q: Vec<i8>,
+    /// Per-row dequantization scales, `rows` entries.
+    pub scale: Vec<f32>,
+}
+
+/// Quantize one row into codes, returning its scale.
+fn quantize_row(row: &[f32], q: &mut [i8]) -> f32 {
+    let max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let s = if max == 0.0 { 1.0 } else { max / 127.0 };
+    let inv = 1.0 / s;
+    for (d, &v) in q.iter_mut().zip(row) {
+        *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    s
+}
+
+impl QuantMatrix {
+    /// Quantize a dense `(rows, cols)` row-major matrix.
+    pub fn quantize(rows: usize, cols: usize, w: &[f32]) -> QuantMatrix {
+        assert_eq!(w.len(), rows * cols, "quantize: shape mismatch");
+        let mut q = vec![0i8; rows * cols];
+        let mut scale = vec![0.0f32; rows];
+        for r in 0..rows {
+            scale[r] = quantize_row(
+                &w[r * cols..(r + 1) * cols],
+                &mut q[r * cols..(r + 1) * cols],
+            );
+        }
+        QuantMatrix { rows, cols, q, scale }
+    }
+
+    /// Dequantize the whole matrix (tests and small fallbacks only — the
+    /// serving path never materializes this).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            self.row_into(r, &mut out[r * self.cols..(r + 1) * self.cols]);
+        }
+        out
+    }
+
+    /// Dequantize row `r` into `out` (`cols` floats): `q * s_r`.
+    pub fn row_into(&self, r: usize, out: &mut [f32]) {
+        let s = self.scale[r];
+        let row = &self.q[r * self.cols..(r + 1) * self.cols];
+        for (d, &v) in out.iter_mut().zip(row) {
+            *d = v as f32 * s;
+        }
+    }
+
+    /// Codes + scales for the row range `[r0, r0 + rn)` — e.g. one
+    /// transformer block out of a `(blocks * out, in)` stack.
+    pub fn rows_slice(&self, r0: usize, rn: usize) -> (&[i8], &[f32]) {
+        (
+            &self.q[r0 * self.cols..(r0 + rn) * self.cols],
+            &self.scale[r0..r0 + rn],
+        )
+    }
+
+    /// Resident bytes of the quantized representation (codes + scales).
+    pub fn nbytes(&self) -> usize {
+        self.q.len() + 4 * self.scale.len()
+    }
+}
+
+/// A quantized shard pool `(shards, shard_w)` with one scale per shard —
+/// the int8 twin of the f32 `{t}.pool_a` / `{t}.pool_b` tensors.
+#[derive(Debug, Clone)]
+pub struct QuantPool {
+    pub shards: usize,
+    pub shard_w: usize,
+    pub q: Vec<i8>,
+    pub scale: Vec<f32>,
+}
+
+impl QuantPool {
+    /// Quantize a shard pool (one scale per shard row).
+    pub fn quantize(shard_w: usize, pool: &[f32]) -> QuantPool {
+        assert!(shard_w > 0 && pool.len() % shard_w == 0);
+        let shards = pool.len() / shard_w;
+        let m = QuantMatrix::quantize(shards, shard_w, pool);
+        QuantPool { shards, shard_w, q: m.q, scale: m.scale }
+    }
+
+    /// Dequantize the whole pool (tests only).
+    pub fn dequantize(&self) -> Vec<f32> {
+        QuantMatrix {
+            rows: self.shards,
+            cols: self.shard_w,
+            q: self.q.clone(),
+            scale: self.scale.clone(),
+        }
+        .dequantize()
+    }
+
+    /// Resident bytes (codes + scales).
+    pub fn nbytes(&self) -> usize {
+        self.q.len() + 4 * self.scale.len()
+    }
+}
+
+/// The frozen base weights of one model, quantized once at engine
+/// construction: the seven projection weights (transformer weight-id
+/// order, all blocks concatenated, so `rows = blocks * out`) plus the
+/// tied embedding (which is also the LM head — the largest base tensor).
+/// Norm weights stay f32: they are `O(hidden)` bytes and multiplicative,
+/// so quantizing them buys nothing.
+#[derive(Debug, Clone)]
+pub struct QuantBase {
+    pub w: Vec<QuantMatrix>,
+    pub embed: QuantMatrix,
+}
+
+impl QuantBase {
+    /// Resident bytes of the quantized base (codes + scales).
+    pub fn nbytes(&self) -> usize {
+        self.w.iter().map(|m| m.nbytes()).sum::<usize>() + self.embed.nbytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// canonical-order int8 kernels
+// ---------------------------------------------------------------------------
+
+/// One C row range `[j0, j0 + cchunk.len())` of the canonical int8 GEMM:
+/// `KC` blocks ascending, single f32 accumulator per element over
+/// `a[p] * (q[j,p] as f32)` in ascending `p`, scale (and `alpha`) folded
+/// at block writeback. This fixed sequence is what every entry below
+/// funnels into, so batching and threading can never reorder it.
+fn q8_row_range(
+    j0: usize,
+    k: usize,
+    alpha: f32,
+    arow: &[f32],
+    q: &[i8],
+    scale: &[f32],
+    cchunk: &mut [f32],
+) {
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        for (jj, cv) in cchunk.iter_mut().enumerate() {
+            let j = j0 + jj;
+            let qrow = &q[j * k + pc..j * k + pc + kc];
+            let ar = &arow[pc..pc + kc];
+            let mut acc = 0.0f32;
+            for (av, qv) in ar.iter().zip(qrow) {
+                acc += *av * (*qv as f32);
+            }
+            let s = scale[j];
+            if alpha == 1.0 {
+                *cv += s * acc;
+            } else {
+                *cv += alpha * (s * acc);
+            }
+        }
+        pc += kc;
+    }
+}
+
+/// Canonical-order int8 GEMM: `c (m,n) += alpha * a @ deq(W)^T` where `W`
+/// is `(n, k)` int8 codes with per-row scales (the base-weight serving
+/// orientation — f32 activations against `W^T`, like
+/// `gemm_canon(.., w, Trans::T, ..)`).
+///
+/// Accumulation is f32; the per-element order is fixed (see
+/// [`q8_row_range`]), so results are bitwise independent of row batching
+/// and of `MOS_THREADS` — rows of C fan out whole per worker (columns for
+/// `m = 1` decode rows), never splitting an element's k loop.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_canon_q8(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    q: &[i8],
+    scale: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(q.len(), n * k);
+    debug_assert_eq!(scale.len(), n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(n)
+        .saturating_mul(k);
+    let pool = if flops >= math::PAR_FLOPS { auto_pool() } else { None };
+    let nth = pool.map(|p| p.workers()).unwrap_or(1);
+    if m == 1 {
+        // decode row: partition columns; each c_j is computed whole by
+        // one worker in the canonical order
+        if nth <= 1 || n < 2 * NR {
+            return q8_row_range(0, k, alpha, a, q, scale, c);
+        }
+        let chunk = div_up(n, nth).max(NR);
+        let mut tasks: Vec<(usize, &mut [f32])> = Vec::new();
+        let mut rest: &mut [f32] = c;
+        let mut j0 = 0usize;
+        while !rest.is_empty() {
+            let w = chunk.min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(w);
+            tasks.push((j0, head));
+            rest = tail;
+            j0 += w;
+        }
+        pool.unwrap()
+            .scoped_map(tasks, |(j0, cchunk)| q8_row_range(j0, k, alpha, a, q, scale, cchunk));
+        return;
+    }
+    let serial = |i0: usize, crows: &mut [f32]| {
+        for (i, crow) in crows.chunks_exact_mut(n).enumerate() {
+            let arow = &a[(i0 + i) * k..(i0 + i + 1) * k];
+            q8_row_range(0, k, alpha, arow, q, scale, crow);
+        }
+    };
+    if nth <= 1 {
+        return serial(0, c);
+    }
+    let per = div_up(m, nth);
+    let mut tasks: Vec<(usize, &mut [f32])> = Vec::new();
+    let mut rest: &mut [f32] = c;
+    let mut i0 = 0usize;
+    while i0 < m {
+        let take = per.min(m - i0);
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+        tasks.push((i0, head));
+        rest = tail;
+        i0 += take;
+    }
+    pool.unwrap().scoped_map(tasks, |(i0, crows)| serial(i0, crows));
+}
+
+/// [`gemm_canon_q8`] against a [`QuantMatrix`] (shape-checked sugar).
+pub fn gemm_canon_q8m(m: usize, alpha: f32, a: &[f32], w: &QuantMatrix, c: &mut [f32]) {
+    gemm_canon_q8(m, w.rows, w.cols, alpha, a, &w.q, &w.scale, c)
+}
+
+/// Gather `idx` shard rows out of a *quantized* pool into a dense f32
+/// matrix: each shard dequantizes as `q * s_shard` while copying, then
+/// the optional per-row rank scale folds in afterwards with the same
+/// `s != 1.0` guard as the f32 `gather_pooled` — so the result is
+/// bit-identical to gathering from a pre-dequantized f32 pool.
+fn gather_pooled_q8(
+    g: &mut [f32],
+    pool: &QuantPool,
+    idx: &[i32],
+    l: usize,
+    row_scale: Option<&[f32]>,
+) {
+    let shard_w = pool.shard_w;
+    let g_rows = idx.len() / l;
+    let width = l * shard_w;
+    debug_assert_eq!(idx.len(), g_rows * l);
+    debug_assert_eq!(g.len(), g_rows * width);
+    for row in 0..g_rows {
+        for j in 0..l {
+            let shard = idx[row * l + j] as usize;
+            let s = pool.scale[shard];
+            let src = &pool.q[shard * shard_w..(shard + 1) * shard_w];
+            let dst = &mut g[row * width + j * shard_w..row * width + (j + 1) * shard_w];
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = v as f32 * s;
+            }
+        }
+    }
+    if let Some(scale) = row_scale {
+        debug_assert_eq!(scale.len(), g_rows);
+        for row in 0..g_rows {
+            let s = scale[row];
+            if s != 1.0 {
+                for v in &mut g[row * width..(row + 1) * width] {
+                    *v *= s;
+                }
+            }
+        }
+    }
+}
+
+/// Int8 variant of `gemm_gather_canon`: the shard pool stays resident in
+/// int8; only the gathered `g_rows x (l * shard_w)` operand is
+/// dequantized, into per-thread scratch, and the ordinary f32
+/// `gemm_canon` runs against it. `tg` has the same two roles as the f32
+/// entry (`Trans::T` = A-factor apply, `Trans::N` = B-factor apply).
+/// Bitwise identical to dequantizing the whole pool up front and calling
+/// `gemm_gather_canon` — for any thread count — because the floats and
+/// the kernel that touches them are literally the same.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_gather_canon_q8(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    pool: &QuantPool,
+    idx: &[i32],
+    l: usize,
+    row_scale: Option<&[f32]>,
+    tg: Trans,
+    c: &mut [f32],
+) {
+    let g_rows = idx.len() / l;
+    let width = l * pool.shard_w;
+    match tg {
+        Trans::T => debug_assert_eq!((n, k), (g_rows, width)),
+        Trans::N => debug_assert_eq!((k, n), (g_rows, width)),
+    }
+    let mut g = scratch_take(g_rows * width);
+    gather_pooled_q8(&mut g, pool, idx, l, row_scale);
+    math::gemm_canon(m, n, k, alpha, a, Trans::N, &g, tg, c);
+    scratch_put(g);
+}
+
+// ---------------------------------------------------------------------------
+// logit-error budget
+// ---------------------------------------------------------------------------
+
+/// Accuracy of an int8 run against its f32 reference, over per-position
+/// logit rows: the two budget metrics the tests and `bench_serving` gate.
+#[derive(Debug, Clone, Copy)]
+pub struct LogitError {
+    /// `max |logit_int8 - logit_f32|` over every position and vocab slot.
+    pub max_abs: f32,
+    /// Fraction of positions whose argmax logit agrees, in `[0, 1]`.
+    pub top1_agree: f32,
+}
+
+/// Compare candidate logits against a reference, `vocab` slots per row.
+pub fn logit_error(reference: &[f32], candidate: &[f32], vocab: usize) -> LogitError {
+    assert_eq!(reference.len(), candidate.len());
+    assert!(vocab > 0 && reference.len() % vocab == 0);
+    let rows = reference.len() / vocab;
+    let mut max_abs = 0.0f32;
+    let mut agree = 0usize;
+    for r in 0..rows {
+        let rf = &reference[r * vocab..(r + 1) * vocab];
+        let cf = &candidate[r * vocab..(r + 1) * vocab];
+        for (x, y) in rf.iter().zip(cf) {
+            max_abs = max_abs.max((x - y).abs());
+        }
+        let am = |row: &[f32]| {
+            (0..vocab)
+                .max_by(|&a, &b| row[a].total_cmp(&row[b]))
+                .unwrap()
+        };
+        if am(rf) == am(cf) {
+            agree += 1;
+        }
+    }
+    LogitError {
+        max_abs,
+        top1_agree: if rows == 0 { 1.0 } else { agree as f32 / rows as f32 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::ThreadPool;
+
+    #[test]
+    fn quantize_dequantize_round_trip_within_half_step() {
+        // symmetric per-row quant: every weight reconstructs within half a
+        // quantization step of its row, extreme rows hit the ±127 codes,
+        // and an all-zero row round-trips exactly
+        let mut rng = Rng::new(71, 0);
+        let (rows, cols) = (9, 40);
+        let mut w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 0.1).collect();
+        for v in &mut w[0..cols] {
+            *v = 0.0; // all-zero row
+        }
+        let qm = QuantMatrix::quantize(rows, cols, &w);
+        let deq = qm.dequantize();
+        for r in 0..rows {
+            let s = qm.scale[r];
+            assert!(s > 0.0);
+            for c in 0..cols {
+                let err = (deq[r * cols + c] - w[r * cols + c]).abs();
+                assert!(
+                    err <= 0.5001 * s,
+                    "row {r} col {c}: err {err} > half step {s}"
+                );
+            }
+            let max_code = qm.q[r * cols..(r + 1) * cols]
+                .iter()
+                .map(|v| v.unsigned_abs())
+                .max()
+                .unwrap();
+            if r == 0 {
+                assert_eq!(max_code, 0, "zero row must quantize to zero codes");
+                assert_eq!(s, 1.0);
+            } else {
+                assert_eq!(max_code, 127, "row max must land on the top code");
+            }
+        }
+        assert_eq!(qm.nbytes(), rows * cols + 4 * rows);
+    }
+
+    #[test]
+    fn q8_gemm_matches_dequantized_oracle_and_is_batch_invariant() {
+        // gemm_canon_q8 vs a plain f32 GEMM on the dequantized matrix:
+        // close numerically (the scale folds per KC block, not per
+        // element, so not bitwise), and bitwise independent of row
+        // batching — computing a row alone must bit-match the same row
+        // inside a batch (the decode contract carried to int8)
+        let mut rng = Rng::new(73, 1);
+        for (m, n, k, alpha) in [
+            (6usize, 24usize, 40usize, 1.0f32),
+            (6, 24, 300, 1.7), // k > KC: per-block scale writeback
+            (1, 33, 64, 1.0),  // decode row
+            (16, 64, 128, 0.25),
+        ] {
+            let w: Vec<f32> = (0..n * k).map(|_| rng.normal() * 0.05).collect();
+            let qm = QuantMatrix::quantize(n, k, &w);
+            let deq = qm.dequantize();
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut got = c0.clone();
+            gemm_canon_q8(m, n, k, alpha, &a, &qm.q, &qm.scale, &mut got);
+            let mut want = c0.clone();
+            math::gemm_canon(m, n, k, alpha, &a, Trans::N, &deq, Trans::T, &mut want);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-4 + 1e-4 * w.abs().max(1.0) * (k as f32).sqrt(),
+                    "({m},{n},{k}) alpha={alpha}: {g} vs {w}"
+                );
+            }
+            // row-batching independence, bitwise
+            for i in 0..m {
+                let mut crow = c0[i * n..(i + 1) * n].to_vec();
+                gemm_canon_q8(
+                    1, n, k, alpha, &a[i * k..(i + 1) * k], &qm.q, &qm.scale, &mut crow,
+                );
+                let alone: Vec<u32> = crow.iter().map(|v| v.to_bits()).collect();
+                let batched: Vec<u32> =
+                    got[i * n..(i + 1) * n].iter().map(|v| v.to_bits()).collect();
+                assert_eq!(alone, batched, "row {i} of ({m},{n},{k}) alpha={alpha}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_gemm_thread_invariant_bitwise() {
+        // MOS_THREADS must never change int8 serving results: the pooled
+        // fan-out partitions whole C rows (columns for m = 1), so outputs
+        // are bit-identical across worker counts. Shapes exceed PAR_FLOPS
+        // via the public entry's auto pool as well as pinned pools.
+        let pool1 = ThreadPool::new(1);
+        let pool4 = ThreadPool::new(4);
+        let mut rng = Rng::new(79, 2);
+        for (m, n, k) in [(48usize, 256usize, 128usize), (1, 2048, 512)] {
+            let w: Vec<f32> = (0..n * k).map(|_| rng.normal() * 0.05).collect();
+            let qm = QuantMatrix::quantize(n, k, &w);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            // pinned pools through the worker path: emulate by running the
+            // canonical entry inside the pool's own workers via scoped_map
+            let run_auto = || -> Vec<u32> {
+                let mut c = vec![0.0f32; m * n];
+                gemm_canon_q8(m, n, k, 1.0, &a, &qm.q, &qm.scale, &mut c);
+                c.iter().map(|v| v.to_bits()).collect()
+            };
+            let base = run_auto();
+            assert_eq!(base, run_auto(), "({m},{n},{k}) not deterministic");
+            // serial oracle: same entry with the pool suppressed by
+            // running inside a single-worker pool task
+            let serial: Vec<u32> = {
+                let mut out = vec![Vec::new()];
+                pool1.scoped_map(
+                    out.iter_mut().map(|o| (0usize, o)).collect::<Vec<_>>(),
+                    |(_, o)| {
+                        let mut c = vec![0.0f32; m * n];
+                        gemm_canon_q8(m, n, k, 1.0, &a, &qm.q, &qm.scale, &mut c);
+                        *o = c.iter().map(|v| v.to_bits()).collect();
+                    },
+                );
+                out.remove(0)
+            };
+            assert_eq!(base, serial, "({m},{n},{k}) thread-variant");
+            // and a different worker count agrees too
+            let par4: Vec<u32> = {
+                let mut out = vec![Vec::new()];
+                pool4.scoped_map(
+                    out.iter_mut().map(|o| (0usize, o)).collect::<Vec<_>>(),
+                    |(_, o)| {
+                        let mut c = vec![0.0f32; m * n];
+                        gemm_canon_q8(m, n, k, 1.0, &a, &qm.q, &qm.scale, &mut c);
+                        *o = c.iter().map(|v| v.to_bits()).collect();
+                    },
+                );
+                out.remove(0)
+            };
+            assert_eq!(base, par4, "({m},{n},{k}) 4-worker nest diverges");
+        }
+    }
+
+    #[test]
+    fn q8_gather_bitwise_matches_dequantized_pool_gather() {
+        // the pooled serving contract in int8: gathering from the
+        // quantized pool must bit-match dequantizing the whole pool first
+        // and running the f32 gather GEMM — both operand roles, with and
+        // without the rank scale
+        let mut rng = Rng::new(83, 3);
+        for (m, g_rows, l, shard_w, alpha, tg, scaled) in [
+            (6usize, 8usize, 2usize, 32usize, 1.0f32, Trans::T, true),
+            (6, 8, 2, 32, 0.25, Trans::N, true),
+            (1, 4, 3, 8, 1.0, Trans::T, false),
+            (48, 16, 2, 64, 1.0, Trans::N, true),
+        ] {
+            let n_shards = 24usize;
+            let poolf: Vec<f32> =
+                (0..n_shards * shard_w).map(|_| rng.normal() * 0.05).collect();
+            let qp = QuantPool::quantize(shard_w, &poolf);
+            let deq_pool = qp.dequantize();
+            let idx: Vec<i32> = (0..g_rows * l)
+                .map(|_| rng.range(0, n_shards) as i32)
+                .collect();
+            let scale: Option<Vec<f32>> = scaled.then(|| {
+                (0..g_rows)
+                    .map(|i| if i % 3 == 0 { 1.0 } else { rng.normal().abs() + 0.5 })
+                    .collect()
+            });
+            let width = l * shard_w;
+            let (n, k) = match tg {
+                Trans::T => (g_rows, width),
+                Trans::N => (width, g_rows),
+            };
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut want = c0.clone();
+            math::gemm_gather_canon(
+                m, n, k, alpha, &a, &deq_pool, shard_w, &idx, l,
+                scale.as_deref(), tg, &mut want,
+            );
+            let mut got = c0.clone();
+            gemm_gather_canon_q8(
+                m, n, k, alpha, &a, &qp, &idx, l, scale.as_deref(), tg, &mut got,
+            );
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "({m},{g_rows},{l},{shard_w}) tg={tg:?} diverges");
+        }
+    }
+
+    #[test]
+    fn logit_error_metrics() {
+        let reference = vec![1.0f32, 2.0, 0.0, /* row 2 */ 0.5, 0.1, 0.4];
+        let mut cand = reference.clone();
+        cand[0] = 1.1; // perturb but keep argmax
+        let e = logit_error(&reference, &cand, 3);
+        assert!((e.max_abs - 0.1).abs() < 1e-6);
+        assert_eq!(e.top1_agree, 1.0);
+        cand[3] = 0.0;
+        cand[5] = 0.9; // flip row 2's argmax
+        let e = logit_error(&reference, &cand, 3);
+        assert_eq!(e.top1_agree, 0.5);
+        assert!((e.max_abs - 0.5).abs() < 1e-6);
+    }
+}

@@ -23,7 +23,8 @@
 
 use super::math::*;
 use super::paged::PagedKvCache;
-use crate::adapter::{Factors, PooledAdapter};
+use super::quant::{self, QuantBase, QuantMatrix};
+use crate::adapter::{Factors, PooledAdapter, QuantPooledAdapter};
 use crate::config::{MethodCfg, ModelCfg, LAYER_TYPES};
 use crate::util::bank::{Bank, Tensor};
 use crate::util::rng::Rng;
@@ -186,8 +187,35 @@ fn adapted_fwd(
 ) -> (Vec<f32>, Vec<f32>) {
     let mut y = vec![0.0f32; rows * f.out_dim];
     let mut t = vec![0.0f32; rows * f.r];
-    adapted_fwd_into(x, w, f, block, scale, rows, &mut y, &mut t);
+    adapted_fwd_into(x, WeightsRef::F32(w), f, block, scale, rows, &mut y, &mut t);
     (y, t)
+}
+
+/// One frozen base weight as the inference paths consume it: the f32 bank
+/// slice, or the int8 codes + per-output-row scales of a [`QuantBase`].
+/// Both describe the same `(out, in)` row-major operand; [`base_gemm`]
+/// dispatches on the representation.
+#[derive(Clone, Copy)]
+enum WeightsRef<'a> {
+    F32(&'a [f32]),
+    Int8 { q: &'a [i8], scale: &'a [f32] },
+}
+
+/// The frozen-base projection `y = x @ W^T` (`y` fully overwritten) for
+/// either representation. The int8 arm accumulates in f32 in the same
+/// canonical per-element order ([`quant::gemm_canon_q8`]), so it shares
+/// the f32 path's row-batch/thread invariance — only the weight values
+/// themselves are quantized.
+fn base_gemm(rows: usize, o: usize, i: usize, x: &[f32], w: WeightsRef, y: &mut [f32]) {
+    y.fill(0.0);
+    match w {
+        WeightsRef::F32(w) => {
+            gemm_canon(rows, o, i, 1.0, x, Trans::N, w, Trans::T, y)
+        }
+        WeightsRef::Int8 { q, scale } => {
+            quant::gemm_canon_q8(rows, o, i, 1.0, x, q, scale, y)
+        }
+    }
 }
 
 /// [`adapted_fwd`] into caller buffers (`y` `(rows, out)`, `t` `(rows, r)`
@@ -196,7 +224,7 @@ fn adapted_fwd(
 #[allow(clippy::too_many_arguments)]
 fn adapted_fwd_into(
     x: &[f32],
-    w: &[f32],
+    w: WeightsRef,
     f: &Factors,
     block: usize,
     scale: f32,
@@ -207,8 +235,7 @@ fn adapted_fwd_into(
     let (i, o, r) = (f.in_dim, f.out_dim, f.r);
     debug_assert_eq!(y.len(), rows * o);
     debug_assert_eq!(t.len(), rows * r);
-    y.fill(0.0);
-    gemm_canon(rows, o, i, 1.0, x, Trans::N, w, Trans::T, y);
+    base_gemm(rows, o, i, x, w, y);
     t.fill(0.0);
     gemm_canon(rows, r, i, 1.0, x, Trans::N, &f.a[block], Trans::T, t);
     // y += scale * t @ B^T  (B is (o,r)); scale folds into the GEMM
@@ -222,6 +249,9 @@ fn adapted_fwd_into(
 pub enum AdapterRef<'a> {
     Dense(&'a BTreeMap<String, Factors>),
     Pooled(&'a PooledAdapter),
+    /// The int8 serving tier: shard pools stay resident as codes+scales,
+    /// the gather GEMM dequantizes only the gathered slices per call.
+    PooledInt8(&'a QuantPooledAdapter),
 }
 
 /// A contiguous run of batch rows served by one tenant: `rows` request
@@ -254,7 +284,7 @@ impl<'a> AdapterBinding<'a> {
 #[allow(clippy::too_many_arguments)]
 fn adapted_fwd_binding(
     x: &[f32],
-    w: &[f32],
+    w: WeightsRef,
     b: &AdapterBinding,
     ti: usize,
     kb: usize,
@@ -273,8 +303,7 @@ fn adapted_fwd_binding(
             let (i, o) = (l * v.shard_w_a, l * v.shard_w_b);
             debug_assert_eq!(y.len(), rows * o);
             debug_assert_eq!(t.len(), rows * r);
-            y.fill(0.0);
-            gemm_canon(rows, o, i, 1.0, x, Trans::N, w, Trans::T, y);
+            base_gemm(rows, o, i, x, w, y);
             t.fill(0.0);
             let per = r * l;
             gemm_gather_canon(
@@ -284,6 +313,29 @@ fn adapted_fwd_binding(
             );
             gemm_gather_canon(
                 rows, o, r, scale, t, v.pool_b, v.shard_w_b,
+                &v.idx_b[kb * per..(kb + 1) * per], l, None, Trans::N, y,
+            );
+        }
+        AdapterRef::PooledInt8(p) => {
+            // same shard-gather shape as the f32 pooled arm; the pools
+            // stay int8-resident and dequantize per gathered slice —
+            // bit-identical to gathering from a pre-dequantized pool
+            // (see `quant::gemm_gather_canon_q8`)
+            let v = p.view(LAYER_TYPES[ti]);
+            let (r, l) = (b.mc.r, b.mc.l);
+            let (i, o) = (l * v.pool_a.shard_w, l * v.pool_b.shard_w);
+            debug_assert_eq!(y.len(), rows * o);
+            debug_assert_eq!(t.len(), rows * r);
+            base_gemm(rows, o, i, x, w, y);
+            t.fill(0.0);
+            let per = r * l;
+            quant::gemm_gather_canon_q8(
+                rows, r, i, 1.0, x, v.pool_a,
+                &v.idx_a[kb * per..(kb + 1) * per], l,
+                Some(&v.rank_scale[kb * r..(kb + 1) * r]), Trans::T, t,
+            );
+            quant::gemm_gather_canon_q8(
+                rows, o, r, scale, t, v.pool_b,
                 &v.idx_b[kb * per..(kb + 1) * per], l, None, Trans::N, y,
             );
         }
@@ -299,7 +351,7 @@ fn adapted_fwd_bindings(
     runs: &[AdapterBinding],
     ti: usize,
     kb: usize,
-    w: &[f32],
+    w: WeightsRef,
     unit: usize,
     i_dim: usize,
     o_dim: usize,
@@ -585,50 +637,171 @@ const WGATE: usize = 4;
 const WUP: usize = 5;
 const WDOWN: usize = 6;
 
+/// Quantize a frozen base [`Bank`] once per model: the seven projection
+/// stacks (`rows = blocks * out`, one scale per output row) and the tied
+/// embedding `(vocab, hidden)`. Norm weights stay f32 in the bank — they
+/// are `O(hidden)` bytes and multiplicative, so quantizing them buys
+/// nothing (see [`QuantBase`]).
+pub fn quantize_base(cfg: &ModelCfg, base: &Bank) -> QuantBase {
+    let w = LAYER_TYPES
+        .iter()
+        .map(|t| {
+            let (o, i) = cfg.dims(t);
+            QuantMatrix::quantize(
+                cfg.blocks * o,
+                i,
+                base[&format!("w.{t}")].f32s().unwrap(),
+            )
+        })
+        .collect();
+    let embed =
+        QuantMatrix::quantize(cfg.vocab, cfg.hidden, base["embed"].f32s().unwrap());
+    QuantBase { w, embed }
+}
+
+/// One model's frozen base as the inference paths consume it: the f32
+/// [`Bank`] (norms always read from here), plus optionally the int8
+/// [`QuantBase`] the `MOS_SERVE_INT8=1` serving tier substitutes for the
+/// projection weights and the tied embedding. The `*_runs` entry points
+/// take their `&Bank` as [`BaseRef::f32`]; `HostEngine` hands the
+/// `*_runs_base` variants an int8 ref when serving quantized.
+#[derive(Clone, Copy)]
+pub struct BaseRef<'a> {
+    pub bank: &'a Bank,
+    pub quant: Option<&'a QuantBase>,
+}
+
+impl<'a> BaseRef<'a> {
+    /// The plain f32 base (what every pre-int8 call site means).
+    pub fn f32(bank: &'a Bank) -> BaseRef<'a> {
+        BaseRef { bank, quant: None }
+    }
+
+    /// Int8 projection weights + embedding; norms still from `bank`.
+    pub fn int8(bank: &'a Bank, quant: &'a QuantBase) -> BaseRef<'a> {
+        BaseRef { bank, quant: Some(quant) }
+    }
+}
+
+/// The tied embedding in either representation (also the LM head).
+#[derive(Clone, Copy)]
+enum EmbedRef<'a> {
+    F32(&'a [f32]),
+    Int8(&'a QuantMatrix),
+}
+
+/// The seven projection stacks in either representation.
+#[derive(Clone, Copy)]
+enum WBase<'a> {
+    F32([&'a [f32]; 7]),
+    Int8(&'a [QuantMatrix]),
+}
+
 /// Hoisted per-call views of the frozen base for the lean inference
 /// paths: one Bank probe per tensor per call. (The old per-block closure
 /// formatted a fresh `"w.{t}"` key string — a heap allocation — for every
 /// (block, projection) lookup.) Adapter state travels separately as
 /// [`AdapterBinding`]s since PR 6 (one batch can mix tenants and
-/// representations).
+/// representations); since PR 10 the base itself can be int8
+/// ([`BaseRef`]), with `w`/`embed` dispatching per representation.
 struct InferRefs<'a> {
-    embed: &'a [f32],
+    embed: EmbedRef<'a>,
     norm_attn: &'a [f32],
     norm_mlp: &'a [f32],
     norm_final: &'a [f32],
-    w: [&'a [f32]; 7],
+    w: WBase<'a>,
     wsz: [usize; 7],
+    /// per-block output rows per layer type (scale-slice stride)
+    wout: [usize; 7],
 }
 
 impl<'a> InferRefs<'a> {
-    fn new(cfg: &ModelCfg, base: &'a Bank) -> InferRefs<'a> {
-        let w = [
-            base["w.q"].f32s().unwrap(),
-            base["w.k"].f32s().unwrap(),
-            base["w.v"].f32s().unwrap(),
-            base["w.o"].f32s().unwrap(),
-            base["w.gate"].f32s().unwrap(),
-            base["w.up"].f32s().unwrap(),
-            base["w.down"].f32s().unwrap(),
-        ];
+    fn new(cfg: &ModelCfg, base: BaseRef<'a>) -> InferRefs<'a> {
+        let bank = base.bank;
+        let (w, embed) = match base.quant {
+            None => (
+                WBase::F32([
+                    bank["w.q"].f32s().unwrap(),
+                    bank["w.k"].f32s().unwrap(),
+                    bank["w.v"].f32s().unwrap(),
+                    bank["w.o"].f32s().unwrap(),
+                    bank["w.gate"].f32s().unwrap(),
+                    bank["w.up"].f32s().unwrap(),
+                    bank["w.down"].f32s().unwrap(),
+                ]),
+                EmbedRef::F32(bank["embed"].f32s().unwrap()),
+            ),
+            Some(q) => {
+                debug_assert_eq!(q.w.len(), 7);
+                (WBase::Int8(&q.w), EmbedRef::Int8(&q.embed))
+            }
+        };
         let mut wsz = [0usize; 7];
+        let mut wout = [0usize; 7];
         for (ti, &t) in LAYER_TYPES.iter().enumerate() {
             let (o, i) = cfg.dims(t);
             wsz[ti] = o * i;
+            wout[ti] = o;
         }
         InferRefs {
-            embed: base["embed"].f32s().unwrap(),
-            norm_attn: base["norm_attn"].f32s().unwrap(),
-            norm_mlp: base["norm_mlp"].f32s().unwrap(),
-            norm_final: base["norm_final"].f32s().unwrap(),
+            embed,
+            norm_attn: bank["norm_attn"].f32s().unwrap(),
+            norm_mlp: bank["norm_mlp"].f32s().unwrap(),
+            norm_final: bank["norm_final"].f32s().unwrap(),
             w,
             wsz,
+            wout,
         }
     }
 
-    /// Block `kb`'s weight slice for layer type `t` (a `W*` index).
-    fn w(&self, t: usize, kb: usize) -> &'a [f32] {
-        &self.w[t][kb * self.wsz[t]..(kb + 1) * self.wsz[t]]
+    /// Block `kb`'s weight for layer type `t` (a `W*` index) — an f32
+    /// slice or the matching int8 code rows + per-row scales.
+    fn w(&self, t: usize, kb: usize) -> WeightsRef<'a> {
+        match self.w {
+            WBase::F32(ws) => {
+                WeightsRef::F32(&ws[t][kb * self.wsz[t]..(kb + 1) * self.wsz[t]])
+            }
+            WBase::Int8(qs) => {
+                let o = self.wout[t];
+                let (q, scale) = qs[t].rows_slice(kb * o, o);
+                WeightsRef::Int8 { q, scale }
+            }
+        }
+    }
+
+    /// Token `tok`'s embedding row: a borrow of the f32 table, or one row
+    /// dequantized into `buf` (`c` floats — trivial per token next to the
+    /// projections it feeds).
+    fn embed_row<'b>(&self, tok: usize, c: usize, buf: &'b mut [f32]) -> &'b [f32]
+    where
+        'a: 'b,
+    {
+        match self.embed {
+            EmbedRef::F32(e) => &e[tok * c..(tok + 1) * c],
+            EmbedRef::Int8(q) => {
+                q.row_into(tok, &mut buf[..c]);
+                &buf[..c]
+            }
+        }
+    }
+
+    /// Project `m` final-norm rows against the tied embedding (LM head).
+    fn project_logits(
+        &self,
+        m: usize,
+        vocab: usize,
+        c: usize,
+        xf: &[f32],
+        logits: &mut [f32],
+    ) {
+        match self.embed {
+            EmbedRef::F32(e) => {
+                gemm_canon(m, vocab, c, 1.0, xf, Trans::N, e, Trans::T, logits)
+            }
+            EmbedRef::Int8(q) => {
+                quant::gemm_canon_q8(m, vocab, c, 1.0, xf, &q.q, &q.scale, logits)
+            }
+        }
     }
 }
 
@@ -686,6 +859,24 @@ pub fn infer_prefill_runs(
     cache: &mut KvCache,
     rows: &[usize],
 ) -> Vec<f32> {
+    infer_prefill_runs_base(cfg, BaseRef::f32(base), runs, tokens, last, cache, rows)
+}
+
+/// [`infer_prefill_runs`] against a [`BaseRef`]: the int8 serving tier
+/// enters here with quantized projection weights + embedding. All bitwise
+/// contracts hold *per representation* — the int8 path is itself
+/// batch/thread invariant, it just computes against quantized weights
+/// (accuracy gated by the tiny-preset logit-error budget).
+#[allow(clippy::too_many_arguments)]
+pub fn infer_prefill_runs_base(
+    cfg: &ModelCfg,
+    base: BaseRef,
+    runs: &[AdapterBinding],
+    tokens: &[i32],
+    last: &[usize],
+    cache: &mut KvCache,
+    rows: &[usize],
+) -> Vec<f32> {
     let nr = rows.len();
     debug_assert_eq!(tokens.len(), nr * cfg.seq);
     debug_assert_eq!(last.len(), nr);
@@ -702,8 +893,9 @@ pub fn infer_prefill_runs(
     let rf = InferRefs::new(cfg, base);
 
     let mut x = scratch_take(nrows * c);
+    let mut e_buf = scratch_take(c);
     for (row, &tok) in tokens.iter().enumerate() {
-        let e = &rf.embed[tok as usize * c..(tok as usize + 1) * c];
+        let e = rf.embed_row(tok as usize, c, &mut e_buf);
         // cache.pos holds the same sinusoid table forward derives per call
         let p = &cache.pos[(row % t_len) * c..(row % t_len + 1) * c];
         for j in 0..c {
@@ -742,22 +934,46 @@ pub fn infer_prefill_runs(
         // makes each bit-identical to the full-batch projection forward
         // runs, so no staging buffer or copy-out loop is needed. Requests
         // walk in run order so each row uses its own tenant's adapter.
+        // Contiguous-rows fast path: when a run's cache rows are
+        // consecutive, its destination slices tile one contiguous cache
+        // range, so the whole run projects in a single GEMM per side —
+        // bit-identical to the per-request split because canonical order
+        // is row-batch invariant (enforced by test). t_buf is free here:
+        // its contents are dead between adapted_fwd_bindings calls.
         let mut req0 = 0usize;
         for b in runs {
-            for i in req0..req0 + b.rows {
-                let r = rows[i];
-                debug_assert!(r < cache.bsz);
-                let hn_row = &hn[i * stride..(i + 1) * stride];
+            let contiguous = b.rows > 0
+                && (1..b.rows).all(|j| rows[req0 + j] == rows[req0 + j - 1] + 1);
+            if contiguous {
+                let r0 = rows[req0];
+                debug_assert!(r0 + b.rows <= cache.bsz);
+                let hn_run = &hn[req0 * stride..(req0 + b.rows) * stride];
                 adapted_fwd_binding(
-                    hn_row, rf.w(WK, kb), b, WK, kb, t_len,
-                    &mut cache.k[kb][r * stride..(r + 1) * stride],
-                    &mut t_kv[..t_len * b.mc.r],
+                    hn_run, rf.w(WK, kb), b, WK, kb, b.rows * t_len,
+                    &mut cache.k[kb][r0 * stride..(r0 + b.rows) * stride],
+                    &mut t_buf[..b.rows * t_len * b.mc.r],
                 );
                 adapted_fwd_binding(
-                    hn_row, rf.w(WV, kb), b, WV, kb, t_len,
-                    &mut cache.v[kb][r * stride..(r + 1) * stride],
-                    &mut t_kv[..t_len * b.mc.r],
+                    hn_run, rf.w(WV, kb), b, WV, kb, b.rows * t_len,
+                    &mut cache.v[kb][r0 * stride..(r0 + b.rows) * stride],
+                    &mut t_buf[..b.rows * t_len * b.mc.r],
                 );
+            } else {
+                for i in req0..req0 + b.rows {
+                    let r = rows[i];
+                    debug_assert!(r < cache.bsz);
+                    let hn_row = &hn[i * stride..(i + 1) * stride];
+                    adapted_fwd_binding(
+                        hn_row, rf.w(WK, kb), b, WK, kb, t_len,
+                        &mut cache.k[kb][r * stride..(r + 1) * stride],
+                        &mut t_kv[..t_len * b.mc.r],
+                    );
+                    adapted_fwd_binding(
+                        hn_row, rf.w(WV, kb), b, WV, kb, t_len,
+                        &mut cache.v[kb][r * stride..(r + 1) * stride],
+                        &mut t_kv[..t_len * b.mc.r],
+                    );
+                }
             }
             req0 += b.rows;
         }
@@ -852,12 +1068,10 @@ pub fn infer_prefill_runs(
     let mut xf = scratch_take(nr * c);
     rmsnorm_rows_into(&xl, rf.norm_final, c, &mut xf);
     let mut logits = scratch_take(nr * cfg.vocab);
-    gemm_canon(
-        nr, cfg.vocab, c, 1.0, &xf, Trans::N, rf.embed, Trans::T, &mut logits,
-    );
+    rf.project_logits(nr, cfg.vocab, c, &xf, &mut logits);
     for buf in [
-        x, hn, q_buf, proj, ctx, g_pre, u_val, f_val, t_buf, t_kv, qh, kh, vh,
-        ch, att, xl, xf,
+        x, e_buf, hn, q_buf, proj, ctx, g_pre, u_val, f_val, t_buf, t_kv, qh,
+        kh, vh, ch, att, xl, xf,
     ] {
         scratch_put(buf);
     }
@@ -930,6 +1144,18 @@ pub fn decode_step_runs(
     cache: &mut KvCache,
     entries: &[(usize, usize, i32)],
 ) -> Vec<f32> {
+    decode_step_runs_base(cfg, BaseRef::f32(base), runs, cache, entries)
+}
+
+/// [`decode_step_runs`] against a [`BaseRef`] (int8 serving tier entry —
+/// see [`infer_prefill_runs_base`] for the representation contract).
+pub fn decode_step_runs_base(
+    cfg: &ModelCfg,
+    base: BaseRef,
+    runs: &[AdapterBinding],
+    cache: &mut KvCache,
+    entries: &[(usize, usize, i32)],
+) -> Vec<f32> {
     let m = entries.len();
     debug_assert_eq!(runs.iter().map(|b| b.rows).sum::<usize>(), m);
     if m == 0 {
@@ -944,9 +1170,10 @@ pub fn decode_step_runs(
     let t_pad = entries.iter().map(|&(_, pos, _)| pos + 1).max().unwrap();
 
     let mut x = scratch_take(m * c);
+    let mut e_buf = scratch_take(c);
     for (i, &(row, pos, tok)) in entries.iter().enumerate() {
         debug_assert!(row < cache.bsz && pos < t_len);
-        let e = &rf.embed[tok as usize * c..(tok as usize + 1) * c];
+        let e = rf.embed_row(tok as usize, c, &mut e_buf);
         let p = &cache.pos[pos * c..(pos + 1) * c];
         for j in 0..c {
             // 0.1-scaled positions, the same expression forward evaluates
@@ -1064,12 +1291,10 @@ pub fn decode_step_runs(
     let mut xf = scratch_take(m * c);
     rmsnorm_rows_into(&x, rf.norm_final, c, &mut xf);
     let mut logits = scratch_take(m * cfg.vocab);
-    gemm_canon(
-        m, cfg.vocab, c, 1.0, &xf, Trans::N, rf.embed, Trans::T, &mut logits,
-    );
+    rf.project_logits(m, cfg.vocab, c, &xf, &mut logits);
     for buf in [
-        x, hn, q_buf, k_new, v_new, proj, ctx, g_pre, u_val, f_val, t_buf, kh,
-        vh, att, xf,
+        x, e_buf, hn, q_buf, k_new, v_new, proj, ctx, g_pre, u_val, f_val,
+        t_buf, kh, vh, att, xf,
     ] {
         scratch_put(buf);
     }
@@ -1147,6 +1372,19 @@ pub fn paged_infer_runs(
     entries: &[(usize, usize, i32)],
     lean: Option<&[usize]>,
 ) -> Vec<f32> {
+    paged_infer_runs_base(cfg, BaseRef::f32(base), runs, cache, entries, lean)
+}
+
+/// [`paged_infer_runs`] against a [`BaseRef`] (int8 serving tier entry —
+/// see [`infer_prefill_runs_base`] for the representation contract).
+pub fn paged_infer_runs_base(
+    cfg: &ModelCfg,
+    base: BaseRef,
+    runs: &[AdapterBinding],
+    cache: &mut PagedKvCache,
+    entries: &[(usize, usize, i32)],
+    lean: Option<&[usize]>,
+) -> Vec<f32> {
     let m = entries.len();
     debug_assert_eq!(runs.iter().map(|b| b.rows).sum::<usize>(), m);
     if m == 0 {
@@ -1177,8 +1415,9 @@ pub fn paged_infer_runs(
     }
 
     let mut x = scratch_take(m * c);
+    let mut e_buf = scratch_take(c);
     for (i, &(_, pos, tok)) in entries.iter().enumerate() {
-        let e = &rf.embed[tok as usize * c..(tok as usize + 1) * c];
+        let e = rf.embed_row(tok as usize, c, &mut e_buf);
         let p = cache.pos_row(pos);
         for j in 0..c {
             // 0.1-scaled positions, the same expression forward evaluates
@@ -1351,12 +1590,10 @@ pub fn paged_infer_runs(
     let mut xf = scratch_take(nl * c);
     rmsnorm_rows_into(&xl, rf.norm_final, c, &mut xf);
     let mut logits = scratch_take(nl * cfg.vocab);
-    gemm_canon(
-        nl, cfg.vocab, c, 1.0, &xf, Trans::N, rf.embed, Trans::T, &mut logits,
-    );
+    rf.project_logits(nl, cfg.vocab, c, &xf, &mut logits);
     for buf in [
-        x, hn, q_buf, k_new, v_new, proj, ctx, g_pre, u_val, f_val, t_buf, qh,
-        kh, vh, ch, att, xl, xf,
+        x, e_buf, hn, q_buf, k_new, v_new, proj, ctx, g_pre, u_val, f_val,
+        t_buf, qh, kh, vh, ch, att, xl, xf,
     ] {
         scratch_put(buf);
     }
@@ -2219,6 +2456,149 @@ mod tests {
             mixed_dec[vocab..].iter().map(|v| v.to_bits()).collect();
         let sb: Vec<u32> = solo_b_dec.iter().map(|v| v.to_bits()).collect();
         assert_eq!(mb, sb, "tenant B decode depends on co-batched tenant A");
+    }
+
+    #[test]
+    fn prefill_contiguous_rows_fast_path_bitwise_matches_split() {
+        // cache rows [0,1] take the contiguous K/V fast path (one
+        // run-wide projection straight into the cache); rows [0,2] fall
+        // back to the per-request loop. Same requests either way, so the
+        // logits and every written cache row must match bit-for-bit.
+        let mut cfg = presets::tiny();
+        cfg.batch = 3;
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let (base, _f, pooled) = setup_pooled(&cfg, &mc, 53);
+        let (t_len, c, vocab) = (cfg.seq, cfg.hidden, cfg.vocab);
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 9, 4, 2], vec![1, 5, 6]];
+        let mut window = vec![0i32; 2 * t_len];
+        for (r, p) in prompts.iter().enumerate() {
+            window[r * t_len..r * t_len + p.len()].copy_from_slice(p);
+        }
+        let last: Vec<usize> = prompts.iter().map(|p| p.len() - 1).collect();
+        let runs = [AdapterBinding::new(2, &mc, AdapterRef::Pooled(&pooled))];
+
+        let mut c_fast = KvCache::new(&cfg, 3);
+        let l_fast = infer_prefill_runs(
+            &cfg, &base, &runs, &window, &last, &mut c_fast, &[0, 1],
+        );
+        let mut c_split = KvCache::new(&cfg, 3);
+        let l_split = infer_prefill_runs(
+            &cfg, &base, &runs, &window, &last, &mut c_split, &[0, 2],
+        );
+
+        let fb: Vec<u32> = l_fast.iter().map(|v| v.to_bits()).collect();
+        let sb: Vec<u32> = l_split.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(fb, sb, "logits diverge between row layouts");
+        assert_eq!(l_fast.len(), 2 * vocab);
+        let stride = t_len * c;
+        for kb in 0..cfg.blocks {
+            for (rf, rs) in [(0usize, 0usize), (1, 2)] {
+                let fk: Vec<u32> = c_fast.k[kb][rf * stride..(rf + 1) * stride]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                let sk: Vec<u32> = c_split.k[kb]
+                    [rs * stride..(rs + 1) * stride]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(fk, sk, "block {kb} row {rf}: K diverges");
+                let fv: Vec<u32> = c_fast.v[kb][rf * stride..(rf + 1) * stride]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                let sv: Vec<u32> = c_split.v[kb]
+                    [rs * stride..(rs + 1) * stride]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(fv, sv, "block {kb} row {rf}: V diverges");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_serving_within_logit_error_budget() {
+        // the MOS_SERVE_INT8 accuracy gate at the model layer: prefill
+        // plus several decode steps through the fully quantized path
+        // (int8 base + int8 shard pool) stay within the logit budget of
+        // the f32 pooled oracle on the same token stream
+        let mut cfg = presets::tiny();
+        cfg.batch = 2;
+        let mc = MethodCfg::mos(8, 2, 2, 1);
+        let (base, _f, pooled) = setup_pooled(&cfg, &mc, 71);
+        let qbase = quantize_base(&cfg, &base);
+        let qpool = QuantPooledAdapter::quantize(&pooled);
+        let (t_len, vocab) = (cfg.seq, cfg.vocab);
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 9, 4, 2], vec![1, 5, 6]];
+        let mut window = vec![0i32; 2 * t_len];
+        for (r, p) in prompts.iter().enumerate() {
+            window[r * t_len..r * t_len + p.len()].copy_from_slice(p);
+        }
+        let last: Vec<usize> = prompts.iter().map(|p| p.len() - 1).collect();
+        let runs_f = [AdapterBinding::new(2, &mc, AdapterRef::Pooled(&pooled))];
+        let runs_q =
+            [AdapterBinding::new(2, &mc, AdapterRef::PooledInt8(&qpool))];
+
+        let mut cache_f = KvCache::new(&cfg, 2);
+        let mut reference = infer_prefill_runs(
+            &cfg, &base, &runs_f, &window, &last, &mut cache_f, &[0, 1],
+        );
+        let mut cache_q = KvCache::new(&cfg, 2);
+        let mut candidate = infer_prefill_runs_base(
+            &cfg,
+            BaseRef::int8(&base, &qbase),
+            &runs_q,
+            &window,
+            &last,
+            &mut cache_q,
+            &[0, 1],
+        );
+        // both paths decode the same fixed token stream so the error is
+        // purely representational, never a diverging-trajectory artifact
+        let toks = [(9i32, 5i32), (2, 7), (4, 1), (8, 3)];
+        for (j, (ta, tb)) in toks.iter().enumerate() {
+            let entries = [(0usize, 4 + j, *ta), (1usize, 3 + j, *tb)];
+            reference.extend(decode_step_runs(
+                &cfg, &base, &runs_f, &mut cache_f, &entries,
+            ));
+            candidate.extend(decode_step_runs_base(
+                &cfg,
+                BaseRef::int8(&base, &qbase),
+                &runs_q,
+                &mut cache_q,
+                &entries,
+            ));
+        }
+        let err = quant::logit_error(&reference, &candidate, vocab);
+        assert!(
+            err.max_abs <= quant::LOGIT_BUDGET_MAX_ABS,
+            "int8 max |dlogit| {} over budget {}",
+            err.max_abs,
+            quant::LOGIT_BUDGET_MAX_ABS
+        );
+        assert!(
+            err.top1_agree >= quant::LOGIT_BUDGET_TOP1,
+            "int8 top-1 agreement {} under budget {}",
+            err.top1_agree,
+            quant::LOGIT_BUDGET_TOP1
+        );
+        // and the int8 path honors the same row-batch discipline: the
+        // quantized results must be deterministic across repeat calls
+        let mut cache_q2 = KvCache::new(&cfg, 2);
+        let again = infer_prefill_runs_base(
+            &cfg,
+            BaseRef::int8(&base, &qbase),
+            &runs_q,
+            &window,
+            &last,
+            &mut cache_q2,
+            &[0, 1],
+        );
+        let a: Vec<u32> = again.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> =
+            candidate[..2 * vocab].iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "int8 prefill not deterministic");
     }
 
     #[test]

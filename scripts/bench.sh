@@ -25,6 +25,18 @@ if [ ! -f Cargo.toml ] && [ -f rust/Cargo.toml ]; then
     MANIFEST_ARGS="--manifest-path rust/Cargo.toml"
 fi
 
+# scalar control arm of the kernel sweep (info only): same engine with
+# the explicit-SIMD microkernel pinned off via MOS_SIMD=0, written to
+# BENCH_gemm_scalar.json so the simd-vs-scalar trajectory has a whole-run
+# control next to the per-case simd_speedup_vs_scalar ratio
+echo "== bench_gemm scalar control (MOS_SIMD=0, MOS_GEMM_MS=$MOS_GEMM_MS) =="
+mkdir -p "$MOS_BENCH_OUT/.bench_scalar"
+# shellcheck disable=SC2086
+MOS_SIMD=0 MOS_BENCH_OUT="$MOS_BENCH_OUT/.bench_scalar" \
+    cargo bench $MANIFEST_ARGS --bench bench_gemm
+mv "$MOS_BENCH_OUT/.bench_scalar/BENCH_gemm.json" "$MOS_BENCH_OUT/BENCH_gemm_scalar.json"
+rmdir "$MOS_BENCH_OUT/.bench_scalar"
+
 echo "== bench_gemm (MOS_THREADS=$MOS_THREADS, MOS_GEMM_MS=$MOS_GEMM_MS) =="
 # shellcheck disable=SC2086
 cargo bench $MANIFEST_ARGS --bench bench_gemm
@@ -37,9 +49,17 @@ echo "== bench_traffic (reqs/shape=$MOS_TRAFFIC_REQS, zipf tenants=$MOS_TRAFFIC_
 # shellcheck disable=SC2086
 cargo bench $MANIFEST_ARGS --bench bench_traffic
 
-# same schema gate CI enforces: fail loud on a silently empty artifact
+# same schema gate CI enforces: fail loud on a silently empty artifact.
+# MOS_REQUIRE_SIMD=1 additionally gates the simd-vs-scalar headline (the
+# baseline CI arm sets it; -Ctarget-cpu arms skip it because the scalar
+# tile itself autovectorizes there)
+SIMD_FLAG=""
+if [ "${MOS_REQUIRE_SIMD:-0}" = "1" ]; then
+    SIMD_FLAG="--require-simd-speedup"
+fi
 if command -v python3 >/dev/null 2>&1; then
-    python3 scripts/check_bench.py \
+    # shellcheck disable=SC2086
+    python3 scripts/check_bench.py $SIMD_FLAG \
         "$MOS_BENCH_OUT/BENCH_gemm.json" "$MOS_BENCH_OUT/BENCH_serving.json" \
         "$MOS_BENCH_OUT/BENCH_traffic.json"
 fi

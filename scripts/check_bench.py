@@ -11,8 +11,12 @@ list, or absent key is now a hard failure with a named culprit.
 import json
 import sys
 
-GEMM_TOP = ["bench", "threads", "cases", "headline"]
-GEMM_HEADLINE = ["min_speedup_serving_scale", "geomean_speedup"]
+GEMM_TOP = ["bench", "threads", "kernel", "cases", "headline"]
+GEMM_HEADLINE = [
+    "min_speedup_serving_scale",
+    "geomean_speedup",
+    "min_simd_speedup_serving_scale",
+]
 GEMM_CASE = [
     "name",
     "m",
@@ -22,10 +26,22 @@ GEMM_CASE = [
     "seed_scalar_gflops",
     "blocked_1t_gflops",
     "blocked_mt_gflops",
+    "kernel_scalar_gflops",
+    "int8_gflops",
     "speedup_mt_vs_seed",
+    "simd_speedup_vs_scalar",
+    "int8_speedup_vs_f32",
 ]
+# PR-10 tentpole gate (baseline CI arm only, via --require-simd-speedup):
+# the explicit-SIMD microkernel must beat the pinned scalar tile at
+# serving scale. Not applied on -Ctarget-cpu arms where the scalar tile
+# itself autovectorizes to the same width.
+MIN_SIMD_SPEEDUP = 1.3
 
-SERVING_TOP = ["bench", "requests", "cases"]
+SERVING_TOP = ["bench", "requests", "int8_accuracy", "cases"]
+INT8_ACCURACY = ["max_abs_dlogit", "top1_agree", "budget_max_abs", "budget_top1"]
+# int8 resident adapter+base bytes vs the matching f32 pooled arm
+MAX_INT8_BYTES_RATIO = 0.35
 SERVING_CASE = [
     "tenants",
     "decode",
@@ -43,6 +59,7 @@ SERVING_CASE = [
     "tok_per_s",
     "alloc_mb",
     "adapter_mb",
+    "base_mb",
     "kv_mb",
 ]
 TRAFFIC_TOP = ["bench", "seed", "requests_per_shape", "target", "shapes"]
@@ -82,6 +99,7 @@ MAX_BURSTY_OVER_STEADY_TTFT_P99 = 50.0
 # the sweep must actually contain the arms the ROADMAP row compares
 SERVING_ARMS = [
     {"decode": "kv_step", "prefill": "lean", "adapter": "pooled"},
+    {"decode": "kv_step", "prefill": "lean", "adapter": "pooled_int8"},
     {"decode": "kv_step", "prefill": "lean", "adapter": "dense"},
     {"decode": "kv_step", "prefill": "full_fwd_prefill"},
     {"decode": "full_fwd"},
@@ -127,10 +145,23 @@ def check_cases(path: str, data: dict, case_keys: list) -> list:
     return cases
 
 
-def check_gemm(path: str, data: dict) -> None:
+def check_gemm(path: str, data: dict, require_simd: bool = False) -> None:
     require(data, GEMM_TOP, path)
     require(data["headline"], GEMM_HEADLINE, f"{path}: headline")
     check_cases(path, data, GEMM_CASE)
+    if require_simd:
+        if data["kernel"] == "scalar":
+            fail(
+                f"{path}: --require-simd-speedup set but the selected "
+                f"kernel is scalar (MOS_SIMD pinned? unsupported CPU?)"
+            )
+        simd = data["headline"]["min_simd_speedup_serving_scale"]
+        if not simd >= MIN_SIMD_SPEEDUP:
+            fail(
+                f"{path}: simd kernel '{data['kernel']}' is only "
+                f"{simd:.2f}x the scalar tile at serving scale "
+                f"(need >= {MIN_SIMD_SPEEDUP}x)"
+            )
     print(f"check_bench: {path} ok ({len(data['cases'])} cases)")
 
 
@@ -140,6 +171,43 @@ def check_serving(path: str, data: dict) -> None:
     for arm in SERVING_ARMS:
         if not any(all(c.get(k) == v for k, v in arm.items()) for c in cases):
             fail(f"{path}: sweep is missing the {arm} arm")
+    # int8 accuracy must sit inside the budget the bench recorded
+    acc = data["int8_accuracy"]
+    require(acc, INT8_ACCURACY, f"{path}: int8_accuracy")
+    if not acc["max_abs_dlogit"] <= acc["budget_max_abs"]:
+        fail(
+            f"{path}: int8 max|dlogit| {acc['max_abs_dlogit']:.4f} over "
+            f"budget {acc['budget_max_abs']}"
+        )
+    if not acc["top1_agree"] >= acc["budget_top1"]:
+        fail(
+            f"{path}: int8 top-1 agreement {acc['top1_agree']:.3f} under "
+            f"budget {acc['budget_top1']}"
+        )
+    # int8 residency: adapter+base <= MAX_INT8_BYTES_RATIO x the f32
+    # pooled arm it mirrors (same tenants / batch / mode fields)
+    shape = ["tenants", "max_batch", "decode", "prefill", "kv", "prefix"]
+    for c in cases:
+        if c["adapter"] != "pooled_int8":
+            continue
+        twin = next(
+            (
+                f
+                for f in cases
+                if f["adapter"] == "pooled"
+                and all(f[k] == c[k] for k in shape)
+            ),
+            None,
+        )
+        if twin is None:
+            fail(f"{path}: pooled_int8 arm has no matching f32 pooled arm")
+        got = c["adapter_mb"] + c["base_mb"]
+        ref = twin["adapter_mb"] + twin["base_mb"]
+        if not got <= ref * MAX_INT8_BYTES_RATIO:
+            fail(
+                f"{path}: int8 resident adapter+base {got:.3f}MB > "
+                f"{MAX_INT8_BYTES_RATIO}x the f32 arm's {ref:.3f}MB"
+            )
     print(f"check_bench: {path} ok ({len(cases)} cases)")
 
 
@@ -211,7 +279,10 @@ def check_traffic(path: str, data: dict) -> None:
 
 
 def main() -> int:
-    args = sys.argv[1:] or ["BENCH_gemm.json", "BENCH_serving.json"]
+    args = sys.argv[1:]
+    require_simd = "--require-simd-speedup" in args
+    args = [a for a in args if a != "--require-simd-speedup"]
+    args = args or ["BENCH_gemm.json", "BENCH_serving.json"]
     for path in args:
         data = load(path)
         # route on the artifact's own self-description, not the filename
@@ -219,7 +290,7 @@ def main() -> int:
         if kind == "serving":
             check_serving(path, data)
         elif kind == "gemm":
-            check_gemm(path, data)
+            check_gemm(path, data, require_simd)
         elif kind == "traffic":
             check_traffic(path, data)
         else:

@@ -6,8 +6,11 @@ Usage:
   scripts/perf_row.py --serving [BENCH_serving.json] [--pr N]
   scripts/perf_row.py --traffic [BENCH_traffic.json] [--pr N]
 
-Default mode prints the GEMM row matching the ROADMAP Perf table columns:
-| PR | machine | threads | serving-scale GEMM speedup vs seed scalar (min) | geomean |
+Default mode prints the GEMM row matching the ROADMAP Perf table columns
+(kernel is the runtime-dispatched microkernel the run selected; the simd
+column is the min serving-scale speedup of that kernel over the scalar
+tile pinned on the same pool — the PR-10 tentpole claim):
+| PR | machine | threads | kernel | serving-scale GEMM speedup vs seed scalar (min) | geomean | simd vs scalar (min) |
 
 --serving prints the serving-trajectory row (prefill ratio is
 full_fwd_prefill p50 / lean p50 — the lean speedup, expect >> 1; the
@@ -15,8 +18,11 @@ adapter column is measured resident adapter MB at the largest tenant
 count, pooled vs dense-materialized — the PR-6 memory claim; the kv
 column is peak resident KV MB, paged pool vs fixed window, and the
 warm/cold column is cold prefill p50 / warm shared-prefix prefill p50 —
-both PR-7 claims):
-| PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full | adapter MB pooled vs dense | kv MB paged vs fixed | prefill p50 cold/warm |
+both PR-7 claims; the int8 column is resident adapter+base MB of the
+quantized tier vs the f32 pooled arm, and the accuracy column is the
+measured max |dlogit| / top-1 agreement vs the f32 oracle — the PR-10
+quantized-serving claim):
+| PR | machine | kv/full tok/s | prefill p50 full/lean | ttft p50 ms (lean) | alloc MB lean vs full | adapter MB pooled vs dense | kv MB paged vs fixed | prefill p50 cold/warm | adapter+base MB int8 vs f32 | int8 max dlogit / top1 |
 
 --traffic prints the traffic-trajectory row from the load-harness replay
 (steady ttft p50/p99 is the uncontended baseline; the burst column shows
@@ -48,12 +54,14 @@ def gemm_row(path: str) -> str:
     with open(path) as f:
         bench = json.load(f)
     head = bench.get("headline", {})
-    return "| {} | {} | {} | {:.1f}x | {:.1f}x |".format(
-        pr_arg("2 (GEMM engine)"),
+    return "| {} | {} | {} | {} | {:.1f}x | {:.1f}x | {:.2f}x |".format(
+        pr_arg("10 (simd+int8)"),
         machine(),
         int(bench.get("threads", 0)),
+        bench.get("kernel", "?"),
         float(head.get("min_speedup_serving_scale", float("nan"))),
         float(head.get("geomean_speedup", float("nan"))),
+        float(head.get("min_simd_speedup_serving_scale", float("nan"))),
     )
 
 
@@ -92,6 +100,14 @@ def serving_row(path: str) -> str:
     cold_shared = pick(
         decode="kv_step", kv="paged", prefix="cold", prompts="shared", max_batch=8
     )
+    int8_ad = pick(
+        decode="kv_step",
+        prefill="lean",
+        max_batch=8,
+        adapter="pooled_int8",
+        prefix="cold",
+    )
+    acc = bench.get("int8_accuracy", {})
 
     def ratio(a, b, key):
         if not a or not b or not b.get(key):
@@ -103,8 +119,9 @@ def serving_row(path: str) -> str:
 
     return (
         "| {} | {} | {:.2f}x | {:.2f}x | {:.1f} | {:.0f} vs {:.0f} "
-        "| {:.2f} vs {:.2f} | {:.3f} vs {:.3f} | {:.2f}x |".format(
-            pr_arg("7 (paged KV)"),
+        "| {:.2f} vs {:.2f} | {:.3f} vs {:.3f} | {:.2f}x "
+        "| {:.2f} vs {:.2f} | {:.3f}/{:.2f} |".format(
+            pr_arg("10 (simd+int8)"),
             machine(),
             ratio(lean, full_fwd, "tok_per_s"),
             ratio(full_pre, lean, "prefill_p50_ms"),
@@ -116,6 +133,10 @@ def serving_row(path: str) -> str:
             val(lean, "kv_mb"),
             val(fixed_kv, "kv_mb"),
             ratio(cold_shared, warm, "prefill_p50_ms"),
+            val(int8_ad, "adapter_mb") + val(int8_ad, "base_mb"),
+            val(lean, "adapter_mb") + val(lean, "base_mb"),
+            float(acc.get("max_abs_dlogit", float("nan"))),
+            float(acc.get("top1_agree", float("nan"))),
         )
     )
 
